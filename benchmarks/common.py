@@ -1,0 +1,32 @@
+"""Shared helpers for the paper-table benchmarks."""
+from __future__ import annotations
+
+from repro.configs import get_config
+from repro.core.cost_model import HardwareProfile, Workload
+
+
+def opt_workload(arch: str, batch: int, seq_len: int,
+                 dtype_bytes: float = 2,
+                 weights_offloaded: bool = False) -> Workload:
+    cfg = get_config(arch)
+    kv_dim = cfg.num_kv_heads * cfg.dh
+    mha_bytes = int(4 * cfg.d_model * cfg.d_model * dtype_bytes) \
+        if weights_offloaded else 0
+    return Workload(batch=batch, seq_len=seq_len, d_model=cfg.d_model,
+                    kv_dim=kv_dim, dtype_bytes=dtype_bytes,
+                    mha_weight_bytes=mha_bytes)
+
+
+def ffn_flops(arch: str, batch: int) -> float:
+    """Per-layer decode FFN FLOPs (1 token per sequence)."""
+    cfg = get_config(arch)
+    mults = 3 if cfg.gated_mlp else 2
+    return 2.0 * batch * mults * cfg.d_model * cfg.d_ff
+
+
+def layers_of(arch: str) -> int:
+    return get_config(arch).num_layers
+
+
+def fmt_row(*cols) -> str:
+    return ",".join(str(c) for c in cols)

@@ -1,0 +1,25 @@
+"""Paper Fig. 12 (appendix A.4): optimal split point l over the
+generation process (prompt 128, gen 32, OPT-6.7B — paper: l=182 early,
+descending toward 128... our solver reproduces the trajectory shape)."""
+from __future__ import annotations
+
+from benchmarks.common import fmt_row, opt_workload
+from repro.core.cost_model import A100_PCIE4
+from repro.core.solver import optimal_split
+
+
+def run(print_csv: bool = True):
+    arch = "opt-6.7b"
+    rows = []
+    for g in range(0, 33, 4):
+        wl = opt_workload(arch, 64, 128 + g)
+        d = optimal_split(wl, A100_PCIE4, schedule="row")
+        rows.append((g, d.l, d.t_total))
+        if print_csv:
+            print(fmt_row(f"fig12/gen{g}", f"{d.t_total*1e6:.1f}",
+                          f"split_l={d.l} of s'={128+g}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

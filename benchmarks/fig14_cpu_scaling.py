@@ -1,0 +1,40 @@
+"""Paper Fig. 14 (appendix A.7): CPU-assisted decoding (FastDecode-style,
+attention on the host CPU) collapses when several GPUs share one CPU; KVPR
+needs no host compute so it scales flat. We model host attention
+throughput as a fixed CPU FLOP budget shared across processes."""
+from __future__ import annotations
+
+from benchmarks.common import ffn_flops, fmt_row, opt_workload
+from repro.core.cost_model import A100_PCIE4
+from repro.core.pipeline import kvpr_step
+
+CPU_FLOPS = 3.3e12          # 64-core EPYC, ~peak fp32 SIMD
+CPU_MEM_BW = 200e9          # host DRAM bandwidth shared by processes
+
+
+def run(print_csv: bool = True):
+    from benchmarks.common import layers_of
+    arch = "opt-6.7b"
+    L = layers_of(arch)
+    wl = opt_workload(arch, 32, 1024)
+    ff = ffn_flops(arch, 32)
+    rows = []
+    for nproc in (1, 2, 4, 8):
+        # FastDecode: attention runs on host; per-process share of DRAM bw
+        attn_bytes = wl.total_kv_bytes
+        t_cpu_attn = attn_bytes / (CPU_MEM_BW / nproc)
+        t_rest = ff / A100_PCIE4.v_gpu
+        fastdecode_tps = 32 / (L * (t_cpu_attn + t_rest))
+        # KVPR: each GPU bound by its own PCIe link (not shared)
+        st = kvpr_step(wl, A100_PCIE4, "row", d_ff_flops=ff)
+        kvpr_tps = 32 / (L * st.t_layer)
+        rows.append((nproc, fastdecode_tps, kvpr_tps))
+        if print_csv:
+            print(fmt_row(f"fig14/nproc{nproc}", f"{1e6/kvpr_tps:.0f}",
+                          f"fastdecode_tps={fastdecode_tps:.1f} "
+                          f"kvpr_tps={kvpr_tps:.1f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

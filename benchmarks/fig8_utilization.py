@@ -1,0 +1,34 @@
+"""Paper Fig. 8: GPU utilization during decode — FlexGen vs KVPR (the
+paper reports 85% -> 99% average)."""
+from __future__ import annotations
+
+from benchmarks.common import ffn_flops, fmt_row, opt_workload
+from repro.core.cost_model import A100_PCIE4
+from repro.core.pipeline import flexgen_step, kvpr_step
+
+
+def run(print_csv: bool = True):
+    arch = "opt-13b"
+    rows = []
+    for seq in (256, 512, 1024):
+        wl = opt_workload(arch, 32, seq, weights_offloaded=True)
+        ff = ffn_flops(arch, 32)
+        fg = flexgen_step(wl, A100_PCIE4, weights_resident=False,
+                          d_ff_flops=ff)
+        kv = kvpr_step(wl, A100_PCIE4, "column", weights_resident=False,
+                       fine_grained=True, d_ff_flops=ff)
+        rows.append((seq, fg.utilization, kv.utilization))
+        if print_csv:
+            # NOTE: this is compute occupancy (GPU-busy / wall). The
+            # paper's Fig. 8 uses nvidia-smi "utilization", which also
+            # counts copy-engine activity — hence its higher baseline
+            # (85%). The DELTA (KVPR raises busy time by overlapping
+            # recompute with transfer) is the comparable quantity.
+            print(fmt_row(f"fig8/s{seq}", f"{kv.utilization*100:.1f}",
+                          f"flexgen_occupancy={fg.utilization*100:.1f}% "
+                          f"kvpr_occupancy={kv.utilization*100:.1f}%"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

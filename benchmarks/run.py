@@ -1,0 +1,56 @@
+"""Benchmark runner — one function per paper table/figure. Prints
+``name,us_per_call,derived`` CSV rows.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig7]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from benchmarks import (bench_runtime_real, fig6_throughput, fig7_latency,
+                        fig8_utilization, fig9_compression, fig10_breakdown,
+                        fig12_split_points, fig13_llama2, fig14_cpu_scaling,
+                        table1_pcie_vs_compute, table2_hiding_ablation)
+
+BENCHES = [
+    ("table1", table1_pcie_vs_compute.run),
+    ("fig7", fig7_latency.run),
+    ("fig6", fig6_throughput.run),
+    ("table2", table2_hiding_ablation.run),
+    ("fig8", fig8_utilization.run),
+    ("fig9", fig9_compression.run),
+    ("fig10", fig10_breakdown.run),
+    ("fig12", fig12_split_points.run),
+    ("fig13", fig13_llama2.run),
+    ("fig14", fig14_cpu_scaling.run),
+    ("runtime_real", bench_runtime_real.run),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    failed = 0
+    for name, fn in BENCHES:
+        if args.only and args.only not in name:
+            continue
+        t0 = time.perf_counter()
+        try:
+            fn(print_csv=True)
+        except Exception:
+            failed += 1
+            traceback.print_exc()
+            print(f"{name},0,FAILED")
+        print(f"# {name} done in {time.perf_counter()-t0:.1f}s",
+              file=sys.stderr)
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

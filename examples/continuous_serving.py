@@ -1,0 +1,62 @@
+"""Example: continuous (iteration-level) batching + int4 KV streaming —
+the two beyond-paper serving extensions, on a small dense model.
+
+  PYTHONPATH=src python examples/continuous_serving.py
+
+1. Serves a bursty queue of variable-length requests through the
+   ContinuousBatchingEngine (Orca-style slot admission; no cross-request
+   padding) and verifies against one-at-a-time serving.
+2. Re-serves the same queue through the KVPR offload runtime with the
+   host KV store quantized to int4 (paper §4.4 made executable), and
+   reports streamed-byte reduction + token agreement.
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.models.transformer import Model
+from repro.serving.continuous import ContinuousBatchingEngine
+from repro.serving.engine import Request, ServingEngine
+
+
+def main():
+    cfg = get_smoke_config("llama3.2-1b")
+    model = Model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(7)
+
+    reqs = [Request(uid=i,
+                    prompt=rng.integers(1, cfg.vocab_size,
+                                        int(rng.integers(6, 24))
+                                        ).astype(np.int32),
+                    max_new_tokens=int(rng.integers(3, 8)))
+            for i in range(6)]
+
+    print(f"== continuous batching: {len(reqs)} requests, 2 slots ==")
+    t0 = time.perf_counter()
+    cont = ContinuousBatchingEngine(model, params, num_slots=2,
+                                    max_len=64).serve(reqs)
+    t_cont = time.perf_counter() - t0
+    eng = ServingEngine(model, params, mode="resident")
+    ok = all(np.array_equal(c.tokens, eng.serve([r])[0].tokens)
+             for r, c in zip(reqs, cont))
+    print(f"   all {len(reqs)} generations match one-at-a-time serving: "
+          f"{ok}  ({t_cont:.1f}s)")
+
+    print("== int4-compressed KVPR offload serving ==")
+    uni = [Request(uid=i, prompt=rng.integers(
+        1, cfg.vocab_size, 16).astype(np.int32), max_new_tokens=5)
+        for i in range(2)]
+    exact = ServingEngine(model, params, mode="offload").serve(uni)
+    quant = ServingEngine(model, params, mode="offload",
+                          compress="int4").serve(uni)
+    agree = np.mean([np.mean(e.tokens == q.tokens)
+                     for e, q in zip(exact, quant)])
+    print(f"   token agreement exact-vs-int4: {agree*100:.0f}% "
+          f"(int4 streams ~4x fewer KV bytes; recomputed prefix exact)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Quickstart: KVPR in 60 seconds.
+
+1. Profile the system (link bandwidth + GEMM throughput).
+2. Ask the scheduler for the optimal KV split point (paper Eq. 10-11).
+3. Serve a small OPT-style model twice — resident KV cache vs KVPR
+   host-offloaded cache — and check the generations match exactly.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core import A100_PCIE4, Workload, flexgen_step, kvpr_step, optimal_split
+from repro.core.profiler import profile_system
+from repro.models.transformer import Model
+from repro.serving.engine import Request, ServingEngine
+
+
+def main():
+    # --- 1. profile ------------------------------------------------------
+    hw = profile_system()
+    print(f"profiled: link={hw.link_bandwidth/1e9:.1f} GB/s "
+          f"gemm={hw.gpu_flops/1e9:.0f} GFLOP/s")
+
+    # --- 2. schedule (the paper's LP, on the paper's A100 system) --------
+    wl = Workload(batch=32, seq_len=1024, d_model=4096, kv_dim=4096,
+                  dtype_bytes=2)
+    split = optimal_split(wl, A100_PCIE4, schedule="row")
+    fg = flexgen_step(wl, A100_PCIE4)
+    kv = kvpr_step(wl, A100_PCIE4, schedule="row")
+    print(f"optimal split l={split.l}/{wl.seq_len}: per-layer "
+          f"{fg.t_layer*1e3:.2f}ms (full transfer) -> "
+          f"{kv.t_layer*1e3:.2f}ms (KVPR), "
+          f"{(1 - kv.t_layer/fg.t_layer)*100:.1f}% lower")
+
+    # --- 3. serve: resident vs offloaded-with-recompute ------------------
+    cfg = get_smoke_config("opt-6.7b")
+    model = Model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    reqs = [Request(uid=i,
+                    prompt=rng.integers(1, cfg.vocab_size, 24,
+                                        ).astype(np.int32),
+                    max_new_tokens=8) for i in range(2)]
+
+    res = ServingEngine(model, params, mode="resident").serve(reqs)
+    off = ServingEngine(model, params, mode="offload", hw=hw).serve(reqs)
+    for r, o in zip(res, off):
+        assert np.array_equal(r.tokens, o.tokens), "KVPR must be exact"
+        print(f"req {r.uid}: {r.tokens} (offload == resident ✓)")
+    print("KVPR partial recomputation is exact; no approximation.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""End-to-end serving driver (the paper's setting): batched requests
+against a host-offloaded KV cache, comparing FlexGen-style full transfer
+vs KVPR partial recomputation on real wall-clock.
+
+    PYTHONPATH=src python examples/serve_offload.py --arch opt-6.7b \
+        --batch 4 --prompt 64 --gen 16
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke_config, get_config
+from repro.core.profiler import profile_system
+from repro.models.transformer import Model
+from repro.serving.engine import Request, ServingEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="opt-6.7b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--full", action="store_true",
+                    help="use the full config (needs much more RAM)")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch) if args.full else get_smoke_config(args.arch)
+    model = Model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    hw = profile_system()
+    rng = np.random.default_rng(0)
+    reqs = [Request(uid=i,
+                    prompt=rng.integers(1, cfg.vocab_size,
+                                        args.prompt).astype(np.int32),
+                    max_new_tokens=args.gen) for i in range(args.batch)]
+
+    results = {}
+    for name, eng in [
+        ("flexgen (full KV transfer)",
+         ServingEngine(model, params, mode="offload", hw=hw, kvpr=False)),
+        ("kvpr (partial recompute)",
+         ServingEngine(model, params, mode="offload", hw=hw, kvpr=True)),
+    ]:
+        t0 = time.perf_counter()
+        gens = eng.serve(reqs)
+        dt = time.perf_counter() - t0
+        tput = args.batch * args.gen / gens[0].decode_time
+        results[name] = (gens, tput)
+        print(f"{name:32s} decode {gens[0].decode_time:.2f}s "
+              f"({tput:.1f} tok/s)  total {dt:.2f}s")
+
+    g_f = results["flexgen (full KV transfer)"][0]
+    g_k = results["kvpr (partial recompute)"][0]
+    for a, b in zip(g_f, g_k):
+        assert np.array_equal(a.tokens, b.tokens), "KVPR changed outputs!"
+    print("outputs identical across modes ✓")
+
+
+if __name__ == "__main__":
+    main()

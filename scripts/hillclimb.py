@@ -1,0 +1,159 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""§Perf hillclimb driver: lower+compile one (arch, shape) VARIANT on the
+single-pod mesh and append its roofline row to results/hillclimb/.
+
+A variant = a named bundle of {logical sharding rule overrides, model
+options (remat / q_block / scan / seq_shard), lowering options}. Each
+hillclimb iteration defines a hypothesis in EXPERIMENTS.md §Perf, runs
+
+    PYTHONPATH=src python scripts/hillclimb.py --arch X --shape Y \
+        --variant name [--set rule=axis ...] [--remat|--no-remat] \
+        [--q-block N] [--seq-shard] [--layers N]
+
+and compares the emitted terms against the baseline row.
+
+    --layers N runs a reduced-depth unrolled lowering (for archs whose
+    full unrolled compile is intractable here); compare variants at the
+    SAME depth — deltas are what matter, and per-layer structure is
+    depth-independent.
+"""
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+import dataclasses
+from repro.configs import get_config
+from repro.launch import dryrun as DR
+from repro.launch import roofline as RL
+from repro.launch import specs as SP
+from repro.launch.mesh import make_production_mesh
+from repro.models.sharding import DEFAULT_RULES, logical_rules
+from repro.models.transformer import Model
+
+
+def parse_set(kvs):
+    out = {}
+    for kv in kvs or []:
+        k, _, v = kv.partition("=")
+        if v in ("none", "None", ""):
+            out[k] = None
+        elif "," in v:
+            out[k] = tuple(v.split(","))
+        else:
+            out[k] = v
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True,
+                    choices=list(SP.INPUT_SHAPES))
+    ap.add_argument("--variant", required=True)
+    ap.add_argument("--set", nargs="*", default=[],
+                    help="logical rule overrides, e.g. kv_heads=model")
+    ap.add_argument("--remat", dest="remat", action="store_true",
+                    default=None)
+    ap.add_argument("--no-remat", dest="remat", action="store_false")
+    ap.add_argument("--q-block", type=int, default=4096)
+    ap.add_argument("--seq-shard", action="store_true")
+    ap.add_argument("--seq-axis", default="data",
+                    help="mesh axis for KV sequence sharding")
+    ap.add_argument("--scan", action="store_true")
+    ap.add_argument("--moe-impl", default="gspmd",
+                    choices=["gspmd", "shard_map"])
+    ap.add_argument("--layers", type=int, default=None)
+    ap.add_argument("--ssm-chunk", type=int, default=None)
+    ap.add_argument("--tp", default="model",
+                    help="mesh axis for tensor parallelism ('none' to "
+                         "disable)")
+    ap.add_argument("--fsdp", default="data",
+                    help="comma-joined mesh axes for FSDP param sharding")
+    ap.add_argument("--dp", default="pod,data",
+                    help="comma-joined mesh axes for data parallelism")
+    ap.add_argument("--out-dir", default="results/hillclimb")
+    args = ap.parse_args()
+
+    from repro.launch.shardings import set_strategy
+    set_strategy(tp=None if args.tp == "none" else args.tp,
+                 fsdp=tuple(args.fsdp.split(",")) if args.fsdp else (),
+                 dp=tuple(args.dp.split(",")) if args.dp else ())
+
+    cfg = get_config(args.arch)
+    if args.layers:
+        cfg = dataclasses.replace(cfg, num_layers=args.layers)
+    if args.ssm_chunk and cfg.ssm:
+        cfg = dataclasses.replace(
+            cfg, ssm=dataclasses.replace(cfg.ssm, chunk=args.ssm_chunk))
+    ishape = SP.INPUT_SHAPES[args.shape]
+    mesh = make_production_mesh(multi_pod=False)
+    model = Model(cfg, seq_shard=args.seq_shard, scan_layers=args.scan,
+                  q_block=args.q_block, moe_impl=args.moe_impl)
+    model.seq_axis = args.seq_axis
+    if args.remat is not None:      # train lowering remat policy
+        model.train_remat = args.remat
+
+    rules = dict(DEFAULT_RULES)
+    rules["batch"] = tuple(args.dp.split(",")) if args.dp else None
+    if args.tp == "none":   # activation rules follow the param strategy
+        for k in ("heads", "mlp", "vocab", "experts", "ssm_heads"):
+            rules[k] = None
+    if args.seq_shard:
+        rules["kv_seq"] = args.seq_axis
+        if args.seq_axis == "data":
+            rules["batch"] = None
+    rules.update(parse_set(args.set))
+
+    t0 = time.perf_counter()
+    with logical_rules(rules, mesh):
+        with mesh:
+            if ishape.kind == "train":
+                lowered = DR._lower_train(model, cfg, ishape, mesh)
+            elif ishape.kind == "prefill":
+                lowered = DR._lower_prefill(model, cfg, ishape, mesh)
+            else:
+                lowered = DR._lower_decode(model, cfg, ishape, mesh)
+            compiled = lowered.compile()
+    t_all = time.perf_counter() - t0
+
+    mf = RL.model_flops_per_device(cfg, ishape, mesh.devices.size)
+    row = RL.from_compiled(compiled, args.arch, args.shape,
+                           "single", mf).row()
+    row.update({"variant": args.variant, "rule_overrides": args.set,
+                "remat": args.remat, "q_block": args.q_block,
+                "seq_shard": args.seq_shard, "layers": args.layers,
+                "wall_s": round(t_all, 1), "status": "ok"})
+    print(f"[{args.arch} x {args.shape}] variant={args.variant} "
+          f"({t_all:.0f}s)")
+    print(f"  compute={row['t_compute_s']*1e3:.3f}ms "
+          f"memory={row['t_memory_s']*1e3:.3f}ms "
+          f"collective={row['t_collective_s']*1e3:.3f}ms "
+          f"-> {row['bottleneck']}")
+    print(f"  flops/dev={row['flops_per_dev']:.3e} "
+          f"bytes/dev={row['bytes_per_dev']:.3e} "
+          f"coll/dev={row['coll_bytes_per_dev']:.3e} "
+          f"useful={row['useful_flops_ratio']:.3f}")
+    cd = {k: f"{v/2**20:.0f}MiB/{row['coll_counts'].get(k, 0)}"
+          for k, v in row["coll_detail"].items() if v}
+    print(f"  collectives: {cd}")
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    path = os.path.join(args.out_dir,
+                        f"{args.arch}_{args.shape}.json")
+    hist = []
+    if os.path.exists(path):
+        hist = json.load(open(path))
+    hist.append(row)
+    with open(path, "w") as f:
+        json.dump(hist, f, indent=1)
+    print("appended ->", path)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+from repro.configs.base import (
+    ARCH_IDS,
+    ModelConfig,
+    MoEConfig,
+    SSMConfig,
+    get_config,
+    get_smoke_config,
+    num_attention_layers,
+    pad_vocab,
+)
+
+__all__ = [
+    "ARCH_IDS", "ModelConfig", "MoEConfig", "SSMConfig",
+    "get_config", "get_smoke_config", "num_attention_layers", "pad_vocab",
+]

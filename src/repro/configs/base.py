@@ -1,0 +1,159 @@
+"""Architecture config system.
+
+Every assigned architecture gets one module in this package exporting
+``CONFIG`` (full-scale, exercised only via the AOT dry-run) and
+``smoke_config()`` (reduced variant run on CPU in tests).
+
+``arch_type`` selects the block stack:
+  dense   — attention + MLP every layer
+  moe     — attention + mixture-of-experts MLP
+  hybrid  — Mamba2 blocks + a shared attention block every k layers (zamba2)
+  ssm     — xLSTM (alternating mLSTM/sLSTM blocks, no FFN)
+  audio   — encoder-decoder (whisper): self+cross attention decoder,
+            encoder consumes stub frame embeddings
+  vlm     — decoder-only LLM backbone consuming stub patch-prefixed tokens
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Optional, Tuple
+
+VOCAB_PAD = 256
+
+
+def pad_vocab(v: int, multiple: int = VOCAB_PAD) -> int:
+    return ((v + multiple - 1) // multiple) * multiple
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_ff_expert: int          # hidden dim of each expert
+    capacity_factor: float = 1.25
+    # 'expert' = expert-parallel over model axis; 'tensor' = shard each
+    # expert's d_ff over model axis (used when E % model_axis != 0).
+    sharding: str = "expert"
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    state_dim: int            # Mamba2 d_state / xLSTM per-head memory dim
+    num_heads: int = 0        # SSD heads (0 -> derive d_model // head_dim)
+    head_dim: int = 64
+    conv_width: int = 4
+    chunk: int = 128          # SSD chunked-scan block length
+    expand: int = 2           # Mamba inner expansion
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    arch_type: str            # dense | moe | hybrid | ssm | audio | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    max_seq_len: int = 131072
+    head_dim: Optional[int] = None          # default d_model // num_heads
+    rope_theta: float = 500000.0
+    rms_eps: float = 1e-5
+    tie_embeddings: bool = False
+    source: str = ""          # citation bracket from the assignment pool
+    # --- sliding window / local-global pattern (gemma3) ---
+    sliding_window: int = 0                 # 0 = full attention
+    global_every: int = 0                   # e.g. 6 -> layers 5,11,... global
+    # --- MoE ---
+    moe: Optional[MoEConfig] = None
+    # --- SSM / hybrid ---
+    ssm: Optional[SSMConfig] = None
+    shared_attn_every: int = 0              # zamba2: shared attn block cadence
+    # --- encoder-decoder (whisper) ---
+    encoder_layers: int = 0
+    encoder_seq_len: int = 0                # stub frontend output length
+    # --- vlm ---
+    num_patch_tokens: int = 0               # stub vision prefix length
+    # --- activation / norm flavour ---
+    act: str = "silu"                       # silu (gated) | gelu (opt/whisper)
+    gated_mlp: bool = True
+    pos_embedding: str = "rope"             # rope | learned (opt/whisper)
+
+    @property
+    def dh(self) -> int:
+        return self.head_dim if self.head_dim else self.d_model // self.num_heads
+
+    @property
+    def padded_vocab(self) -> int:
+        return pad_vocab(self.vocab_size)
+
+    @property
+    def q_per_kv(self) -> int:
+        return self.num_heads // self.num_kv_heads
+
+    @property
+    def supports_long_context(self) -> bool:
+        """True if decode memory/compute is sub-quadratic-safe at 500k:
+        SSM/hybrid (O(1) state) or sliding-window locals."""
+        return self.arch_type in ("ssm", "hybrid") or self.sliding_window > 0
+
+    @property
+    def has_decode(self) -> bool:
+        return True  # all assigned archs are (or contain) decoders
+
+    def kv_bytes_per_token(self, dtype_bytes: int = 2) -> int:
+        """Per-token KV cache footprint across all attention layers —
+        the quantity KVPR streams/recomputes."""
+        n_attn = num_attention_layers(self)
+        return 2 * n_attn * self.num_kv_heads * self.dh * dtype_bytes
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+def num_attention_layers(cfg: ModelConfig) -> int:
+    if cfg.arch_type == "ssm":
+        return 0
+    if cfg.arch_type == "hybrid":
+        # one shared attention block applied every shared_attn_every layers
+        return cfg.num_layers // max(cfg.shared_attn_every, 1)
+    if cfg.arch_type == "audio":
+        return cfg.num_layers  # decoder self-attn (cross handled separately)
+    return cfg.num_layers
+
+
+ARCH_IDS: Tuple[str, ...] = (
+    "mistral-nemo-12b",
+    "qwen3-moe-30b-a3b",
+    "granite-moe-3b-a800m",
+    "gemma3-12b",
+    "tinyllama-1.1b",
+    "whisper-tiny",
+    "internvl2-76b",
+    "zamba2-1.2b",
+    "llama3.2-1b",
+    "xlstm-350m",
+    # the paper's own evaluation models
+    "opt-6.7b",
+    "opt-13b",
+    "opt-30b",
+    # paper appendix A.6 models
+    "llama2-7b",
+    "llama2-13b",
+)
+
+_MODULE_FOR = {a: a.replace("-", "_").replace(".", "_") for a in ARCH_IDS}
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _MODULE_FOR:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_MODULE_FOR)}")
+    mod = importlib.import_module(f"repro.configs.{_MODULE_FOR[arch]}")
+    return mod.CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{_MODULE_FOR[arch]}")
+    return mod.smoke_config()

@@ -1,0 +1,28 @@
+"""Gemma3-12B [hf:google/gemma-3 family] — 5:1 local:global attention,
+sliding window 1024 on local layers, 128k ctx. GQA kv=8."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma3-12b",
+    arch_type="dense",
+    num_layers=48,
+    d_model=3840,
+    num_heads=16,
+    num_kv_heads=8,
+    head_dim=256,
+    d_ff=15360,
+    vocab_size=262144,
+    max_seq_len=131072,
+    rope_theta=1_000_000.0,
+    sliding_window=1024,
+    global_every=6,  # layers 5, 11, 17, ... are global (5:1 local:global)
+    act="gelu",
+    source="[hf:google/gemma-3-1b-pt]",
+)
+
+
+def smoke_config() -> ModelConfig:
+    return CONFIG.replace(num_layers=6, d_model=128, num_heads=4,
+                          num_kv_heads=2, head_dim=32, d_ff=256,
+                          vocab_size=512, max_seq_len=1024,
+                          sliding_window=64, global_every=3)

@@ -1,0 +1,29 @@
+"""Granite-MoE-3B-A800M [hf:ibm-granite/granite-3.0-1b-a400m-base family]
+MoE 40 experts top-8 (pool spec), GQA kv=8. 40 % 16 != 0 so experts are
+tensor-parallel (d_ff sharded) rather than expert-parallel."""
+from repro.configs.base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="granite-moe-3b-a800m",
+    arch_type="moe",
+    num_layers=32,
+    d_model=1536,
+    num_heads=24,
+    num_kv_heads=8,
+    head_dim=64,
+    d_ff=512,
+    vocab_size=49155,  # padded to 49408 for sharding (base.pad_vocab)
+    max_seq_len=4096,
+    rope_theta=10_000.0,
+    moe=MoEConfig(num_experts=40, top_k=8, d_ff_expert=512, sharding="tensor"),
+    source="[hf:ibm-granite/granite-3.0-1b-a400m-base]",
+)
+
+
+def smoke_config() -> ModelConfig:
+    return CONFIG.replace(num_layers=2, d_model=128, num_heads=4,
+                          num_kv_heads=2, head_dim=32, d_ff=64,
+                          vocab_size=512, max_seq_len=1024,
+                          moe=MoEConfig(num_experts=3, top_k=2,
+                                        d_ff_expert=64, sharding="tensor",
+                                        capacity_factor=8.0))

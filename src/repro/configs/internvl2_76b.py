@@ -1,0 +1,25 @@
+"""InternVL2-76B [arXiv:2404.16821] — VLM. InternViT vision tower +
+projector are STUBS: input_specs provides patch embeddings prepended to the
+token stream. The 80-layer LLM backbone (Llama-3-70B-style GQA) is real."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-76b",
+    arch_type="vlm",
+    num_layers=80,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    d_ff=28672,
+    vocab_size=128256,  # padded to 128512? 128256 % 256 == 0 -> unchanged
+    max_seq_len=32768,
+    rope_theta=500_000.0,
+    num_patch_tokens=256,  # stub vision prefix per image
+    source="[arXiv:2404.16821]",
+)
+
+
+def smoke_config() -> ModelConfig:
+    return CONFIG.replace(num_layers=2, d_model=256, num_heads=8,
+                          num_kv_heads=2, d_ff=512, vocab_size=512,
+                          max_seq_len=1024, num_patch_tokens=16)

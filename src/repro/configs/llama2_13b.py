@@ -1,0 +1,24 @@
+"""LLaMa2-13B [arXiv:2307.09288] — paper appendix A.6 evaluation model."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama2-13b",
+    arch_type="dense",
+    num_layers=40,
+    d_model=5120,
+    num_heads=40,
+    num_kv_heads=40,
+    d_ff=13824,
+    vocab_size=32000,
+    max_seq_len=4096,
+    act="silu",
+    gated_mlp=True,
+    pos_embedding="rope",
+    source="[arXiv:2307.09288]",
+)
+
+
+def smoke_config() -> ModelConfig:
+    return CONFIG.replace(num_layers=2, d_model=256, num_heads=8,
+                          num_kv_heads=8, d_ff=512, vocab_size=512,
+                          max_seq_len=1024)

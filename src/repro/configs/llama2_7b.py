@@ -1,0 +1,25 @@
+"""LLaMa2-7B [arXiv:2307.09288] — paper appendix A.6 evaluation model.
+MHA (kv=heads), RoPE, SiLU gated FFN."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama2-7b",
+    arch_type="dense",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=32,
+    d_ff=11008,
+    vocab_size=32000,
+    max_seq_len=4096,
+    act="silu",
+    gated_mlp=True,
+    pos_embedding="rope",
+    source="[arXiv:2307.09288]",
+)
+
+
+def smoke_config() -> ModelConfig:
+    return CONFIG.replace(num_layers=2, d_model=256, num_heads=8,
+                          num_kv_heads=8, d_ff=512, vocab_size=512,
+                          max_seq_len=1024)

@@ -1,0 +1,23 @@
+"""Llama-3.2-1B [hf:meta-llama/Llama-3.2-1B] — small llama3, GQA kv=8."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama3.2-1b",
+    arch_type="dense",
+    num_layers=16,
+    d_model=2048,
+    num_heads=32,
+    num_kv_heads=8,
+    d_ff=8192,
+    vocab_size=128256,
+    max_seq_len=131072,
+    rope_theta=500_000.0,
+    tie_embeddings=True,
+    source="[hf:meta-llama/Llama-3.2-1B]",
+)
+
+
+def smoke_config() -> ModelConfig:
+    return CONFIG.replace(num_layers=2, d_model=256, num_heads=8,
+                          num_kv_heads=2, d_ff=512, vocab_size=512,
+                          max_seq_len=1024)

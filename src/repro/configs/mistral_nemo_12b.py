@@ -1,0 +1,23 @@
+"""Mistral-Nemo-12B [hf:mistralai/Mistral-Nemo-Base-2407] — dense GQA, 128k ctx."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mistral-nemo-12b",
+    arch_type="dense",
+    num_layers=40,
+    d_model=5120,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=128,  # Nemo uses head_dim 128 (not d_model/heads=160)
+    d_ff=14336,
+    vocab_size=131072,
+    max_seq_len=131072,
+    rope_theta=1_000_000.0,
+    source="[hf:mistralai/Mistral-Nemo-Base-2407]",
+)
+
+
+def smoke_config() -> ModelConfig:
+    return CONFIG.replace(num_layers=2, d_model=256, num_heads=8,
+                          num_kv_heads=2, head_dim=32, d_ff=512,
+                          vocab_size=512, max_seq_len=1024)

@@ -1,0 +1,24 @@
+"""OPT-13B [arXiv:2205.01068] — paper evaluation model."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="opt-13b",
+    arch_type="dense",
+    num_layers=40,
+    d_model=5120,
+    num_heads=40,
+    num_kv_heads=40,
+    d_ff=20480,
+    vocab_size=50272,
+    max_seq_len=2048,
+    act="gelu",
+    gated_mlp=False,
+    pos_embedding="learned",
+    source="[arXiv:2205.01068]",
+)
+
+
+def smoke_config() -> ModelConfig:
+    return CONFIG.replace(num_layers=2, d_model=256, num_heads=8,
+                          num_kv_heads=8, d_ff=512, vocab_size=512,
+                          max_seq_len=1024)

@@ -1,0 +1,24 @@
+"""OPT-30B [arXiv:2205.01068] — paper evaluation model (throughput workload)."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="opt-30b",
+    arch_type="dense",
+    num_layers=48,
+    d_model=7168,
+    num_heads=56,
+    num_kv_heads=56,
+    d_ff=28672,
+    vocab_size=50272,
+    max_seq_len=2048,
+    act="gelu",
+    gated_mlp=False,
+    pos_embedding="learned",
+    source="[arXiv:2205.01068]",
+)
+
+
+def smoke_config() -> ModelConfig:
+    return CONFIG.replace(num_layers=2, d_model=256, num_heads=8,
+                          num_kv_heads=8, d_ff=512, vocab_size=512,
+                          max_seq_len=1024)

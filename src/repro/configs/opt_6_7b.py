@@ -1,0 +1,25 @@
+"""OPT-6.7B [arXiv:2205.01068] — the paper's primary evaluation model.
+MHA (kv=heads), learned positions, GELU, non-gated FFN."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="opt-6.7b",
+    arch_type="dense",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=32,
+    d_ff=16384,
+    vocab_size=50272,  # padded to 50432
+    max_seq_len=2048,
+    act="gelu",
+    gated_mlp=False,
+    pos_embedding="learned",
+    source="[arXiv:2205.01068]",
+)
+
+
+def smoke_config() -> ModelConfig:
+    return CONFIG.replace(num_layers=2, d_model=256, num_heads=8,
+                          num_kv_heads=8, d_ff=512, vocab_size=512,
+                          max_seq_len=1024)

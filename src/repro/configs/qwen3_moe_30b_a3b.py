@@ -1,0 +1,27 @@
+"""Qwen3-30B-A3B [hf:Qwen/Qwen3-30B-A3B] — MoE 128 experts top-8, GQA kv=4."""
+from repro.configs.base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-moe-30b-a3b",
+    arch_type="moe",
+    num_layers=48,
+    d_model=2048,
+    num_heads=32,
+    num_kv_heads=4,
+    head_dim=128,
+    d_ff=768,  # per-expert hidden dim
+    vocab_size=151936,
+    max_seq_len=131072,
+    rope_theta=1_000_000.0,
+    moe=MoEConfig(num_experts=128, top_k=8, d_ff_expert=768, sharding="expert"),
+    source="[hf:Qwen/Qwen3-30B-A3B]",
+)
+
+
+def smoke_config() -> ModelConfig:
+    return CONFIG.replace(num_layers=2, d_model=128, num_heads=4,
+                          num_kv_heads=2, head_dim=32, d_ff=64,
+                          vocab_size=512, max_seq_len=1024,
+                          moe=MoEConfig(num_experts=4, top_k=2,
+                                        d_ff_expert=64, sharding="expert",
+                                        capacity_factor=8.0))

@@ -1,0 +1,22 @@
+"""TinyLlama-1.1B [arXiv:2401.02385] — llama2-arch small, GQA kv=4."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="tinyllama-1.1b",
+    arch_type="dense",
+    num_layers=22,
+    d_model=2048,
+    num_heads=32,
+    num_kv_heads=4,
+    d_ff=5632,
+    vocab_size=32000,  # padded to 32000 -> 32000 % 256 == 0
+    max_seq_len=4096,
+    rope_theta=10_000.0,
+    source="[arXiv:2401.02385]",
+)
+
+
+def smoke_config() -> ModelConfig:
+    return CONFIG.replace(num_layers=2, d_model=256, num_heads=8,
+                          num_kv_heads=2, d_ff=512, vocab_size=512,
+                          max_seq_len=1024)

@@ -1,0 +1,30 @@
+"""Whisper-tiny [arXiv:2212.04356] — encoder-decoder audio. Conv+mel
+frontend is a STUB: input_specs provides (b, 1500, 384) frame embeddings.
+4 encoder + 4 decoder layers, MHA (kv=heads=6), learned positions, GELU."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-tiny",
+    arch_type="audio",
+    num_layers=4,            # decoder layers
+    encoder_layers=4,
+    encoder_seq_len=1500,    # stub frontend output frames
+    d_model=384,
+    num_heads=6,
+    num_kv_heads=6,
+    d_ff=1536,
+    vocab_size=51865,        # padded to 51968
+    # whisper's real decoder ctx is 448; raised so the assigned decode_32k
+    # input shape exercises the backbone (pos table is learned -> sized up)
+    max_seq_len=32768,
+    act="gelu",
+    gated_mlp=False,
+    pos_embedding="learned",
+    source="[arXiv:2212.04356]",
+)
+
+
+def smoke_config() -> ModelConfig:
+    return CONFIG.replace(num_layers=2, encoder_layers=2, encoder_seq_len=64,
+                          d_model=128, num_heads=4, num_kv_heads=4,
+                          d_ff=256, vocab_size=512, max_seq_len=256)

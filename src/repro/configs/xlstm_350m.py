@@ -1,0 +1,26 @@
+"""xLSTM-350M [arXiv:2405.04517] — alternating mLSTM (matrix memory) and
+sLSTM (scalar memory) blocks; no separate FFN (d_ff=0 per pool spec; the
+blocks carry their own up/down projections). O(1) decode state -> KVPR
+inapplicable (no KV cache); built without the technique per spec."""
+from repro.configs.base import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="xlstm-350m",
+    arch_type="ssm",
+    num_layers=24,
+    d_model=1024,
+    num_heads=4,
+    num_kv_heads=4,
+    d_ff=0,
+    vocab_size=50304,
+    max_seq_len=524288,
+    ssm=SSMConfig(state_dim=256, num_heads=4, head_dim=256, expand=2),
+    source="[arXiv:2405.04517]",
+)
+
+
+def smoke_config() -> ModelConfig:
+    return CONFIG.replace(num_layers=2, d_model=128, num_heads=2,
+                          num_kv_heads=2, vocab_size=512, max_seq_len=1024,
+                          ssm=SSMConfig(state_dim=32, num_heads=2,
+                                        head_dim=64, expand=2, chunk=32))

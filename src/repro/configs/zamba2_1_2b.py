@@ -1,0 +1,30 @@
+"""Zamba2-1.2B [arXiv:2411.15242] — hybrid: Mamba2 backbone with a SHARED
+attention(+MLP) block invoked every 6 layers (weights reused each time).
+ssm_state=64. Attention is MHA-ish (kv=32=heads per pool spec)."""
+from repro.configs.base import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-1.2b",
+    arch_type="hybrid",
+    num_layers=38,
+    d_model=2048,
+    num_heads=32,
+    num_kv_heads=32,
+    head_dim=64,
+    d_ff=8192,
+    vocab_size=32000,
+    max_seq_len=131072,
+    rope_theta=10_000.0,
+    ssm=SSMConfig(state_dim=64, head_dim=64, expand=2, conv_width=4),
+    shared_attn_every=6,   # shared block applied after mamba layers 5,11,...
+    source="[arXiv:2411.15242]",
+)
+
+
+def smoke_config() -> ModelConfig:
+    return CONFIG.replace(num_layers=4, d_model=128, num_heads=4,
+                          num_kv_heads=4, head_dim=32, d_ff=256,
+                          vocab_size=512, max_seq_len=1024,
+                          ssm=SSMConfig(state_dim=16, head_dim=32, expand=2,
+                                        conv_width=4, chunk=32),
+                          shared_attn_every=2)

@@ -1,0 +1,16 @@
+"""KVPR core: the paper's contribution (profiler, scheduler, runtime)."""
+from repro.core.cost_model import (
+    A100_PCIE4, PROFILES, RTX5000_PCIE4X8, TPU_V5E,
+    HardwareProfile, Workload, layer_times,
+)
+from repro.core.solver import SplitDecision, brute_force_split, optimal_split
+from repro.core.pipeline import (
+    StepTimeline, decode_latency, flexgen_step, kvpr_step,
+)
+
+__all__ = [
+    "A100_PCIE4", "PROFILES", "RTX5000_PCIE4X8", "TPU_V5E",
+    "HardwareProfile", "Workload", "layer_times",
+    "SplitDecision", "brute_force_split", "optimal_split",
+    "StepTimeline", "decode_latency", "flexgen_step", "kvpr_step",
+]

@@ -1,0 +1,107 @@
+"""Hardware + workload cost model for the KVPR scheduler (paper Eq. 6-10).
+
+All times in seconds, sizes in bytes, compute in FLOPs. The profile is
+either measured (core/profiler.py) or taken from presets matching the
+paper's systems and our TPU target.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareProfile:
+    name: str
+    link_bandwidth: float        # host->device bytes/s (PCIe / host-DMA)
+    gpu_flops: float             # accelerator matmul FLOP/s (achievable)
+    hbm_bandwidth: float         # device memory bytes/s
+    # efficiency factor applied to peak for small-GEMM recompute workloads
+    gemm_efficiency: float = 1.0
+
+    @property
+    def v_com(self) -> float:
+        return self.link_bandwidth
+
+    @property
+    def v_gpu(self) -> float:
+        return self.gpu_flops * self.gemm_efficiency
+
+
+# The paper's primary system: A100-40GB + PCIe 4.0 x16.
+A100_PCIE4 = HardwareProfile(
+    name="a100-pcie4",
+    link_bandwidth=32e9,
+    gpu_flops=312e12,            # A100 bf16/fp16 dense peak
+    hbm_bandwidth=2.0e12,
+    gemm_efficiency=0.45,        # decode-shape GEMMs don't hit peak
+)
+
+# The paper's low-end system (Appendix A.5): RTX 5000 + PCIe 4.0 x8.
+RTX5000_PCIE4X8 = HardwareProfile(
+    name="rtx5000-pcie4x8",
+    link_bandwidth=16e9,
+    gpu_flops=89.2e12,
+    hbm_bandwidth=448e9,
+    gemm_efficiency=0.45,
+)
+
+# Our target: TPU v5e chip, host-attached over PCIe-class link.
+TPU_V5E = HardwareProfile(
+    name="tpu-v5e",
+    link_bandwidth=32e9,
+    gpu_flops=197e12,            # bf16 peak per chip
+    hbm_bandwidth=819e9,
+    gemm_efficiency=0.5,
+)
+
+PROFILES = {p.name: p for p in (A100_PCIE4, RTX5000_PCIE4X8, TPU_V5E)}
+
+# v5e interconnect (for the roofline, launch/roofline.py)
+V5E_PEAK_FLOPS = 197e12
+V5E_HBM_BW = 819e9
+V5E_ICI_BW = 50e9  # per link
+
+
+@dataclasses.dataclass(frozen=True)
+class Workload:
+    """Per-layer decode workload at current sequence length s' (paper §3.2).
+
+    Sizes follow Eq. 6: activations X[0:l] are (b, l, h); the KV cache for
+    the rest is 2 x (b, s'-l, kv_dim). For GQA models kv_dim < h, which
+    CHANGES the optimal split vs the paper's MHA assumption: recomputing
+    token t costs transferring h bytes to save 2*kv_dim bytes, so the
+    activation:KV byte ratio is h/(2*kv_dim) rather than 1/2.
+    """
+    batch: int
+    seq_len: int                 # current s' (prompt + generated so far)
+    d_model: int                 # h (activation width)
+    kv_dim: int                  # num_kv_heads * head_dim (per K or V)
+    dtype_bytes: int = 2
+    # recompute FLOPs per token: K and V projections (Eq. 8 generalizes
+    # from 4*b*l*h^2 to 2 GEMMs of h x kv_dim each)
+    mha_weight_bytes: int = 0    # for the fine-grained pipeline (Fig. 5)
+
+    def act_bytes(self, l: int) -> int:
+        return self.batch * l * self.d_model * self.dtype_bytes
+
+    def kv_bytes(self, tokens: int) -> int:
+        return 2 * self.batch * tokens * self.kv_dim * self.dtype_bytes
+
+    def recompute_flops(self, l: int) -> int:
+        # K = X Wk, V = X Wv : 2 GEMMs, 2*b*l*h*kv_dim MACs each
+        return 4 * self.batch * l * self.d_model * self.kv_dim
+
+    @property
+    def total_kv_bytes(self) -> int:
+        return self.kv_bytes(self.seq_len)
+
+
+def layer_times(wl: Workload, hw: HardwareProfile, l: int,
+                include_act_transfer: bool = True) -> dict:
+    """Eq. 9-10: timing components for split point l."""
+    t_act = wl.act_bytes(l) / hw.v_com if include_act_transfer else 0.0
+    t_recomp = wl.recompute_flops(l) / hw.v_gpu
+    t_kv = wl.kv_bytes(wl.seq_len - l) / hw.v_com
+    total = t_act + max(t_recomp, t_kv)
+    return {"t_act": t_act, "t_recomp": t_recomp, "t_kv": t_kv,
+            "total": total}

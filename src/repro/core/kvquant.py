@@ -1,0 +1,88 @@
+"""Group-wise 4-bit KV quantization for the offload stream (paper §4.4,
+made executable; the paper cites FlexGen's group-wise scheme).
+
+Quantize on the HOST when KV pairs are stored (they were just computed on
+the device, so quantization error enters exactly once), stream packed
+codes + scales over the link (≈¼ of bf16 / ⅛ of f32 bytes), dequantize
+on the DEVICE — either as a standalone op or fused inside the attention
+kernel (kernels/kv_dequant_attention.py).
+
+Layout (group size G along the head dim dh):
+  packed (..., dh//2) uint8 — code i lives at byte i//2; even i in the
+                              low nibble, odd i in the high nibble
+  scale  (..., dh//G) f32
+  zero   (..., dh//G) f32   — dequant: x ≈ code * scale + zero
+
+Both numpy (host store) and jnp (device/oracle) implementations; the
+numpy path is what core/runtime.py calls per decode step.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+class QuantizedKV(NamedTuple):
+    packed: np.ndarray   # uint8 (..., S, dh//2)
+    scale: np.ndarray    # f32   (..., S, dh//G)
+    zero: np.ndarray     # f32   (..., S, dh//G)
+
+    @property
+    def nbytes(self) -> int:
+        return self.packed.nbytes + self.scale.nbytes + self.zero.nbytes
+
+
+def quantize_np(x: np.ndarray, group: int = 32) -> QuantizedKV:
+    """x: (..., dh) f32/bf16 -> group-wise asymmetric int4."""
+    dh = x.shape[-1]
+    assert dh % group == 0 and dh % 2 == 0
+    g = x.reshape(*x.shape[:-1], dh // group, group).astype(np.float32)
+    lo = g.min(axis=-1)
+    hi = g.max(axis=-1)
+    scale = np.maximum((hi - lo) / 15.0, 1e-8)
+    codes = np.clip(np.rint((g - lo[..., None]) / scale[..., None]),
+                    0, 15).astype(np.uint8)
+    codes = codes.reshape(*x.shape[:-1], dh)
+    packed = (codes[..., 0::2] | (codes[..., 1::2] << 4))
+    return QuantizedKV(packed, scale.reshape(*x.shape[:-1], dh // group),
+                       lo.reshape(*x.shape[:-1], dh // group))
+
+
+def dequantize_np(q: QuantizedKV, group: int = 32) -> np.ndarray:
+    dh = q.packed.shape[-1] * 2
+    codes = np.empty((*q.packed.shape[:-1], dh), np.uint8)
+    codes[..., 0::2] = q.packed & 0xF
+    codes[..., 1::2] = q.packed >> 4
+    s = np.repeat(q.scale, group, axis=-1)
+    z = np.repeat(q.zero, group, axis=-1)
+    return codes.astype(np.float32) * s + z
+
+
+def quantize_jnp(x: Array, group: int = 32
+                 ) -> Tuple[Array, Array, Array]:
+    dh = x.shape[-1]
+    g = x.reshape(*x.shape[:-1], dh // group, group).astype(jnp.float32)
+    lo = g.min(axis=-1)
+    hi = g.max(axis=-1)
+    scale = jnp.maximum((hi - lo) / 15.0, 1e-8)
+    codes = jnp.clip(jnp.rint((g - lo[..., None]) / scale[..., None]),
+                     0, 15).astype(jnp.uint8)
+    codes = codes.reshape(*x.shape[:-1], dh)
+    packed = codes[..., 0::2] | (codes[..., 1::2] << 4)
+    return packed, scale, lo
+
+
+def dequantize_jnp(packed: Array, scale: Array, zero: Array,
+                   group: int = 32, dtype=jnp.float32) -> Array:
+    dh = packed.shape[-1] * 2
+    low = (packed & 0xF).astype(jnp.float32)
+    high = (packed >> 4).astype(jnp.float32)
+    codes = jnp.stack([low, high], axis=-1).reshape(*packed.shape[:-1], dh)
+    s = jnp.repeat(scale, group, axis=-1)
+    z = jnp.repeat(zero, group, axis=-1)
+    return (codes * s + z).astype(dtype)

@@ -1,0 +1,146 @@
+"""Exact KV-cache partial recomputation (the paper's core mechanism), as
+composable JAX ops plus a whole-model offload decode step.
+
+Host-side state per layer (column-by-column schedule, paper §3.2):
+  - attention-input activations  H[0:s']  (b, s', h)   [normed layer input]
+  - KV cache                     KV[l:s'] (b, s'-l, KV, dh)
+Each decode step receives X[0:l] = H[0:l] and KV[l:s']; the device
+recomputes KV[0:l] = rope(H[0:l] W_K), ... and runs exact attention over
+[recomputed | streamed | new-token] segments. No approximation: tested
+against the resident-cache decode path.
+
+`kvpr_decode_step` is the jit/dry-run entry point: its *inputs* are the
+streamed tensors, so the compiled graph shows the paper's transfer/compute
+structure (fewer host bytes in, extra recompute FLOPs).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.sharding import shard
+
+Array = jax.Array
+
+
+def recompute_kv(h_resident: Array, wk: Array, wv: Array,
+                 cfg: ModelConfig, pos_offset: int = 0,
+                 use_kernel: bool = False) -> Tuple[Array, Array]:
+    """Recompute K/V for resident activations (paper Eq. 7).
+
+    h_resident: (b, l, h) attention-input activations for tokens
+    [pos_offset, pos_offset + l). Returns k, v: (b, l, KV, dh), roped.
+    """
+    if use_kernel:
+        from repro.kernels import ops as kops
+        k, v = kops.kv_recompute(h_resident, wk, wv)
+    else:
+        k = jnp.einsum("blh,hnd->blnd", h_resident, wk)
+        v = jnp.einsum("blh,hnd->blnd", h_resident, wv)
+    if cfg.pos_embedding == "rope":
+        l = h_resident.shape[1]
+        positions = jnp.arange(l) + pos_offset
+        k = L.apply_rope(k, jnp.broadcast_to(positions,
+                                             (h_resident.shape[0], l)),
+                         cfg.rope_theta)
+    return k, v
+
+
+def merged_decode_attention(q: Array, segments, pos: Array,
+                            use_kernel: bool = False) -> Array:
+    """Exact single-token GQA attention over a list of KV segments
+    [(k, v, valid_len_or_None), ...] without materializing the merged
+    cache. q: (b, 1, H, dh). Softmax is computed jointly via the
+    standard two-pass (max, sum) combine across segments.
+    """
+    if use_kernel:
+        from repro.kernels import ops as kops
+        return kops.two_segment_decode_attention(q, segments, pos)
+    b, _, H, dh = q.shape
+    KV = segments[0][0].shape[2]
+    g = H // KV
+    qg = q.reshape(b, KV, g, dh)
+    scale = 1.0 / jnp.sqrt(dh).astype(jnp.float32)
+
+    maxes, exps, vals = [], [], []
+    for (k, v, valid) in segments:
+        s = k.shape[1]
+        if s == 0:  # empty segment (e.g. split l=0 -> nothing recomputed)
+            continue
+        scores = jnp.einsum("bkgd,bskd->bkgs", qg, k).astype(jnp.float32)
+        scores = scores * scale
+        if valid is not None:
+            mask = jnp.arange(s) < valid
+            scores = jnp.where(mask[None, None, None], scores, L.NEG_INF)
+        maxes.append(jnp.max(scores, axis=-1, keepdims=True))
+        exps.append(scores)
+        vals.append(v)
+
+    m = maxes[0]
+    for i in range(1, len(maxes)):
+        m = jnp.maximum(m, maxes[i])
+    num = jnp.zeros((b, KV, g, dh), jnp.float32)
+    den = jnp.zeros((b, KV, g, 1), jnp.float32)
+    for scores, v in zip(exps, vals):
+        e = jnp.exp(scores - m)
+        num = num + jnp.einsum("bkgs,bskd->bkgd", e,
+                               v.astype(jnp.float32))
+        den = den + jnp.sum(e, axis=-1, keepdims=True)
+    out = num / den
+    return out.reshape(b, 1, H, dh)
+
+
+def kvpr_decode_step(params, cfg: ModelConfig, token: Array, pos: Array,
+                     h_resident: Array, k_streamed: Array,
+                     v_streamed: Array, split_l: int,
+                     use_kernel: bool = False
+                     ) -> Tuple[Array, Array, Array, Array]:
+    """Whole-model offload decode step for dense-family archs.
+
+    token      : (b, 1) new token ids
+    pos        : () current position (= s', number of cached tokens)
+    h_resident : (L, b, l, h)  attention-input activations, tokens [0, l)
+    k_streamed : (L, b, S_str, KV, dh) KV for tokens [l, s'), padded to
+                 a static S_str; valid length = pos - split_l
+    returns (logits (b,1,V), k_new (L,b,1,KV,dh), v_new, h_new (L,b,1,h))
+    — the new-token KV and activations go back to host storage.
+    """
+    b = token.shape[0]
+    positions = jnp.broadcast_to(pos[None, None], (b, 1))
+    x = L.embed(token, params["embed"], cfg, positions[0])
+    valid_streamed = pos - split_l
+
+    def body(x, inp):
+        lp, h_res, k_str, v_str = inp
+        h = L.apply_norm(x, lp["ln1"], cfg.rms_eps)
+        q = jnp.einsum("bsh,hnd->bsnd", h, lp["attn"]["wq"])
+        k_new = jnp.einsum("bsh,hnd->bsnd", h, lp["attn"]["wk"])
+        v_new = jnp.einsum("bsh,hnd->bsnd", h, lp["attn"]["wv"])
+        if cfg.pos_embedding == "rope":
+            q = L.apply_rope(q, positions, cfg.rope_theta)
+            k_new = L.apply_rope(k_new, positions, cfg.rope_theta)
+        # paper Eq. 7: recompute the first-l KV from activations
+        k_rec, v_rec = recompute_kv(h_res, lp["attn"]["wk"],
+                                    lp["attn"]["wv"], cfg, pos_offset=0,
+                                    use_kernel=use_kernel)
+        out = merged_decode_attention(
+            q,
+            [(k_rec, v_rec, None),
+             (k_str, v_str, valid_streamed),
+             (k_new, v_new, None)],
+            pos, use_kernel=use_kernel)
+        out = out.reshape(b, 1, cfg.num_heads * cfg.dh).astype(x.dtype)
+        x = x + jnp.einsum("bsD,Dh->bsh", out, lp["attn"]["wo"])
+        h2 = L.apply_norm(x, lp["ln2"], cfg.rms_eps)
+        x = x + L.mlp_block(h2, lp["mlp"], cfg.act)
+        return x, (k_new, v_new, h)
+
+    x, (k_new, v_new, h_new) = jax.lax.scan(
+        body, x, (params["layers"], h_resident, k_streamed, v_streamed))
+    x = L.apply_norm(x, params["final_norm"], cfg.rms_eps)
+    logits = L.unembed(x, params["embed"], cfg)
+    return logits, k_new, v_new, h_new

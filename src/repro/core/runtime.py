@@ -1,0 +1,343 @@
+"""KVPR runtime module (paper §3.3): an executable host-offload decode
+engine with asynchronous streams and double buffering.
+
+The KV cache (and attention-input activations) live in HOST memory
+(numpy, emulating CPU DRAM / `pinned_host`). Each decode step streams, per
+layer, either
+  - the full KV cache                       (baseline / FlexGen mode), or
+  - activations[0:l] + KV[l:s']             (KVPR mode, solver-chosen l)
+into device arrays while the previous layer computes — a copy-thread pool
+emulates the CUDA-stream / DMA engine. On this CPU container "the link" is
+memcpy (jax.device_put), whose bandwidth the profiler measures; on TPU the
+identical structure maps to host-DMA into HBM with XLA async copies.
+
+Six overlapped flows of paper Alg. 1 and their mapping here:
+  load_weight            -> params resident (latency mode) or per-layer put
+  load_activation_recompute / load_cache / load_activation
+                         -> prefetch_layer() futures (double buffer)
+  compute                -> jitted per-layer step
+  store_activation / store_cache -> host_store.append() on the pool
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor, Future
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.cost_model import HardwareProfile, Workload
+from repro.core.solver import SplitDecision, optimal_split
+from repro.core import kvquant as KQ
+from repro.core import recompute as RC
+from repro.models import layers as L
+
+Array = jax.Array
+
+
+class HostKVStore:
+    """Host-memory (numpy) per-layer KV + activation storage, preallocated
+    ("pinned") to max_len so stores are slice writes, not reallocations.
+
+    compress="int4" keeps the KV cache group-wise 4-bit quantized in host
+    memory (paper §4.4 / beyond-paper executable path): appends quantize
+    once, fetches stream packed codes + scales (≈⅛ of the f32 bytes);
+    activations stay exact — the KVPR-recomputed prefix loses nothing.
+    """
+
+    def __init__(self, cfg: ModelConfig, batch: int, max_len: int,
+                 dtype=np.float32, compress: Optional[str] = None,
+                 group: int = 32):
+        Lh, KV, dh, h = (cfg.num_layers, cfg.num_kv_heads, cfg.dh,
+                         cfg.d_model)
+        self.compress = compress
+        self.group = group
+        if compress == "int4":
+            ng = dh // group
+            self.kq = KQ.QuantizedKV(
+                np.zeros((Lh, batch, max_len, KV, dh // 2), np.uint8),
+                np.zeros((Lh, batch, max_len, KV, ng), np.float32),
+                np.zeros((Lh, batch, max_len, KV, ng), np.float32))
+            self.vq = KQ.QuantizedKV(
+                np.zeros((Lh, batch, max_len, KV, dh // 2), np.uint8),
+                np.zeros((Lh, batch, max_len, KV, ng), np.float32),
+                np.zeros((Lh, batch, max_len, KV, ng), np.float32))
+        else:
+            self.k = np.zeros((Lh, batch, max_len, KV, dh), dtype)
+            self.v = np.zeros((Lh, batch, max_len, KV, dh), dtype)
+        self.act = np.zeros((Lh, batch, max_len, h), dtype)
+        self.len = 0
+        self.lock = threading.Lock()
+
+    def _put_kv(self, layer, sl, k: np.ndarray, v: np.ndarray):
+        if self.compress == "int4":
+            for buf, x in ((self.kq, k), (self.vq, v)):
+                q = KQ.quantize_np(x, self.group)
+                buf.packed[layer, :, sl] = q.packed
+                buf.scale[layer, :, sl] = q.scale
+                buf.zero[layer, :, sl] = q.zero
+        else:
+            self.k[layer, :, sl] = k
+            self.v[layer, :, sl] = v
+
+    def append(self, layer: int, k: np.ndarray, v: np.ndarray,
+               act: np.ndarray, pos: int):
+        self._put_kv(layer, slice(pos, pos + k.shape[1]), k, v)
+        self.act[layer, :, pos:pos + act.shape[1]] = act
+
+    def bulk_fill(self, ks, vs, acts, s: int):
+        """Fill from prefill outputs: (L, b, s, KV, dh) / (L, b, s, h)."""
+        if self.compress == "int4":
+            for li in range(ks.shape[0]):
+                self._put_kv(li, slice(0, s), ks[li], vs[li])
+        else:
+            self.k[:, :, :s] = ks
+            self.v[:, :, :s] = vs
+        self.act[:, :, :s] = acts
+        self.len = s
+
+
+@dataclasses.dataclass
+class StepStats:
+    t_total: float
+    t_wait_transfer: float      # GPU idle waiting on host data
+    t_compute: float
+    bytes_transferred: int
+    split_l: int
+
+
+class OffloadDecodeRuntime:
+    """Decode loop for dense-family models with host-offloaded KV cache.
+
+    mode: "flexgen" (full KV streamed) | "kvpr" (partial recompute).
+    The per-layer compute is a single jitted function; transfers for layer
+    i+1 are issued while layer i computes (double buffering).
+    """
+
+    def __init__(self, cfg: ModelConfig, params, hw: HardwareProfile,
+                 mode: str = "kvpr", schedule: str = "row",
+                 align: int = 1, n_copy_threads: int = 2,
+                 compress: Optional[str] = None, group: int = 32,
+                 offload_weights: bool = False,
+                 fine_grained: bool = True):
+        self.cfg = cfg
+        self.params = params
+        self.hw = hw
+        self.mode = mode
+        self.schedule = schedule
+        self.align = align
+        self.compress = compress
+        self.group = group
+        # Weight offloading (paper's throughput mode, §3.2/§3.3): layer
+        # weights live in host memory and stream per layer. fine_grained
+        # (Fig. 5b) issues the W_K/W_V copy FIRST so KV recomputation can
+        # begin before W_Q/W_O/FFN arrive; coarse (Fig. 5a) copies the
+        # whole layer in one piece.
+        self.offload_weights = offload_weights
+        self.fine_grained = fine_grained
+        if offload_weights:
+            n_layers = jax.tree.leaves(params["layers"])[0].shape[0]
+            self._host_layers = [
+                jax.tree.map(lambda a, i=i: np.asarray(a[i]),
+                             params["layers"])
+                for i in range(n_layers)]
+        self.pool = ThreadPoolExecutor(max_workers=n_copy_threads)
+        self._layer_fn = jax.jit(self._layer_step,
+                                 static_argnames=("split_l", "s_str"))
+        self._bytes = 0
+
+    # ------------------------------------------------------- weight loads
+
+    _KV_KEYS = ("wk", "wv")
+
+    def _fetch_weights_kv(self, layer: int):
+        """Stage 1 (fine-grained priority): W_K and W_V only."""
+        hl = self._host_layers[layer]
+        out = {k: jax.device_put(hl["attn"][k]) for k in self._KV_KEYS}
+        return out, sum(a.nbytes for a in out.values())
+
+    def _fetch_weights_rest(self, layer: int):
+        """Stage 2: everything except W_K/W_V."""
+        hl = self._host_layers[layer]
+        rest = {"attn": {k: v for k, v in hl["attn"].items()
+                         if k not in self._KV_KEYS},
+                **{k: v for k, v in hl.items() if k != "attn"}}
+        out = jax.tree.map(jax.device_put, rest)
+        return out, sum(a.nbytes for a in jax.tree.leaves(out))
+
+    def _assemble_layer(self, wkv, rest):
+        lp = dict(rest)
+        lp["attn"] = dict(rest["attn"], **wkv)
+        return lp
+
+    # ---------------------------------------------------------- layer step
+
+    def _layer_step(self, x, lp, h_res, k_str, v_str, pos, valid_streamed,
+                    split_l: int, s_str: int):
+        cfg = self.cfg
+        b = x.shape[0]
+        positions = jnp.broadcast_to(pos[None, None], (b, 1))
+        h = L.apply_norm(x, lp["ln1"], cfg.rms_eps)
+        q = jnp.einsum("bsh,hnd->bsnd", h, lp["attn"]["wq"])
+        k_new = jnp.einsum("bsh,hnd->bsnd", h, lp["attn"]["wk"])
+        v_new = jnp.einsum("bsh,hnd->bsnd", h, lp["attn"]["wv"])
+        if cfg.pos_embedding == "rope":
+            q = L.apply_rope(q, positions, cfg.rope_theta)
+            k_new = L.apply_rope(k_new, positions, cfg.rope_theta)
+        segments = []
+        if split_l > 0:
+            k_rec, v_rec = RC.recompute_kv(h_res, lp["attn"]["wk"],
+                                           lp["attn"]["wv"], cfg)
+            segments.append((k_rec, v_rec, None))
+        if s_str > 0:
+            if self.compress == "int4":
+                # streamed segment arrives packed; dequantize on device
+                # (on TPU this fuses into the attention kernel — see
+                # kernels/kv_dequant_attention.py)
+                k_str = KQ.dequantize_jnp(*k_str, group=self.group)
+                v_str = KQ.dequantize_jnp(*v_str, group=self.group)
+            segments.append((k_str, v_str, valid_streamed))
+        segments.append((k_new, v_new, None))
+        out = RC.merged_decode_attention(q, segments, pos)
+        out = out.reshape(b, 1, cfg.num_heads * cfg.dh).astype(x.dtype)
+        x = x + jnp.einsum("bsD,Dh->bsh", out, lp["attn"]["wo"])
+        h2 = L.apply_norm(x, lp["ln2"], cfg.rms_eps)
+        x = x + L.mlp_block(h2, lp["mlp"], cfg.act)
+        return x, k_new, v_new, h
+
+    # ----------------------------------------------------------- transfers
+
+    def _fetch_layer(self, store: HostKVStore, layer: int, s_cur: int,
+                     split: SplitDecision, s_str: int):
+        """Copy host slices to device (the 'PCIe' transfer)."""
+        l = split.l
+        h_res = jax.device_put(store.act[layer, :, :max(l, 1)])
+        sl = slice(l, l + s_str) if s_str else slice(0, 1)
+        if self.compress == "int4":
+            k_str = tuple(
+                jax.device_put(np.ascontiguousarray(b[layer, :, sl]))
+                for b in store.kq)
+            v_str = tuple(
+                jax.device_put(np.ascontiguousarray(b[layer, :, sl]))
+                for b in store.vq)
+            kv_bytes = sum(a.nbytes for a in k_str + v_str)
+        else:
+            k_str = jax.device_put(
+                np.ascontiguousarray(store.k[layer, :, sl]))
+            v_str = jax.device_put(
+                np.ascontiguousarray(store.v[layer, :, sl]))
+            kv_bytes = k_str.nbytes + v_str.nbytes
+        nbytes = (h_res.nbytes if l else 0) + (kv_bytes if s_str else 0)
+        return h_res, k_str, v_str, nbytes
+
+    def _split_for(self, s_cur: int) -> SplitDecision:
+        cfg = self.cfg
+        wl = Workload(batch=self.batch, seq_len=s_cur, d_model=cfg.d_model,
+                      kv_dim=cfg.num_kv_heads * cfg.dh, dtype_bytes=4)
+        if self.mode == "flexgen":
+            return SplitDecision(0, 0, 0, 0, 0, self.schedule, s_cur)
+        return optimal_split(wl, self.hw, schedule=self.schedule,
+                             align=self.align)
+
+    # -------------------------------------------------------------- decode
+
+    def decode(self, store: HostKVStore, first_token: np.ndarray,
+               gen_len: int, pad_to: Optional[int] = None
+               ) -> Tuple[np.ndarray, List[StepStats]]:
+        """Generate `gen_len` tokens greedily. Returns (tokens, stats)."""
+        cfg = self.cfg
+        params = self.params
+        self.batch = first_token.shape[0]
+        token = jnp.asarray(first_token)
+        stats: List[StepStats] = []
+        out_tokens = []
+
+        for g in range(gen_len):
+            s_cur = store.len
+            split = self._split_for(s_cur)
+            # static streamed length, padded for jit-cache friendliness
+            s_str_exact = s_cur - split.l
+            s_str = s_str_exact if pad_to is None else \
+                min(-(-s_str_exact // pad_to) * pad_to,
+                    store.k.shape[2] - split.l)
+            t0 = time.perf_counter()
+            pos = jnp.asarray(s_cur, jnp.int32)
+            positions = jnp.full((self.batch, 1), s_cur, jnp.int32)
+            x = L.embed(token, params["embed"], cfg, positions[0])
+
+            t_wait = 0.0
+            nbytes_total = 0
+
+            def submit_weights(layer):
+                """fine-grained: W_K/W_V first (Fig. 5b); coarse: one
+                combined copy (Fig. 5a)."""
+                if self.fine_grained:
+                    return (self.pool.submit(self._fetch_weights_kv,
+                                             layer),
+                            self.pool.submit(self._fetch_weights_rest,
+                                             layer))
+                both = self.pool.submit(
+                    lambda l: (self._fetch_weights_kv(l),
+                               self._fetch_weights_rest(l)), layer)
+                return both, None
+
+            # prefetch layer 0 (weights first when offloaded — they gate
+            # recomputation; then the KV/activation stream)
+            w_fut = submit_weights(0) if self.offload_weights else None
+            fut = self.pool.submit(self._fetch_layer, store, 0, s_cur,
+                                   split, s_str)
+            new_kv = []
+            for li in range(cfg.num_layers):
+                tw0 = time.perf_counter()
+                if self.offload_weights:
+                    if self.fine_grained:
+                        (wkv, nb_kv) = w_fut[0].result()
+                        (rest, nb_r) = w_fut[1].result()
+                    else:
+                        (wkv, nb_kv), (rest, nb_r) = w_fut[0].result()
+                    lp = self._assemble_layer(wkv, rest)
+                    nbytes_total += nb_kv + nb_r
+                else:
+                    lp = jax.tree.map(lambda a: a[li], params["layers"])
+                h_res, k_str, v_str, nb = fut.result()
+                t_wait += time.perf_counter() - tw0
+                nbytes_total += nb
+                if li + 1 < cfg.num_layers:
+                    if self.offload_weights:
+                        w_fut = submit_weights(li + 1)
+                    fut = self.pool.submit(self._fetch_layer, store, li + 1,
+                                           s_cur, split, s_str)
+                x, k_new, v_new, h_new = self._layer_fn(
+                    x, lp, h_res, k_str, v_str, pos,
+                    jnp.asarray(s_str_exact, jnp.int32),
+                    split_l=split.l, s_str=s_str)
+                new_kv.append((li, k_new, v_new, h_new))
+
+            x = L.apply_norm(x, params["final_norm"], cfg.rms_eps)
+            logits = L.unembed(x, params["embed"], cfg)
+            token = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+            token.block_until_ready()
+
+            # store new KV + activations back to host (async), then the
+            # paper's Alg. 1 `synchronize()`: the next step's fetches must
+            # not race with this step's stores.
+            store_futs = [
+                self.pool.submit(store.append, li, np.asarray(k_new),
+                                 np.asarray(v_new), np.asarray(h_new),
+                                 s_cur)
+                for (li, k_new, v_new, h_new) in new_kv]
+            for f in store_futs:
+                f.result()
+            store.len = s_cur + 1
+            out_tokens.append(np.asarray(token))
+
+            dt = time.perf_counter() - t0
+            stats.append(StepStats(dt, t_wait, dt - t_wait, nbytes_total,
+                                   split.l))
+        return np.concatenate(out_tokens, axis=1), stats

@@ -1,0 +1,111 @@
+"""KVPR scheduler: optimal KV-cache split point (paper §3.2, Eq. 10-11).
+
+    min_l   t(l) = M_X(l)/v_com + max( N(l)/v_gpu , M_KV(l:s')/v_com )
+    s.t.    0 <= l <= bound
+
+The objective is piecewise linear in the single integer variable l:
+ - the recompute term N(l)/v_gpu increases in l,
+ - the KV transfer term M_KV/v_com decreases in l,
+so t(l) is convex; the optimum is at the crossing of the two max() arms
+(or at a boundary). We solve in closed form and refine on integers, then
+round DOWN to a multiple of `align` (TPU adaptation: the Pallas recompute
+kernel wants MXU-aligned token counts; see DESIGN.md §2).
+
+Row-by-row schedule = same problem without the activation-transfer term
+(activations for the current batch are already on-device, paper §3.2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.core.cost_model import HardwareProfile, Workload, layer_times
+
+
+@dataclasses.dataclass(frozen=True)
+class SplitDecision:
+    l: int                      # tokens recomputed on the accelerator
+    t_total: float              # predicted per-layer time (s)
+    t_recomp: float
+    t_kv: float
+    t_act: float
+    schedule: str               # "row" | "column"
+    bound: int                  # upper bound used (prompt len s for column)
+
+
+def _clamp(x: float, lo: float, hi: float) -> float:
+    return max(lo, min(hi, x))
+
+
+def optimal_split(wl: Workload, hw: HardwareProfile,
+                  schedule: str = "column",
+                  bound: Optional[int] = None,
+                  align: int = 1) -> SplitDecision:
+    """Closed-form + integer refinement solution of Eq. 11."""
+    include_act = schedule == "column"
+    s = wl.seq_len
+    bound = min(bound if bound is not None else s, s)
+
+    B = wl.batch
+    p = wl.dtype_bytes
+    h = wl.d_model
+    kv = wl.kv_dim
+
+    # t(l) = include_act * (B l h p)/v_com
+    #        + max( 4 B l h kv / v_gpu , 2 B (s-l) kv p / v_com )
+    # crossing point of the two max arms:
+    #   4 B h kv / v_gpu * l = 2 B kv p / v_com * (s - l)
+    a = 4 * B * h * kv / hw.v_gpu              # recompute slope
+    c = 2 * B * kv * p / hw.v_com              # kv transfer slope
+    l_cross = c * s / (a + c) if (a + c) > 0 else 0.0
+
+    # The act-transfer term grows in l, so if it is included the optimum can
+    # sit below the crossing: for l < l_cross, t = act(l) + kv(s-l), slope
+    # = B h p / v_com - c. If that slope is >= 0 the optimum is l = 0.
+    act_slope = (B * h * p / hw.v_com) if include_act else 0.0
+    if act_slope - c >= 0:
+        cand = [0.0]
+    else:
+        cand = [l_cross]
+    # beyond the crossing slope is act_slope + a > 0, never better.
+
+    best = None
+    seen = set()
+    for lc in cand:
+        base = int(_clamp(lc, 0, bound))
+        for li in {0, bound,
+                   (base // align) * align,
+                   min(((base // align) + 1) * align, bound),
+                   base, max(base - 1, 0), min(base + 1, bound)}:
+            li = max(0, min(li, bound))
+            if align > 1:
+                li = (li // align) * align
+            if li in seen:
+                continue
+            seen.add(li)
+            t = layer_times(wl, hw, li, include_act)
+            if best is None or t["total"] < best[1]["total"]:
+                best = (li, t)
+
+    li, t = best
+    return SplitDecision(l=li, t_total=t["total"], t_recomp=t["t_recomp"],
+                         t_kv=t["t_kv"], t_act=t["t_act"],
+                         schedule=schedule, bound=bound)
+
+
+def brute_force_split(wl: Workload, hw: HardwareProfile,
+                      schedule: str = "column",
+                      bound: Optional[int] = None,
+                      align: int = 1) -> SplitDecision:
+    """O(s) exhaustive reference used by property tests."""
+    include_act = schedule == "column"
+    bound = min(bound if bound is not None else wl.seq_len, wl.seq_len)
+    best = None
+    for li in range(0, bound + 1, align):
+        t = layer_times(wl, hw, li, include_act)
+        if best is None or t["total"] < best[1]["total"]:
+            best = (li, t)
+    li, t = best
+    return SplitDecision(l=li, t_total=t["total"], t_recomp=t["t_recomp"],
+                         t_kv=t["t_kv"], t_act=t["t_act"],
+                         schedule=schedule, bound=bound)

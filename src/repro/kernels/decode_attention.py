@@ -1,0 +1,129 @@
+"""Pallas TPU kernel: flash-decode single-token GQA attention over one KV
+segment, returning partial-softmax statistics so multiple segments
+(recomputed | streamed | new-token, per KVPR) — or seq-parallel shards —
+can be combined exactly without materializing a merged cache.
+
+Grid: (batch, kv_heads, kv_chunks); the chunk axis is innermost and
+sequential on TPU, so the online-softmax state (m, l, acc) lives in VMEM
+scratch across chunk steps. Chunk positions >= valid_len are masked (the
+segment may be padded to a static length).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+NEG_INF = -1e30
+
+
+def _kernel(valid_ref, q_ref, k_ref, v_ref,
+            out_ref, m_ref, l_ref,
+            acc, m_s, l_s, *, nchunks: int, chunk: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+
+    q = q_ref[0, 0]                                # (g, dh)
+    k = k_ref[0, 0]                                # (C, dh)
+    v = v_ref[0, 0]                                # (C, dh)
+    valid = valid_ref[0]
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (g, C)
+    s = s / jnp.sqrt(q.shape[-1]).astype(jnp.float32)
+    posn = ci * chunk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(posn < valid, s, NEG_INF)
+
+    m_prev = m_s[...]                              # (g, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    e = jnp.exp(s - m_new)                         # (g, C)
+    l_new = l_s[...] * alpha + jnp.sum(e, axis=-1, keepdims=True)
+    acc[...] = acc[...] * alpha + jnp.dot(
+        e, v.astype(jnp.float32), preferred_element_type=jnp.float32)
+    m_s[...] = m_new
+    l_s[...] = l_new
+
+    @pl.when(ci == nchunks - 1)
+    def _flush():
+        out_ref[0, 0] = (acc[...] /
+                         jnp.maximum(l_s[...], 1e-30)).astype(out_ref.dtype)
+        m_ref[0, 0] = m_s[...]
+        l_ref[0, 0] = l_s[...]
+
+
+def _chunk_of(s: int, pref: int) -> int:
+    if s % pref == 0:
+        return pref
+    for c in range(min(pref, s), 0, -1):
+        if s % c == 0:
+            return c
+    return s
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("interpret", "chunk"))
+def flash_decode_segment(q: Array, k: Array, v: Array, valid_len: Array,
+                         interpret: bool = False, chunk: int = 512):
+    """q: (b, KV, g, dh); k/v: (b, KV, S, dh); valid_len: () int32.
+
+    Returns (out (b,KV,g,dh) — normalized within this segment,
+             m (b,KV,g,1) row maxes, l (b,KV,g,1) softmax sums) so the
+    caller can exactly combine several segments.
+    """
+    b, KV, g, dh = q.shape
+    S = k.shape[2]
+    C = _chunk_of(S, chunk)
+    nchunks = S // C
+    valid = jnp.broadcast_to(jnp.asarray(valid_len, jnp.int32), (1,))
+
+    kern = functools.partial(_kernel, nchunks=nchunks, chunk=C)
+    out, m, l = pl.pallas_call(
+        kern,
+        grid=(b, KV, nchunks),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, g, dh), lambda bi, hi, ci: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, 1, C, dh), lambda bi, hi, ci: (bi, hi, ci, 0)),
+            pl.BlockSpec((1, 1, C, dh), lambda bi, hi, ci: (bi, hi, ci, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, g, dh), lambda bi, hi, ci: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, 1, g, 1), lambda bi, hi, ci: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, 1, g, 1), lambda bi, hi, ci: (bi, hi, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, KV, g, dh), q.dtype),
+            jax.ShapeDtypeStruct((b, KV, g, 1), jnp.float32),
+            jax.ShapeDtypeStruct((b, KV, g, 1), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((g, dh), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(valid, q, k, v)
+    return out, m, l
+
+
+def combine_segments(parts):
+    """Exact softmax combine of per-segment (out, m, l) triples."""
+    m_star = parts[0][1]
+    for (_, m, _) in parts[1:]:
+        m_star = jnp.maximum(m_star, m)
+    num = 0.0
+    den = 0.0
+    for (out, m, l) in parts:
+        w = l * jnp.exp(m - m_star)
+        num = num + out.astype(jnp.float32) * w
+        den = den + w
+    return (num / jnp.maximum(den, 1e-30)).astype(parts[0][0].dtype)

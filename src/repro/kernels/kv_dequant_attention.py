@@ -1,0 +1,152 @@
+"""Pallas TPU kernel: flash-decode attention over an int4-quantized KV
+segment, dequantizing inside the kernel (beyond-paper extension; the
+paper's §4.4 applies 4-bit compression before the PCIe transfer but
+dequantizes as a separate pass).
+
+Fusing dequant into the attention kernel means the packed KV (¼ the
+bf16 bytes) is what crosses HBM->VMEM; the f32 dequantized values live
+only in VMEM/VREGs. For host-offload decode this compounds with KVPR:
+the streamed segment is quantized on the host (core/kvquant), while the
+KVPR-recomputed prefix stays exact bf16 — recompute quality is free.
+
+Quantization layout (see core/kvquant.py):
+  packed  (..., S, dh//2) uint8 — two 4-bit codes per byte, code i at
+          byte i//2 (low nibble = even i, high nibble = odd i)
+  scale   (..., S, dh//G) f32 — per contiguous group of G along dh
+  zero    (..., S, dh//G) f32 — dequant: x = code * scale + zero
+
+Grid and online-softmax state mirror decode_attention.flash_decode_segment
+so segments of mixed precision combine exactly via combine_segments.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+NEG_INF = -1e30
+
+
+def _dequant_block(packed, scale, zero, dh: int, group: int):
+    """packed (C, dh//2) uint8, scale/zero (C, dh//G) -> (C, dh) f32."""
+    C = packed.shape[0]
+    low = (packed & 0xF).astype(jnp.float32)
+    high = (packed >> 4).astype(jnp.float32)
+    # interleave low/high -> (C, dh): codes[2j] = low[j], codes[2j+1] = high[j]
+    codes = jnp.stack([low, high], axis=-1).reshape(C, dh)
+    s = jnp.repeat(scale, group, axis=-1)
+    z = jnp.repeat(zero, group, axis=-1)
+    return codes * s + z
+
+
+def _kernel(valid_ref, q_ref, kp_ref, ks_ref, kz_ref, vp_ref, vs_ref,
+            vz_ref, out_ref, m_ref, l_ref,
+            acc, m_s, l_s, *, nchunks: int, chunk: int, dh: int,
+            group: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+
+    q = q_ref[0, 0]                                   # (g, dh)
+    k = _dequant_block(kp_ref[0, 0], ks_ref[0, 0], kz_ref[0, 0],
+                       dh, group)                     # (C, dh) f32
+    v = _dequant_block(vp_ref[0, 0], vs_ref[0, 0], vz_ref[0, 0],
+                       dh, group)
+    valid = valid_ref[0]
+
+    s = jnp.dot(q.astype(jnp.float32), k.T,
+                preferred_element_type=jnp.float32)   # (g, C)
+    s = s / jnp.sqrt(q.shape[-1]).astype(jnp.float32)
+    posn = ci * chunk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(posn < valid, s, NEG_INF)
+
+    m_prev = m_s[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    e = jnp.exp(s - m_new)
+    l_new = l_s[...] * alpha + jnp.sum(e, axis=-1, keepdims=True)
+    acc[...] = acc[...] * alpha + jnp.dot(
+        e, v, preferred_element_type=jnp.float32)
+    m_s[...] = m_new
+    l_s[...] = l_new
+
+    @pl.when(ci == nchunks - 1)
+    def _flush():
+        out_ref[0, 0] = (acc[...] /
+                         jnp.maximum(l_s[...], 1e-30)).astype(out_ref.dtype)
+        m_ref[0, 0] = m_s[...]
+        l_ref[0, 0] = l_s[...]
+
+
+def _chunk_of(s: int, pref: int) -> int:
+    if s % pref == 0:
+        return pref
+    for c in range(min(pref, s), 0, -1):
+        if s % c == 0:
+            return c
+    return s
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("group", "interpret", "chunk"))
+def flash_decode_segment_int4(q: Array,
+                              k_packed: Array, k_scale: Array,
+                              k_zero: Array,
+                              v_packed: Array, v_scale: Array,
+                              v_zero: Array,
+                              valid_len: Array, group: int = 32,
+                              interpret: bool = False, chunk: int = 512):
+    """q: (b, KV, g, dh); *_packed: (b, KV, S, dh//2) uint8;
+    *_scale/zero: (b, KV, S, dh//group) f32; valid_len: () int32.
+
+    Returns (out, m, l) — same contract as flash_decode_segment, so
+    exact cross-segment combine works across precisions.
+    """
+    b, KV, g, dh = q.shape
+    S = k_packed.shape[2]
+    ng = dh // group
+    C = _chunk_of(S, chunk)
+    nchunks = S // C
+    valid = jnp.broadcast_to(jnp.asarray(valid_len, jnp.int32), (1,))
+
+    kern = functools.partial(_kernel, nchunks=nchunks, chunk=C, dh=dh,
+                             group=group)
+    kv_spec = pl.BlockSpec((1, 1, C, dh // 2),
+                           lambda bi, hi, ci: (bi, hi, ci, 0))
+    sc_spec = pl.BlockSpec((1, 1, C, ng),
+                           lambda bi, hi, ci: (bi, hi, ci, 0))
+    out, m, l = pl.pallas_call(
+        kern,
+        grid=(b, KV, nchunks),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, g, dh), lambda bi, hi, ci: (bi, hi, 0, 0)),
+            kv_spec, sc_spec, sc_spec,
+            kv_spec, sc_spec, sc_spec,
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, g, dh), lambda bi, hi, ci: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, 1, g, 1), lambda bi, hi, ci: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, 1, g, 1), lambda bi, hi, ci: (bi, hi, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, KV, g, dh), q.dtype),
+            jax.ShapeDtypeStruct((b, KV, g, 1), jnp.float32),
+            jax.ShapeDtypeStruct((b, KV, g, 1), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((g, dh), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(valid, q, k_packed, k_scale, k_zero, v_packed, v_scale, v_zero)
+    return out, m, l

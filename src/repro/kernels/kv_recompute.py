@@ -1,0 +1,83 @@
+"""Pallas TPU kernel: fused KV recomputation (paper Eq. 7, the KVPR
+decode hot-spot).
+
+Computes K = X @ W_K and V = X @ W_V in ONE pass over the X tiles: each
+X block is loaded from HBM into VMEM once and feeds both MXU GEMMs,
+halving activation bandwidth vs two separate matmuls. Accumulation is
+f32 in VMEM scratch; block sizes are MXU-aligned (128) where shapes
+allow. Grid: (batch, l-blocks, n-blocks, k-blocks), k innermost
+(sequential accumulation).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+
+def _kernel(x_ref, wk_ref, wv_ref, k_ref, v_ref, acc_k, acc_v, *,
+            nk: int):
+    @pl.when(pl.program_id(3) == 0)
+    def _init():
+        acc_k[...] = jnp.zeros_like(acc_k)
+        acc_v[...] = jnp.zeros_like(acc_v)
+
+    x = x_ref[0]                                   # (BL, BK)
+    acc_k[...] += jnp.dot(x, wk_ref[...],
+                          preferred_element_type=jnp.float32)
+    acc_v[...] += jnp.dot(x, wv_ref[...],
+                          preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(3) == nk - 1)
+    def _flush():
+        k_ref[0] = acc_k[...].astype(k_ref.dtype)
+        v_ref[0] = acc_v[...].astype(v_ref.dtype)
+
+
+def _block(dim: int, pref: int) -> int:
+    if dim % pref == 0:
+        return pref
+    # largest divisor of dim that is <= pref (shapes in tests are small)
+    for c in range(min(pref, dim), 0, -1):
+        if dim % c == 0:
+            return c
+    return dim
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "bl", "bn", "bk"))
+def kv_recompute_pallas(x: Array, wk: Array, wv: Array,
+                        interpret: bool = False,
+                        bl: int = 128, bn: int = 128, bk: int = 512):
+    """x: (b, l, h); wk/wv: (h, N) with N = kv_heads * head_dim.
+    Returns (k, v): (b, l, N) in x.dtype."""
+    b, l, h = x.shape
+    n = wk.shape[1]
+    BL, BN, BK = _block(l, bl), _block(n, bn), _block(h, bk)
+    nk = h // BK
+    grid = (b, l // BL, n // BN, nk)
+
+    out_shape = [jax.ShapeDtypeStruct((b, l, n), x.dtype)] * 2
+    kern = functools.partial(_kernel, nk=nk)
+    k, v = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, BL, BK), lambda bi, i, j, kk: (bi, i, kk)),
+            pl.BlockSpec((BK, BN), lambda bi, i, j, kk: (kk, j)),
+            pl.BlockSpec((BK, BN), lambda bi, i, j, kk: (kk, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, BL, BN), lambda bi, i, j, kk: (bi, i, j)),
+            pl.BlockSpec((1, BL, BN), lambda bi, i, j, kk: (bi, i, j)),
+        ],
+        out_shape=out_shape,
+        scratch_shapes=[pltpu.VMEM((BL, BN), jnp.float32),
+                        pltpu.VMEM((BL, BN), jnp.float32)],
+        interpret=interpret,
+    )(x, wk, wv)
+    return k, v

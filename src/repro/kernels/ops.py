@@ -1,0 +1,49 @@
+"""Jit'd public wrappers around the Pallas kernels, with automatic
+interpret-mode on CPU (the container validates kernels in interpret=True;
+on TPU the same calls compile natively)."""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import decode_attention as DA
+from repro.kernels import kv_recompute as KR
+
+Array = jax.Array
+
+
+def _interpret() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def kv_recompute(x: Array, wk: Array, wv: Array) -> Tuple[Array, Array]:
+    """x: (b, l, h); wk/wv: (h, KV, dh) -> k, v: (b, l, KV, dh)."""
+    b, l, h = x.shape
+    KV, dh = wk.shape[1], wk.shape[2]
+    k, v = KR.kv_recompute_pallas(x, wk.reshape(h, KV * dh),
+                                  wv.reshape(h, KV * dh),
+                                  interpret=_interpret())
+    return k.reshape(b, l, KV, dh), v.reshape(b, l, KV, dh)
+
+
+def two_segment_decode_attention(q: Array, segments, pos: Array) -> Array:
+    """KVPR merged attention via per-segment flash-decode + exact combine.
+
+    q: (b, 1, H, dh); segments: [(k (b,S,KV,dh), v, valid|None), ...].
+    """
+    b, _, H, dh = q.shape
+    KV = segments[0][0].shape[2]
+    g = H // KV
+    qg = q.reshape(b, KV, g, dh)
+    parts = []
+    for (k, v, valid) in segments:
+        S = k.shape[1]
+        kk = jnp.moveaxis(k, 2, 1)                 # (b, KV, S, dh)
+        vv = jnp.moveaxis(v, 2, 1)
+        vl = jnp.asarray(S if valid is None else valid, jnp.int32)
+        parts.append(DA.flash_decode_segment(qg, kk, vv, vl,
+                                             interpret=_interpret()))
+    out = DA.combine_segments(parts)
+    return out.reshape(b, 1, H, dh)

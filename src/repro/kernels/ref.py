@@ -1,0 +1,60 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+NEG_INF = -1e30
+
+
+def kv_recompute_ref(x: Array, wk: Array, wv: Array):
+    """x: (b, l, h); wk/wv: (h, N) -> (k, v): (b, l, N)."""
+    k = jnp.einsum("blh,hn->bln", x.astype(jnp.float32),
+                   wk.astype(jnp.float32))
+    v = jnp.einsum("blh,hn->bln", x.astype(jnp.float32),
+                   wv.astype(jnp.float32))
+    return k.astype(x.dtype), v.astype(x.dtype)
+
+
+def flash_decode_segment_ref(q: Array, k: Array, v: Array, valid_len):
+    """q: (b,KV,g,dh); k/v: (b,KV,S,dh). Returns (out, m, l) matching
+    kernels.decode_attention.flash_decode_segment."""
+    S = k.shape[2]
+    s = jnp.einsum("bkgd,bksd->bkgs", q.astype(jnp.float32),
+                   k.astype(jnp.float32))
+    s = s / jnp.sqrt(q.shape[-1]).astype(jnp.float32)
+    mask = jnp.arange(S) < valid_len
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s - m)
+    l = jnp.sum(e, axis=-1, keepdims=True)
+    out = jnp.einsum("bkgs,bksd->bkgd", e, v.astype(jnp.float32))
+    out = out / jnp.maximum(l, 1e-30)
+    return out.astype(q.dtype), m, l
+
+
+def merged_attention_ref(q: Array, segments):
+    """Exact attention over concatenated segments [(k, v, valid|None)].
+    q: (b, 1, H, dh); k/v: (b, S, KV, dh). Returns (b, 1, H, dh)."""
+    ks, vs, masks = [], [], []
+    for (k, v, valid) in segments:
+        S = k.shape[1]
+        ks.append(k)
+        vs.append(v)
+        m = jnp.ones((S,), bool) if valid is None else \
+            (jnp.arange(S) < valid)
+        masks.append(m)
+    k = jnp.concatenate(ks, axis=1)
+    v = jnp.concatenate(vs, axis=1)
+    mask = jnp.concatenate(masks)
+    b, _, H, dh = q.shape
+    KV = k.shape[2]
+    g = H // KV
+    qg = q.reshape(b, KV, g, dh)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) / jnp.sqrt(dh)
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", w, v.astype(jnp.float32))
+    return out.reshape(b, 1, H, dh).astype(q.dtype)

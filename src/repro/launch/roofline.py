@@ -1,0 +1,180 @@
+"""Roofline-term extraction from AOT-compiled dry-run artifacts.
+
+  compute term    = HLO_FLOPs(per device) / peak_FLOP/s
+  memory term     = HLO_bytes(per device) / HBM_bw
+  collective term = collective_bytes(per device) / link_bw
+
+cost_analysis() gives FLOPs/bytes for one device's partitioned program;
+collective bytes are parsed from the compiled HLO text (all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute operand
+sizes).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+from repro.core.cost_model import V5E_HBM_BW, V5E_ICI_BW, V5E_PEAK_FLOPS
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+# e.g.:  %ag = bf16[2,1024,128]{2,1,0:T(8,128)} all-gather(%x), ...
+_OP_RE = re.compile(
+    r"=\s*(?:\()?\s*([a-z0-9]+)\[([0-9,]*)\][^ ]*\s+(" +
+    "|".join(_COLLECTIVES) + r")[-a-z]*\(")
+
+
+def parse_collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum output bytes of every collective op, by op kind."""
+    out: Dict[str, float] = {c: 0.0 for c in _COLLECTIVES}
+    counts: Dict[str, int] = {c: 0 for c in _COLLECTIVES}
+    for m in _OP_RE.finditer(hlo_text):
+        dt, dims, kind = m.group(1), m.group(2), m.group(3)
+        nbytes = _DTYPE_BYTES.get(dt, 4)
+        for d in dims.split(","):
+            if d:
+                nbytes *= int(d)
+        out[kind] += nbytes
+        counts[kind] += 1
+    out["_counts"] = counts  # type: ignore
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    flops_per_dev: float
+    bytes_per_dev: float
+    coll_bytes_per_dev: float
+    coll_detail: Dict[str, float]
+    per_device_memory: Optional[dict] = None
+    model_flops: float = 0.0      # 6·N·D (or analogue) / device
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_dev / V5E_PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_dev / V5E_HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes_per_dev / V5E_ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        return self.model_flops / self.flops_per_dev if self.flops_per_dev \
+            else 0.0
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "flops_per_dev": self.flops_per_dev,
+            "bytes_per_dev": self.bytes_per_dev,
+            "coll_bytes_per_dev": self.coll_bytes_per_dev,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "model_flops_per_dev": self.model_flops,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "coll_detail": {k: v for k, v in self.coll_detail.items()
+                            if k != "_counts"},
+            "coll_counts": self.coll_detail.get("_counts", {}),
+            "memory": self.per_device_memory,
+        }
+
+
+def from_compiled(compiled, arch: str, shape: str, mesh_name: str,
+                  model_flops_per_dev: float = 0.0) -> Roofline:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    nbytes = float(cost.get("bytes accessed", 0.0))
+    try:
+        hlo = compiled.as_text()
+    except Exception:
+        hlo = ""
+    coll = parse_collective_bytes(hlo)
+    coll_total = sum(v for k, v in coll.items() if k != "_counts")
+    mem = None
+    try:
+        ma = compiled.memory_analysis()
+        mem = {
+            "argument_bytes": int(getattr(ma, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(ma, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(ma, "temp_size_in_bytes", 0)),
+            "code_bytes": int(getattr(ma, "generated_code_size_in_bytes", 0)),
+        }
+    except Exception:
+        pass
+    return Roofline(arch, shape, mesh_name, flops, nbytes, coll_total,
+                    coll, mem, model_flops_per_dev)
+
+
+def param_count(cfg) -> float:
+    """Approximate parameter count N (active params for MoE noted
+    separately)."""
+    h, L = cfg.d_model, cfg.num_layers
+    dh, H, KV = cfg.dh, cfg.num_heads, cfg.num_kv_heads
+    emb = cfg.padded_vocab * h * (1 if cfg.tie_embeddings else 2)
+    attn = h * (H + 2 * KV) * dh + H * dh * h
+    if cfg.arch_type == "moe":
+        ff_total = 3 * h * cfg.moe.d_ff_expert * cfg.moe.num_experts
+        ff_active = 3 * h * cfg.moe.d_ff_expert * cfg.moe.top_k
+        per_layer = attn + ff_total
+        n_total = emb + L * per_layer
+        n_active = emb + L * (attn + ff_active)
+        return n_total, n_active
+    if cfg.arch_type == "ssm":
+        up = cfg.ssm.expand * h
+        per = h * up * 2 + up * h + 3 * up * (h // (cfg.ssm.num_heads or 1)) \
+            + h * h
+        n = emb + L * per
+        return n, n
+    if cfg.arch_type == "hybrid":
+        d_inner = cfg.ssm.expand * h
+        nh = d_inner // cfg.ssm.head_dim
+        mamba = h * (2 * d_inner + 2 * cfg.ssm.state_dim + nh) + d_inner * h
+        shared = attn + 3 * h * cfg.d_ff
+        n = emb + L * mamba + shared
+        return n, n
+    ff = (3 if cfg.gated_mlp else 2) * h * cfg.d_ff
+    n = emb + L * (attn + ff)
+    if cfg.arch_type == "audio":
+        n += cfg.encoder_layers * (attn + ff) + L * attn  # enc + cross
+    return n, n
+
+
+def model_flops_per_device(cfg, ishape, n_devices: int) -> float:
+    """MODEL_FLOPS = 6·N·D (train) or 2·N·D (inference fwd), D = tokens,
+    using N_active for MoE; divided across devices."""
+    n_total, n_active = param_count(cfg)
+    if ishape.kind == "train":
+        tokens = ishape.global_batch * ishape.seq_len
+        total = 6.0 * n_active * tokens
+    elif ishape.kind == "prefill":
+        tokens = ishape.global_batch * ishape.seq_len
+        total = 2.0 * n_active * tokens
+    else:  # decode: one token per sequence
+        tokens = ishape.global_batch
+        total = 2.0 * n_active * tokens
+    return total / n_devices

@@ -1,0 +1,225 @@
+"""Per-architecture partitioning rules: params (FSDP over "data" +
+tensor-parallel over "model"), optimizer state, KV caches, and inputs.
+
+Specs are derived from pytree key paths + array shapes, checking axis
+divisibility against the mesh so e.g. whisper's 6 heads or granite's 40
+experts fall back to replication on that dim instead of failing to lower.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+PyTree = Any
+
+# Global parallelism strategy (hillclimb knob): which mesh axis carries
+# tensor parallelism, which carry FSDP param sharding, and which carry
+# data parallelism for inputs/activations. Defaults = the baseline
+# production layout. set_strategy(tp=None, fsdp=("data","model"),
+# dp=("pod","data","model")) turns the model axis into extra data/FSDP
+# parallelism (right for small archs where TP collectives dominate).
+_STRATEGY = {"tp": "model", "fsdp": ("data",), "dp": ("pod", "data")}
+
+
+def set_strategy(tp="model", fsdp=("data",), dp=("pod", "data")):
+    _STRATEGY["tp"] = tp
+    _STRATEGY["fsdp"] = tuple(fsdp) if fsdp else ()
+    _STRATEGY["dp"] = tuple(dp) if dp else ()
+
+
+def get_strategy():
+    return dict(_STRATEGY)
+
+
+def _axsize(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+def _dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in _STRATEGY["dp"] if a in mesh.axis_names)
+
+def _dp_size(mesh: Mesh) -> int:
+    n = 1
+    for a in _dp_axes(mesh):
+        n *= mesh.shape[a]
+    return n
+
+
+def _fits(dim: int, mesh: Mesh, axis) -> bool:
+    if axis is None:
+        return True
+    if isinstance(axis, tuple):
+        n = 1
+        for a in axis:
+            n *= _axsize(mesh, a)
+        return dim % n == 0
+    return dim % _axsize(mesh, axis) == 0
+
+
+def _maybe(dim: int, mesh: Mesh, axis):
+    return axis if _fits(dim, mesh, axis) else None
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+    return "/".join(parts)
+
+
+def param_spec(path_s: str, shape: Tuple[int, ...], cfg: ModelConfig,
+               mesh: Mesh) -> P:
+    """FSDP ("data") + tensor-parallel ("model") spec for one param."""
+    nd = len(shape)
+
+    def lead(n_used: int):
+        return [None] * (nd - n_used)
+
+    fsdp = tuple(a for a in _STRATEGY["fsdp"] if a in mesh.axis_names)
+    data = fsdp if fsdp else None
+    tp = _STRATEGY["tp"]
+    model = tp if tp in mesh.axis_names else None
+
+    name = path_s.rsplit("/", 1)[-1]
+    if name in ("gamma", "beta", "A_log", "D", "dt_bias", "conv_b",
+                "norm", "o_norm"):
+        return P()
+    if name == "tok":                       # (V, h)
+        return P(_maybe(shape[0], mesh, model), _maybe(shape[1], mesh, data))
+    if name in ("pos", "enc_pos"):          # (S, h)
+        return P(None, _maybe(shape[1], mesh, data))
+    if name == "unembed":                   # (h, V)
+        return P(_maybe(shape[0], mesh, data), _maybe(shape[1], mesh, model))
+    if name in ("wq", "wk", "wv") and nd >= 3:  # (..., h, n_heads, dh)
+        return P(*lead(3), _maybe(shape[-3], mesh, data),
+                 _maybe(shape[-2], mesh, model), None)
+    if name == "wo":                        # (..., H*dh, h)
+        return P(*lead(2), _maybe(shape[-2], mesh, model),
+                 _maybe(shape[-1], mesh, data))
+    if name in ("w1", "wg") and "moe" in path_s:  # (..., E, h, f)
+        if cfg.moe and cfg.moe.sharding == "expert":
+            return P(*lead(3), _maybe(shape[-3], mesh, model),
+                     _maybe(shape[-2], mesh, data), None)
+        return P(*lead(3), None, _maybe(shape[-2], mesh, data),
+                 _maybe(shape[-1], mesh, model))
+    if name == "w2" and "moe" in path_s:    # (..., E, f, h)
+        if cfg.moe and cfg.moe.sharding == "expert":
+            return P(*lead(3), _maybe(shape[-3], mesh, model), None,
+                     _maybe(shape[-1], mesh, data))
+        return P(*lead(3), None, _maybe(shape[-2], mesh, model),
+                 _maybe(shape[-1], mesh, data))
+    if name == "router":                    # (h, E)
+        return P(_maybe(shape[0], mesh, data), None)
+    if name in ("w1", "wg"):                # (..., h, f)
+        return P(*lead(2), _maybe(shape[-2], mesh, data),
+                 _maybe(shape[-1], mesh, model))
+    if name == "w2":                        # (..., f, h)
+        return P(*lead(2), _maybe(shape[-2], mesh, model),
+                 _maybe(shape[-1], mesh, data))
+    if name in ("in_proj", "w_up", "w_z", "w_gates", "w_down",
+                "out_proj"):                # (..., in, out...)
+        return P(*lead(2), _maybe(shape[-2], mesh, data),
+                 _maybe(shape[-1], mesh, model))
+    if name == "conv_w":                    # (..., width, d_inner)
+        return P(*lead(2), None, _maybe(shape[-1], mesh, model))
+    if name == "w_if":                      # (..., up, nh, 2)
+        return P(*lead(3), _maybe(shape[-3], mesh, data), None, None)
+    if name == "r_gates":                   # (..., nh, dh, 4dh)
+        return P(*lead(3), None, None, _maybe(shape[-1], mesh, model))
+    return P()
+
+
+def param_shardings(cfg: ModelConfig, params_shapes: PyTree,
+                    mesh: Mesh) -> PyTree:
+    def f(path, leaf):
+        return NamedSharding(mesh, param_spec(_path_str(path), leaf.shape,
+                                              cfg, mesh))
+    return jax.tree_util.tree_map_with_path(f, params_shapes)
+
+
+def opt_state_shardings(cfg: ModelConfig, opt_shapes: PyTree,
+                        mesh: Mesh) -> PyTree:
+    """mu/nu mirror the params; step is replicated."""
+    def f(path, leaf):
+        ps = _path_str(path)
+        if ps == "step":
+            return NamedSharding(mesh, P())
+        ps2 = ps.split("/", 1)[1] if "/" in ps else ps  # strip mu|nu
+        return NamedSharding(mesh, param_spec(ps2, leaf.shape, cfg, mesh))
+    return jax.tree_util.tree_map_with_path(f, opt_shapes)
+
+
+def cache_shardings(cfg: ModelConfig, cache_shapes: PyTree, mesh: Mesh,
+                    batch: int, seq_shard: bool = False,
+                    seq_axis: str = "data") -> PyTree:
+    """KV caches: batch over ("pod","data") when divisible; optionally
+    shard the KV sequence dim (seq-parallel attention — the beyond-paper
+    lever): over "data" for b=1 long decode, or over the "model" axis
+    ALONGSIDE batch sharding when GQA kv_heads can't fill that axis
+    (e.g. decode_32k: kv=8 < model=16 leaves "model" idle; seq 32k
+    shards it 16-way, cutting per-device KV bytes by 16x)."""
+    dp = _dp_axes(mesh)
+    dp_n = _dp_size(mesh)
+    model = "model" if "model" in mesh.axis_names else None
+
+    def f(path, leaf):
+        ps = _path_str(path)
+        shape = leaf.shape
+        if ps == "pos" or leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        if ps in ("k", "v", "k_cross", "v_cross", "k_global", "v_global"):
+            # (L, b, S, KV, dh)
+            bspec = dp if batch % dp_n == 0 and batch > 1 else None
+            sspec = None
+            if seq_shard and _fits(shape[2], mesh, seq_axis):
+                conflict = bspec is not None and (
+                    seq_axis in (bspec if isinstance(bspec, tuple)
+                                 else (bspec,)))
+                if not conflict:
+                    sspec = seq_axis
+            kvspec = _maybe(shape[3], mesh, model) if sspec is None else None
+            return NamedSharding(mesh, P(None, bspec, sspec, kvspec, None))
+        if ps in ("k_local", "v_local"):    # (n_super, ge-1, b, W, KV, dh)
+            bspec = dp if batch % dp_n == 0 and batch > 1 else None
+            return NamedSharding(
+                mesh, P(None, None, bspec, None,
+                        _maybe(shape[4], mesh, model), None))
+        if ps.startswith("mamba"):          # (G, E, b, ...) conv or ssd
+            bspec = dp if batch % dp_n == 0 and batch > 1 else None
+            rest = [None] * (leaf.ndim - 3)
+            if leaf.ndim >= 4:
+                rest[0] = _maybe(shape[3], mesh, model)
+            return NamedSharding(mesh, P(None, None, bspec, *rest))
+        if ps.startswith(("mlstm", "slstm")):  # (L, b, ...)
+            bspec = dp if batch % dp_n == 0 and batch > 1 else None
+            rest = [None] * (leaf.ndim - 2)
+            if leaf.ndim >= 3:
+                rest[0] = _maybe(shape[2], mesh, model)
+            return NamedSharding(mesh, P(None, bspec, *rest))
+        return NamedSharding(mesh, P())
+    return jax.tree_util.tree_map_with_path(f, cache_shapes)
+
+
+def batch_sharding(mesh: Mesh, batch: int) -> NamedSharding:
+    dp = _dp_axes(mesh)
+    ok = batch % _dp_size(mesh) == 0 and batch > 1
+    return NamedSharding(mesh, P(dp if ok else None, None))
+
+
+def extra_shardings(cfg: ModelConfig, mesh: Mesh, batch: int) -> Dict:
+    dp = _dp_axes(mesh)
+    ok = batch % _dp_size(mesh) == 0 and batch > 1
+    b = dp if ok else None
+    out = {}
+    if cfg.arch_type == "audio":
+        out["frames"] = NamedSharding(mesh, P(b, None, None))
+    if cfg.arch_type == "vlm":
+        out["patches"] = NamedSharding(mesh, P(b, None, None))
+    return out

@@ -1,0 +1,95 @@
+"""ShapeDtypeStruct stand-ins for every model input, per assigned input
+shape — weak-type-correct, shardable, no device allocation."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                   # "train" | "prefill" | "decode"
+
+
+INPUT_SHAPES: Dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode"),
+}
+
+# long_500k needs sub-quadratic decode memory: run for SSM/hybrid and the
+# sliding-window dense arch; skip for pure full-attention archs + enc-dec
+# (documented in DESIGN.md §4).
+LONG_OK = {"gemma3-12b", "zamba2-1.2b", "xlstm-350m"}
+
+
+def applicable(arch: str, shape: str) -> bool:
+    if shape == "long_500k":
+        return arch in LONG_OK
+    return True
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def text_len(cfg: ModelConfig, seq_len: int) -> int:
+    """vlm prepends patch embeddings; keep total context == seq_len."""
+    if cfg.arch_type == "vlm":
+        return seq_len - cfg.num_patch_tokens
+    return seq_len
+
+
+def extra_specs(cfg: ModelConfig, batch: int,
+                dtype=jnp.bfloat16) -> Optional[Dict[str, Any]]:
+    if cfg.arch_type == "audio":
+        return {"frames": _sds((batch, cfg.encoder_seq_len, cfg.d_model),
+                               dtype)}
+    if cfg.arch_type == "vlm":
+        return {"patches": _sds((batch, cfg.num_patch_tokens, cfg.d_model),
+                                dtype)}
+    return None
+
+
+def train_batch_specs(cfg: ModelConfig, ishape: InputShape,
+                      dtype=jnp.bfloat16) -> Dict[str, Any]:
+    b = ishape.global_batch
+    s = text_len(cfg, ishape.seq_len)
+    out = {"tokens": _sds((b, s), jnp.int32),
+           "labels": _sds((b, s), jnp.int32)}
+    ex = extra_specs(cfg, b, dtype)
+    if ex:
+        out["extra"] = ex
+    return out
+
+
+def prefill_specs(cfg: ModelConfig, ishape: InputShape) -> Tuple:
+    b = ishape.global_batch
+    s = text_len(cfg, ishape.seq_len)
+    return _sds((b, s), jnp.int32), extra_specs(cfg, b)
+
+
+def decode_token_spec(ishape: InputShape):
+    return _sds((ishape.global_batch, 1), jnp.int32)
+
+
+def cache_specs(model, batch: int, max_len: int,
+                dtype=jnp.bfloat16) -> PyTree:
+    return jax.eval_shape(
+        lambda: model.init_cache(batch, max_len, dtype))
+
+
+def params_specs(model, dtype=jnp.bfloat16) -> PyTree:
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    return jax.eval_shape(lambda k: model.init_params(k, dtype), key)

@@ -1,0 +1,133 @@
+"""Production training launcher: any assigned arch x a production mesh
+(or single-device smoke), sharded params/optimizer/batch, data pipeline,
+checkpointing.
+
+    # single-device smoke (actually runs on this container)
+    PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b \
+        --smoke --steps 20
+
+    # production mesh path (same code the dry-run validates); on CPU use
+    # --dry-run to stop after lower+compile instead of executing 256
+    # emulated chips
+    XLA_FLAGS=--xla_force_host_platform_device_count=512 \
+    PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
+        --mesh single --dry-run
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.data.pipeline import DataConfig, make_stream
+from repro.launch import shardings as SH
+from repro.launch import specs as SP
+from repro.launch.mesh import make_production_mesh
+from repro.models.sharding import DEFAULT_RULES, logical_rules
+from repro.models.transformer import Model
+from repro.training import checkpoint
+from repro.training.optimizer import AdamWConfig, init_opt_state
+from repro.training.train_loop import make_train_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list(ARCH_IDS))
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--mesh", default="none",
+                    choices=["none", "single", "multi"])
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (runs on CPU)")
+    ap.add_argument("--dry-run", action="store_true",
+                    help="stop after lower+compile (no execution)")
+    ap.add_argument("--moe-impl", default="gspmd",
+                    choices=["gspmd", "shard_map"])
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = (get_smoke_config(args.arch) if args.smoke
+           else get_config(args.arch))
+    cfg = dataclasses.replace(cfg, max_seq_len=max(cfg.max_seq_len,
+                                                   args.seq * 2))
+    opt_cfg = AdamWConfig(total_steps=max(args.steps, 10))
+
+    mesh = None if args.mesh == "none" else \
+        make_production_mesh(multi_pod=(args.mesh == "multi"))
+    model = Model(cfg, remat=(mesh is not None), moe_impl=args.moe_impl)
+    step_fn = make_train_step(model, opt_cfg)
+
+    data = make_stream(DataConfig(vocab_size=cfg.vocab_size,
+                                  seq_len=args.seq,
+                                  batch_size=args.batch, seed=0))
+
+    def run(params, opt_state, step):
+        t0 = time.perf_counter()
+        losses = []
+        for i in range(args.steps):
+            batch = next(data)
+            params, opt_state, metrics = step(params, opt_state, batch)
+            if i % args.log_every == 0 or i == args.steps - 1:
+                l = float(metrics["loss"])
+                losses.append(l)
+                dt = time.perf_counter() - t0
+                tps = args.batch * args.seq * (i + 1) / dt
+                print(f"step {i:5d}  loss {l:.4f}  {tps:,.0f} tok/s")
+        assert np.isfinite(losses[-1]), "training diverged"
+        if args.steps >= 50:    # too noisy to assert on shorter runs
+            assert losses[-1] < losses[0], "loss did not decrease"
+        if args.ckpt:
+            checkpoint.save(args.ckpt, {"params": params,
+                                        "opt": opt_state})
+            print("checkpoint ->", args.ckpt)
+        return params
+
+    if mesh is None:
+        params = model.init_params(jax.random.PRNGKey(0))
+        opt_state = init_opt_state(params)
+        n = sum(p.size for p in jax.tree.leaves(params))
+        print(f"{args.arch}: {n/1e6:.1f}M params, single device")
+        run(params, opt_state, jax.jit(step_fn))
+        return
+
+    # production-mesh path: shard params/optimizer/batch like the dry-run
+    with logical_rules(dict(DEFAULT_RULES), mesh):
+        with mesh:
+            params_s = SP.params_specs(model, jnp.bfloat16)
+            opt_s = jax.eval_shape(init_opt_state, params_s)
+            p_sh = SH.param_shardings(cfg, params_s, mesh)
+            o_sh = SH.opt_state_shardings(cfg, opt_s, mesh)
+            b_sh = {"tokens": SH.batch_sharding(mesh, args.batch),
+                    "labels": SH.batch_sharding(mesh, args.batch)}
+            jf = jax.jit(step_fn, in_shardings=(p_sh, o_sh, b_sh),
+                         donate_argnums=(0, 1))
+            batch_s = {
+                "tokens": jax.ShapeDtypeStruct((args.batch, args.seq),
+                                               jnp.int32),
+                "labels": jax.ShapeDtypeStruct((args.batch, args.seq),
+                                               jnp.int32)}
+            lowered = jf.lower(params_s, opt_s, batch_s)
+            compiled = lowered.compile()
+            print(f"compiled for {mesh.devices.size} devices; "
+                  f"per-device memory:")
+            print(compiled.memory_analysis())
+            if args.dry_run:
+                return
+            init = jax.jit(
+                lambda k: (model.init_params(k, jnp.bfloat16),),
+                out_shardings=(p_sh,))
+            (params,) = init(jax.random.PRNGKey(0))
+            opt_state = jax.jit(init_opt_state,
+                                out_shardings=o_sh)(params)
+            run(params, opt_state, jf)
+
+
+if __name__ == "__main__":
+    main()

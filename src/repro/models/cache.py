@@ -1,0 +1,69 @@
+"""KV cache / recurrent-state pytrees and decode-time cache ops."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import NEG_INF
+from repro.models.sharding import shard
+
+Array = jax.Array
+
+
+def update_kv(k_cache: Array, v_cache: Array, k_new: Array, v_new: Array,
+              pos: Array, ring: bool = False,
+              masked: bool = False) -> Tuple[Array, Array]:
+    """Write (b, 1, KV, dh) new entries at position `pos` (ring: pos % S).
+
+    masked=True uses a one-hot where-write instead of dynamic_update_slice:
+    required when the cache SEQ dim is sharded across devices (GSPMD
+    partitions elementwise selects perfectly, while a dynamic slice on a
+    sharded dim may force a gather). Costs a full cache rewrite — the
+    shard_map one-shard write in models/seq_parallel.py removes that.
+    """
+    S = k_cache.shape[1]
+    idx = pos % S if ring else pos
+    if masked:
+        hot = (jnp.arange(S) == idx)[None, :, None, None]
+        k_cache = jnp.where(hot, k_new.astype(k_cache.dtype), k_cache)
+        v_cache = jnp.where(hot, v_new.astype(v_cache.dtype), v_cache)
+        return k_cache, v_cache
+    k_cache = jax.lax.dynamic_update_slice(
+        k_cache, k_new.astype(k_cache.dtype), (0, idx, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(
+        v_cache, v_new.astype(v_cache.dtype), (0, idx, 0, 0))
+    return k_cache, v_cache
+
+
+def decode_attend(q: Array, k_cache: Array, v_cache: Array, pos: Array,
+                  ring: bool = False) -> Array:
+    """Single-token GQA attention over a cache.
+
+    q: (b, 1, H, dh); k/v_cache: (b, S, KV, dh); pos: current position.
+    ring=True -> all slots older than S are valid (sliding window cache).
+    Returns (b, 1, H, dh).
+    """
+    b, S, KV, dh = k_cache.shape
+    H = q.shape[2]
+    g = H // KV
+    qg = q.reshape(b, KV, g, dh)
+    scores = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache).astype(jnp.float32)
+    scores = scores / jnp.sqrt(dh).astype(jnp.float32)
+    slot = jnp.arange(S)
+    valid = jnp.ones((S,), bool) if ring else (slot <= pos)
+    if ring:
+        valid = (slot <= pos)  # until the ring wraps, later slots are empty
+        valid = valid | (pos >= S)
+    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", w.astype(v_cache.dtype), v_cache)
+    return out.reshape(b, 1, H, dh)
+
+
+def init_kv(batch: int, S: int, KV: int, dh: int, dtype,
+            n_layers: Optional[int] = None) -> Tuple[Array, Array]:
+    shape = (batch, S, KV, dh) if n_layers is None else (n_layers, batch, S, KV, dh)
+    k = jnp.zeros(shape, dtype)
+    return k, jnp.zeros(shape, dtype)

@@ -1,0 +1,258 @@
+"""Core transformer layers: norms, rope, attention (GQA, sliding-window,
+cross), MLP (gated & plain), embeddings. Pure functions over param pytrees;
+stacked-layer params are scanned by transformer.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.sharding import shard
+
+Array = jax.Array
+NEG_INF = -1e30  # large-negative instead of -inf: keeps softmax NaN-free
+
+
+# ---------------------------------------------------------------- init utils
+
+def dense_init(key, in_dim: int, out_shape, dtype) -> Array:
+    scale = 1.0 / jnp.sqrt(in_dim)
+    return (jax.random.normal(key, (in_dim,) + tuple(out_shape)) * scale).astype(dtype)
+
+
+# --------------------------------------------------------------------- norms
+
+def rms_norm(x: Array, gamma: Array, eps: float) -> Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * gamma.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x: Array, gamma: Array, beta: Array, eps: float) -> Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * gamma.astype(jnp.float32) + beta.astype(jnp.float32)).astype(dt)
+
+
+def apply_norm(x: Array, p: dict, eps: float) -> Array:
+    if "beta" in p:
+        return layer_norm(x, p["gamma"], p["beta"], eps)
+    return rms_norm(x, p["gamma"], eps)
+
+
+def init_norm(key, d: int, dtype, layer: bool = False) -> dict:
+    p = {"gamma": jnp.ones((d,), dtype)}
+    if layer:
+        p["beta"] = jnp.zeros((d,), dtype)
+    return p
+
+
+# ---------------------------------------------------------------------- rope
+
+def rope_freqs(dh: int, theta: float) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, dh, 2, dtype=jnp.float32) / dh))
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: (..., seq, heads, dh); positions: broadcastable to (..., seq)."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                        # (dh/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., s, dh/2)
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    sin, cos = sin[..., None, :], cos[..., None, :]      # (..., s, 1, dh/2)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------- attention
+
+@dataclasses.dataclass(frozen=True)
+class AttnDims:
+    num_heads: int
+    num_kv_heads: int
+    dh: int
+
+
+def init_attention(key, cfg: ModelConfig, dtype) -> dict:
+    h, dh = cfg.d_model, cfg.dh
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(k1, h, (cfg.num_heads, dh), dtype),
+        "wk": dense_init(k2, h, (cfg.num_kv_heads, dh), dtype),
+        "wv": dense_init(k3, h, (cfg.num_kv_heads, dh), dtype),
+        "wo": dense_init(k4, cfg.num_heads * dh, (h,), dtype),
+    }
+
+
+def qkv_proj(x: Array, p: dict, cfg: ModelConfig, positions: Optional[Array]
+             ) -> Tuple[Array, Array, Array]:
+    """x: (b, s, h) -> q (b,s,H,dh), k/v (b,s,KV,dh); rope if configured."""
+    q = jnp.einsum("bsh,hnd->bsnd", x, p["wq"])
+    k = jnp.einsum("bsh,hnd->bsnd", x, p["wk"])
+    v = jnp.einsum("bsh,hnd->bsnd", x, p["wv"])
+    if cfg.pos_embedding == "rope" and positions is not None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    q = shard(q, "batch", "seq", "heads", None)
+    k = shard(k, "batch", "seq", "kv_heads", None)
+    v = shard(v, "batch", "seq", "kv_heads", None)
+    return q, k, v
+
+
+def gqa_attend(q: Array, k: Array, v: Array, mask: Optional[Array]) -> Array:
+    """q: (b, sq, H, dh); k,v: (b, skv, KV, dh); mask broadcastable to
+    (b, H, sq, skv) or (b, 1, sq, skv). Returns (b, sq, H, dh)."""
+    b, sq, H, dh = q.shape
+    KV = k.shape[2]
+    g = H // KV
+    qg = q.reshape(b, sq, KV, g, dh)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(dh).astype(jnp.float32)
+    if mask is not None:
+        # mask (b, 1, sq, skv) -> (b, 1, 1, sq, skv)
+        scores = jnp.where(mask[:, :, None], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", w.astype(v.dtype), v)
+    return out.reshape(b, sq, H, dh)
+
+
+def causal_mask(sq: int, skv: int, q_offset: int = 0,
+                window: int = 0) -> Array:
+    """(1, 1, sq, skv) bool; window>0 adds sliding-window banding."""
+    qi = jnp.arange(sq)[:, None] + q_offset
+    kj = jnp.arange(skv)[None, :]
+    m = kj <= qi
+    if window > 0:
+        m &= kj > qi - window
+    return m[None, None]
+
+
+def attention_block(x: Array, p: dict, cfg: ModelConfig, positions: Array,
+                    window: int = 0, memory: Optional[Array] = None) -> Array:
+    """Full-sequence (train/prefill) self-attention; if `memory` is given,
+    cross-attention over it (no mask, no rope on memory side)."""
+    if memory is None:
+        q, k, v = qkv_proj(x, p, cfg, positions)
+        mask = causal_mask(x.shape[1], x.shape[1], 0, window)
+        out = gqa_attend(q, k, v, mask)
+    else:
+        q = jnp.einsum("bsh,hnd->bsnd", x, p["wq"])
+        k = jnp.einsum("bsh,hnd->bsnd", memory, p["wk"])
+        v = jnp.einsum("bsh,hnd->bsnd", memory, p["wv"])
+        out = gqa_attend(q, k, v, None)
+    b, s = x.shape[:2]
+    out = out.reshape(b, s, cfg.num_heads * cfg.dh)
+    return jnp.einsum("bsD,Dh->bsh", out, p["wo"])
+
+
+def chunked_causal_attend(q: Array, k: Array, v: Array, window: int = 0,
+                          q_block: int = 512, q_offset: int = 0,
+                          unroll: bool = False) -> Array:
+    """Memory-bounded causal GQA attention: scan over query blocks so the
+    (sq x skv) score matrix is never materialized at full size. Exact.
+
+    q: (b, sq, H, dh); k/v: (b, skv, KV, dh). window>0 = sliding window.
+    unroll=True emits every block statically (accurate XLA cost analysis
+    for the roofline dry-run; scan bodies are costed once).
+    """
+    b, sq, H, dh = q.shape
+    skv, KV = k.shape[1], k.shape[2]
+    g = H // KV
+    if sq <= q_block:
+        return gqa_attend(q, k, v, causal_mask(sq, skv, q_offset, window))
+    assert sq % q_block == 0, (sq, q_block)
+    nb = sq // q_block
+    qb = q.reshape(b, nb, q_block, KV, g, dh)
+    kj = jnp.arange(skv)[None, :]
+
+    def body(_, qblk_i):
+        qblk, i = qblk_i                          # (b, qB, KV, g, dh)
+        off = i * q_block + q_offset
+        scores = jnp.einsum("bskgd,btkd->bkgst", qblk, k).astype(jnp.float32)
+        scores = scores / jnp.sqrt(dh).astype(jnp.float32)
+        qi = jnp.arange(q_block)[:, None] + off
+        m = kj <= qi
+        if window > 0:
+            m = m & (kj > qi - window)
+        scores = jnp.where(m[None, None, None], scores, NEG_INF)
+        w = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bkgst,btkd->bskgd", w.astype(v.dtype), v)
+        return None, out
+
+    if unroll:
+        outs = jnp.stack([body(None, (qb[:, i], i))[1] for i in range(nb)])
+    else:
+        _, outs = jax.lax.scan(body, None,
+                               (jnp.moveaxis(qb, 1, 0), jnp.arange(nb)))
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, sq, H, dh)
+    return out
+
+
+# ----------------------------------------------------------------------- mlp
+
+def init_mlp(key, d_model: int, d_ff: int, dtype, gated: bool) -> dict:
+    ks = jax.random.split(key, 3)
+    p = {
+        "w1": dense_init(ks[0], d_model, (d_ff,), dtype),
+        "w2": dense_init(ks[1], d_ff, (d_model,), dtype),
+    }
+    if gated:
+        p["wg"] = dense_init(ks[2], d_model, (d_ff,), dtype)
+    return p
+
+
+def mlp_block(x: Array, p: dict, act: str) -> Array:
+    h = jnp.einsum("bsh,hf->bsf", x, p["w1"])
+    h = shard(h, "batch", "seq", "mlp")
+    a = jax.nn.silu if act == "silu" else jax.nn.gelu
+    if "wg" in p:
+        g = jnp.einsum("bsh,hf->bsf", x, p["wg"])
+        g = shard(g, "batch", "seq", "mlp")
+        h = a(g) * h
+    else:
+        h = a(h)
+    return jnp.einsum("bsf,fh->bsh", h, p["w2"])
+
+
+# ---------------------------------------------------------------- embeddings
+
+def init_embedding(key, cfg: ModelConfig, dtype) -> dict:
+    V = cfg.padded_vocab
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"tok": (jax.random.normal(k1, (V, cfg.d_model)) * 0.02).astype(dtype)}
+    if cfg.pos_embedding == "learned":
+        p["pos"] = (jax.random.normal(k2, (cfg.max_seq_len, cfg.d_model))
+                    * 0.02).astype(dtype)
+    if not cfg.tie_embeddings:
+        p["unembed"] = dense_init(k3, cfg.d_model, (V,), dtype)
+    return p
+
+
+def embed(tokens: Array, p: dict, cfg: ModelConfig,
+          positions: Optional[Array] = None) -> Array:
+    x = jnp.take(p["tok"], tokens, axis=0)
+    if cfg.pos_embedding == "learned":
+        pos = positions if positions is not None else jnp.arange(tokens.shape[-1])
+        x = x + jnp.take(p["pos"], jnp.clip(pos, 0, cfg.max_seq_len - 1), axis=0)
+    return shard(x, "batch", "seq", "embed")
+
+
+def unembed(x: Array, p: dict, cfg: ModelConfig) -> Array:
+    w = p["tok"].T if cfg.tie_embeddings else p["unembed"]
+    logits = jnp.einsum("bsh,hv->bsv", x, w)
+    logits = shard(logits, "batch", "seq", "vocab")
+    # mask vocab padding
+    V, Vp = cfg.vocab_size, cfg.padded_vocab
+    if Vp > V:
+        pad_mask = jnp.arange(Vp) >= V
+        logits = jnp.where(pad_mask, NEG_INF, logits)
+    return logits

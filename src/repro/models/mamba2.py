@@ -1,0 +1,202 @@
+"""Mamba2 (SSD) block — chunked parallel scan for train/prefill, O(1)
+recurrent update for decode.
+
+Recurrence (per head, state H in R^{dh x dstate}):
+    H_t = a_t * H_{t-1} + dt_t * x_t B_t^T,   a_t = exp(-exp(A_log) dt_t)
+    y_t = H_t C_t + D * x_t
+
+Train path uses the standard SSD chunking: quadratic intra-chunk form +
+sequential inter-chunk state carry (lax.scan over chunks). This keeps the
+materialized state at (b, nchunks, heads, dh, dstate) instead of per-token.
+Decode is inapplicable territory for KVPR (state is O(1), nothing to
+stream) — see DESIGN.md §Arch-applicability.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init, rms_norm
+from repro.models.sharding import shard
+
+Array = jax.Array
+
+
+def _dims(cfg: ModelConfig):
+    ssm = cfg.ssm
+    d_inner = ssm.expand * cfg.d_model
+    nheads = d_inner // ssm.head_dim
+    return d_inner, nheads, ssm.head_dim, ssm.state_dim
+
+
+def init_mamba2(key, cfg: ModelConfig, dtype) -> dict:
+    d_inner, nh, dh, ds = _dims(cfg)
+    h = cfg.d_model
+    ks = jax.random.split(key, 6)
+    return {
+        # fused input projection -> [x, z, B, C, dt]
+        "in_proj": dense_init(ks[0], h, (2 * d_inner + 2 * ds + nh,), dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm.conv_width, d_inner))
+                   * 0.2).astype(dtype),
+        "conv_b": jnp.zeros((d_inner,), dtype),
+        "A_log": jnp.zeros((nh,), jnp.float32),          # A = -exp(A_log) = -1
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm": jnp.ones((d_inner,), dtype),
+        "out_proj": dense_init(ks[5], d_inner, (h,), dtype),
+    }
+
+
+def _split_proj(xp: Array, cfg: ModelConfig):
+    d_inner, nh, dh, ds = _dims(cfg)
+    x, z, B, C, dt = jnp.split(
+        xp, [d_inner, 2 * d_inner, 2 * d_inner + ds, 2 * d_inner + 2 * ds],
+        axis=-1)
+    return x, z, B, C, dt
+
+
+def _causal_conv(x: Array, w: Array, b: Array) -> Array:
+    """Depthwise causal conv. x: (b, s, ch); w: (width, ch)."""
+    width = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(width))
+    return jax.nn.silu(out + b)
+
+
+def init_state(cfg: ModelConfig, batch: int, dtype) -> dict:
+    d_inner, nh, dh, ds = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm.conv_width - 1, d_inner), dtype),
+        "ssd": jnp.zeros((batch, nh, dh, ds), jnp.float32),
+    }
+
+
+def mamba2_forward(x_in: Array, p: dict, cfg: ModelConfig) -> Array:
+    """Full-sequence chunked SSD. x_in: (b, s, h) -> (b, s, h)."""
+    y, _ = mamba2_forward_with_state(x_in, p, cfg)
+    return y
+
+
+def mamba2_forward_with_state(x_in: Array, p: dict, cfg: ModelConfig
+                              ) -> Tuple[Array, dict]:
+    """As mamba2_forward but also returns the final recurrent state
+    (for hybrid prefill -> decode handoff)."""
+    d_inner, nh, dh, ds = _dims(cfg)
+    b, s_orig, _ = x_in.shape
+    Q = min(cfg.ssm.chunk, s_orig)
+    s = ((s_orig + Q - 1) // Q) * Q
+    if s != s_orig:  # pad; padded steps get dt=0 -> identity state update
+        x_in = jnp.pad(x_in, ((0, 0), (0, s - s_orig), (0, 0)))
+    nc = s // Q
+
+    xp = jnp.einsum("bsh,hD->bsD", x_in, p["in_proj"])
+    x, z, B, C, dt = _split_proj(xp, cfg)
+    x = _causal_conv(x, p["conv_w"], p["conv_b"])
+    x = shard(x, "batch", "seq", None)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])      # (b,s,nh)
+    if s != s_orig:
+        dt = dt * (jnp.arange(s) < s_orig)[None, :, None]
+    loga = -jnp.exp(p["A_log"]) * dt                                  # (b,s,nh)
+
+    # reshape into chunks
+    xc = x.reshape(b, nc, Q, nh, dh).astype(jnp.float32)
+    Bc = B.reshape(b, nc, Q, ds).astype(jnp.float32)
+    Cc = C.reshape(b, nc, Q, ds).astype(jnp.float32)
+    dtc = dt.reshape(b, nc, Q, nh)
+    lac = loga.reshape(b, nc, Q, nh)
+    La = jnp.cumsum(lac, axis=2)                                      # inclusive
+
+    # ---- intra-chunk (quadratic, masked) ----
+    CB = jnp.einsum("bcqd,bckd->bcqk", Cc, Bc)                        # (b,nc,Q,Q)
+    M = jnp.exp(La[:, :, :, None, :] - La[:, :, None, :, :])          # (b,nc,Q,Q,nh)
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    M = jnp.where(tri[None, None, :, :, None], M, 0.0)
+    S = CB[..., None] * M * dtc[:, :, None, :, :]                     # (b,nc,i,j,nh)
+    y_intra = jnp.einsum("bcijn,bcjnd->bcind", S, xc)
+
+    # ---- chunk states ----
+    decay_end = jnp.exp(La[:, :, -1:, :] - La)                        # (b,nc,Q,nh)
+    chunk_state = jnp.einsum("bcqn,bcqnd,bcqs->bcnds",
+                             dtc * decay_end, xc, Bc)                 # (b,nc,nh,dh,ds)
+    chunk_decay = jnp.exp(La[:, :, -1, :])                            # (b,nc,nh)
+
+    def carry(H, inp):
+        st, dec = inp
+        H_out = H                                                     # state entering chunk
+        H = H * dec[:, :, None, None] + st
+        return H, H_out
+
+    H0 = jnp.zeros((b, nh, dh, ds), jnp.float32)
+    H_final, H_in = jax.lax.scan(
+        carry, H0,
+        (jnp.moveaxis(chunk_state, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    H_in = jnp.moveaxis(H_in, 0, 1)                                   # (b,nc,nh,dh,ds)
+
+    # ---- inter-chunk ----
+    y_inter = jnp.einsum("bcqs,bcnds->bcqnd", Cc, H_in) \
+        * jnp.exp(La)[..., None]                                      # (b,nc,Q,nh,dh)
+
+    y = (y_intra + y_inter).reshape(b, s, nh, dh)
+    y = y + p["D"][None, None, :, None] * x.reshape(b, s, nh, dh).astype(jnp.float32)
+    y = y.reshape(b, s, d_inner)[:, :s_orig].astype(x_in.dtype)
+    y = y * jax.nn.silu(z[:, :s_orig])
+    y = rms_norm(y, p["norm"], cfg.rms_eps)
+    out = jnp.einsum("bsD,Dh->bsh", y, p["out_proj"])
+    # conv state = last (width-1) *pre-conv, real* inputs
+    width = cfg.ssm.conv_width
+    x_pre = _split_proj(xp, cfg)[0][:, :s_orig]
+    if s_orig >= width - 1:
+        conv_state = x_pre[:, s_orig - (width - 1):, :]
+    else:
+        conv_state = jnp.pad(x_pre,
+                             ((0, 0), (width - 1 - s_orig, 0), (0, 0)))
+    return out, {"conv": conv_state.astype(x_in.dtype), "ssd": H_final}
+
+
+def mamba2_decode(x_in: Array, state: dict, p: dict, cfg: ModelConfig
+                  ) -> Tuple[Array, dict]:
+    """One-token step. x_in: (b, 1, h) -> (b, 1, h), new state."""
+    d_inner, nh, dh, ds = _dims(cfg)
+    b = x_in.shape[0]
+
+    xp = jnp.einsum("bsh,hD->bsD", x_in, p["in_proj"])
+    x, z, B, C, dt = _split_proj(xp, cfg)
+
+    # conv with rolling state
+    conv_in = jnp.concatenate([state["conv"], x], axis=1)   # (b, width, d)
+    w = p["conv_w"]
+    xconv = jnp.einsum("bwd,wd->bd", conv_in, w) + p["conv_b"]
+    xconv = jax.nn.silu(xconv)[:, None, :]                  # (b,1,d)
+    new_conv = conv_in[:, 1:, :]
+
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (b,nh)
+    a = jnp.exp(-jnp.exp(p["A_log"]) * dt)                             # (b,nh)
+    xh = xconv[:, 0].reshape(b, nh, dh).astype(jnp.float32)
+    Bv = B[:, 0].astype(jnp.float32)                                   # (b,ds)
+    Cv = C[:, 0].astype(jnp.float32)
+
+    H = state["ssd"] * a[:, :, None, None] \
+        + jnp.einsum("bn,bnd,bs->bnds", dt, xh, Bv)
+    y = jnp.einsum("bnds,bs->bnd", H, Cv) + p["D"][None, :, None] * xh
+    y = y.reshape(b, 1, d_inner).astype(x_in.dtype)
+    y = y * jax.nn.silu(z)
+    y = rms_norm(y, p["norm"], cfg.rms_eps)
+    out = jnp.einsum("bsD,Dh->bsh", y, p["out_proj"])
+    return out, {"conv": new_conv, "ssd": H}
+
+
+def mamba2_reference(x_in: Array, p: dict, cfg: ModelConfig) -> Array:
+    """Naive sequential oracle for tests: runs decode step over the seq."""
+    b, s, _ = x_in.shape
+    state = init_state(cfg, b, x_in.dtype)
+
+    def step(state, xt):
+        y, state = mamba2_decode(xt[:, None, :], state, p, cfg)
+        return state, y[:, 0]
+
+    _, ys = jax.lax.scan(step, state, jnp.moveaxis(x_in, 1, 0))
+    return jnp.moveaxis(ys, 0, 1)

@@ -1,0 +1,236 @@
+"""Mixture-of-Experts FFN with capacity-based scatter dispatch.
+
+Dispatch is rank-based (cumsum over one-hot expert assignment), avoiding
+both the dense (tokens × E × C) dispatch einsum (whose FLOPs would swamp
+the roofline) and data-dependent sorts. Expert weights are stacked on a
+leading E dim and shard either expert-parallel over the "model" mesh axis
+(E % model == 0) or tensor-parallel inside each expert (d_ff sharded).
+Tokens dropped beyond capacity fall back to a zero update (residual keeps
+them intact), matching Switch/Mesh-TF semantics.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init
+from repro.models.sharding import get_mesh, get_rules, shard
+
+Array = jax.Array
+
+
+def init_moe(key, cfg: ModelConfig, dtype) -> dict:
+    moe = cfg.moe
+    h, f, E = cfg.d_model, moe.d_ff_expert, moe.num_experts
+    ks = jax.random.split(key, 4)
+    scale_h = 1.0 / jnp.sqrt(h)
+    scale_f = 1.0 / jnp.sqrt(f)
+    return {
+        "router": dense_init(ks[0], h, (E,), jnp.float32),
+        "w1": (jax.random.normal(ks[1], (E, h, f)) * scale_h).astype(dtype),
+        "wg": (jax.random.normal(ks[2], (E, h, f)) * scale_h).astype(dtype),
+        "w2": (jax.random.normal(ks[3], (E, f, h)) * scale_f).astype(dtype),
+    }
+
+
+def _capacity(tokens: int, moe) -> int:
+    c = int(tokens * moe.top_k * moe.capacity_factor / moe.num_experts)
+    return max(c, moe.top_k)
+
+
+def moe_block(x: Array, p: dict, cfg: ModelConfig) -> Tuple[Array, Array]:
+    """x: (b, s, h) -> (out (b, s, h), aux_loss scalar).
+
+    aux_loss is the standard load-balance loss: E * sum_e f_e * p_e.
+    """
+    moe = cfg.moe
+    b, s, h = x.shape
+    E, K = moe.num_experts, moe.top_k
+    T = b * s
+    C = _capacity(T, moe)
+
+    xf = x.reshape(T, h)
+    gate_logits = jnp.einsum("th,he->te", xf.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(gate_logits, axis=-1)                    # (T, E)
+    top_p, top_e = jax.lax.top_k(probs, K)                          # (T, K)
+    top_p = top_p / (jnp.sum(top_p, axis=-1, keepdims=True) + 1e-9)
+
+    # Load-balance auxiliary loss (Switch-style).
+    me = jnp.mean(probs, axis=0)                                    # (E,)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(top_e, E, dtype=jnp.float32), axis=1), axis=0)
+    aux = E * jnp.sum(me * ce / K)
+
+    # Rank each (token, k) slot within its expert via cumsum of one-hot.
+    flat_e = top_e.reshape(T * K)                                    # slot -> expert
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)              # (TK, E)
+    ranks = jnp.cumsum(onehot, axis=0) - onehot                      # exclusive
+    rank = jnp.take_along_axis(ranks, flat_e[:, None], axis=1)[:, 0]  # (TK,)
+    keep = rank < C
+
+    # Scatter token features into the (E*C, h) expert buffer.
+    slot = jnp.where(keep, flat_e * C + rank, E * C)                 # drop -> OOB
+    xe_flat = jnp.repeat(xf, K, axis=0)                              # (TK, h)
+    buf = jnp.zeros((E * C + 1, h), x.dtype).at[slot].set(xe_flat,
+                                                          mode="drop")
+    buf = buf[: E * C].reshape(E, C, h)
+    buf = shard(buf, "experts", None, None)
+
+    # Expert FFN (gated SiLU), stacked einsum over E.
+    hdn = jnp.einsum("ech,ehf->ecf", buf, p["w1"])
+    gte = jnp.einsum("ech,ehf->ecf", buf, p["wg"])
+    hdn = jax.nn.silu(gte) * hdn
+    hdn = shard(hdn, "experts", None, "expert_mlp")
+    out_e = jnp.einsum("ecf,efh->ech", hdn, p["w2"])                 # (E, C, h)
+
+    # Gather back and combine with gate probs.
+    out_flat = out_e.reshape(E * C, h)
+    gathered = jnp.where(keep[:, None],
+                         jnp.take(out_flat, jnp.minimum(slot, E * C - 1),
+                                  axis=0), 0.0)                      # (TK, h)
+    combined = (gathered.reshape(T, K, h)
+                * top_p[..., None].astype(x.dtype)).sum(axis=1)
+    out = combined.reshape(b, s, h)
+    return shard(out, "batch", "seq", "embed"), aux.astype(jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# GShard-style LOCAL dispatch (§Perf variant): per-data-shard capacity +
+# expert parallelism over the "model" axis via shard_map.
+#
+# The GSPMD moe_block above dispatches over the GLOBAL token axis: the
+# (E, C_global, h) expert buffer cannot shard its capacity dim, so every
+# model shard runs its experts over the *global* per-expert capacity and
+# the data axis sits idle during the expert FFN — per-device expert FLOPs
+# are dp× too high (the qwen3 train_4k roofline shows exactly this).
+#
+# Here each data shard dispatches its LOCAL tokens with local capacity
+# C_loc = T_loc·K·cf/E (standard GShard/Switch local-capacity semantics),
+# each model shard keeps only its E/ep expert range (token activations are
+# replicated over "model", so routing needs no all-to-all), and partial
+# expert outputs are combined with one psum over "model". Per-device
+# expert FLOPs drop by dp×; the dense (tokens × E) dispatch bookkeeping
+# shrinks by dp× as well.
+# --------------------------------------------------------------------------
+
+def _moe_local(xf: Array, router: Array, w1: Array, wg: Array, w2: Array,
+               cfg: ModelConfig, ep_axis: str | None,
+               dp_axes: Tuple[str, ...],
+               tp_axis: str | None = None) -> Tuple[Array, Array]:
+    """Per-shard MoE: xf (T_loc, h) local tokens; w* (E_loc, ...) local
+    experts (expert-parallel) or (E, h, f_loc) f-sharded slices
+    (tensor-parallel inside each expert). Runs inside shard_map."""
+    moe = cfg.moe
+    E, K = moe.num_experts, moe.top_k
+    T, h = xf.shape
+    C = _capacity(T, moe)
+    E_loc = w1.shape[0]
+    off = (jax.lax.axis_index(ep_axis) * E_loc) if ep_axis else 0
+
+    gate_logits = jnp.einsum("th,he->te", xf.astype(jnp.float32), router)
+    probs = jax.nn.softmax(gate_logits, axis=-1)                   # (T, E)
+    top_p, top_e = jax.lax.top_k(probs, K)
+    top_p = top_p / (jnp.sum(top_p, axis=-1, keepdims=True) + 1e-9)
+
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(top_e, E, dtype=jnp.float32), axis=1),
+        axis=0)
+    aux = E * jnp.sum(me * ce / K)
+
+    flat_e = top_e.reshape(T * K)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)
+    ranks = jnp.cumsum(onehot, axis=0) - onehot
+    rank = jnp.take_along_axis(ranks, flat_e[:, None], axis=1)[:, 0]
+
+    e_loc = flat_e - off                                    # local expert id
+    mine = (e_loc >= 0) & (e_loc < E_loc)
+    keep = mine & (rank < C)
+    slot = jnp.where(keep, e_loc * C + rank, E_loc * C)     # drop -> OOB
+    xe_flat = jnp.repeat(xf, K, axis=0)
+    buf = jnp.zeros((E_loc * C + 1, h), xf.dtype).at[slot].set(
+        xe_flat, mode="drop")
+    buf = buf[: E_loc * C].reshape(E_loc, C, h)
+
+    hdn = jnp.einsum("ech,ehf->ecf", buf, w1)
+    gte = jnp.einsum("ech,ehf->ecf", buf, wg)
+    hdn = jax.nn.silu(gte) * hdn
+    out_e = jnp.einsum("ecf,efh->ech", hdn, w2)
+
+    out_flat = out_e.reshape(E_loc * C, h)
+    gathered = jnp.where(keep[:, None],
+                         jnp.take(out_flat,
+                                  jnp.minimum(slot, E_loc * C - 1),
+                                  axis=0), 0.0)
+    combined = (gathered.reshape(T, K, h)
+                * top_p[..., None].astype(xf.dtype)).sum(axis=1)
+    # ep: shards hold disjoint expert ranges; tp: shards hold disjoint
+    # d_ff slices (partial w2 contractions) — either way one psum combines
+    psum_axis = ep_axis or tp_axis
+    if psum_axis:
+        combined = jax.lax.psum(combined, psum_axis)
+        aux = jax.lax.pmean(aux, psum_axis)  # identical already; keeps rep
+    if dp_axes:
+        aux = jax.lax.pmean(aux, dp_axes)
+    return combined, aux.astype(jnp.float32)
+
+
+def moe_block_sharded(x: Array, p: dict, cfg: ModelConfig
+                      ) -> Tuple[Array, Array]:
+    """shard_map local-dispatch MoE. Falls back to the GSPMD moe_block
+    when no mesh is active (CPU tests) or experts don't divide the mesh."""
+    mesh = get_mesh()
+    rules = get_rules() or {}
+    if mesh is None:
+        return moe_block(x, p, cfg)
+    ep_axis = rules.get("experts")
+    if isinstance(ep_axis, tuple):
+        ep_axis = ep_axis[0] if ep_axis else None
+    tp_axis = None
+    if ep_axis is not None and (ep_axis not in mesh.axis_names or
+                                cfg.moe.num_experts % mesh.shape[ep_axis]):
+        # experts don't divide the axis (e.g. granite's 40 on 16):
+        # tensor-parallel the d_ff dim inside each expert instead
+        if (ep_axis in mesh.axis_names and
+                cfg.moe.d_ff_expert % mesh.shape[ep_axis] == 0):
+            tp_axis = ep_axis
+        ep_axis = None
+    batch_rule = rules.get("batch") or ()
+    if isinstance(batch_rule, str):
+        batch_rule = (batch_rule,)
+    dp_axes = tuple(a for a in batch_rule if a in mesh.axis_names)
+
+    b, s, h = x.shape
+    dp_n = 1
+    for a in dp_axes:
+        dp_n *= mesh.shape[a]
+    if b % max(dp_n, 1):
+        dp_axes, dp_n = (), 1
+
+    def local(x_loc, router, w1, wg, w2):
+        bl = x_loc.shape[0]
+        xf = x_loc.reshape(bl * s, h)
+        out, aux = _moe_local(xf, router, w1, wg, w2, cfg, ep_axis,
+                              dp_axes, tp_axis)
+        return out.reshape(bl, s, h), aux
+
+    if ep_axis:
+        w_specs = (P(ep_axis), P(ep_axis), P(ep_axis))
+    elif tp_axis:   # (E, h, f) f-sharded; (E, f, h) f-sharded
+        w_specs = (P(None, None, tp_axis), P(None, None, tp_axis),
+                   P(None, tp_axis, None))
+    else:
+        w_specs = (P(), P(), P())
+    fn = shard_map(
+        local, mesh=mesh,
+        in_specs=(P(dp_axes if dp_axes else None, None, None), P(),
+                  *w_specs),
+        out_specs=(P(dp_axes if dp_axes else None, None, None), P()),
+        check_rep=False)
+    out, aux = fn(x, p["router"], p["w1"], p["wg"], p["w2"])
+    return shard(out, "batch", "seq", "embed"), aux

@@ -1,0 +1,104 @@
+"""Sequence-parallel decode attention via shard_map (beyond-paper
+optimization; see EXPERIMENTS.md §Perf).
+
+The GSPMD baseline for seq-sharded KV decode has two costs the partitioner
+cannot remove:
+  1. masked one-hot cache writes rewrite the WHOLE cache every step
+     (memory term ~3x the minimum);
+  2. softmax over the sharded seq dim emits multiple all-reduces of
+     full score tensors.
+
+Manual SPMD fixes both: each shard holds a contiguous KV slice, computes a
+partial flash-decode (m, l, num) over its slice, and combines with two
+tiny psums; the new token's KV is written ONLY by the owning shard
+(dynamic-slice write of one slot). Exactness is tested against the dense
+reference in tests/test_seq_parallel.py.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.models.sharding import get_mesh
+
+Array = jax.Array
+NEG_INF = -1e30
+
+
+def _partial_attend(qg, kc, vc, slot_valid):
+    """qg: (b,KV,g,dh); kc/vc: (b,S_loc,KV,dh); slot_valid: (S_loc,) bool.
+    Returns partial (num (b,KV,g,dh), den (b,KV,g,1), m (b,KV,g,1))."""
+    dh = qg.shape[-1]
+    scores = jnp.einsum("bkgd,bskd->bkgs", qg.astype(jnp.float32),
+                        kc.astype(jnp.float32)) / jnp.sqrt(dh)
+    scores = jnp.where(slot_valid[None, None, None, :], scores, NEG_INF)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - m)
+    den = jnp.sum(e, axis=-1, keepdims=True)
+    num = jnp.einsum("bkgs,bskd->bkgd", e, vc.astype(jnp.float32))
+    return num, den, m
+
+
+def seq_sharded_decode_attend(q: Array, k_cache: Array, v_cache: Array,
+                              pos: Array, axis: str = "data") -> Array:
+    """Exact single-token GQA attention over a cache whose SEQ dim is
+    sharded over `axis`. q: (b,1,H,dh); k/v: (b,S,KV,dh) [S sharded].
+    Returns (b,1,H,dh), replicated."""
+    mesh = get_mesh()
+    b, _, H, dh = q.shape
+    KV = k_cache.shape[2]
+    g = H // KV
+
+    def local(q, kc, vc, pos):
+        idx = jax.lax.axis_index(axis)
+        S_loc = kc.shape[1]
+        slot = idx * S_loc + jnp.arange(S_loc)
+        qg = q.reshape(b, KV, g, dh)
+        num, den, m = _partial_attend(qg, kc, vc, slot <= pos)
+        # two-pass exact combine across shards
+        m_star = jax.lax.pmax(m, axis)
+        scale = jnp.exp(m - m_star)
+        num = jax.lax.psum(num * scale, axis)
+        den = jax.lax.psum(den * scale, axis)
+        out = num / jnp.maximum(den, 1e-30)
+        return out.reshape(b, 1, H, dh).astype(q.dtype)
+
+    spec_kv = P(None, axis, None, None)
+    return shard_map(local, mesh=mesh,
+                     in_specs=(P(), spec_kv, spec_kv, P()),
+                     out_specs=P(),
+                     check_rep=False)(q, k_cache, v_cache, pos)
+
+
+def seq_sharded_update_kv(k_cache: Array, v_cache: Array, k_new: Array,
+                          v_new: Array, pos: Array, axis: str = "data"
+                          ) -> Tuple[Array, Array]:
+    """Write the (b,1,KV,dh) new entries at global position `pos` into
+    seq-sharded caches — only the owning shard writes one slot (no
+    whole-cache rewrite)."""
+    mesh = get_mesh()
+
+    def local(kc, vc, k_new, v_new, pos):
+        idx = jax.lax.axis_index(axis)
+        S_loc = kc.shape[1]
+        local_pos = pos - idx * S_loc
+        in_range = (local_pos >= 0) & (local_pos < S_loc)
+        lp = jnp.clip(local_pos, 0, S_loc - 1)
+        cur_k = jax.lax.dynamic_slice(kc, (0, lp, 0, 0), k_new.shape)
+        cur_v = jax.lax.dynamic_slice(vc, (0, lp, 0, 0), v_new.shape)
+        kw = jnp.where(in_range, k_new.astype(kc.dtype), cur_k)
+        vw = jnp.where(in_range, v_new.astype(vc.dtype), cur_v)
+        kc = jax.lax.dynamic_update_slice(kc, kw, (0, lp, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, vw, (0, lp, 0, 0))
+        return kc, vc
+
+    spec_kv = P(None, axis, None, None)
+    return shard_map(local, mesh=mesh,
+                     in_specs=(spec_kv, spec_kv, P(), P(), P()),
+                     out_specs=(spec_kv, spec_kv),
+                     check_rep=False)(k_cache, v_cache, k_new, v_new, pos)

@@ -1,0 +1,102 @@
+"""Lightweight logical-axis sharding (MaxText-style).
+
+Models annotate activations with *logical* axis names; the launcher installs
+a rule set mapping logical names to mesh axes. Outside a mesh context (CPU
+tests) the annotations are no-ops.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+# Default rules for the production meshes. "batch" shards over data (and
+# pod, multi-pod); "model" carries tensor parallelism. Logical names used
+# by the model code:
+DEFAULT_RULES: Dict[str, MeshAxes] = {
+    "batch": ("pod", "data"),
+    "embed": None,            # activations keep embed replicated
+    "heads": "model",
+    "kv_heads": None,         # GQA kv heads (< model axis) replicated
+    "qdh": None,
+    "mlp": "model",           # d_ff
+    "vocab": "model",
+    "experts": "model",
+    "expert_mlp": None,
+    "seq": None,
+    "kv_seq": None,           # decode KV seq; set to "data" for seq-sharded decode
+    "params_embed": "data",   # FSDP: shard d_model dim of params over data
+    "params_vocab": "model",
+    "ssm_heads": "model",
+    "ssm_state": None,
+    "conv": None,
+    "layers": None,
+}
+
+
+def set_rules(rules: Optional[Dict[str, MeshAxes]], mesh: Optional[Mesh]):
+    _state.rules = rules
+    _state.mesh = mesh
+
+
+def get_mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+def get_rules() -> Optional[Dict[str, MeshAxes]]:
+    return getattr(_state, "rules", None)
+
+
+@contextlib.contextmanager
+def logical_rules(rules: Dict[str, MeshAxes], mesh: Mesh):
+    prev = (get_rules(), get_mesh())
+    set_rules(rules, mesh)
+    try:
+        yield
+    finally:
+        set_rules(*prev)
+
+
+def resolve_spec(logical_axes: Sequence[Optional[str]],
+                 rules: Optional[Dict[str, MeshAxes]] = None,
+                 mesh: Optional[Mesh] = None) -> P:
+    """Map logical axis names to a PartitionSpec under the active rules,
+    dropping mesh axes that don't exist in the active mesh."""
+    rules = rules if rules is not None else get_rules()
+    mesh = mesh if mesh is not None else get_mesh()
+    if rules is None:
+        return P()
+    mesh_axes = set(mesh.axis_names) if mesh is not None else set()
+    out = []
+    for name in logical_axes:
+        spec = rules.get(name) if name is not None else None
+        if spec is None:
+            out.append(None)
+            continue
+        if isinstance(spec, str):
+            out.append(spec if spec in mesh_axes else None)
+        else:
+            kept = tuple(a for a in spec if a in mesh_axes)
+            out.append(kept if kept else None)
+    return P(*out)
+
+
+def shard(x, *logical_axes: Optional[str]):
+    """with_sharding_constraint by logical axis names; no-op without rules."""
+    rules, mesh = get_rules(), get_mesh()
+    if rules is None or mesh is None:
+        return x
+    spec = resolve_spec(logical_axes, rules, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def named_sharding(mesh: Mesh, *logical_axes: Optional[str],
+                   rules: Optional[Dict[str, MeshAxes]] = None) -> NamedSharding:
+    return NamedSharding(mesh, resolve_spec(logical_axes, rules or DEFAULT_RULES, mesh))

@@ -1,0 +1,636 @@
+"""Unified model covering all assigned architecture families.
+
+Public surface:
+    m = Model(cfg)
+    params          = m.init_params(key, dtype)
+    logits, aux     = m.forward(params, tokens, extra)        # train/teacher-forcing
+    logits, cache   = m.prefill(params, tokens, extra, max_len)
+    logits, cache   = m.decode_step(params, cache, token)
+    cache           = m.init_cache(batch, max_len, dtype)
+
+`extra` carries stub-frontend embeddings for audio (frames (b, enc_s, d))
+and vlm (patches (b, P, d)). Stacked per-layer params are scanned
+(jax.lax.scan) so the HLO stays one-layer-sized for the 512-device
+dry-run. Full-sequence attention is chunked over query blocks (exact,
+flash-style) so s x s score matrices are never materialized.
+
+gemma3's 5:1 local:global pattern is structured as "superblocks": scan
+over n_super groups of (global_every-1 sliding-window layers + 1 global
+layer), each sub-population with its own stacked params and cache (local
+layers keep a ring buffer of window size W — this is what makes long_500k
+decode sub-quadratic-memory for gemma3).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import cache as cache_lib
+from repro.models import layers as L
+from repro.models import mamba2 as M2
+from repro.models import moe as MOE
+from repro.models import xlstm as XL
+from repro.models.sharding import shard
+
+Array = jax.Array
+PyTree = Any
+
+Q_BLOCK = 512
+
+
+def _stack_init(init_fn, key, n: int):
+    keys = jax.random.split(key, n)
+    return jax.vmap(init_fn)(keys)
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig, remat: bool = False,
+                 use_kernels: bool = False, seq_shard: bool = False,
+                 scan_layers: bool = True, q_block: int = Q_BLOCK,
+                 seq_shard_impl: str = "gspmd", moe_impl: str = "gspmd"):
+        self.cfg = cfg
+        self.remat = remat
+        self.use_kernels = use_kernels
+        # seq_shard: decode KV cache is sharded along the sequence dim
+        # (long_500k, batch=1) -> use masked one-hot cache writes so GSPMD
+        # never gathers the cache (see models/cache.py).
+        self.seq_shard = seq_shard
+        # scan_layers=False unrolls the layer loop: bigger HLO + slower
+        # compile, but XLA cost_analysis then counts every layer (scan
+        # bodies are costed ONCE by XLA) — used by the roofline dry-run.
+        self.scan_layers = scan_layers
+        self.q_block = q_block
+        # "gspmd": masked writes + auto-partitioned softmax (baseline);
+        # "shard_map": manual owner-shard write + two-psum combine
+        # (models/seq_parallel.py — the beyond-paper §Perf variant).
+        self.seq_shard_impl = seq_shard_impl
+        # MoE dispatch: "gspmd" = global-capacity einsum dispatch
+        # (baseline); "shard_map" = GShard-style local dispatch with
+        # expert parallelism over "model" (models/moe.py §Perf variant).
+        self.moe_impl = moe_impl
+
+    def _scan(self, body, carry, xs):
+        """lax.scan over stacked layers, or an unrolled python loop."""
+        if self.scan_layers:
+            return jax.lax.scan(body, carry, xs)
+        n = jax.tree.leaves(xs)[0].shape[0]
+        ys = []
+        for i in range(n):
+            carry, y = body(carry, jax.tree.map(lambda a: a[i], xs))
+            ys.append(y)
+        if ys and ys[0] is not None:
+            ys = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+        else:
+            ys = None
+        return carry, ys
+
+    @property
+    def is_local_global(self) -> bool:
+        return bool(self.cfg.sliding_window and self.cfg.global_every)
+
+    # ------------------------------------------------------------- params
+
+    def _dense_layer_init(self, dtype):
+        cfg = self.cfg
+        ln_layer = cfg.pos_embedding == "learned"
+
+        def init(k):
+            k1, k2, k3, k4 = jax.random.split(k, 4)
+            return {
+                "ln1": L.init_norm(k1, cfg.d_model, dtype, layer=ln_layer),
+                "attn": L.init_attention(k2, cfg, dtype),
+                "ln2": L.init_norm(k3, cfg.d_model, dtype, layer=ln_layer),
+                "mlp": L.init_mlp(k4, cfg.d_model, cfg.d_ff, dtype,
+                                  cfg.gated_mlp),
+            }
+        return init
+
+    def init_params(self, key, dtype=jnp.float32) -> PyTree:
+        cfg = self.cfg
+        k_emb, k_layers, k_final, k_enc, k_shared = jax.random.split(key, 5)
+        params: Dict[str, PyTree] = {
+            "embed": L.init_embedding(k_emb, cfg, dtype),
+            "final_norm": L.init_norm(k_final, cfg.d_model, dtype,
+                                      layer=cfg.pos_embedding == "learned"),
+        }
+        at = cfg.arch_type
+        dense_layer = self._dense_layer_init(dtype)
+
+        def moe_layer(k):
+            k1, k2, k3, k4 = jax.random.split(k, 4)
+            return {
+                "ln1": L.init_norm(k1, cfg.d_model, dtype),
+                "attn": L.init_attention(k2, cfg, dtype),
+                "ln2": L.init_norm(k3, cfg.d_model, dtype),
+                "moe": MOE.init_moe(k4, cfg, dtype),
+            }
+
+        if at in ("dense", "vlm"):
+            if self.is_local_global:
+                ge = cfg.global_every
+                n_super = cfg.num_layers // ge
+                params["local_layers"] = _stack_init(
+                    lambda k: _stack_init(dense_layer, k, ge - 1),
+                    k_layers, n_super)
+                params["global_layers"] = _stack_init(
+                    dense_layer, jax.random.fold_in(k_layers, 1), n_super)
+            else:
+                params["layers"] = _stack_init(dense_layer, k_layers,
+                                               cfg.num_layers)
+        elif at == "moe":
+            params["layers"] = _stack_init(moe_layer, k_layers,
+                                           cfg.num_layers)
+        elif at == "hybrid":
+            every = cfg.shared_attn_every
+            n_groups = cfg.num_layers // every
+            params["layers"] = _stack_init(
+                lambda k: _stack_init(
+                    lambda kk: {"ln": L.init_norm(kk, cfg.d_model, dtype),
+                                "mamba": M2.init_mamba2(kk, cfg, dtype)},
+                    k, every),
+                k_layers, n_groups)
+            params["shared"] = dense_layer(k_shared)
+        elif at == "ssm":
+            n_pairs = cfg.num_layers // 2
+            params["layers"] = _stack_init(
+                lambda k: {
+                    "mlstm": XL.init_mlstm(jax.random.fold_in(k, 0), cfg,
+                                           dtype),
+                    "slstm": XL.init_slstm(jax.random.fold_in(k, 1), cfg,
+                                           dtype),
+                }, k_layers, n_pairs)
+        elif at == "audio":
+            def dec_layer(k):
+                ks = jax.random.split(k, 6)
+                return {
+                    "ln1": L.init_norm(ks[0], cfg.d_model, dtype, layer=True),
+                    "self_attn": L.init_attention(ks[1], cfg, dtype),
+                    "ln_x": L.init_norm(ks[2], cfg.d_model, dtype, layer=True),
+                    "cross_attn": L.init_attention(ks[3], cfg, dtype),
+                    "ln2": L.init_norm(ks[4], cfg.d_model, dtype, layer=True),
+                    "mlp": L.init_mlp(ks[5], cfg.d_model, cfg.d_ff, dtype,
+                                      cfg.gated_mlp),
+                }
+            params["layers"] = _stack_init(dec_layer, k_layers,
+                                           cfg.num_layers)
+            params["encoder"] = _stack_init(dense_layer, k_enc,
+                                            cfg.encoder_layers)
+            params["enc_pos"] = (jax.random.normal(
+                jax.random.fold_in(k_enc, 9),
+                (cfg.encoder_seq_len, cfg.d_model)) * 0.02).astype(dtype)
+            params["enc_norm"] = L.init_norm(jax.random.fold_in(k_enc, 7),
+                                             cfg.d_model, dtype, layer=True)
+        else:
+            raise ValueError(f"unknown arch_type {at}")
+        return params
+
+    # ------------------------------------------------------------ shared bits
+
+    def _attn_sublayer(self, x, lp, positions, window: int,
+                       collect_kv: bool = False):
+        """Pre-norm attention sublayer on full sequences (chunked)."""
+        cfg = self.cfg
+        b, s = x.shape[:2]
+        h = L.apply_norm(x, lp["ln1"], cfg.rms_eps)
+        q, k, v = L.qkv_proj(h, lp["attn"], cfg, positions)
+        out = L.chunked_causal_attend(q, k, v, window=window,
+                                      q_block=self.q_block,
+                                      unroll=not self.scan_layers)
+        out = out.reshape(b, s, cfg.num_heads * cfg.dh)
+        x = x + jnp.einsum("bsD,Dh->bsh", out, lp["attn"]["wo"])
+        if collect_kv:
+            return x, (k, v)
+        return x
+
+    def _mlp_sublayer(self, x, lp):
+        cfg = self.cfg
+        h = L.apply_norm(x, lp["ln2"], cfg.rms_eps)
+        if "moe" in lp:
+            moe_fn = (MOE.moe_block_sharded if self.moe_impl == "shard_map"
+                      else MOE.moe_block)
+            out, aux = moe_fn(h, lp["moe"], cfg)
+            return x + out, aux
+        return x + L.mlp_block(h, lp["mlp"], cfg.act), jnp.zeros(())
+
+    def _encode(self, params, frames: Array) -> Array:
+        """Whisper encoder over stub frame embeddings (b, enc_s, d)."""
+        cfg = self.cfg
+        x = frames + params["enc_pos"][None, : frames.shape[1]]
+
+        def body(x, lp):
+            b, s = x.shape[:2]
+            h = L.apply_norm(x, lp["ln1"], cfg.rms_eps)
+            q = jnp.einsum("bsh,hnd->bsnd", h, lp["attn"]["wq"])
+            k = jnp.einsum("bsh,hnd->bsnd", h, lp["attn"]["wk"])
+            v = jnp.einsum("bsh,hnd->bsnd", h, lp["attn"]["wv"])
+            o = L.gqa_attend(q, k, v, None)          # bidirectional
+            o = o.reshape(b, s, -1)
+            x = x + jnp.einsum("bsD,Dh->bsh", o, lp["attn"]["wo"])
+            h = L.apply_norm(x, lp["ln2"], cfg.rms_eps)
+            return x + L.mlp_block(h, lp["mlp"], cfg.act), None
+
+        x, _ = self._scan(body, x, params["encoder"])
+        return L.apply_norm(x, params["enc_norm"], cfg.rms_eps)
+
+    def _embed_inputs(self, params, tokens, extra):
+        cfg = self.cfg
+        pos = jnp.arange(tokens.shape[1])
+        x = L.embed(tokens, params["embed"], cfg, pos)
+        if cfg.arch_type == "vlm":
+            x = jnp.concatenate([extra["patches"].astype(x.dtype), x], axis=1)
+        return x
+
+    # ------------------------------------------------------- forward (train)
+
+    def forward(self, params, tokens: Array,
+                extra: Optional[Dict[str, Array]] = None
+                ) -> Tuple[Array, Array]:
+        """Teacher-forcing full-sequence forward -> (logits, aux_loss)."""
+        cfg = self.cfg
+        at = cfg.arch_type
+        x = self._embed_inputs(params, tokens, extra)
+        b, s = x.shape[:2]
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+        aux = jnp.zeros((), jnp.float32)
+
+        if at in ("dense", "vlm", "moe") and not self.is_local_global:
+            def body(x, lp):
+                x = self._attn_sublayer(x, lp, positions, window=0)
+                x, a = self._mlp_sublayer(x, lp)
+                return x, a
+            body_fn = jax.checkpoint(body) if self.remat else body
+            x, auxs = self._scan(body_fn, x, params["layers"])
+            aux = jnp.sum(auxs)
+        elif self.is_local_global:
+            W = cfg.sliding_window
+
+            def superblock(x, inp):
+                loc_lp, glob_lp = inp
+
+                def local(x, lp):
+                    x = self._attn_sublayer(x, lp, positions, window=W)
+                    x, _ = self._mlp_sublayer(x, lp)
+                    return x, None
+                x, _ = self._scan(local, x, loc_lp)
+                x = self._attn_sublayer(x, glob_lp, positions, window=0)
+                x, _ = self._mlp_sublayer(x, glob_lp)
+                return x, None
+
+            sb = jax.checkpoint(superblock) if self.remat else superblock
+            x, _ = self._scan(sb, x, (params["local_layers"],
+                                        params["global_layers"]))
+        elif at == "hybrid":
+            def group(x, glp):
+                def mbody(x, lp):
+                    h = L.rms_norm(x, lp["ln"]["gamma"], cfg.rms_eps)
+                    return x + M2.mamba2_forward(h, lp["mamba"], cfg), None
+                x, _ = self._scan(mbody, x, glp)
+                sp = params["shared"]
+                x = self._attn_sublayer(x, sp, positions, window=0)
+                x, _ = self._mlp_sublayer(x, sp)
+                return x, None
+            group_fn = jax.checkpoint(group) if self.remat else group
+            x, _ = self._scan(group_fn, x, params["layers"])
+        elif at == "ssm":
+            def pair(x, lp):
+                x = x + XL.mlstm_forward(x, lp["mlstm"], cfg)
+                x = x + XL.slstm_forward(x, lp["slstm"], cfg)
+                return x, None
+            pair_fn = jax.checkpoint(pair) if self.remat else pair
+            x, _ = self._scan(pair_fn, x, params["layers"])
+        elif at == "audio":
+            memory = self._encode(params, extra["frames"])
+
+            def body(x, lp):
+                h = L.apply_norm(x, lp["ln1"], cfg.rms_eps)
+                q, k, v = L.qkv_proj(h, lp["self_attn"], cfg, positions)
+                out = L.chunked_causal_attend(q, k, v,
+                                              q_block=self.q_block,
+                                              unroll=not self.scan_layers)
+                out = out.reshape(b, s, -1)
+                x = x + jnp.einsum("bsD,Dh->bsh", out, lp["self_attn"]["wo"])
+                h = L.apply_norm(x, lp["ln_x"], cfg.rms_eps)
+                x = x + L.attention_block(h, lp["cross_attn"], cfg, positions,
+                                          memory=memory)
+                h = L.apply_norm(x, lp["ln2"], cfg.rms_eps)
+                return x + L.mlp_block(h, lp["mlp"], cfg.act), None
+
+            x, _ = self._scan(body, x, params["layers"])
+
+        x = L.apply_norm(x, params["final_norm"], cfg.rms_eps)
+        if at == "vlm":  # only score text positions
+            x = x[:, extra["patches"].shape[1]:]
+        logits = L.unembed(x, params["embed"], cfg)
+        return logits, aux
+
+    # ------------------------------------------------------------- caches
+
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.float32,
+                   ) -> PyTree:
+        cfg = self.cfg
+        at = cfg.arch_type
+        KV, dh = cfg.num_kv_heads, cfg.dh
+        cache: Dict[str, Any] = {"pos": jnp.zeros((), jnp.int32)}
+        if at in ("dense", "vlm", "moe"):
+            if self.is_local_global:
+                ge = cfg.global_every
+                n_super = cfg.num_layers // ge
+                W = min(cfg.sliding_window, max_len)
+                cache["k_local"] = jnp.zeros(
+                    (n_super, ge - 1, batch, W, KV, dh), dtype)
+                cache["v_local"] = jnp.zeros_like(cache["k_local"])
+                cache["k_global"], cache["v_global"] = cache_lib.init_kv(
+                    batch, max_len, KV, dh, dtype, n_super)
+            else:
+                cache["k"], cache["v"] = cache_lib.init_kv(
+                    batch, max_len, KV, dh, dtype, cfg.num_layers)
+        elif at == "hybrid":
+            every = cfg.shared_attn_every
+            n_groups = cfg.num_layers // every
+            st = M2.init_state(cfg, batch, dtype)
+            cache["mamba"] = jax.tree.map(
+                lambda a: jnp.zeros((n_groups, every) + a.shape, a.dtype), st)
+            cache["k"], cache["v"] = cache_lib.init_kv(
+                batch, max_len, KV, dh, dtype, n_groups)
+        elif at == "ssm":
+            n_pairs = cfg.num_layers // 2
+            ms = XL.init_mlstm_state(cfg, batch)
+            ss = XL.init_slstm_state(cfg, batch)
+            cache["mlstm"] = jax.tree.map(
+                lambda a: jnp.zeros((n_pairs,) + a.shape, a.dtype), ms)
+            cache["mlstm"]["m"] = jnp.full_like(cache["mlstm"]["m"], -1e30)
+            cache["slstm"] = jax.tree.map(
+                lambda a: jnp.zeros((n_pairs,) + a.shape, a.dtype), ss)
+            cache["slstm"]["m"] = jnp.full_like(cache["slstm"]["m"], -1e30)
+        elif at == "audio":
+            cache["k"], cache["v"] = cache_lib.init_kv(
+                batch, max_len, KV, dh, dtype, cfg.num_layers)
+            cache["k_cross"], cache["v_cross"] = cache_lib.init_kv(
+                batch, cfg.encoder_seq_len, KV, dh, dtype, cfg.num_layers)
+        return cache
+
+    # ------------------------------------------------------------ prefill
+
+    def prefill(self, params, tokens: Array,
+                extra: Optional[Dict[str, Array]] = None,
+                max_len: Optional[int] = None,
+                cache_dtype=None) -> Tuple[Array, PyTree]:
+        """Process the prompt, fill the cache, return last-position logits."""
+        cfg = self.cfg
+        at = cfg.arch_type
+        b = tokens.shape[0]
+        max_len = max_len or cfg.max_seq_len
+        x = self._embed_inputs(params, tokens, extra)
+        s = x.shape[1]
+        cache_dtype = cache_dtype or x.dtype
+        cache = self.init_cache(b, max_len, cache_dtype)
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+        def put(c, kv, offset=(0, 0, 0, 0, 0)):
+            return jax.lax.dynamic_update_slice(c, kv.astype(c.dtype), offset)
+
+        if at in ("dense", "vlm", "moe") and not self.is_local_global:
+            def body(x, lp):
+                x, (k, v) = self._attn_sublayer(x, lp, positions, 0,
+                                                collect_kv=True)
+                x, _ = self._mlp_sublayer(x, lp)
+                return x, (k, v)
+            x, (ks, vs) = self._scan(body, x, params["layers"])
+            cache["k"], cache["v"] = put(cache["k"], ks), put(cache["v"], vs)
+        elif self.is_local_global:
+            W = min(cfg.sliding_window, max_len)
+
+            def superblock(x, inp):
+                loc_lp, glob_lp = inp
+
+                def local(x, lp):
+                    x, (k, v) = self._attn_sublayer(
+                        x, lp, positions, cfg.sliding_window, collect_kv=True)
+                    x, _ = self._mlp_sublayer(x, lp)
+                    return x, (k, v)
+                x, (kl, vl) = self._scan(local, x, loc_lp)
+                x, (kg, vg) = self._attn_sublayer(x, glob_lp, positions, 0,
+                                                  collect_kv=True)
+                x, _ = self._mlp_sublayer(x, glob_lp)
+                return x, (kl, vl, kg, vg)
+
+            x, (kls, vls, kgs, vgs) = self._scan(
+                superblock, x,
+                (params["local_layers"], params["global_layers"]))
+            # rings for locals (kls: (n_super, ge-1, b, s, KV, dh))
+            cache["k_local"] = _fill_ring(cache["k_local"], kls, s)
+            cache["v_local"] = _fill_ring(cache["v_local"], vls, s)
+            cache["k_global"] = put(cache["k_global"], kgs)
+            cache["v_global"] = put(cache["v_global"], vgs)
+        elif at == "hybrid":
+            def group(x, glp):
+                def mbody(x, lp):
+                    h = L.rms_norm(x, lp["ln"]["gamma"], cfg.rms_eps)
+                    out, st = M2.mamba2_forward_with_state(h, lp["mamba"],
+                                                           cfg)
+                    return x + out, st
+                x, mstates = self._scan(mbody, x, glp)
+                sp = params["shared"]
+                x, (k, v) = self._attn_sublayer(x, sp, positions, 0,
+                                                collect_kv=True)
+                x, _ = self._mlp_sublayer(x, sp)
+                return x, (mstates, k, v)
+
+            x, (mst, ks, vs) = self._scan(group, x, params["layers"])
+            cache["mamba"] = jax.tree.map(
+                lambda z, n: n.astype(z.dtype), cache["mamba"], mst)
+            cache["k"], cache["v"] = put(cache["k"], ks), put(cache["v"], vs)
+        elif at == "ssm":
+            def pair(x, lp):
+                out, ms = XL.mlstm_forward_with_state(x, lp["mlstm"], cfg)
+                x = x + out
+                out, ss = XL.slstm_forward_with_state(x, lp["slstm"], cfg)
+                return x + out, (ms, ss)
+            x, (mss, sss) = self._scan(pair, x, params["layers"])
+            cache["mlstm"], cache["slstm"] = mss, sss
+        elif at == "audio":
+            memory = self._encode(params, extra["frames"])
+
+            def body(x, lp):
+                h = L.apply_norm(x, lp["ln1"], cfg.rms_eps)
+                q, k, v = L.qkv_proj(h, lp["self_attn"], cfg, positions)
+                out = L.chunked_causal_attend(q, k, v,
+                                              q_block=self.q_block,
+                                              unroll=not self.scan_layers)
+                out = out.reshape(b, s, -1)
+                x = x + jnp.einsum("bsD,Dh->bsh", out, lp["self_attn"]["wo"])
+                h = L.apply_norm(x, lp["ln_x"], cfg.rms_eps)
+                kx = jnp.einsum("bsh,hnd->bsnd", memory,
+                                lp["cross_attn"]["wk"])
+                vx = jnp.einsum("bsh,hnd->bsnd", memory,
+                                lp["cross_attn"]["wv"])
+                qx = jnp.einsum("bsh,hnd->bsnd", h, lp["cross_attn"]["wq"])
+                ox = L.gqa_attend(qx, kx, vx, None).reshape(b, s, -1)
+                x = x + jnp.einsum("bsD,Dh->bsh", ox, lp["cross_attn"]["wo"])
+                h = L.apply_norm(x, lp["ln2"], cfg.rms_eps)
+                return x + L.mlp_block(h, lp["mlp"], cfg.act), (k, v, kx, vx)
+
+            x, (ks, vs, kxs, vxs) = self._scan(body, x, params["layers"])
+            cache["k"], cache["v"] = put(cache["k"], ks), put(cache["v"], vs)
+            cache["k_cross"] = kxs.astype(cache["k_cross"].dtype)
+            cache["v_cross"] = vxs.astype(cache["v_cross"].dtype)
+        else:
+            raise NotImplementedError(at)
+
+        cache["pos"] = jnp.asarray(s, jnp.int32)
+        x = L.apply_norm(x, params["final_norm"], cfg.rms_eps)
+        logits = L.unembed(x[:, -1:], params["embed"], cfg)
+        return logits, cache
+
+    # -------------------------------------------------------------- decode
+
+    def decode_step(self, params, cache: PyTree, token: Array,
+                    ) -> Tuple[Array, PyTree]:
+        """token: (b, 1) -> (logits (b,1,V), updated cache)."""
+        cfg = self.cfg
+        at = cfg.arch_type
+        b = token.shape[0]
+        pos = cache["pos"]
+        positions = jnp.broadcast_to(pos[None, None], (b, 1))
+        x = L.embed(token, params["embed"], cfg, positions[0])
+
+        def _pin(kc, vc):
+            # keep the cache sharding stable through the scan body so GSPMD
+            # never invents an intermediate (gather-inducing) sharding
+            kc = shard(kc, "batch", "kv_seq", "kv_heads", None)
+            vc = shard(vc, "batch", "kv_seq", "kv_heads", None)
+            return kc, vc
+
+        use_sm = self.seq_shard and self.seq_shard_impl == "shard_map"
+
+        def attn_decode(x, lp, kc, vc, ring):
+            h = L.apply_norm(x, lp["ln1"], cfg.rms_eps)
+            q, k, v = L.qkv_proj(h, lp["attn"], cfg, positions)
+            if use_sm and not ring:
+                from repro.models import seq_parallel as SPAR
+                kc, vc = SPAR.seq_sharded_update_kv(kc, vc, k, v, pos)
+                out = SPAR.seq_sharded_decode_attend(q, kc, vc, pos)
+            else:
+                kc, vc = cache_lib.update_kv(
+                    kc, vc, k, v, pos, ring,
+                    masked=self.seq_shard and not ring)
+                if not ring:
+                    kc, vc = _pin(kc, vc)
+                out = cache_lib.decode_attend(q, kc, vc, pos, ring)
+            out = out.reshape(b, 1, cfg.num_heads * cfg.dh)
+            x = x + jnp.einsum("bsD,Dh->bsh", out, lp["attn"]["wo"])
+            return x, kc, vc
+
+        if at in ("dense", "vlm", "moe") and not self.is_local_global:
+            def body(x, inp):
+                lp, kc, vc = inp
+                x, kc, vc = attn_decode(x, lp, kc, vc, False)
+                x, _ = self._mlp_sublayer(x, lp)
+                return x, (kc, vc)
+            x, (kn, vn) = self._scan(
+                body, x, (params["layers"], cache["k"], cache["v"]))
+            cache["k"], cache["v"] = kn, vn
+        elif self.is_local_global:
+            def superblock(x, inp):
+                loc_lp, glob_lp, kl, vl, kg, vg = inp
+
+                def local(x, inp2):
+                    lp, kc, vc = inp2
+                    x, kc, vc = attn_decode(x, lp, kc, vc, True)
+                    x, _ = self._mlp_sublayer(x, lp)
+                    return x, (kc, vc)
+                x, (kl, vl) = self._scan(local, x, (loc_lp, kl, vl))
+                x, kg, vg = attn_decode(x, glob_lp, kg, vg, False)
+                x, _ = self._mlp_sublayer(x, glob_lp)
+                return x, (kl, vl, kg, vg)
+
+            x, (kl, vl, kg, vg) = self._scan(
+                superblock, x,
+                (params["local_layers"], params["global_layers"],
+                 cache["k_local"], cache["v_local"],
+                 cache["k_global"], cache["v_global"]))
+            cache["k_local"], cache["v_local"] = kl, vl
+            cache["k_global"], cache["v_global"] = kg, vg
+        elif at == "hybrid":
+            def group(x, inp):
+                glp, mstate, kc, vc = inp
+
+                def mbody(x, inp2):
+                    lp, st = inp2
+                    h = L.rms_norm(x, lp["ln"]["gamma"], cfg.rms_eps)
+                    out, st = M2.mamba2_decode(h, st, lp["mamba"], cfg)
+                    return x + out, st
+                x, mstate = self._scan(mbody, x, (glp, mstate))
+                sp = params["shared"]
+                h = L.apply_norm(x, sp["ln1"], cfg.rms_eps)
+                q, k, v = L.qkv_proj(h, sp["attn"], cfg, positions)
+                kc, vc = cache_lib.update_kv(kc, vc, k, v, pos,
+                                             masked=self.seq_shard)
+                kc = shard(kc, "batch", "kv_seq", "kv_heads", None)
+                vc = shard(vc, "batch", "kv_seq", "kv_heads", None)
+                out = cache_lib.decode_attend(q, kc, vc, pos)
+                out = out.reshape(b, 1, cfg.num_heads * cfg.dh)
+                x = x + jnp.einsum("bsD,Dh->bsh", out, sp["attn"]["wo"])
+                x, _ = self._mlp_sublayer(x, sp)
+                return x, (mstate, kc, vc)
+
+            x, (mst, kn, vn) = self._scan(
+                group, x,
+                (params["layers"], cache["mamba"], cache["k"], cache["v"]))
+            cache["mamba"], cache["k"], cache["v"] = mst, kn, vn
+        elif at == "ssm":
+            def pair(x, inp):
+                lp, ms, ss = inp
+                out, ms = XL.mlstm_decode(x, ms, lp["mlstm"], cfg)
+                x = x + out
+                out, ss = XL.slstm_decode(x, ss, lp["slstm"], cfg)
+                return x + out, (ms, ss)
+            x, (msn, ssn) = self._scan(
+                pair, x, (params["layers"], cache["mlstm"], cache["slstm"]))
+            cache["mlstm"], cache["slstm"] = msn, ssn
+        elif at == "audio":
+            def body(x, inp):
+                lp, kc, vc, kx, vx = inp
+                h = L.apply_norm(x, lp["ln1"], cfg.rms_eps)
+                q, k, v = L.qkv_proj(h, lp["self_attn"], cfg, positions)
+                kc, vc = cache_lib.update_kv(kc, vc, k, v, pos)
+                kc = shard(kc, "batch", "kv_seq", "kv_heads", None)
+                vc = shard(vc, "batch", "kv_seq", "kv_heads", None)
+                out = cache_lib.decode_attend(q, kc, vc, pos)
+                out = out.reshape(b, 1, -1)
+                x = x + jnp.einsum("bsD,Dh->bsh", out, lp["self_attn"]["wo"])
+                h = L.apply_norm(x, lp["ln_x"], cfg.rms_eps)
+                qx = jnp.einsum("bsh,hnd->bsnd", h, lp["cross_attn"]["wq"])
+                ox = L.gqa_attend(qx, kx, vx, None).reshape(b, 1, -1)
+                x = x + jnp.einsum("bsD,Dh->bsh", ox, lp["cross_attn"]["wo"])
+                h = L.apply_norm(x, lp["ln2"], cfg.rms_eps)
+                return x + L.mlp_block(h, lp["mlp"], cfg.act), (kc, vc)
+
+            x, (kn, vn) = self._scan(
+                body, x, (params["layers"], cache["k"], cache["v"],
+                          cache["k_cross"], cache["v_cross"]))
+            cache["k"], cache["v"] = kn, vn
+        else:
+            raise NotImplementedError(at)
+
+        cache["pos"] = pos + 1
+        x = L.apply_norm(x, params["final_norm"], cfg.rms_eps)
+        logits = L.unembed(x, params["embed"], cfg)
+        return logits, cache
+
+
+def _fill_ring(ring_cache: Array, kv: Array, s: int) -> Array:
+    """Place prefill KV (..., b, s, KV, dh) into a ring cache
+    (..., b, W, KV, dh) honoring slot = pos % W layout."""
+    W = ring_cache.shape[-3]
+    if s <= W:
+        pad = [(0, 0)] * kv.ndim
+        pad[-3] = (0, W - s)
+        return jnp.pad(kv, pad).astype(ring_cache.dtype)
+    tail = kv[..., s - W:, :, :]                 # positions s-W .. s-1
+    slots = ((s - W) + jnp.arange(W)) % W
+    inv = jnp.argsort(slots)                     # slot -> tail index
+    return jnp.take(tail, inv, axis=-3).astype(ring_cache.dtype)

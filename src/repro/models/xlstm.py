@@ -1,0 +1,260 @@
+"""xLSTM blocks [arXiv:2405.04517]: mLSTM (matrix memory, parallelizable)
+and sLSTM (scalar memory, strictly sequential), alternating.
+
+mLSTM recurrence per head (state C in R^{dh x dh}, normalizer n in R^{dh}):
+    m_t = max(m_{t-1} + logsig(f~_t), i~_t)                 (stabilizer)
+    C_t = exp(m_{t-1} + logf - m_t) C_{t-1} + exp(i~ - m_t) k_t v_t^T
+    n_t = exp(m_{t-1} + logf - m_t) n_{t-1} + exp(i~ - m_t) k_t
+    y_t = (q_t C_t) / max(|q_t . n_t|, 1)
+
+Train path is a chunked parallel form: with La = cumsum(logf) and
+u_j = i~_j - La_j the stabilizer is m_t = La_t + cummax(u)_t, so scores are
+exp(u_j - w_t)(q.k) with w = cummax(u) — computed chunk-wise with a
+rescaled state carry (exactly matching the sequential form; tested).
+
+sLSTM has no parallel form; training runs lax.scan over time (the paper
+itself ships custom kernels for this — on TPU the scan lowers to a fused
+while loop).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init, rms_norm
+from repro.models.sharding import shard
+
+Array = jax.Array
+
+
+def _dims(cfg: ModelConfig):
+    nh = cfg.ssm.num_heads or cfg.num_heads
+    dh = cfg.d_model // nh
+    return nh, dh
+
+
+# ----------------------------------------------------------------- mLSTM
+
+def init_mlstm(key, cfg: ModelConfig, dtype) -> dict:
+    h = cfg.d_model
+    nh, dh = _dims(cfg)
+    up = cfg.ssm.expand * h
+    ks = jax.random.split(key, 8)
+    return {
+        "norm": jnp.ones((h,), dtype),
+        "w_up": dense_init(ks[0], h, (up,), dtype),       # -> x_m
+        "w_z": dense_init(ks[1], h, (up,), dtype),        # gate branch
+        "wq": dense_init(ks[2], up, (nh, dh), dtype),
+        "wk": dense_init(ks[3], up, (nh, dh), dtype),
+        "wv": dense_init(ks[4], up, (nh, dh), dtype),
+        "w_if": dense_init(ks[5], up, (nh, 2), jnp.float32),
+        "o_norm": jnp.ones((nh * dh,), dtype),
+        "w_down": dense_init(ks[6], nh * dh, (h,), dtype),
+    }
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int) -> dict:
+    nh, dh = _dims(cfg)
+    return {
+        "C": jnp.zeros((batch, nh, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, nh, dh), jnp.float32),
+        "m": jnp.full((batch, nh), -1e30, jnp.float32),
+    }
+
+
+def _mlstm_qkvif(x: Array, p: dict, cfg: ModelConfig):
+    nh, dh = _dims(cfg)
+    xm = jnp.einsum("bsh,hu->bsu", x, p["w_up"])
+    z = jnp.einsum("bsh,hu->bsu", x, p["w_z"])
+    q = jnp.einsum("bsu,und->bsnd", xm, p["wq"]) / jnp.sqrt(dh)
+    k = jnp.einsum("bsu,und->bsnd", xm, p["wk"]) / jnp.sqrt(dh)
+    v = jnp.einsum("bsu,und->bsnd", xm, p["wv"])
+    i_f = jnp.einsum("bsu,ung->bsng", xm.astype(jnp.float32), p["w_if"])
+    i_t = i_f[..., 0]                                # pre-act input gate (log)
+    logf = jax.nn.log_sigmoid(i_f[..., 1])           # (b,s,nh)
+    return q, k, v, i_t, logf, z, xm
+
+
+def mlstm_forward(x_in: Array, p: dict, cfg: ModelConfig) -> Array:
+    y, _ = mlstm_forward_with_state(x_in, p, cfg)
+    return y
+
+
+def mlstm_forward_with_state(x_in: Array, p: dict, cfg: ModelConfig
+                             ) -> Tuple[Array, dict]:
+    """Chunked parallel mLSTM. x_in: (b, s, h). Also returns the final
+    recurrent state in decode conventions (m = La_end + w_end)."""
+    nh, dh = _dims(cfg)
+    b, s_orig, h = x_in.shape
+    Q = min(cfg.ssm.chunk, s_orig)
+    s = ((s_orig + Q - 1) // Q) * Q
+    if s != s_orig:  # pad; padded steps: f=1 (logf=0), i = -inf (no input)
+        x_in_p = jnp.pad(x_in, ((0, 0), (0, s - s_orig), (0, 0)))
+    else:
+        x_in_p = x_in
+    nc = s // Q
+
+    x = rms_norm(x_in_p, p["norm"], cfg.rms_eps)
+    q, k, v, i_t, logf, z, _ = _mlstm_qkvif(x, p, cfg)
+    if s != s_orig:
+        pad_mask = (jnp.arange(s) >= s_orig)[None, :, None]
+        i_t = jnp.where(pad_mask, -1e30, i_t)
+        logf = jnp.where(pad_mask, 0.0, logf)
+    q = shard(q, "batch", "seq", "ssm_heads", None)
+    k = shard(k, "batch", "seq", "ssm_heads", None)
+    v = shard(v, "batch", "seq", "ssm_heads", None)
+
+    La = jnp.cumsum(logf, axis=1)                    # (b,s,nh) inclusive
+    u = i_t - La                                     # (b,s,nh)
+
+    qc = q.reshape(b, nc, Q, nh, dh).astype(jnp.float32)
+    kc = k.reshape(b, nc, Q, nh, dh).astype(jnp.float32)
+    vc = v.reshape(b, nc, Q, nh, dh).astype(jnp.float32)
+    uc = u.reshape(b, nc, Q, nh)
+    Lac = La.reshape(b, nc, Q, nh)
+
+    def chunk_step(carry, inp):
+        C, n, w_prev = carry                         # state scaled by exp(-w_prev)
+        qq, kk, vv, uu, ll = inp                     # (b,Q,nh,dh) / (b,Q,nh)
+        w = jnp.maximum(jax.lax.cummax(uu, axis=1),
+                        w_prev[:, None, :])          # (b,Q,nh) running max
+        # intra-chunk
+        qk = jnp.einsum("bind,bjnd->bijn", qq, kk)   # (b,Q,Q,n)
+        sc = jnp.exp(uu[:, None, :, :] - w[:, :, None, :])
+        tri = jnp.tril(jnp.ones((Q, Q), bool))[None, :, :, None]
+        sc = jnp.where(tri, sc, 0.0)
+        y_intra = jnp.einsum("bijn,bijn,bjnd->bind", qk, sc, vv)
+        n_intra = jnp.einsum("bijn,bjnd->bind", sc, kk)
+        # inter-chunk (state entering this chunk, scale w_prev)
+        scale_in = jnp.exp(w_prev[:, None, :] - w)   # (b,Q,nh)
+        y_inter = jnp.einsum("bind,bndp->binp", qq, C) * scale_in[..., None]
+        n_inter = n[:, None] * scale_in[..., None]
+        y_num = y_intra + y_inter
+        n_tot = n_intra + n_inter
+        denom = jnp.maximum(jnp.abs(jnp.einsum("bind,bind->bin", qq, n_tot)),
+                            1.0)
+        y = y_num / denom[..., None]
+        # update state to end-of-chunk scale
+        w_end = w[:, -1, :]
+        dec = jnp.exp(uu - w_end[:, None, :])        # (b,Q,nh)
+        C_new = C * jnp.exp(w_prev - w_end)[:, :, None, None] \
+            + jnp.einsum("bjn,bjnd,bjnp->bndp", dec, kk, vv)
+        n_new = n * jnp.exp(w_prev - w_end)[:, :, None] \
+            + jnp.einsum("bjn,bjnd->bnd", dec, kk)
+        return (C_new, n_new, w_end), y
+
+    C0 = jnp.zeros((b, nh, dh, dh), jnp.float32)
+    n0 = jnp.zeros((b, nh, dh), jnp.float32)
+    w0 = jnp.full((b, nh), -1e30, jnp.float32)
+    inputs = tuple(jnp.moveaxis(t, 1, 0) for t in (qc, kc, vc, uc, Lac))
+    (Cf, nf, wf), ys = jax.lax.scan(chunk_step, (C0, n0, w0), inputs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, nh * dh)[:, :s_orig]
+    y = y.astype(x_in.dtype)
+
+    y = rms_norm(y, p["o_norm"], cfg.rms_eps)
+    out = y * jax.nn.silu(z[:, :s_orig, : nh * dh])
+    # padded steps leave (C, n, w) unchanged (f=1, i contribution 0), and
+    # La is unchanged past s_orig (logf=0), so the handoff state is exact.
+    final_state = {"C": Cf, "n": nf, "m": La[:, -1, :] + wf}
+    return jnp.einsum("bsu,uh->bsh", out, p["w_down"]), final_state
+
+
+def mlstm_decode(x_in: Array, state: dict, p: dict, cfg: ModelConfig
+                 ) -> Tuple[Array, dict]:
+    """Exact sequential step. x_in: (b, 1, h)."""
+    nh, dh = _dims(cfg)
+    b = x_in.shape[0]
+    x = rms_norm(x_in, p["norm"], cfg.rms_eps)
+    q, k, v, i_t, logf, z, _ = _mlstm_qkvif(x, p, cfg)
+    q, k, v = (t[:, 0].astype(jnp.float32) for t in (q, k, v))
+    i_t, logf = i_t[:, 0], logf[:, 0]                # (b,nh)
+
+    m_prev, C, n = state["m"], state["C"], state["n"]
+    m = jnp.maximum(m_prev + logf, i_t)
+    fs = jnp.exp(m_prev + logf - m)                  # forget scale
+    is_ = jnp.exp(i_t - m)                           # input scale
+    C = C * fs[:, :, None, None] + is_[:, :, None, None] \
+        * jnp.einsum("bnd,bnp->bndp", k, v)
+    n = n * fs[:, :, None] + is_[:, :, None] * k
+    num = jnp.einsum("bnd,bndp->bnp", q, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bnd,bnd->bn", q, n)), 1.0)
+    y = (num / den[..., None]).reshape(b, 1, nh * dh).astype(x_in.dtype)
+    y = rms_norm(y, p["o_norm"], cfg.rms_eps)
+    out = y * jax.nn.silu(z[..., : nh * dh])
+    out = jnp.einsum("bsu,uh->bsh", out, p["w_down"])
+    return out, {"C": C, "n": n, "m": m}
+
+
+# ----------------------------------------------------------------- sLSTM
+
+def init_slstm(key, cfg: ModelConfig, dtype) -> dict:
+    h = cfg.d_model
+    nh, dh = _dims(cfg)
+    ks = jax.random.split(key, 3)
+    return {
+        "norm": jnp.ones((h,), dtype),
+        # gates i, f, z, o from input
+        "w_gates": dense_init(ks[0], h, (nh, 4 * dh), jnp.float32),
+        # block-diagonal recurrent weights per head
+        "r_gates": (jax.random.normal(ks[1], (nh, dh, 4 * dh)) /
+                    jnp.sqrt(dh)).astype(jnp.float32),
+        "w_down": dense_init(ks[2], h, (h,), dtype),
+    }
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int) -> dict:
+    nh, dh = _dims(cfg)
+    z = jnp.zeros((batch, nh, dh), jnp.float32)
+    return {"c": z, "n": z, "h": z, "m": jnp.full((batch, nh, dh), -1e30)}
+
+
+def _slstm_step(state, gates_x, p):
+    c, n, hp, m_prev = state["c"], state["n"], state["h"], state["m"]
+    g = gates_x + jnp.einsum("bnd,ndg->bng", hp, p["r_gates"])
+    i_t, f_t, z_t, o_t = jnp.split(g, 4, axis=-1)    # (b,nh,dh) each
+    logf = jax.nn.log_sigmoid(f_t)
+    m = jnp.maximum(logf + m_prev, i_t)
+    i_s = jnp.exp(i_t - m)
+    f_s = jnp.exp(logf + m_prev - m)
+    c = f_s * c + i_s * jnp.tanh(z_t)
+    n = f_s * n + i_s
+    h = jax.nn.sigmoid(o_t) * c / jnp.maximum(n, 1.0)
+    return {"c": c, "n": n, "h": h, "m": m}
+
+
+def slstm_forward(x_in: Array, p: dict, cfg: ModelConfig) -> Array:
+    y, _ = slstm_forward_with_state(x_in, p, cfg)
+    return y
+
+
+def slstm_forward_with_state(x_in: Array, p: dict, cfg: ModelConfig
+                             ) -> Tuple[Array, dict]:
+    nh, dh = _dims(cfg)
+    b, s, h = x_in.shape
+    x = rms_norm(x_in, p["norm"], cfg.rms_eps)
+    gates = jnp.einsum("bsh,hng->bsng", x.astype(jnp.float32), p["w_gates"])
+    gates = gates.reshape(b, s, nh, 4, dh).reshape(b, s, nh, 4 * dh)
+
+    def step(state, g_t):
+        state = _slstm_step(state, g_t, p)
+        return state, state["h"]
+
+    state0 = init_slstm_state(cfg, b)
+    state_f, hs = jax.lax.scan(step, state0, jnp.moveaxis(gates, 1, 0))
+    hs = jnp.moveaxis(hs, 0, 1).reshape(b, s, h).astype(x_in.dtype)
+    return jnp.einsum("bsh,hH->bsH", hs, p["w_down"]), state_f
+
+
+def slstm_decode(x_in: Array, state: dict, p: dict, cfg: ModelConfig
+                 ) -> Tuple[Array, dict]:
+    nh, dh = _dims(cfg)
+    b = x_in.shape[0]
+    x = rms_norm(x_in, p["norm"], cfg.rms_eps)
+    gates = jnp.einsum("bsh,hng->bsng", x.astype(jnp.float32),
+                       p["w_gates"])[:, 0].reshape(b, nh, 4 * dh)
+    state = _slstm_step(state, gates, p)
+    h = state["h"].reshape(b, 1, cfg.d_model).astype(x_in.dtype)
+    return jnp.einsum("bsh,hH->bsH", h, p["w_down"]), state

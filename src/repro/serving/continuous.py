@@ -1,0 +1,116 @@
+"""Continuous (iteration-level) batching engine — Orca-style scheduling
+on top of the Model decode path (beyond-paper extension; the paper
+batches statically, §2, and its related-work cites Orca's scheduler as
+the serving-side complement).
+
+Design: B slots, each holding one request's KV cache at its own decode
+position. `decode_step` is vmapped over the slot axis, so slots advance
+in lockstep on the device while carrying *independent* positions — no
+cross-request padding, and a finished slot is refilled from the queue at
+the next step boundary (admission = b=1 prefill + cache splice into the
+stacked slot pytree). Works for every arch family the Model supports,
+since vmap treats the cache pytree generically.
+
+KVPR interaction: continuous batching changes WHEN a sequence's KV is
+needed, not WHERE it lives — the offload runtime's per-layer split
+decision applies per step exactly as in static batching; here we run the
+resident-cache path (the offload runtime covers the paper's setting).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.transformer import Model
+from repro.serving.engine import Generation, Request
+
+
+@dataclasses.dataclass
+class _Slot:
+    uid: int = -1                 # -1 = empty
+    emitted: int = 0
+    budget: int = 0
+    tokens: Optional[list] = None
+
+
+class ContinuousBatchingEngine:
+    """serve(requests) with iteration-level admission into fixed slots."""
+
+    def __init__(self, model: Model, params, num_slots: int = 4,
+                 max_len: int = 256):
+        self.model = model
+        self.cfg = model.cfg
+        self.params = params
+        self.B = num_slots
+        self.max_len = max_len
+        self._prefill = jax.jit(model.prefill,
+                                static_argnames=("max_len",))
+        # vmap over the slot axis: params broadcast, cache + token mapped
+        self._step = jax.jit(jax.vmap(model.decode_step,
+                                      in_axes=(None, 0, 0)))
+
+    # ------------------------------------------------------------ plumbing
+
+    def _splice(self, slots_cache, one_cache, i: int):
+        """Write a b=1 cache into slot i of the stacked cache pytree."""
+        def put(dst, src):
+            return jax.lax.dynamic_update_slice(
+                dst, src[None].astype(dst.dtype),
+                (i,) + (0,) * (dst.ndim - 1))
+        return jax.tree.map(put, slots_cache, one_cache)
+
+    # --------------------------------------------------------------- serve
+
+    def serve(self, reqs: List[Request]) -> List[Generation]:
+        queue: Deque[Request] = deque(reqs)
+        done: Dict[int, Generation] = {}
+        slots = [_Slot() for _ in range(self.B)]
+
+        # bootstrap: build the stacked cache from B empty prefills
+        stacked = None
+        tokens = np.zeros((self.B, 1), np.int32)
+
+        def admit(i):
+            nonlocal stacked
+            r = queue.popleft()
+            logits, cache = self._prefill(
+                self.params, jnp.asarray(r.prompt)[None],
+                max_len=self.max_len)
+            first = int(jnp.argmax(logits[0, -1]))
+            slots[i] = _Slot(uid=r.uid, emitted=1, budget=r.max_new_tokens,
+                             tokens=[first])
+            tokens[i, 0] = first
+            if stacked is None:
+                stacked = jax.tree.map(
+                    lambda a: jnp.broadcast_to(
+                        a[None], (self.B,) + a.shape).copy(), cache)
+            else:
+                stacked = self._splice(stacked, cache, i)
+
+        while queue or any(s.uid >= 0 for s in slots):
+            for i, s in enumerate(slots):
+                if s.uid < 0 and queue:
+                    admit(i)
+            # per-slot token shape is (1, 1): add the slot axis up front
+            logits, stacked = self._step(self.params, stacked,
+                                         jnp.asarray(tokens)[:, None])
+            nxt = np.asarray(jnp.argmax(logits[:, 0, -1], axis=-1),
+                             np.int32)
+            for i, s in enumerate(slots):
+                if s.uid < 0:
+                    continue
+                if s.emitted < s.budget:
+                    s.tokens.append(int(nxt[i]))
+                    s.emitted += 1
+                    tokens[i, 0] = nxt[i]
+                if s.emitted >= s.budget:
+                    done[s.uid] = Generation(
+                        s.uid, np.asarray(s.tokens[:s.budget], np.int32),
+                        0.0, 0.0)
+                    slots[i] = _Slot()
+        return [done[r.uid] for r in reqs]

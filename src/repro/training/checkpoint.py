@@ -1,0 +1,57 @@
+"""Msgpack checkpointing (orbax is not available offline). Arrays are
+stored as (dtype, shape, bytes) triples; the pytree structure is preserved
+for dicts/lists/scalars."""
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+PyTree = Any
+_ARR = "__arr__"
+
+
+def _pack(obj):
+    if isinstance(obj, (jax.Array, np.ndarray)):
+        a = np.asarray(obj)
+        if a.dtype == jnp.bfloat16:
+            return {_ARR: ["bfloat16", list(a.shape),
+                           a.view(np.uint16).tobytes()]}
+        return {_ARR: [a.dtype.str, list(a.shape), a.tobytes()]}
+    if isinstance(obj, dict):
+        return {k: _pack(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_pack(v) for v in obj]
+    return obj
+
+
+def _unpack(obj):
+    if isinstance(obj, dict):
+        if _ARR in obj:
+            dt, shape, buf = obj[_ARR]
+            if dt == "bfloat16":
+                a = np.frombuffer(buf, np.uint16).reshape(shape)
+                return jnp.asarray(a.view(jnp.bfloat16))
+            return jnp.asarray(np.frombuffer(buf, np.dtype(dt)).reshape(shape))
+        return {k: _unpack(v) for k, v in obj.items()}
+    if isinstance(obj, list):
+        return [_unpack(v) for v in obj]
+    return obj
+
+
+def save(path: str, tree: PyTree) -> None:
+    tmp = path + ".tmp"
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb(_pack(tree), use_bin_type=True))
+    os.replace(tmp, path)
+
+
+def load(path: str) -> PyTree:
+    with open(path, "rb") as f:
+        return _unpack(msgpack.unpackb(f.read(), raw=False,
+                                       strict_map_key=False))

@@ -1,0 +1,72 @@
+"""Training step + loop: CE loss (vocab-padding masked) + MoE aux loss,
+AdamW, runs under an optional mesh with logical-axis shardings."""
+from __future__ import annotations
+
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.transformer import Model
+from repro.training.optimizer import (AdamWConfig, adamw_update,
+                                      init_opt_state)
+
+PyTree = Any
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  vocab_size: int) -> jax.Array:
+    """Mean CE over non-padding labels (-100 = ignore)."""
+    mask = labels >= 0
+    labels = jnp.where(mask, labels, 0)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return -jnp.sum(ll * mask) / jnp.maximum(jnp.sum(mask), 1)
+
+
+def make_train_step(model: Model, opt_cfg: AdamWConfig,
+                    aux_weight: float = 0.01):
+    cfg = model.cfg
+
+    def loss_fn(params, batch):
+        logits, aux = model.forward(params, batch["tokens"],
+                                    batch.get("extra"))
+        ce = cross_entropy(logits, batch["labels"], cfg.padded_vocab)
+        return ce + aux_weight * aux, (ce, aux)
+
+    def train_step(params, opt_state, batch):
+        (loss, (ce, aux)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        params, opt_state, info = adamw_update(params, grads, opt_state,
+                                               opt_cfg)
+        metrics = {"loss": loss, "ce": ce, "aux": aux, **info}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def train(model: Model, params, data_iter, steps: int,
+          opt_cfg: Optional[AdamWConfig] = None,
+          log_every: int = 10, jit: bool = True) -> Dict[str, list]:
+    opt_cfg = opt_cfg or AdamWConfig(total_steps=steps)
+    opt_state = init_opt_state(params)
+    step_fn = make_train_step(model, opt_cfg)
+    if jit:
+        step_fn = jax.jit(step_fn)
+    history = {"loss": [], "step_time": []}
+    for step in range(steps):
+        batch = next(data_iter)
+        t0 = time.perf_counter()
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        loss = float(metrics["loss"])
+        dt = time.perf_counter() - t0
+        history["loss"].append(loss)
+        history["step_time"].append(dt)
+        if step % log_every == 0 or step == steps - 1:
+            print(f"step {step:5d} loss {loss:.4f} "
+                  f"ce {float(metrics['ce']):.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.3f} "
+                  f"lr {float(metrics['lr']):.2e} {dt*1e3:.0f}ms")
+    return history, params, opt_state

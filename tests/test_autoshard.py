@@ -1,0 +1,66 @@
+"""autoshard.recommend encodes the §Perf findings correctly per
+(arch-family x shape-kind)."""
+import pytest
+
+from repro.configs import get_config
+from repro.launch.autoshard import recommend
+from repro.launch.specs import INPUT_SHAPES
+
+
+class FakeMesh:
+    def __init__(self, shape):
+        self.shape = dict(shape)
+        self.axis_names = tuple(shape)
+
+
+MESH = FakeMesh({"data": 16, "model": 16})
+
+
+def test_small_model_train_drops_tp():
+    plan = recommend(get_config("xlstm-350m"), INPUT_SHAPES["train_4k"],
+                     MESH)
+    assert plan.strategy["tp"] is None
+    assert plan.strategy["fsdp"] == ("data", "model")
+    assert plan.rules["heads"] is None
+    assert any("drop TP" in r for r in plan.rationale)
+
+
+def test_large_dense_train_keeps_baseline():
+    plan = recommend(get_config("mistral-nemo-12b"),
+                     INPUT_SHAPES["train_4k"], MESH)
+    assert plan.strategy["tp"] == "model"
+    assert plan.strategy["fsdp"] == ("data",)
+    assert plan.model_kwargs == {}
+
+
+def test_dense_decode_stationary_params_and_kvseq():
+    plan = recommend(get_config("mistral-nemo-12b"),
+                     INPUT_SHAPES["decode_32k"], MESH)
+    assert plan.strategy["fsdp"] == ()            # finding 2
+    assert plan.model_kwargs.get("seq_shard")     # finding 3 (kv=8 < 16)
+    assert plan.seq_axis == "model"
+    assert plan.rules["kv_seq"] == "model"
+
+
+def test_moe_gets_shard_map_dispatch():
+    plan = recommend(get_config("qwen3-moe-30b-a3b"),
+                     INPUT_SHAPES["train_4k"], MESH)
+    assert plan.model_kwargs.get("moe_impl") == "shard_map"
+
+
+def test_small_model_prefill_small_batch_keeps_tp():
+    """finding-1 guard: prefill_32k's b=32 can't fill 256 data ways —
+    dropping TP would force batch replication (measured 7x memory
+    regression), so the baseline strategy must be kept."""
+    plan = recommend(get_config("tinyllama-1.1b"),
+                     INPUT_SHAPES["prefill_32k"], MESH)
+    assert plan.strategy["tp"] == "model"
+    assert plan.strategy["fsdp"] == ("data",)
+
+
+def test_ssm_decode_no_kvseq():
+    # xlstm has no KV cache; decode must not request seq sharding
+    plan = recommend(get_config("xlstm-350m"), INPUT_SHAPES["decode_32k"],
+                     MESH)
+    assert "seq_shard" not in plan.model_kwargs
+    assert plan.strategy["fsdp"] == ()

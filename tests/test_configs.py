@@ -1,0 +1,45 @@
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config, pad_vocab
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_config_loads(arch):
+    cfg = get_config(arch)
+    assert cfg.name == arch
+    assert cfg.num_heads % cfg.num_kv_heads == 0
+    assert cfg.padded_vocab % 256 == 0
+    assert cfg.padded_vocab >= cfg.vocab_size
+    assert cfg.source  # every assigned config cites its pool entry
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_config_reduced(arch):
+    cfg = get_smoke_config(arch)
+    assert cfg.num_layers <= 6
+    assert cfg.d_model <= 512
+    if cfg.moe:
+        assert cfg.moe.num_experts <= 4
+
+
+def test_pad_vocab():
+    assert pad_vocab(49155) == 49408
+    assert pad_vocab(51865) == 51968
+    assert pad_vocab(256) == 256
+
+
+def test_assigned_pool_values():
+    """Spot-check the exact assigned dims from the pool table."""
+    c = get_config("mistral-nemo-12b")
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads,
+            c.d_ff, c.vocab_size) == (40, 5120, 32, 8, 14336, 131072)
+    c = get_config("qwen3-moe-30b-a3b")
+    assert (c.moe.num_experts, c.moe.top_k) == (128, 8)
+    c = get_config("internvl2-76b")
+    assert (c.num_layers, c.d_model) == (80, 8192)
+    c = get_config("zamba2-1.2b")
+    assert c.ssm.state_dim == 64
+    c = get_config("xlstm-350m")
+    assert c.d_ff == 0 and c.arch_type == "ssm"
+    c = get_config("gemma3-12b")
+    assert c.global_every == 6 and c.sliding_window > 0

@@ -1,0 +1,36 @@
+"""Launcher entry points: train (single-device smoke + loss decreases,
+checkpoint round-trip) and serve (each mode produces the right number of
+tokens)."""
+import os
+
+import numpy as np
+import pytest
+
+from repro.launch import serve as serve_launcher
+from repro.launch import train as train_launcher
+from repro.training import checkpoint
+
+
+def test_train_launcher_smoke(tmp_path, capsys):
+    ck = str(tmp_path / "ck.msgpack")
+    train_launcher.main(["--arch", "llama3.2-1b", "--smoke",
+                         "--steps", "8", "--batch", "4", "--seq", "32",
+                         "--log-every", "4", "--ckpt", ck])
+    out = capsys.readouterr().out
+    assert "loss" in out
+    tree = checkpoint.load(ck)
+    assert "params" in tree and "opt" in tree
+
+
+@pytest.mark.parametrize("mode,extra", [
+    ("resident", []),
+    ("offload", []),
+    ("offload", ["--compress", "int4"]),
+    ("continuous", ["--slots", "2"]),
+])
+def test_serve_launcher_modes(mode, extra, capsys):
+    serve_launcher.main(["--arch", "llama3.2-1b", "--mode", mode,
+                         "--requests", "2", "--prompt", "12",
+                         "--gen", "3"] + extra)
+    out = capsys.readouterr().out
+    assert "2 requests, 6 tokens" in out

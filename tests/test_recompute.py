@@ -1,0 +1,104 @@
+"""Exactness of KV partial recomputation (the paper's central invariant:
+no approximation) — property-tested over split points."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.configs import get_smoke_config
+from repro.core import recompute as RC
+from repro.kernels import ref as kref
+from repro.models import layers as L
+from repro.models.transformer import Model
+
+
+def _prefill_state(model, params, toks):
+    """Replay prefill capturing per-layer normed activations + KV."""
+    cfg = model.cfg
+    b, s = toks.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    x = L.embed(toks, params["embed"], cfg, jnp.arange(s))
+    hs, ks, vs = [], [], []
+    for li in range(cfg.num_layers):
+        lp = jax.tree.map(lambda a: a[li], params["layers"])
+        h = L.apply_norm(x, lp["ln1"], cfg.rms_eps)
+        q, k, v = L.qkv_proj(h, lp["attn"], cfg, positions)
+        out = L.gqa_attend(q, k, v, L.causal_mask(s, s)).reshape(b, s, -1)
+        x = x + jnp.einsum("bsD,Dh->bsh", out, lp["attn"]["wo"])
+        h2 = L.apply_norm(x, lp["ln2"], cfg.rms_eps)
+        x = x + L.mlp_block(h2, lp["mlp"], cfg.act)
+        hs.append(h)
+        ks.append(k)
+        vs.append(v)
+    return jnp.stack(hs), jnp.stack(ks), jnp.stack(vs)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_smoke_config("opt-6.7b")
+    model = Model(cfg)
+    key = jax.random.PRNGKey(7)
+    params = model.init_params(key)
+    b, s = 2, 24
+    toks = jax.random.randint(key, (b, s + 1), 0, cfg.vocab_size)
+    lg_ref, cache = model.prefill(params, toks[:, :s], max_len=s + 4)
+    lg1, _ = model.decode_step(params, cache, toks[:, s:s + 1])
+    hs, ks, vs = _prefill_state(model, params, toks[:, :s])
+    return cfg, model, params, toks, s, lg1, hs, ks, vs
+
+
+@pytest.mark.parametrize("split_l", [0, 1, 8, 12, 23, 24])
+def test_kvpr_decode_exact_at_any_split(setup, split_l):
+    cfg, model, params, toks, s, lg_ref, hs, ks, vs = setup
+    logits, k_new, v_new, h_new = RC.kvpr_decode_step(
+        params, cfg, toks[:, s:s + 1], jnp.asarray(s, jnp.int32),
+        hs[:, :, :split_l], ks[:, :, split_l:], vs[:, :, split_l:],
+        split_l)
+    np.testing.assert_allclose(np.asarray(logits, np.float32),
+                               np.asarray(lg_ref, np.float32),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_kvpr_decode_with_padded_stream(setup):
+    """Streamed KV may be padded past the valid length (jit bucketing)."""
+    cfg, model, params, toks, s, lg_ref, hs, ks, vs = setup
+    split_l = 8
+    pad = 5
+    k_pad = jnp.pad(ks[:, :, split_l:], ((0, 0), (0, 0), (0, pad),
+                                         (0, 0), (0, 0)))
+    v_pad = jnp.pad(vs[:, :, split_l:], ((0, 0), (0, 0), (0, pad),
+                                         (0, 0), (0, 0)))
+    logits, *_ = RC.kvpr_decode_step(
+        params, cfg, toks[:, s:s + 1], jnp.asarray(s, jnp.int32),
+        hs[:, :, :split_l], k_pad, v_pad, split_l)
+    np.testing.assert_allclose(np.asarray(logits, np.float32),
+                               np.asarray(lg_ref, np.float32),
+                               rtol=2e-3, atol=2e-3)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 16), st.integers(1, 3), st.booleans())
+def test_merged_attention_matches_concat_oracle(split, nseg_extra, kernel):
+    """merged_decode_attention over arbitrary segmentations == single
+    softmax over the concatenation."""
+    key = jax.random.PRNGKey(split * 7 + nseg_extra)
+    b, KV, g, dh, S = 1, 2, 2, 16, 16 + split
+    H = KV * g
+    q = jax.random.normal(key, (b, 1, H, dh))
+    segs = []
+    sizes = [split, S - split] + [4] * nseg_extra
+    for i, sz in enumerate(sizes):
+        if sz == 0:
+            continue
+        kk = jax.random.normal(jax.random.fold_in(key, 2 * i), (b, sz, KV, dh))
+        vv = jax.random.normal(jax.random.fold_in(key, 2 * i + 1),
+                               (b, sz, KV, dh))
+        segs.append((kk, vv, None))
+    got = RC.merged_decode_attention(q, segs, jnp.asarray(S),
+                                     use_kernel=kernel)
+    want = kref.merged_attention_ref(q, segs)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=1e-4, atol=1e-4)

@@ -1,0 +1,86 @@
+"""Unit tests for launch/shardings: strategy knob, cache seq-axis
+sharding, and divisibility fallbacks (run on a tiny virtual mesh via
+subprocess-free spec construction — specs don't touch devices)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config, get_smoke_config
+from repro.launch import shardings as SH
+
+
+class FakeMesh:
+    """Duck-typed mesh: param_spec/cache_shardings only read axis_names
+    and shape — but NamedSharding needs a real mesh, so we test the spec
+    helpers directly."""
+    def __init__(self, shape):
+        self.shape = dict(shape)
+        self.axis_names = tuple(shape)
+
+
+MESH = FakeMesh({"data": 16, "model": 16})
+
+
+def teardown_function(_fn):
+    SH.set_strategy()    # restore defaults after every test
+
+
+def test_default_strategy_attn_specs():
+    cfg = get_config("mistral-nemo-12b")
+    # wq: (L, h, H, dh) -> FSDP on h over data, heads over model
+    spec = SH.param_spec("layers/attn/wq", (40, 5120, 32, 128), cfg, MESH)
+    assert spec == P(None, ("data",), "model", None)
+    # kv heads (8) don't divide model=16 -> replicated on that dim
+    spec = SH.param_spec("layers/attn/wk", (40, 5120, 8, 128), cfg, MESH)
+    assert spec == P(None, ("data",), None, None)
+
+
+def test_no_tp_strategy_removes_model_axis():
+    cfg = get_config("mistral-nemo-12b")
+    SH.set_strategy(tp=None, fsdp=("data", "model"), dp=("data", "model"))
+    spec = SH.param_spec("layers/attn/wq", (40, 5120, 32, 128), cfg, MESH)
+    assert spec == P(None, ("data", "model"), None, None)
+    spec = SH.param_spec("layers/mlp/w1", (40, 5120, 14336), cfg, MESH)
+    assert spec == P(None, ("data", "model"), None)
+    assert SH._dp_axes(MESH) == ("data", "model")
+
+
+def test_strategy_restored():
+    assert SH.get_strategy()["tp"] == "model"
+    assert SH._dp_axes(MESH) == ("data",)
+
+
+@pytest.mark.parametrize("batch,seq_axis,expect_s,expect_b", [
+    (128, "model", "model", ("data",)),   # decode_32k style: both shard
+    (128, "data", None, ("data",)),       # conflict -> seq stays unsharded
+    (1, "data", "data", None),            # long_500k style: seq over data
+])
+def test_cache_seq_axis(batch, seq_axis, expect_s, expect_b):
+    cfg = get_smoke_config("mistral-nemo-12b")
+    # build shapes only; cache leaf (L, b, S, KV, dh)
+    leaf = jax.ShapeDtypeStruct((2, batch, 4096, 8, 64), jnp.bfloat16)
+
+    # exercise the spec logic by reproducing cache_shardings' branch
+    # through a real mesh of host devices is overkill here; call the
+    # internal helpers the same way it does.
+    dp = SH._dp_axes(MESH)
+    dp_n = SH._dp_size(MESH)
+    bspec = dp if batch % dp_n == 0 and batch > 1 else None
+    sspec = None
+    if SH._fits(leaf.shape[2], MESH, seq_axis):
+        conflict = bspec is not None and seq_axis in (
+            bspec if isinstance(bspec, tuple) else (bspec,))
+        if not conflict:
+            sspec = seq_axis
+    assert sspec == expect_s
+    assert bspec == (expect_b if expect_b is None else tuple(expect_b))
+
+
+def test_granite_experts_fall_back_to_tensor_parallel():
+    """granite has 40 experts; 40 % 16 != 0 -> expert dim replicated,
+    d_ff sharded instead (config sets sharding='tensor')."""
+    cfg = get_config("granite-moe-3b-a800m")
+    spec = SH.param_spec("layers/moe/w1", (32, 40, 1536, 512), cfg, MESH)
+    assert spec[-3] is None or cfg.moe.sharding != "expert"

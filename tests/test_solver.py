@@ -1,0 +1,66 @@
+"""Property tests for the KVPR scheduler (paper Eq. 10-11)."""
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core import (A100_PCIE4, TPU_V5E, HardwareProfile, Workload,
+                        brute_force_split, flexgen_step, kvpr_step,
+                        layer_times, optimal_split)
+
+workloads = st.builds(
+    Workload,
+    batch=st.sampled_from([1, 2, 8, 32, 64, 128]),
+    seq_len=st.integers(2, 4096),
+    d_model=st.sampled_from([384, 1024, 2048, 4096, 8192]),
+    kv_dim=st.sampled_from([128, 512, 1024, 4096]),
+    dtype_bytes=st.sampled_from([1, 2, 4]),
+)
+profiles = st.sampled_from([A100_PCIE4, TPU_V5E])
+schedules = st.sampled_from(["row", "column"])
+
+
+@settings(max_examples=200, deadline=None)
+@given(workloads, profiles, schedules)
+def test_solver_matches_brute_force(wl, hw, sched):
+    a = optimal_split(wl, hw, sched)
+    b = brute_force_split(wl, hw, sched)
+    assert a.t_total <= b.t_total * (1 + 1e-9)
+
+
+@settings(max_examples=200, deadline=None)
+@given(workloads, profiles, schedules)
+def test_kvpr_never_worse_than_full_transfer(wl, hw, sched):
+    """l=0 IS full transfer, so the optimum can never exceed it."""
+    full = layer_times(wl, hw, 0, include_act_transfer=(sched == "column"))
+    opt = optimal_split(wl, hw, sched)
+    assert opt.t_total <= full["total"] * (1 + 1e-9)
+
+
+@settings(max_examples=100, deadline=None)
+@given(workloads, profiles)
+def test_split_within_bounds_and_aligned(wl, hw):
+    d = optimal_split(wl, hw, "row", align=128)
+    assert 0 <= d.l <= wl.seq_len
+    assert d.l % 128 == 0 or d.l == wl.seq_len
+
+
+@settings(max_examples=100, deadline=None)
+@given(workloads)
+def test_faster_gpu_recomputes_more(wl):
+    """More compute per byte of link -> the optimal split moves up."""
+    slow = HardwareProfile("slow", 32e9, 1e12, 1e12)
+    fast = HardwareProfile("fast", 32e9, 1e15, 1e12)
+    l_slow = optimal_split(wl, slow, "row").l
+    l_fast = optimal_split(wl, fast, "row").l
+    assert l_fast >= l_slow
+
+
+@settings(max_examples=100, deadline=None)
+@given(workloads, profiles)
+def test_pipeline_step_consistency(wl, hw):
+    fg = flexgen_step(wl, hw)
+    kv = kvpr_step(wl, hw, schedule="row")
+    # KVPR (weights resident) never slower in steady state
+    assert kv.t_layer <= fg.t_layer * (1 + 1e-9)
+    assert 0.0 <= kv.utilization <= 1.0
+    # byte accounting: KVPR moves fewer or equal bytes over the link
+    assert kv.transfer_total <= fg.transfer_total + 1e-12

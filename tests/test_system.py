@@ -1,0 +1,60 @@
+"""End-to-end system tests: the paper's pipeline from profile -> schedule
+-> serve, plus benchmark harness sanity."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import (A100_PCIE4, Workload, flexgen_step, kvpr_step,
+                        optimal_split)
+from repro.models.transformer import Model
+from repro.serving.engine import Request, ServingEngine
+
+
+def test_paper_regime_reproduced():
+    """Table 1's motivating gap: PCIe transfer >> attention compute."""
+    wl = Workload(batch=32, seq_len=1024, d_model=4096, kv_dim=4096,
+                  dtype_bytes=2)
+    t_pcie = wl.total_kv_bytes / A100_PCIE4.v_com
+    t_comp = wl.total_kv_bytes / A100_PCIE4.hbm_bandwidth
+    assert t_pcie / t_comp > 10  # an order of magnitude
+
+
+def test_kvpr_end_to_end_latency_win():
+    """In the paper's regime the whole pipeline shows a latency win in
+    the reported band (>10% per-layer at batch 64 / seq 1k)."""
+    wl = Workload(batch=64, seq_len=1024, d_model=4096, kv_dim=4096,
+                  dtype_bytes=2)
+    fg = flexgen_step(wl, A100_PCIE4)
+    kv = kvpr_step(wl, A100_PCIE4, schedule="row")
+    assert kv.t_layer < fg.t_layer * 0.9
+    assert kv.split.l > 0
+
+
+def test_full_serving_path_exactness():
+    """Serving with host-offloaded KV + partial recompute returns exactly
+    the resident-cache generations (the paper's 'exact attention' claim)."""
+    cfg = get_smoke_config("opt-6.7b")
+    model = Model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    reqs = [Request(uid=i, prompt=rng.integers(
+        1, cfg.vocab_size, 16).astype(np.int32), max_new_tokens=6)
+        for i in range(2)]
+    res = ServingEngine(model, params, mode="resident").serve(reqs)
+    off = ServingEngine(model, params, mode="offload").serve(reqs)
+    for r, o in zip(res, off):
+        np.testing.assert_array_equal(r.tokens, o.tokens)
+
+
+def test_benchmarks_importable_and_run():
+    from benchmarks import (fig7_latency, fig12_split_points,
+                            table1_pcie_vs_compute, table2_hiding_ablation)
+    rows = table1_pcie_vs_compute.run(print_csv=False)
+    assert len(rows) == 3
+    rows = fig12_split_points.run(print_csv=False)
+    assert all(0 <= r[1] for r in rows)
+    rows = table2_hiding_ablation.run(print_csv=False)
+    # hiding ablation invariant: fine-grained never worse than flexgen
+    for (_, fg, coarse, fine) in rows:
+        assert fine <= fg * 1.0001
