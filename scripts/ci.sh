@@ -1,0 +1,30 @@
+#!/usr/bin/env bash
+# Tier-1 CI: collection sanity, the full test suite, and a smoke of the
+# quickstart example.  Run from the repo root:
+#
+#     bash scripts/ci.sh [--no-install]
+#
+# `hypothesis` is an optional test dependency (the property suites skip
+# without it — see docs/automation.md); CI installs it so they run.
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+if [[ "${1:-}" != "--no-install" ]]; then
+    python -m pip install --quiet "jax[cpu]" pytest hypothesis
+fi
+
+# 1. Collection must be clean: a bad import in any test file (e.g. an
+#    unguarded optional dependency) fails here in seconds, not after the
+#    whole suite has run.
+python -m pytest -q --collect-only >/dev/null
+
+# 2. Tier-1 suite.
+python -m pytest -x -q
+
+# 3. Smoke the quickstart end-to-end (profiler -> scheduler -> serving);
+#    the timeout guards CI against pathological slowdowns.
+timeout "${QUICKSTART_TIMEOUT:-300}" python examples/quickstart.py
+
+echo "ci.sh: all checks passed"

@@ -4,6 +4,7 @@ from repro.core.cost_model import (
     HardwareProfile, Workload, layer_times,
 )
 from repro.core.solver import SplitDecision, brute_force_split, optimal_split
+from repro.core.scheduler import ExecutionPlan, PlanKey, Scheduler
 from repro.core.pipeline import (
     StepTimeline, decode_latency, flexgen_step, kvpr_step,
 )
@@ -12,5 +13,6 @@ __all__ = [
     "A100_PCIE4", "PROFILES", "RTX5000_PCIE4X8", "TPU_V5E",
     "HardwareProfile", "Workload", "layer_times",
     "SplitDecision", "brute_force_split", "optimal_split",
+    "ExecutionPlan", "PlanKey", "Scheduler",
     "StepTimeline", "decode_latency", "flexgen_step", "kvpr_step",
 ]

@@ -118,20 +118,37 @@ def decode_latency(wl_fn, hw: HardwareProfile, num_layers: int,
                    gen_len: int, method: str = "kvpr",
                    schedule: str = "row", weights_resident: bool = True,
                    d_ff_flops: float = 0.0, align: int = 1,
-                   overhead_s: float = 0.0) -> float:
+                   overhead_s: float = 0.0, scheduler=None) -> float:
     """Total decode latency over `gen_len` steps. `wl_fn(step)` returns the
     Workload at that generation step (seq grows during generation).
     `overhead_s` is a fixed per-layer system overhead (framework + launch)
     calibrated from a measured baseline; applied identically to every
-    method."""
+    method.
+
+    Pass a `core.scheduler.Scheduler` to draw splits from a cached
+    ExecutionPlan (amortized re-solve at bucket granularity) instead of
+    re-solving every simulated step — the same planner the executable
+    runtime uses."""
+    plan = None
+    if scheduler is not None and method != "flexgen":
+        if scheduler.hw != hw:
+            raise ValueError(
+                f"scheduler profiles {scheduler.hw.name!r} but timings "
+                f"use {hw.name!r}; splits would be optimal for the "
+                "wrong machine")
+        plan = scheduler.plan_for_workload(
+            wl_fn(0), mode="kvpr", schedule=schedule, align=align)
     total = 0.0
     for g in range(gen_len):
         wl = wl_fn(g)
         if method == "flexgen":
             st = flexgen_step(wl, hw, weights_resident, d_ff_flops)
         else:
+            split = (plan.split_for(wl.seq_len, batch=wl.batch)
+                     if plan is not None else None)
             st = kvpr_step(wl, hw, schedule, weights_resident,
                            fine_grained=(method == "kvpr-fine"),
-                           d_ff_flops=d_ff_flops, align=align)
+                           d_ff_flops=d_ff_flops, align=align,
+                           split=split)
         total += (st.t_layer + overhead_s) * num_layers
     return total

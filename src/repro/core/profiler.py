@@ -45,8 +45,24 @@ def measure_gemm_flops(m: int = 2048, k: int = 2048, n: int = 2048,
     return 2 * m * k * n / dt
 
 
-def profile_system(name: str = "measured") -> HardwareProfile:
+_PROFILE_CACHE: dict = {}
+
+
+def profile_system(name: str = "measured",
+                   force: bool = False) -> HardwareProfile:
+    """Measure (once) and return the system profile.
+
+    The measurement is memoized per `name`: the profiler runs once per
+    process and every scheduler/engine constructed afterwards reuses the
+    same profile — which also makes their plan-cache keys identical.
+    Pass force=True to re-measure (callers should then
+    `Scheduler.invalidate(hw=...)` so stale plans are dropped).
+    """
+    if not force and name in _PROFILE_CACHE:
+        return _PROFILE_CACHE[name]
     link = measure_link_bandwidth()
     flops = measure_gemm_flops()
-    return HardwareProfile(name=name, link_bandwidth=link, gpu_flops=flops,
+    prof = HardwareProfile(name=name, link_bandwidth=link, gpu_flops=flops,
                            hbm_bandwidth=link * 4, gemm_efficiency=1.0)
+    _PROFILE_CACHE[name] = prof
+    return prof

@@ -56,6 +56,10 @@ def merged_decode_attention(q: Array, segments, pos: Array,
     [(k, v, valid_len_or_None), ...] without materializing the merged
     cache. q: (b, 1, H, dh). Softmax is computed jointly via the
     standard two-pass (max, sum) combine across segments.
+
+    `valid` may be a scalar (uniform batch) or a (b,) vector of per-slot
+    valid lengths — the latter is what ragged continuous batching needs:
+    each slot attends over exactly its own prefix of the padded segment.
     """
     if use_kernel:
         from repro.kernels import ops as kops
@@ -74,8 +78,13 @@ def merged_decode_attention(q: Array, segments, pos: Array,
         scores = jnp.einsum("bkgd,bskd->bkgs", qg, k).astype(jnp.float32)
         scores = scores * scale
         if valid is not None:
-            mask = jnp.arange(s) < valid
-            scores = jnp.where(mask[None, None, None], scores, L.NEG_INF)
+            valid = jnp.asarray(valid)
+            if valid.ndim == 0:
+                mask = (jnp.arange(s) < valid)[None, None, None, :]
+            else:                       # (b,) per-slot lengths
+                mask = (jnp.arange(s)[None, :]
+                        < valid[:, None])[:, None, None, :]
+            scores = jnp.where(mask, scores, L.NEG_INF)
         maxes.append(jnp.max(scores, axis=-1, keepdims=True))
         exps.append(scores)
         vals.append(v)

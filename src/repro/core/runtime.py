@@ -1,39 +1,60 @@
-"""KVPR runtime module (paper §3.3): an executable host-offload decode
-engine with asynchronous streams and double buffering.
+"""KVPR runtime module (paper §3.3): the *execution* half of the
+profiler → scheduler → runtime loop, as three composable stages:
+
+  - ``HostKVStore``     host-memory KV + activation storage, slot-aware:
+                        every batch slot carries its own sequence length,
+                        so iteration-level batching can admit a request
+                        mid-decode by spilling its prefill into a free
+                        slot (``fill_slot``) while other slots keep
+                        decoding at their own (ragged) positions.
+  - ``TransferEngine``  the copy-thread pool emulating the CUDA-stream /
+                        DMA engine: per-layer KV/activation fetches
+                        (uniform fast path or ragged padded gather) and
+                        the fine-grained W_K/W_V-first weight stream.
+  - ``ComputeStep``     the jitted per-layer device compute (recompute +
+                        merged segment attention + FFN) and the embed /
+                        unembed ends of a decode step.
+
+``OffloadDecodeRuntime`` composes the stages and *executes* an
+``ExecutionPlan`` from ``core/scheduler.py`` — it contains no solver
+calls of its own: per-step/per-slot ``SplitDecision``s come from the
+plan (paper §3.2), which amortizes and caches the solves.  ``step()``
+advances every active slot by one token and is the single decode hot
+path shared by static batching (``decode()`` loop), the serving engine,
+and the continuous-batching engine.
 
 The KV cache (and attention-input activations) live in HOST memory
-(numpy, emulating CPU DRAM / `pinned_host`). Each decode step streams, per
-layer, either
+(numpy, emulating CPU DRAM / `pinned_host`). Each decode step streams,
+per layer, either
   - the full KV cache                       (baseline / FlexGen mode), or
-  - activations[0:l] + KV[l:s']             (KVPR mode, solver-chosen l)
-into device arrays while the previous layer computes — a copy-thread pool
-emulates the CUDA-stream / DMA engine. On this CPU container "the link" is
-memcpy (jax.device_put), whose bandwidth the profiler measures; on TPU the
-identical structure maps to host-DMA into HBM with XLA async copies.
+  - activations[0:l] + KV[l:s']             (KVPR mode, plan-chosen l)
+into device arrays while the previous layer computes. On this CPU
+container "the link" is memcpy (jax.device_put), whose bandwidth the
+profiler measures; on TPU the identical structure maps to host-DMA into
+HBM with XLA async copies.
 
 Six overlapped flows of paper Alg. 1 and their mapping here:
   load_weight            -> params resident (latency mode) or per-layer put
   load_activation_recompute / load_cache / load_activation
-                         -> prefetch_layer() futures (double buffer)
-  compute                -> jitted per-layer step
+                         -> TransferEngine.fetch_layer futures
+  compute                -> ComputeStep.layer (jitted)
   store_activation / store_cache -> host_store.append() on the pool
 """
 from __future__ import annotations
 
 import dataclasses
-import queue
 import threading
 import time
-from concurrent.futures import ThreadPoolExecutor, Future
-from typing import Dict, List, Optional, Tuple
+from concurrent.futures import ThreadPoolExecutor
+from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.cost_model import HardwareProfile, Workload
-from repro.core.solver import SplitDecision, optimal_split
+from repro.core.cost_model import HardwareProfile
+from repro.core.scheduler import ExecutionPlan, Scheduler
 from repro.core import kvquant as KQ
 from repro.core import recompute as RC
 from repro.models import layers as L
@@ -44,6 +65,13 @@ Array = jax.Array
 class HostKVStore:
     """Host-memory (numpy) per-layer KV + activation storage, preallocated
     ("pinned") to max_len so stores are slice writes, not reallocations.
+
+    Slot-aware: ``seq_lens[i]`` is slot i's own cached length, so slots
+    can hold sequences at different decode positions (continuous
+    batching).  ``fill_slot`` spills a b=1 prefill into one slot;
+    ``clear_slot`` frees it for the next admission.  The legacy ``len``
+    property views the store as a uniform batch (max length; assigning
+    sets every slot) for the static-batching path.
 
     compress="int4" keeps the KV cache group-wise 4-bit quantized in host
     memory (paper §4.4 / beyond-paper executable path): appends quantize
@@ -58,6 +86,8 @@ class HostKVStore:
                          cfg.d_model)
         self.compress = compress
         self.group = group
+        self.batch = batch
+        self.max_len = max_len
         if compress == "int4":
             ng = dh // group
             self.kq = KQ.QuantizedKV(
@@ -72,8 +102,19 @@ class HostKVStore:
             self.k = np.zeros((Lh, batch, max_len, KV, dh), dtype)
             self.v = np.zeros((Lh, batch, max_len, KV, dh), dtype)
         self.act = np.zeros((Lh, batch, max_len, h), dtype)
-        self.len = 0
+        self.seq_lens = np.zeros((batch,), np.int64)
         self.lock = threading.Lock()
+
+    # `len` views the store as a uniform batch (static-batching path).
+    @property
+    def len(self) -> int:
+        return int(self.seq_lens.max())
+
+    @len.setter
+    def len(self, value: int) -> None:
+        self.seq_lens[:] = value
+
+    # ------------------------------------------------------------- writes
 
     def _put_kv(self, layer, sl, k: np.ndarray, v: np.ndarray):
         if self.compress == "int4":
@@ -86,12 +127,34 @@ class HostKVStore:
             self.k[layer, :, sl] = k
             self.v[layer, :, sl] = v
 
-    def append(self, layer: int, k: np.ndarray, v: np.ndarray,
-               act: np.ndarray, pos: int):
-        self._put_kv(layer, slice(pos, pos + k.shape[1]), k, v)
-        self.act[layer, :, pos:pos + act.shape[1]] = act
+    def _put_kv_slot(self, layer, slot, sl, k: np.ndarray, v: np.ndarray):
+        if self.compress == "int4":
+            for buf, x in ((self.kq, k), (self.vq, v)):
+                q = KQ.quantize_np(x, self.group)
+                buf.packed[layer, slot, sl] = q.packed
+                buf.scale[layer, slot, sl] = q.scale
+                buf.zero[layer, slot, sl] = q.zero
+        else:
+            self.k[layer, slot, sl] = k
+            self.v[layer, slot, sl] = v
 
-    def bulk_fill(self, ks, vs, acts, s: int):
+    def append(self, layer: int, k: np.ndarray, v: np.ndarray,
+               act: np.ndarray, pos) -> None:
+        """Store one new token per slot.  ``pos`` is an int (uniform
+        batch: every slot writes the same position) or a (b,) vector of
+        per-slot positions; a negative entry skips that slot."""
+        if np.ndim(pos) == 0:
+            self._put_kv(layer, slice(pos, pos + k.shape[1]), k, v)
+            self.act[layer, :, pos:pos + act.shape[1]] = act
+            return
+        for i, p in enumerate(np.asarray(pos)):
+            if p < 0:
+                continue
+            self._put_kv_slot(layer, i, slice(p, p + k.shape[1]),
+                              k[i], v[i])
+            self.act[layer, i, p:p + act.shape[1]] = act[i]
+
+    def bulk_fill(self, ks, vs, acts, s: int) -> None:
         """Fill from prefill outputs: (L, b, s, KV, dh) / (L, b, s, h)."""
         if self.compress == "int4":
             for li in range(ks.shape[0]):
@@ -100,69 +163,125 @@ class HostKVStore:
             self.k[:, :, :s] = ks
             self.v[:, :, :s] = vs
         self.act[:, :, :s] = acts
-        self.len = s
+        self.seq_lens[:] = s
+
+    def fill_slot(self, slot: int, ks, vs, acts, s: int) -> None:
+        """Spill a b=1 prefill — (L, 1, s, KV, dh) / (L, 1, s, h) — into
+        one slot (iteration-level admission)."""
+        for li in range(ks.shape[0]):
+            self._put_kv_slot(li, slot, slice(0, s), ks[li, 0], vs[li, 0])
+        self.act[:, slot, :s] = acts[:, 0]
+        self.seq_lens[slot] = s
+
+    def clear_slot(self, slot: int) -> None:
+        """Free a slot for the next admission (data may stay stale: every
+        fetch copies/masks only the valid prefix)."""
+        self.seq_lens[slot] = 0
 
 
-@dataclasses.dataclass
-class StepStats:
-    t_total: float
-    t_wait_transfer: float      # GPU idle waiting on host data
-    t_compute: float
-    bytes_transferred: int
-    split_l: int
-
-
-class OffloadDecodeRuntime:
-    """Decode loop for dense-family models with host-offloaded KV cache.
-
-    mode: "flexgen" (full KV streamed) | "kvpr" (partial recompute).
-    The per-layer compute is a single jitted function; transfers for layer
-    i+1 are issued while layer i computes (double buffering).
-    """
-
-    def __init__(self, cfg: ModelConfig, params, hw: HardwareProfile,
-                 mode: str = "kvpr", schedule: str = "row",
-                 align: int = 1, n_copy_threads: int = 2,
-                 compress: Optional[str] = None, group: int = 32,
-                 offload_weights: bool = False,
-                 fine_grained: bool = True):
-        self.cfg = cfg
-        self.params = params
-        self.hw = hw
-        self.mode = mode
-        self.schedule = schedule
-        self.align = align
-        self.compress = compress
-        self.group = group
-        # Weight offloading (paper's throughput mode, §3.2/§3.3): layer
-        # weights live in host memory and stream per layer. fine_grained
-        # (Fig. 5b) issues the W_K/W_V copy FIRST so KV recomputation can
-        # begin before W_Q/W_O/FFN arrive; coarse (Fig. 5a) copies the
-        # whole layer in one piece.
-        self.offload_weights = offload_weights
-        self.fine_grained = fine_grained
-        if offload_weights:
-            n_layers = jax.tree.leaves(params["layers"])[0].shape[0]
-            self._host_layers = [
-                jax.tree.map(lambda a, i=i: np.asarray(a[i]),
-                             params["layers"])
-                for i in range(n_layers)]
-        self.pool = ThreadPoolExecutor(max_workers=n_copy_threads)
-        self._layer_fn = jax.jit(self._layer_step,
-                                 static_argnames=("split_l", "s_str"))
-        self._bytes = 0
-
-    # ------------------------------------------------------- weight loads
+class TransferEngine:
+    """The copy-thread pool emulating the DMA / CUDA-stream engine:
+    issues host→device copies for KV, activations, and (optionally)
+    streamed layer weights, and counts the bytes it moves."""
 
     _KV_KEYS = ("wk", "wv")
 
-    def _fetch_weights_kv(self, layer: int):
+    def __init__(self, n_copy_threads: int = 2, host_layers=None,
+                 fine_grained: bool = True):
+        self.pool = ThreadPoolExecutor(max_workers=n_copy_threads)
+        self._host_layers = host_layers
+        self.fine_grained = fine_grained
+
+    def submit(self, fn, *args):
+        return self.pool.submit(fn, *args)
+
+    # ---------------------------------------------------------- KV fetch
+
+    def fetch_layer(self, store: HostKVStore, layer: int,
+                    ls: np.ndarray, s_strs: np.ndarray,
+                    l_pad: int, s_pad: int):
+        """Copy host slices to device (the 'PCIe' transfer).
+
+        ls / s_strs are per-slot recompute lengths and streamed lengths.
+        Uniform batches take the fast whole-batch slice path; ragged
+        batches gather each slot's own [l_i, l_i + s_i) window into a
+        zero-padded (b, s_pad, ...) buffer before the device_put.
+        """
+        uniform = bool((ls == ls[0]).all() and (s_strs == s_strs[0]).all())
+        if uniform:
+            h_np, k_np, v_np = self._slice_uniform(store, layer,
+                                                   int(ls[0]), l_pad, s_pad)
+        else:
+            h_np, k_np, v_np = self._gather_ragged(store, layer, ls,
+                                                   s_strs, l_pad, s_pad)
+        h_res = jax.device_put(h_np)
+        if store.compress == "int4":
+            k_str = tuple(jax.device_put(a) for a in k_np)
+            v_str = tuple(jax.device_put(a) for a in v_np)
+            kv_bytes = sum(a.nbytes for a in k_str + v_str)
+        else:
+            k_str = jax.device_put(k_np)
+            v_str = jax.device_put(v_np)
+            kv_bytes = k_str.nbytes + v_str.nbytes
+        nbytes = (h_res.nbytes if l_pad else 0) + (kv_bytes if s_pad else 0)
+        return h_res, k_str, v_str, nbytes
+
+    def _slice_uniform(self, store, layer, l, l_pad, s_pad):
+        h_np = store.act[layer, :, :max(l_pad, 1)]
+        sl = slice(l, l + s_pad) if s_pad else slice(0, 1)
+        if store.compress == "int4":
+            k_np = tuple(np.ascontiguousarray(b[layer, :, sl])
+                         for b in store.kq)
+            v_np = tuple(np.ascontiguousarray(b[layer, :, sl])
+                         for b in store.vq)
+        else:
+            k_np = np.ascontiguousarray(store.k[layer, :, sl])
+            v_np = np.ascontiguousarray(store.v[layer, :, sl])
+        return h_np, k_np, v_np
+
+    def _gather_ragged(self, store, layer, ls, s_strs, l_pad, s_pad):
+        b = store.batch
+        h_np = np.zeros((b, max(l_pad, 1)) + store.act.shape[3:],
+                        store.act.dtype)
+        for i in range(b):
+            li = int(ls[i])
+            if li:
+                h_np[i, :li] = store.act[layer, i, :li]
+
+        def gather(bufs):
+            outs = []
+            for buf in bufs:
+                out = np.zeros((b, max(s_pad, 1)) + buf.shape[3:],
+                               buf.dtype)
+                for i in range(b):
+                    li, si = int(ls[i]), int(s_strs[i])
+                    if si:
+                        out[i, :si] = buf[layer, i, li:li + si]
+                outs.append(out)
+            return outs
+
+        if store.compress == "int4":
+            k_np = tuple(gather(store.kq))
+            v_np = tuple(gather(store.vq))
+        else:
+            (k_np,) = gather([store.k])
+            (v_np,) = gather([store.v])
+        return h_np, k_np, v_np
+
+    # ------------------------------------------------------ weight fetch
+    # Weight offloading (paper's throughput mode, §3.2/§3.3): layer
+    # weights live in host memory and stream per layer. fine_grained
+    # (Fig. 5b) issues the W_K/W_V copy FIRST so KV recomputation can
+    # begin before W_Q/W_O/FFN arrive; coarse (Fig. 5a) copies the
+    # whole layer in one piece.
+
+    def fetch_weights_kv(self, layer: int):
         """Stage 1 (fine-grained priority): W_K and W_V only."""
         hl = self._host_layers[layer]
         out = {k: jax.device_put(hl["attn"][k]) for k in self._KV_KEYS}
         return out, sum(a.nbytes for a in out.values())
 
-    def _fetch_weights_rest(self, layer: int):
+    def fetch_weights_rest(self, layer: int):
         """Stage 2: everything except W_K/W_V."""
         hl = self._host_layers[layer]
         rest = {"attn": {k: v for k, v in hl["attn"].items()
@@ -171,18 +290,60 @@ class OffloadDecodeRuntime:
         out = jax.tree.map(jax.device_put, rest)
         return out, sum(a.nbytes for a in jax.tree.leaves(out))
 
-    def _assemble_layer(self, wkv, rest):
+    @staticmethod
+    def assemble_layer(wkv, rest):
         lp = dict(rest)
         lp["attn"] = dict(rest["attn"], **wkv)
         return lp
 
-    # ---------------------------------------------------------- layer step
+    def submit_weights(self, layer: int):
+        """fine-grained: W_K/W_V first (Fig. 5b); coarse: one combined
+        copy (Fig. 5a)."""
+        if self.fine_grained:
+            return (self.pool.submit(self.fetch_weights_kv, layer),
+                    self.pool.submit(self.fetch_weights_rest, layer))
+        both = self.pool.submit(
+            lambda l: (self.fetch_weights_kv(l),
+                       self.fetch_weights_rest(l)), layer)
+        return both, None
 
-    def _layer_step(self, x, lp, h_res, k_str, v_str, pos, valid_streamed,
-                    split_l: int, s_str: int):
+    def weights_result(self, w_fut):
+        if self.fine_grained:
+            (wkv, nb_kv) = w_fut[0].result()
+            (rest, nb_r) = w_fut[1].result()
+        else:
+            (wkv, nb_kv), (rest, nb_r) = w_fut[0].result()
+        return self.assemble_layer(wkv, rest), nb_kv + nb_r
+
+
+class ComputeStep:
+    """Jitted device compute for one offload decode step: per-layer
+    recompute + merged segment attention + FFN, plus the embed/unembed
+    ends.  Per-slot positions and valid lengths make the same compiled
+    function serve uniform static batches and ragged continuous slots."""
+
+    def __init__(self, cfg: ModelConfig, compress: Optional[str] = None,
+                 group: int = 32):
+        self.cfg = cfg
+        self.compress = compress
+        self.group = group
+        self.layer = jax.jit(self._layer_step,
+                             static_argnames=("l_pad", "s_pad"))
+
+    def embed(self, params, token: Array, positions: Array) -> Array:
+        return L.embed(token, params["embed"], self.cfg, positions)
+
+    def finalize(self, params, x: Array) -> Array:
+        x = L.apply_norm(x, params["final_norm"], self.cfg.rms_eps)
+        return L.unembed(x, params["embed"], self.cfg)
+
+    def _layer_step(self, x, lp, h_res, k_str, v_str, positions,
+                    l_valid, s_valid, l_pad: int, s_pad: int):
+        """positions: (b, 1) per-slot decode positions; l_valid: None
+        (uniform, h_res exact) or (b,) per-slot recompute lengths;
+        s_valid: scalar or (b,) streamed valid lengths."""
         cfg = self.cfg
         b = x.shape[0]
-        positions = jnp.broadcast_to(pos[None, None], (b, 1))
         h = L.apply_norm(x, lp["ln1"], cfg.rms_eps)
         q = jnp.einsum("bsh,hnd->bsnd", h, lp["attn"]["wq"])
         k_new = jnp.einsum("bsh,hnd->bsnd", h, lp["attn"]["wk"])
@@ -191,153 +352,237 @@ class OffloadDecodeRuntime:
             q = L.apply_rope(q, positions, cfg.rope_theta)
             k_new = L.apply_rope(k_new, positions, cfg.rope_theta)
         segments = []
-        if split_l > 0:
+        if l_pad > 0:
             k_rec, v_rec = RC.recompute_kv(h_res, lp["attn"]["wk"],
                                            lp["attn"]["wv"], cfg)
-            segments.append((k_rec, v_rec, None))
-        if s_str > 0:
+            segments.append((k_rec, v_rec, l_valid))
+        if s_pad > 0:
             if self.compress == "int4":
                 # streamed segment arrives packed; dequantize on device
                 # (on TPU this fuses into the attention kernel — see
                 # kernels/kv_dequant_attention.py)
                 k_str = KQ.dequantize_jnp(*k_str, group=self.group)
                 v_str = KQ.dequantize_jnp(*v_str, group=self.group)
-            segments.append((k_str, v_str, valid_streamed))
+            segments.append((k_str, v_str, s_valid))
         segments.append((k_new, v_new, None))
-        out = RC.merged_decode_attention(q, segments, pos)
+        out = RC.merged_decode_attention(q, segments, positions[:, 0])
         out = out.reshape(b, 1, cfg.num_heads * cfg.dh).astype(x.dtype)
         x = x + jnp.einsum("bsD,Dh->bsh", out, lp["attn"]["wo"])
         h2 = L.apply_norm(x, lp["ln2"], cfg.rms_eps)
         x = x + L.mlp_block(h2, lp["mlp"], cfg.act)
         return x, k_new, v_new, h
 
-    # ----------------------------------------------------------- transfers
 
-    def _fetch_layer(self, store: HostKVStore, layer: int, s_cur: int,
-                     split: SplitDecision, s_str: int):
-        """Copy host slices to device (the 'PCIe' transfer)."""
-        l = split.l
-        h_res = jax.device_put(store.act[layer, :, :max(l, 1)])
-        sl = slice(l, l + s_str) if s_str else slice(0, 1)
-        if self.compress == "int4":
-            k_str = tuple(
-                jax.device_put(np.ascontiguousarray(b[layer, :, sl]))
-                for b in store.kq)
-            v_str = tuple(
-                jax.device_put(np.ascontiguousarray(b[layer, :, sl]))
-                for b in store.vq)
-            kv_bytes = sum(a.nbytes for a in k_str + v_str)
-        else:
-            k_str = jax.device_put(
-                np.ascontiguousarray(store.k[layer, :, sl]))
-            v_str = jax.device_put(
-                np.ascontiguousarray(store.v[layer, :, sl]))
-            kv_bytes = k_str.nbytes + v_str.nbytes
-        nbytes = (h_res.nbytes if l else 0) + (kv_bytes if s_str else 0)
-        return h_res, k_str, v_str, nbytes
+@dataclasses.dataclass
+class StepStats:
+    t_total: float
+    t_wait_transfer: float      # GPU idle waiting on host data
+    t_compute: float
+    bytes_transferred: int
+    split_l: int                             # max over slots
+    split_ls: Optional[Tuple[int, ...]] = None   # per-slot (ragged steps)
 
-    def _split_for(self, s_cur: int) -> SplitDecision:
+
+class OffloadDecodeRuntime:
+    """Plan-executing decode runtime for dense-family models with a
+    host-offloaded KV cache.
+
+    mode: "flexgen" (full KV streamed) | "kvpr" (partial recompute).
+    Splits come from the scheduler's ExecutionPlan — never solved here.
+    ``step()`` advances every active slot one token (slots may sit at
+    ragged positions); ``decode()`` is the static-batch loop on top.
+    """
+
+    def __init__(self, cfg: ModelConfig, params,
+                 hw: Optional[HardwareProfile] = None, *,
+                 scheduler: Optional[Scheduler] = None,
+                 mode: str = "kvpr", schedule: str = "row",
+                 align: int = 1, n_copy_threads: int = 2,
+                 compress: Optional[str] = None, group: int = 32,
+                 offload_weights: bool = False,
+                 fine_grained: bool = True):
+        self.cfg = cfg
+        self.params = params
+        self.scheduler = scheduler or Scheduler(hw)
+        self.mode = mode
+        self.schedule = schedule
+        self.align = align
+        self.compress = compress
+        self.offload_weights = offload_weights
+        host_layers = None
+        if offload_weights:
+            n_layers = jax.tree.leaves(params["layers"])[0].shape[0]
+            host_layers = [
+                jax.tree.map(lambda a, i=i: np.asarray(a[i]),
+                             params["layers"])
+                for i in range(n_layers)]
+        self.xfer = TransferEngine(n_copy_threads, host_layers,
+                                   fine_grained)
+        self.compute = ComputeStep(cfg, compress=compress, group=group)
+
+    # ------------------------------------------------------------ planning
+
+    def plan_for(self, batch: int) -> ExecutionPlan:
+        """The runtime's schedule, from the scheduler's plan cache."""
+        return self.scheduler.plan_for(
+            self.cfg, batch, mode=self.mode, schedule=self.schedule,
+            align=self.align, compress=self.compress, dtype_bytes=4)
+
+    # ---------------------------------------------------------------- step
+
+    def step(self, store: HostKVStore, token,
+             plan: Optional[ExecutionPlan] = None, *,
+             active: Optional[np.ndarray] = None,
+             pad_to: Optional[int] = None) -> Tuple[Array, StepStats]:
+        """One decode step for every slot; returns (logits, stats).
+
+        Slots advance at their own positions (``store.seq_lens``); the
+        plan supplies one SplitDecision per distinct (bucketed) length.
+        ``active`` masks which slots store their new token and advance —
+        inactive slots (empty, awaiting admission) compute garbage that
+        is fully masked out of attention and never written back.
+        """
         cfg = self.cfg
-        wl = Workload(batch=self.batch, seq_len=s_cur, d_model=cfg.d_model,
-                      kv_dim=cfg.num_kv_heads * cfg.dh, dtype_bytes=4)
-        if self.mode == "flexgen":
-            return SplitDecision(0, 0, 0, 0, 0, self.schedule, s_cur)
-        return optimal_split(wl, self.hw, schedule=self.schedule,
-                             align=self.align)
+        params = self.params
+        b = int(np.shape(token)[0])
+        plan = plan if plan is not None else self.plan_for(b)
+        seq_lens = np.asarray(store.seq_lens, np.int64).copy()
+        if active is None:
+            active = np.ones(b, bool)
+        uniform = bool((seq_lens == seq_lens[0]).all())
+        if uniform:
+            split = plan.split_for(int(seq_lens[0]))
+            ls = np.full(b, split.l, np.int64)
+        else:
+            ls = np.array([d.l for d in plan.splits_for_slots(seq_lens)],
+                          np.int64)
+        s_strs = seq_lens - ls
+        l_pad = int(ls.max())
+        s_exact = int(s_strs.max())
+        if pad_to is None:
+            s_pad = s_exact
+        else:
+            s_pad = min(-(-s_exact // pad_to) * pad_to,
+                        store.max_len - int(ls.min()))
+
+        t0 = time.perf_counter()
+        positions = jnp.asarray(seq_lens[:, None], jnp.int32)
+        x = self.compute.embed(params, jnp.asarray(token), positions)
+        l_valid = None if uniform else jnp.asarray(ls, jnp.int32)
+        s_valid = (jnp.asarray(s_exact, jnp.int32) if uniform
+                   else jnp.asarray(s_strs, jnp.int32))
+
+        t_wait = 0.0
+        nbytes_total = 0
+        # prefetch layer 0 (weights first when offloaded — they gate
+        # recomputation; then the KV/activation stream)
+        w_fut = (self.xfer.submit_weights(0) if self.offload_weights
+                 else None)
+        fut = self.xfer.submit(self.xfer.fetch_layer, store, 0, ls,
+                               s_strs, l_pad, s_pad)
+        new_kv = []
+        for li in range(cfg.num_layers):
+            tw0 = time.perf_counter()
+            if self.offload_weights:
+                lp, nb_w = self.xfer.weights_result(w_fut)
+                nbytes_total += nb_w
+            else:
+                lp = jax.tree.map(lambda a: a[li], params["layers"])
+            h_res, k_str, v_str, nb = fut.result()
+            t_wait += time.perf_counter() - tw0
+            nbytes_total += nb
+            if li + 1 < cfg.num_layers:
+                if self.offload_weights:
+                    w_fut = self.xfer.submit_weights(li + 1)
+                fut = self.xfer.submit(self.xfer.fetch_layer, store,
+                                       li + 1, ls, s_strs, l_pad, s_pad)
+            x, k_new, v_new, h_new = self.compute.layer(
+                x, lp, h_res, k_str, v_str, positions, l_valid, s_valid,
+                l_pad=l_pad, s_pad=s_pad)
+            new_kv.append((li, k_new, v_new, h_new))
+
+        logits = self.compute.finalize(params, x)
+        logits.block_until_ready()
+
+        # store new KV + activations back to host (async), then the
+        # paper's Alg. 1 `synchronize()`: the next step's fetches must
+        # not race with this step's stores.
+        if uniform and active.all():
+            store_pos = int(seq_lens[0])
+        else:
+            store_pos = np.where(active, seq_lens, -1)
+        store_futs = [
+            self.xfer.submit(store.append, li, np.asarray(k_new),
+                             np.asarray(v_new), np.asarray(h_new),
+                             store_pos)
+            for (li, k_new, v_new, h_new) in new_kv]
+        for f in store_futs:
+            f.result()
+        store.seq_lens[active] += 1
+
+        dt = time.perf_counter() - t0
+        stats = StepStats(dt, t_wait, dt - t_wait, nbytes_total, l_pad,
+                          None if uniform else tuple(int(l) for l in ls))
+        return logits, stats
 
     # -------------------------------------------------------------- decode
 
     def decode(self, store: HostKVStore, first_token: np.ndarray,
-               gen_len: int, pad_to: Optional[int] = None
+               gen_len: int, pad_to: Optional[int] = None,
+               sample_fn=None, key=None
                ) -> Tuple[np.ndarray, List[StepStats]]:
-        """Generate `gen_len` tokens greedily. Returns (tokens, stats)."""
-        cfg = self.cfg
-        params = self.params
-        self.batch = first_token.shape[0]
+        """Generate `gen_len` tokens for a uniform batch.
+
+        sample_fn(logits (b, V), key) -> (b,) picks the next token
+        (greedy argmax when None).  `key` is split EXACTLY once per
+        generated token — engines mirror that consumption to keep their
+        own PRNG stream in sync with the resident path, so any change
+        here must keep the one-split-per-token contract.
+        Returns (tokens, stats).
+        """
         token = jnp.asarray(first_token)
+        plan = self.plan_for(int(token.shape[0]))
         stats: List[StepStats] = []
         out_tokens = []
-
-        for g in range(gen_len):
-            s_cur = store.len
-            split = self._split_for(s_cur)
-            # static streamed length, padded for jit-cache friendliness
-            s_str_exact = s_cur - split.l
-            s_str = s_str_exact if pad_to is None else \
-                min(-(-s_str_exact // pad_to) * pad_to,
-                    store.k.shape[2] - split.l)
-            t0 = time.perf_counter()
-            pos = jnp.asarray(s_cur, jnp.int32)
-            positions = jnp.full((self.batch, 1), s_cur, jnp.int32)
-            x = L.embed(token, params["embed"], cfg, positions[0])
-
-            t_wait = 0.0
-            nbytes_total = 0
-
-            def submit_weights(layer):
-                """fine-grained: W_K/W_V first (Fig. 5b); coarse: one
-                combined copy (Fig. 5a)."""
-                if self.fine_grained:
-                    return (self.pool.submit(self._fetch_weights_kv,
-                                             layer),
-                            self.pool.submit(self._fetch_weights_rest,
-                                             layer))
-                both = self.pool.submit(
-                    lambda l: (self._fetch_weights_kv(l),
-                               self._fetch_weights_rest(l)), layer)
-                return both, None
-
-            # prefetch layer 0 (weights first when offloaded — they gate
-            # recomputation; then the KV/activation stream)
-            w_fut = submit_weights(0) if self.offload_weights else None
-            fut = self.pool.submit(self._fetch_layer, store, 0, s_cur,
-                                   split, s_str)
-            new_kv = []
-            for li in range(cfg.num_layers):
-                tw0 = time.perf_counter()
-                if self.offload_weights:
-                    if self.fine_grained:
-                        (wkv, nb_kv) = w_fut[0].result()
-                        (rest, nb_r) = w_fut[1].result()
-                    else:
-                        (wkv, nb_kv), (rest, nb_r) = w_fut[0].result()
-                    lp = self._assemble_layer(wkv, rest)
-                    nbytes_total += nb_kv + nb_r
-                else:
-                    lp = jax.tree.map(lambda a: a[li], params["layers"])
-                h_res, k_str, v_str, nb = fut.result()
-                t_wait += time.perf_counter() - tw0
-                nbytes_total += nb
-                if li + 1 < cfg.num_layers:
-                    if self.offload_weights:
-                        w_fut = submit_weights(li + 1)
-                    fut = self.pool.submit(self._fetch_layer, store, li + 1,
-                                           s_cur, split, s_str)
-                x, k_new, v_new, h_new = self._layer_fn(
-                    x, lp, h_res, k_str, v_str, pos,
-                    jnp.asarray(s_str_exact, jnp.int32),
-                    split_l=split.l, s_str=s_str)
-                new_kv.append((li, k_new, v_new, h_new))
-
-            x = L.apply_norm(x, params["final_norm"], cfg.rms_eps)
-            logits = L.unembed(x, params["embed"], cfg)
-            token = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-            token.block_until_ready()
-
-            # store new KV + activations back to host (async), then the
-            # paper's Alg. 1 `synchronize()`: the next step's fetches must
-            # not race with this step's stores.
-            store_futs = [
-                self.pool.submit(store.append, li, np.asarray(k_new),
-                                 np.asarray(v_new), np.asarray(h_new),
-                                 s_cur)
-                for (li, k_new, v_new, h_new) in new_kv]
-            for f in store_futs:
-                f.result()
-            store.len = s_cur + 1
+        for _ in range(gen_len):
+            logits, st = self.step(store, token, plan, pad_to=pad_to)
+            if sample_fn is None:
+                token = jnp.argmax(logits[:, -1:], axis=-1).astype(
+                    jnp.int32)
+            else:
+                sub = None
+                if key is not None:
+                    key, sub = jax.random.split(key)
+                token = sample_fn(logits[:, -1], sub)[:, None]
             out_tokens.append(np.asarray(token))
-
-            dt = time.perf_counter() - t0
-            stats.append(StepStats(dt, t_wait, dt - t_wait, nbytes_total,
-                                   split.l))
+            stats.append(st)
         return np.concatenate(out_tokens, axis=1), stats
+
+
+def prefill_with_activations(model, params, tokens: Array):
+    """Dense-family prefill that also returns per-layer attention-input
+    activations (the host-resident tensors KVPR recomputes from).
+
+    Returns (last_logits (b, 1, V), ks, vs, hs) — the caller samples the
+    first token (so the engine's configured sampler applies) and spills
+    ks/vs/hs into a HostKVStore slot.
+    """
+    cfg = model.cfg
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    x = L.embed(tokens, params["embed"], cfg, jnp.arange(s))
+
+    def body(x, lp):
+        h = L.apply_norm(x, lp["ln1"], cfg.rms_eps)
+        q, k, v = L.qkv_proj(h, lp["attn"], cfg, positions)
+        out = L.chunked_causal_attend(q, k, v)
+        out = out.reshape(b, s, cfg.num_heads * cfg.dh)
+        x = x + jnp.einsum("bsD,Dh->bsh", out, lp["attn"]["wo"])
+        h2 = L.apply_norm(x, lp["ln2"], cfg.rms_eps)
+        x = x + L.mlp_block(h2, lp["mlp"], cfg.act)
+        return x, (k, v, h)
+
+    x, (ks, vs, hs) = jax.lax.scan(body, x, params["layers"])
+    x = L.apply_norm(x, params["final_norm"], cfg.rms_eps)
+    logits = L.unembed(x[:, -1:], params["embed"], cfg)
+    return logits, ks, vs, hs

@@ -1,0 +1,187 @@
+"""KVPR automation loop (paper §3): profiler → scheduler → runtime.
+
+The paper's system is "fully automated": the profiler measures link
+bandwidth and GEMM throughput once (§3.1), the scheduler solves the
+KV-split LP for the workload (§3.2), and the runtime merely *executes*
+the schedule (§3.3).  This module is the scheduler half of that loop:
+
+  - ``PlanKey``       — the identity of a plan.  Everything the split
+                        decision depends on (hardware profile, mode,
+                        schedule, alignment, batch, model dims, dtype,
+                        compression) is part of the key, so changing any
+                        of them naturally invalidates the cached plan.
+  - ``ExecutionPlan`` — per-sequence-length ``SplitDecision``s for a
+                        workload trajectory.  Solves are amortized: the
+                        plan re-solves only every ``resolve_every``
+                        tokens of sequence growth (decisions are reused
+                        within a bucket, and bucketing rounds *down* so
+                        ``l <= seq_len`` always holds), and memoizes per
+                        (bucket, batch) so ragged per-slot lookups under
+                        continuous batching share work across slots.
+  - ``Scheduler``     — the plan cache + profiler glue.  Engines ask it
+                        for a plan; identical requests hit the cache,
+                        and ``invalidate()`` drops all plans (e.g. after
+                        re-profiling the hardware).
+
+The runtimes (``core/runtime.py``) contain **no** solver calls: the
+``ExecutionPlan`` is the only call site of ``optimal_split`` on the
+decode path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from collections import OrderedDict
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.cost_model import HardwareProfile, Workload
+from repro.core.solver import SplitDecision, optimal_split
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanKey:
+    """Everything a split decision depends on.  Frozen + hashable so it
+    doubles as the plan-cache key: any change (new hardware profile,
+    different batch, compression toggled, ...) yields a different key and
+    therefore a fresh plan — invalidation by construction."""
+    hw: HardwareProfile
+    mode: str                    # "kvpr" | "flexgen"
+    schedule: str                # "row" | "column"
+    align: int
+    batch: int
+    d_model: int
+    kv_dim: int
+    dtype_bytes: int
+    compress: Optional[str]
+
+
+class ExecutionPlan:
+    """Split decisions for a decode trajectory, solved lazily and reused.
+
+    ``split_for(seq_len)`` returns the decision for decoding with
+    ``seq_len`` tokens already cached.  Decisions are solved at bucket
+    granularity (``resolve_every`` tokens) so a growing sequence re-uses
+    one solve per bucket instead of solving every step; buckets round
+    down, which keeps the chosen ``l`` within the actually-available
+    prefix.  ``splits_for_slots`` is the continuous-batching entry point:
+    one decision per slot at that slot's own (ragged) length, solved for
+    a batch-1 workload since each slot streams independently.
+    """
+
+    def __init__(self, key: PlanKey, resolve_every: int = 16):
+        self.key = key
+        self.resolve_every = max(1, int(resolve_every))
+        self._splits: Dict[Tuple[int, int], SplitDecision] = {}
+        self._lock = threading.Lock()
+        self.solves = 0
+        self.lookups = 0
+
+    def _bucket(self, seq_len: int) -> int:
+        b = (seq_len // self.resolve_every) * self.resolve_every
+        return b if b > 0 else seq_len
+
+    def split_for(self, seq_len: int,
+                  batch: Optional[int] = None) -> SplitDecision:
+        """Decision for the current sequence length (bucketed, memoized)."""
+        self.lookups += 1
+        if seq_len <= 0:
+            return SplitDecision.flexgen(0, self.key.schedule)
+        batch = self.key.batch if batch is None else batch
+        s = self._bucket(seq_len)
+        ck = (s, batch)
+        with self._lock:
+            hit = self._splits.get(ck)
+        if hit is not None:
+            return hit
+        k = self.key
+        if k.mode == "flexgen":
+            d = SplitDecision.flexgen(s, k.schedule)
+        else:
+            wl = Workload(batch=batch, seq_len=s, d_model=k.d_model,
+                          kv_dim=k.kv_dim, dtype_bytes=k.dtype_bytes)
+            d = optimal_split(wl, k.hw, schedule=k.schedule, align=k.align)
+        with self._lock:
+            self._splits[ck] = d
+            self.solves += 1
+        return d
+
+    def splits_for_slots(self, seq_lens: Sequence[int]
+                         ) -> List[SplitDecision]:
+        """Per-slot decisions for ragged lengths (iteration-level
+        batching): each slot's KV streams independently, so each is a
+        batch-1 workload at its own length."""
+        return [self.split_for(int(s), batch=1) for s in seq_lens]
+
+
+class Scheduler:
+    """Plan cache keyed by ``PlanKey``; the scheduler half of the
+    profiler → scheduler → runtime loop.
+
+    Construct with a measured or preset ``HardwareProfile``; with none,
+    the profiler runs (once, memoized) on first use.  ``plan_for``
+    returns a cached ``ExecutionPlan`` when the key matches a previous
+    request and a fresh one otherwise; ``invalidate()`` clears the cache,
+    optionally installing a re-measured profile.
+    """
+
+    _MAX_PLANS = 64              # LRU bound; plans are small but unbounded
+                                 # workloads shouldn't grow the cache forever
+
+    def __init__(self, hw: Optional[HardwareProfile] = None,
+                 resolve_every: int = 16):
+        self._hw = hw
+        self.resolve_every = resolve_every
+        self._plans: "OrderedDict[PlanKey, ExecutionPlan]" = OrderedDict()
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+
+    @property
+    def hw(self) -> HardwareProfile:
+        if self._hw is None:
+            from repro.core.profiler import profile_system
+            self._hw = profile_system()
+        return self._hw
+
+    # ------------------------------------------------------------ planning
+
+    def plan_for(self, cfg, batch: int, mode: str = "kvpr",
+                 schedule: str = "row", align: int = 1,
+                 compress: Optional[str] = None,
+                 dtype_bytes: int = 4) -> ExecutionPlan:
+        """Plan for a model config (engines' entry point)."""
+        key = PlanKey(hw=self.hw, mode=mode, schedule=schedule, align=align,
+                      batch=batch, d_model=cfg.d_model,
+                      kv_dim=cfg.num_kv_heads * cfg.dh,
+                      dtype_bytes=dtype_bytes, compress=compress)
+        return self._get(key)
+
+    def plan_for_workload(self, wl: Workload, mode: str = "kvpr",
+                          schedule: str = "row", align: int = 1,
+                          compress: Optional[str] = None) -> ExecutionPlan:
+        """Plan from a raw Workload (analytic pipeline entry point)."""
+        key = PlanKey(hw=self.hw, mode=mode, schedule=schedule, align=align,
+                      batch=wl.batch, d_model=wl.d_model, kv_dim=wl.kv_dim,
+                      dtype_bytes=wl.dtype_bytes, compress=compress)
+        return self._get(key)
+
+    def _get(self, key: PlanKey) -> ExecutionPlan:
+        with self._lock:
+            plan = self._plans.get(key)
+            if plan is not None:
+                self.hits += 1
+                self._plans.move_to_end(key)
+                return plan
+            self.misses += 1
+            plan = ExecutionPlan(key, self.resolve_every)
+            self._plans[key] = plan
+            while len(self._plans) > self._MAX_PLANS:
+                self._plans.popitem(last=False)
+            return plan
+
+    def invalidate(self, hw: Optional[HardwareProfile] = None) -> None:
+        """Drop every cached plan; optionally install a new profile."""
+        with self._lock:
+            if hw is not None:
+                self._hw = hw
+            self._plans.clear()

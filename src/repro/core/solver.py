@@ -32,6 +32,12 @@ class SplitDecision:
     schedule: str               # "row" | "column"
     bound: int                  # upper bound used (prompt len s for column)
 
+    @classmethod
+    def flexgen(cls, seq_len: int, schedule: str = "row") -> "SplitDecision":
+        """The no-recompute decision (full KV transfer baseline)."""
+        return cls(l=0, t_total=0.0, t_recomp=0.0, t_kv=0.0, t_act=0.0,
+                   schedule=schedule, bound=seq_len)
+
 
 def _clamp(x: float, lo: float, hi: float) -> float:
     return max(lo, min(hi, x))

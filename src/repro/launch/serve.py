@@ -6,9 +6,14 @@
         --mode offload --compress int4          # KVPR host-offload path
     PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b \
         --mode continuous --slots 2             # iteration-level batching
+    PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
+        --mode continuous-offload --slots 2     # KVPR + admission
 
-Always uses the reduced (smoke) config on this CPU container; the full
-configs are exercised by the dry-run (`repro.launch.dryrun`).
+Every mode runs through one Scheduler (profiler → scheduler → runtime,
+paper §3): the launcher builds it once and both engines draw their
+ExecutionPlans from its cache.  Always uses the reduced (smoke) config
+on this CPU container; the full configs are exercised by the dry-run
+(`repro.launch.dryrun`).
 """
 from __future__ import annotations
 
@@ -19,6 +24,9 @@ import jax
 import numpy as np
 
 from repro.configs import ARCH_IDS, get_smoke_config
+from repro.core.cost_model import TPU_V5E
+from repro.core.profiler import profile_system
+from repro.core.scheduler import Scheduler
 from repro.models.transformer import Model
 from repro.serving.continuous import ContinuousBatchingEngine
 from repro.serving.engine import Request, ServingEngine
@@ -28,14 +36,19 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True, choices=list(ARCH_IDS))
     ap.add_argument("--mode", default="resident",
-                    choices=["resident", "offload", "continuous"])
+                    choices=["resident", "offload", "continuous",
+                             "continuous-offload"])
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--prompt", type=int, default=32)
     ap.add_argument("--gen", type=int, default=8)
     ap.add_argument("--slots", type=int, default=2)
     ap.add_argument("--compress", default=None, choices=[None, "int4"])
+    ap.add_argument("--sampler", default="greedy",
+                    choices=["greedy", "temperature"])
     ap.add_argument("--no-kvpr", action="store_true",
-                    help="offload mode: stream full KV (FlexGen baseline)")
+                    help="offload modes: stream full KV (FlexGen baseline)")
+    ap.add_argument("--profile", action="store_true",
+                    help="measure the link/GEMM profile instead of preset")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -49,14 +62,19 @@ def main(argv=None):
                     max_new_tokens=args.gen)
             for i in range(args.requests)]
 
+    sched = Scheduler(profile_system() if args.profile else TPU_V5E)
     t0 = time.perf_counter()
-    if args.mode == "continuous":
+    if args.mode.startswith("continuous"):
         gens = ContinuousBatchingEngine(
             model, params, num_slots=args.slots,
-            max_len=args.prompt + args.gen + 8).serve(reqs)
+            max_len=args.prompt + args.gen + 8,
+            mode="offload" if args.mode.endswith("offload") else "resident",
+            scheduler=sched, kvpr=not args.no_kvpr,
+            compress=args.compress).serve(reqs)
     else:
         gens = ServingEngine(model, params, mode=args.mode,
-                             kvpr=not args.no_kvpr,
+                             kvpr=not args.no_kvpr, sampler=args.sampler,
+                             scheduler=sched,
                              compress=args.compress).serve(reqs)
     dt = time.perf_counter() - t0
 
@@ -64,7 +82,8 @@ def main(argv=None):
     print(f"{args.arch} [{args.mode}"
           f"{'/int4' if args.compress else ''}]: "
           f"{len(reqs)} requests, {total} tokens in {dt:.2f}s "
-          f"({total/dt:.1f} tok/s)")
+          f"({total/dt:.1f} tok/s) "
+          f"plan_cache[hits={sched.hits} misses={sched.misses}]")
     for g in gens[:4]:
         print(f"  uid={g.uid}: {np.asarray(g.tokens)[:8]}...")
 

@@ -62,6 +62,24 @@ def decode_attend(q: Array, k_cache: Array, v_cache: Array, pos: Array,
     return out.reshape(b, 1, H, dh)
 
 
+def broadcast_slots(one_cache, num_slots: int):
+    """Stack a b=1 cache pytree into a (num_slots, ...) slot pytree
+    (bootstrap for iteration-level batching engines)."""
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (num_slots,) + a.shape).copy(),
+        one_cache)
+
+
+def splice_slot(slots_cache, one_cache, slot: int):
+    """Write a b=1 cache pytree into slot `slot` of a stacked slot
+    pytree (iteration-level admission on the resident path)."""
+    def put(dst, src):
+        return jax.lax.dynamic_update_slice(
+            dst, src[None].astype(dst.dtype),
+            (slot,) + (0,) * (dst.ndim - 1))
+    return jax.tree.map(put, slots_cache, one_cache)
+
+
 def init_kv(batch: int, S: int, KV: int, dh: int, dtype,
             n_layers: Optional[int] = None) -> Tuple[Array, Array]:
     shape = (batch, S, KV, dh) if n_layers is None else (n_layers, batch, S, KV, dh)

@@ -1,16 +1,24 @@
 """Batched serving engine with KVPR-aware decode.
 
-Two execution modes:
+Two execution modes, both driven by the profiler → scheduler → runtime
+automation loop (paper §3; `core/scheduler.py`):
   - "resident": classic HBM-resident KV cache (prefill + decode_step);
     this is the baseline serving path and the dry-run `serve_step`.
   - "offload":  host-offloaded KV via core.runtime.OffloadDecodeRuntime —
-    the paper's system (KVPR split solver + overlapped streams), for
-    dense-family models.
+    the paper's system. The engine asks its Scheduler for an
+    ExecutionPlan; the runtime merely executes it (no inline solves).
 
 Requests are grouped into fixed-size batches (padded to the same prompt
-length, as the paper's workloads do); the engine runs prefill once and
-then the decode loop, returning per-request generations. Continuous
-batching is intentionally out of scope (the paper batches statically).
+length); the engine runs prefill once and then the decode loop,
+returning per-request generations.  The configured sampler (greedy or
+temperature) applies identically in both modes — the offload runtime
+receives the engine's sampling function and PRNG stream.
+
+For iteration-level admission (slots at ragged decode positions, new
+requests admitted mid-decode, in either mode) use
+`serving.continuous.ContinuousBatchingEngine`, which shares this
+module's Request/Generation plumbing and the same scheduler-driven
+offload runtime.
 """
 from __future__ import annotations
 
@@ -24,7 +32,9 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.cost_model import HardwareProfile, TPU_V5E
-from repro.core.runtime import HostKVStore, OffloadDecodeRuntime
+from repro.core.runtime import (HostKVStore, OffloadDecodeRuntime,
+                                prefill_with_activations)
+from repro.core.scheduler import Scheduler
 from repro.models import layers as L
 from repro.models.transformer import Model
 from repro.serving import sampler as samplers
@@ -51,12 +61,26 @@ class Generation:
         return len(self.tokens) / max(self.decode_time, 1e-9)
 
 
+def pad_batch(reqs: List[Request]) -> np.ndarray:
+    """Left-pad prompts to a common length (shared by both engines)."""
+    s = max(len(r.prompt) for r in reqs)
+    out = np.zeros((len(reqs), s), np.int32)
+    for i, r in enumerate(reqs):
+        out[i, s - len(r.prompt):] = r.prompt
+    return out
+
+
+def get_sampler(name: str):
+    return samplers.greedy if name == "greedy" else samplers.temperature
+
+
 class ServingEngine:
     def __init__(self, model: Model, params, mode: str = "resident",
                  hw: Optional[HardwareProfile] = None,
                  sampler: str = "greedy", seed: int = 0,
                  kvpr: bool = True, schedule: str = "row",
-                 compress: Optional[str] = None):
+                 align: int = 1, compress: Optional[str] = None,
+                 scheduler: Optional[Scheduler] = None):
         self.model = model
         self.cfg = model.cfg
         self.params = params
@@ -64,29 +88,21 @@ class ServingEngine:
         self.hw = hw or TPU_V5E
         self.kvpr = kvpr
         self.schedule = schedule
+        self.align = align
         self.compress = compress
+        self.scheduler = scheduler or Scheduler(self.hw)
         self.key = jax.random.PRNGKey(seed)
-        self.sample = (samplers.greedy if sampler == "greedy"
-                       else samplers.temperature)
+        self.sample = get_sampler(sampler)
         self._prefill = jax.jit(self.model.prefill,
                                 static_argnames=("max_len",))
         self._decode = jax.jit(self.model.decode_step)
-
-    # ------------------------------------------------------------ batching
-
-    def _pad_batch(self, reqs: List[Request]) -> np.ndarray:
-        s = max(len(r.prompt) for r in reqs)
-        out = np.zeros((len(reqs), s), np.int32)
-        for i, r in enumerate(reqs):
-            out[i, s - len(r.prompt):] = r.prompt  # left-pad
-        return out
 
     # -------------------------------------------------------------- serve
 
     def serve(self, reqs: List[Request],
               extra: Optional[Dict[str, Array]] = None
               ) -> List[Generation]:
-        prompts = self._pad_batch(reqs)
+        prompts = pad_batch(reqs)
         gen_len = max(r.max_new_tokens for r in reqs)
         if self.mode == "offload":
             return self._serve_offload(reqs, prompts, gen_len)
@@ -123,24 +139,38 @@ class ServingEngine:
 
     def _serve_offload(self, reqs, prompts, gen_len):
         """Prefill on-device, spill KV + activations to host, decode with
-        the KVPR runtime (dense-family archs)."""
+        the KVPR runtime (dense-family archs) under the scheduler's
+        ExecutionPlan, sampling with the engine's configured sampler."""
         cfg = self.cfg
         b, s = prompts.shape
         store = HostKVStore(cfg, b, s + gen_len + 1,
                             compress=self.compress)
         t0 = time.perf_counter()
-        first, ks, vs, hs = _prefill_with_activations(
+        logits, ks, vs, hs = prefill_with_activations(
             self.model, self.params, jnp.asarray(prompts))
         store.bulk_fill(np.asarray(ks), np.asarray(vs), np.asarray(hs), s)
         t_prefill = time.perf_counter() - t0
 
+        self.key, k = jax.random.split(self.key)
+        first = self.sample(logits[:, -1], k)[:, None]
+
         rt = OffloadDecodeRuntime(
-            cfg, self.params, self.hw,
+            cfg, self.params, scheduler=self.scheduler,
             mode="kvpr" if self.kvpr else "flexgen",
-            schedule=self.schedule, compress=self.compress)
+            schedule=self.schedule, align=self.align,
+            compress=self.compress)
         t0 = time.perf_counter()
-        toks, stats = rt.decode(store, np.asarray(first), gen_len)
+        # Hand the runtime the engine's PRNG stream; the runtime splits it
+        # once per step exactly as the resident loop does, so the two
+        # modes draw identical sampling keys from the same seed.
+        toks, stats = rt.decode(store, np.asarray(first), gen_len,
+                                sample_fn=self.sample, key=self.key)
         t_decode = time.perf_counter() - t0
+        # mirror the runtime's key consumption (decode() contract: one
+        # split per generated token) so a later serve() continues the
+        # stream exactly where the resident loop would
+        for _ in range(gen_len):
+            self.key, _ = jax.random.split(self.key)
         # runtime emits tokens *after* consuming `first`; prepend it
         all_toks = np.concatenate([np.asarray(first), toks], axis=1)
         return [Generation(r.uid, all_toks[i, : r.max_new_tokens],
@@ -149,25 +179,9 @@ class ServingEngine:
 
 
 def _prefill_with_activations(model: Model, params, tokens: Array):
-    """Dense-family prefill that also returns per-layer attention-input
-    activations (the host-resident tensors KVPR recomputes from)."""
-    cfg = model.cfg
-    b, s = tokens.shape
-    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
-    x = L.embed(tokens, params["embed"], cfg, jnp.arange(s))
-
-    def body(x, lp):
-        h = L.apply_norm(x, lp["ln1"], cfg.rms_eps)
-        q, k, v = L.qkv_proj(h, lp["attn"], cfg, positions)
-        out = L.chunked_causal_attend(q, k, v)
-        out = out.reshape(b, s, cfg.num_heads * cfg.dh)
-        x = x + jnp.einsum("bsD,Dh->bsh", out, lp["attn"]["wo"])
-        h2 = L.apply_norm(x, lp["ln2"], cfg.rms_eps)
-        x = x + L.mlp_block(h2, lp["mlp"], cfg.act)
-        return x, (k, v, h)
-
-    x, (ks, vs, hs) = jax.lax.scan(body, x, params["layers"])
-    x = L.apply_norm(x, params["final_norm"], cfg.rms_eps)
-    logits = L.unembed(x[:, -1:], params["embed"], cfg)
+    """Back-compat shim: greedy first token + spill tensors.  New code
+    should use core.runtime.prefill_with_activations (returns logits so
+    the caller's sampler decides the first token)."""
+    logits, ks, vs, hs = prefill_with_activations(model, params, tokens)
     first = jnp.argmax(logits, axis=-1).astype(jnp.int32)
     return first, ks, vs, hs

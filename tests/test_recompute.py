@@ -4,6 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # optional dep, see docs/automation.md
 import hypothesis.strategies as st
 from hypothesis import given, settings
 

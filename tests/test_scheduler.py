@@ -1,0 +1,153 @@
+"""Scheduler / ExecutionPlan tests: plan cache hit & invalidation
+semantics, amortized re-solve, per-slot ragged splits, and end-to-end
+continuous-offload serving parity (paper §3's automation loop)."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.cost_model import A100_PCIE4, RTX5000_PCIE4X8
+from repro.core.runtime import (HostKVStore, OffloadDecodeRuntime,
+                                prefill_with_activations)
+from repro.core.scheduler import ExecutionPlan, PlanKey, Scheduler
+from repro.models.transformer import Model
+from repro.serving.continuous import ContinuousBatchingEngine
+from repro.serving.engine import Request, ServingEngine
+
+
+@pytest.fixture(scope="module")
+def tiny_setup():
+    cfg = get_smoke_config("tinyllama-1.1b")
+    model = Model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+# ------------------------------------------------------------- plan cache
+
+def test_plan_cache_hit_and_key_invalidation(tiny_setup):
+    cfg, _, _ = tiny_setup
+    sched = Scheduler(A100_PCIE4)
+    p1 = sched.plan_for(cfg, batch=4, mode="kvpr")
+    p2 = sched.plan_for(cfg, batch=4, mode="kvpr")
+    assert p1 is p2 and sched.hits == 1 and sched.misses == 1
+
+    # any key ingredient changing must yield a fresh plan
+    assert sched.plan_for(cfg, batch=8, mode="kvpr") is not p1
+    assert sched.plan_for(cfg, batch=4, mode="kvpr",
+                          compress="int4") is not p1
+    assert sched.plan_for(cfg, batch=4, mode="flexgen") is not p1
+    hw2 = dataclasses.replace(A100_PCIE4, link_bandwidth=1e9)
+    assert Scheduler(hw2).plan_for(cfg, batch=4).key != p1.key
+
+    sched.invalidate(hw=RTX5000_PCIE4X8)
+    p3 = sched.plan_for(cfg, batch=4, mode="kvpr")
+    assert p3 is not p1 and p3.key.hw == RTX5000_PCIE4X8
+
+
+def test_plan_amortized_resolve(tiny_setup):
+    cfg, _, _ = tiny_setup
+    sched = Scheduler(A100_PCIE4, resolve_every=16)
+    plan = sched.plan_for(cfg, batch=4, mode="kvpr")
+    for s in range(32, 80):          # 48 growing lengths, 3 buckets
+        d = plan.split_for(s)
+        assert 0 <= d.l <= s         # bucketing rounds down: l stays legal
+    assert plan.lookups == 48
+    assert plan.solves <= 4
+
+
+def test_per_slot_ragged_splits(tiny_setup):
+    cfg, _, _ = tiny_setup
+    plan = Scheduler(A100_PCIE4).plan_for(cfg, batch=3, mode="kvpr")
+    lens = [10, 50, 0]
+    decs = plan.splits_for_slots(lens)
+    assert len(decs) == 3
+    for d, s in zip(decs, lens):
+        assert 0 <= d.l <= s
+    # flexgen plans never recompute, at any slot length
+    fg = Scheduler(A100_PCIE4).plan_for(cfg, batch=3, mode="flexgen")
+    assert all(d.l == 0 for d in fg.splits_for_slots(lens))
+
+
+def test_runtime_has_no_inline_solver():
+    """Acceptance: the ExecutionPlan is the only decode-path call site of
+    optimal_split — the runtime must not import it."""
+    import inspect
+    import repro.core.runtime as rt
+    src = inspect.getsource(rt)
+    assert "optimal_split" not in src
+
+
+# -------------------------------------------------- runtime regressions
+
+def test_int4_pad_to_decode(tiny_setup):
+    """pad_to + compress="int4" used to crash on `store.k.shape` (the
+    quantized store has no `.k`); the padded length now comes from
+    store.max_len."""
+    cfg, model, params = tiny_setup
+    b, s, gen = 2, 12, 3
+    rng = np.random.default_rng(0)
+    toks = rng.integers(1, cfg.vocab_size, (b, s)).astype(np.int32)
+    logits, ks, vs, hs = prefill_with_activations(model, params,
+                                                  np.asarray(toks))
+    first = np.asarray(np.argmax(logits, axis=-1), np.int32)
+    store = HostKVStore(cfg, b, s + gen + 2, compress="int4")
+    store.bulk_fill(np.asarray(ks), np.asarray(vs), np.asarray(hs), s)
+    rt = OffloadDecodeRuntime(cfg, params, A100_PCIE4, mode="kvpr",
+                              compress="int4")
+    out, stats = rt.decode(store, first, gen, pad_to=8)
+    assert out.shape == (b, gen)
+    assert all(st.bytes_transferred > 0 for st in stats)
+
+
+def test_offload_respects_engine_sampler(tiny_setup):
+    """ServingEngine(sampler="temperature") must sample in offload decode
+    too — and, given the same seed, draw the exact key chain the
+    resident path draws, so the two modes emit identical tokens."""
+    cfg, model, params = tiny_setup
+    rng = np.random.default_rng(1)
+    reqs = [Request(uid=i, prompt=rng.integers(
+        1, cfg.vocab_size, 10).astype(np.int32), max_new_tokens=5)
+        for i in range(2)]
+    res = ServingEngine(model, params, mode="resident",
+                        sampler="temperature", seed=7).serve(reqs)
+    off = ServingEngine(model, params, mode="offload",
+                        sampler="temperature", seed=7).serve(reqs)
+    for r, o in zip(res, off):
+        np.testing.assert_array_equal(r.tokens, o.tokens)
+    grd = ServingEngine(model, params, mode="offload", sampler="greedy",
+                        seed=7).serve(reqs)
+    assert any(not np.array_equal(g.tokens, o.tokens)
+               for g, o in zip(grd, off))
+
+
+# ------------------------------------------- continuous offload serving
+
+@pytest.mark.parametrize("compress", [None, "int4"])
+def test_continuous_offload_matches_resident_alone(tiny_setup, compress):
+    """A request admitted mid-decode into the offload engine must produce
+    tokens identical to serving it alone on the resident path (exact
+    recompute + exact ragged masking).  int4 only checks shapes/flow —
+    quantizing the stream is lossy by design."""
+    cfg, model, params = tiny_setup
+    rng = np.random.default_rng(0)
+    # 5 requests, ragged prompts, 2 slots -> admissions happen mid-decode
+    reqs = [Request(uid=i,
+                    prompt=rng.integers(1, cfg.vocab_size,
+                                        8 + 3 * i).astype(np.int32),
+                    max_new_tokens=4 + (i % 3))
+            for i in range(5)]
+    sched = Scheduler(A100_PCIE4)
+    cont = ContinuousBatchingEngine(
+        model, params, num_slots=2, max_len=64, mode="offload",
+        scheduler=sched, compress=compress).serve(reqs)
+    assert sched.misses >= 1     # the engine planned through the scheduler
+    eng = ServingEngine(model, params, mode="resident")
+    for r, c in zip(reqs, cont):
+        assert len(c.tokens) == r.max_new_tokens
+        if compress is None:
+            ref = eng.serve([r])[0]
+            np.testing.assert_array_equal(c.tokens, ref.tokens,
+                                          err_msg=f"uid={r.uid}")

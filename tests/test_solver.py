@@ -1,4 +1,7 @@
 """Property tests for the KVPR scheduler (paper Eq. 10-11)."""
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dep, see docs/automation.md
 import hypothesis.strategies as st
 from hypothesis import given, settings
 
