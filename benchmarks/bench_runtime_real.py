@@ -73,7 +73,9 @@ def run(print_csv: bool = True, prompt: int = 192, gen: int = 8,
             print(fmt_row(
                 f"runtime_real/{mode}", f"{dt/gen*1e6:.0f}",
                 f"tok_per_s={tps:.2f} bytes_streamed={nbytes} "
-                f"mean_split={np.mean([s.split_l for s in stats]):.0f}"))
+                f"mean_split={np.mean([s.split_l for s in stats]):.0f} "
+                f"retraces={sum(s.retraces for s in stats)} "
+                f"t_store_ms={sum(s.t_store for s in stats)*1e3:.0f}"))
         rows.append((mode, dt, nbytes))
     same = np.array_equal(results["flexgen"][0], results["kvpr"][0])
     byte_red = 1 - results["kvpr"][2] / max(results["flexgen"][2], 1)

@@ -1,0 +1,139 @@
+"""Decode hot-path step breakdown, machine-readable.
+
+Runs a real (executable, CPU-validation) offload decode and emits one
+JSON object with the per-step timing split the fenced runtime now
+measures — t_wait (fetch stall), t_compute (device + dispatch),
+t_store (overlapped host write-back) — plus link throughput, the XLA
+retrace count, and the staging-allocation count.  CI runs the smoke
+invocation so hot-path regressions (a retrace per step, a fresh staging
+buffer per step) fail loudly instead of silently eating the overlap win.
+
+    PYTHONPATH=src python benchmarks/bench_step_breakdown.py [--smoke]
+        [--json out.json] [--mode kvpr|flexgen] [--compress int4]
+        [--batch B] [--prompt S] [--gen N]
+
+--smoke exits non-zero unless, after a warmup decode, a second decode of
+the same trajectory performs ZERO retraces and ZERO staging allocations.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core.profiler import profile_system
+from repro.core.runtime import (HostKVStore, OffloadDecodeRuntime,
+                                prefill_with_activations)
+from repro.core.scheduler import Scheduler
+from repro.models.transformer import Model
+
+
+def _spill(cfg, model, params, toks, gen, compress):
+    logits, ks, vs, hs = prefill_with_activations(model, params, toks)
+    first = np.asarray(np.argmax(logits, axis=-1), np.int32)
+    store = HostKVStore(cfg, toks.shape[0], toks.shape[1] + gen + 2,
+                        compress=compress)
+    store.bulk_fill(np.asarray(ks), np.asarray(vs), np.asarray(hs),
+                    toks.shape[1])
+    return store, first
+
+
+def run(mode: str = "kvpr", compress=None, batch: int = 2,
+        prompt: int = 48, gen: int = 16, smoke: bool = False) -> dict:
+    cfg = get_smoke_config("opt-6.7b").replace(
+        num_layers=4, d_model=256, num_heads=4, num_kv_heads=4, d_ff=512)
+    model = Model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    toks = rng.integers(1, cfg.vocab_size,
+                        (batch, prompt)).astype(np.int32)
+    sched = Scheduler(profile_system())
+    rt = OffloadDecodeRuntime(cfg, params, scheduler=sched,
+                              mode=mode, compress=compress)
+
+    # warmup: compile every pad bucket of the trajectory + allocate the
+    # staging buffers once
+    store, first = _spill(cfg, model, params, toks, gen, compress)
+    t0 = time.perf_counter()
+    _, warm_stats = rt.decode(store, first, gen)
+    t_warm = time.perf_counter() - t0
+
+    # measured steady state: same trajectory, fresh store, warm caches
+    store, first = _spill(cfg, model, params, toks, gen, compress)
+    allocs0, traces0 = rt.xfer.staging_allocs, rt.compute.traces()
+    t0 = time.perf_counter()
+    _, stats = rt.decode(store, first, gen)
+    dt = time.perf_counter() - t0
+
+    retraces = sum(st.retraces for st in stats)
+    new_allocs = rt.xfer.staging_allocs - allocs0
+    nbytes = sum(st.bytes_transferred for st in stats)
+    out = {
+        "config": {"mode": mode, "compress": compress, "batch": batch,
+                   "prompt": prompt, "gen": gen,
+                   "num_layers": cfg.num_layers,
+                   "d_model": cfg.d_model},
+        "warmup": {"wall_s": round(t_warm, 4),
+                   "retraces": sum(st.retraces for st in warm_stats)},
+        "steady": {
+            "wall_s": round(dt, 4),
+            "step_ms": round(dt / gen * 1e3, 3),
+            "tokens_per_s": round(batch * gen / dt, 2),
+            "t_wait_s": round(sum(st.t_wait_transfer for st in stats), 4),
+            "t_compute_s": round(sum(st.t_compute for st in stats), 4),
+            "t_store_s": round(sum(st.t_store for st in stats), 4),
+            "t_fence_s": round(sum(st.t_fence for st in stats), 4),
+            "bytes_transferred": int(nbytes),
+            "bytes_per_s": round(nbytes / dt, 1),
+            "retraces": int(retraces),
+            "staging_allocs": int(new_allocs),
+            "traces_total": rt.compute.traces(),
+            "pad_buckets": sorted({(st.l_pad, st.s_pad)
+                                   for st in stats}),
+        },
+    }
+    if smoke:
+        out["smoke_ok"] = bool(retraces == 0 and new_allocs == 0)
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", default="kvpr",
+                    choices=["kvpr", "flexgen"])
+    ap.add_argument("--compress", default=None, choices=[None, "int4"])
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--prompt", type=int, default=48)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--json", default=None,
+                    help="also write the JSON to this path")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small run; exit 1 on any steady-state retrace "
+                         "or staging allocation")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        args.batch, args.prompt, args.gen = 2, 24, 8
+    res = run(mode=args.mode, compress=args.compress, batch=args.batch,
+              prompt=args.prompt, gen=args.gen, smoke=args.smoke)
+    text = json.dumps(res, indent=2)
+    print(text)
+    if args.json:
+        with open(args.json, "w") as f:
+            f.write(text + "\n")
+    if args.smoke and not res["smoke_ok"]:
+        print("SMOKE FAIL: steady-state decode retraced or allocated "
+              f"(retraces={res['steady']['retraces']} "
+              f"staging_allocs={res['steady']['staging_allocs']})",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

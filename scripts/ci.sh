@@ -27,4 +27,9 @@ python -m pytest -x -q
 #    the timeout guards CI against pathological slowdowns.
 timeout "${QUICKSTART_TIMEOUT:-300}" python examples/quickstart.py
 
+# 4. Decode hot-path smoke: fails if the steady-state loop performs any
+#    XLA retrace or staging allocation (see docs/performance.md).
+timeout "${BREAKDOWN_TIMEOUT:-300}" \
+    python benchmarks/bench_step_breakdown.py --smoke
+
 echo "ci.sh: all checks passed"

@@ -7,6 +7,7 @@ paper's systems and our TPU target.
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 
 @dataclasses.dataclass(frozen=True)
@@ -77,15 +78,28 @@ class Workload:
     d_model: int                 # h (activation width)
     kv_dim: int                  # num_kv_heads * head_dim (per K or V)
     dtype_bytes: int = 2
+    # Effective bytes per KV *element* on the link.  None -> dtype_bytes
+    # (uncompressed).  With int4 compression the stream carries packed
+    # codes + group scales/zeros, so each element costs far less than
+    # dtype_bytes — activations stay exact at dtype_bytes either way.
+    # The solver must see this, or it overestimates streamed KV bytes
+    # ~8x and picks an over-large recompute prefix l.
+    kv_bytes_per_el: Optional[float] = None
     # recompute FLOPs per token: K and V projections (Eq. 8 generalizes
     # from 4*b*l*h^2 to 2 GEMMs of h x kv_dim each)
     mha_weight_bytes: int = 0    # for the fine-grained pipeline (Fig. 5)
+
+    @property
+    def kv_el_bytes(self) -> float:
+        return (self.dtype_bytes if self.kv_bytes_per_el is None
+                else self.kv_bytes_per_el)
 
     def act_bytes(self, l: int) -> int:
         return self.batch * l * self.d_model * self.dtype_bytes
 
     def kv_bytes(self, tokens: int) -> int:
-        return 2 * self.batch * tokens * self.kv_dim * self.dtype_bytes
+        return int(2 * self.batch * tokens * self.kv_dim
+                   * self.kv_el_bytes)
 
     def recompute_flops(self, l: int) -> int:
         # K = X Wk, V = X Wv : 2 GEMMs, 2*b*l*h*kv_dim MACs each
@@ -94,6 +108,13 @@ class Workload:
     @property
     def total_kv_bytes(self) -> int:
         return self.kv_bytes(self.seq_len)
+
+
+def int4_kv_bytes_per_el(group: int = 32) -> float:
+    """Link bytes per KV element for the group-wise int4 stream
+    (core/kvquant.py layout): a packed half-byte code plus two f32
+    (scale, zero) values amortized over each ``group`` elements."""
+    return 0.5 + 8.0 / group
 
 
 def layer_times(wl: Workload, hw: HardwareProfile, l: int,

@@ -6,22 +6,32 @@ profiler → scheduler → runtime loop, as three composable stages:
                         so iteration-level batching can admit a request
                         mid-decode by spilling its prefill into a free
                         slot (``fill_slot``) while other slots keep
-                        decoding at their own (ragged) positions.
+                        decoding at their own (ragged) positions.  Also
+                        owns the per-layer write-back fence ring: step
+                        N's host store of layer li gates only step N+1's
+                        *fetch* of layer li, so write-back overlaps the
+                        next step's embed and early layers instead of
+                        serializing at an end-of-step barrier.
   - ``TransferEngine``  the copy-thread pool emulating the CUDA-stream /
                         DMA engine: per-layer KV/activation fetches
-                        (uniform fast path or ragged padded gather) and
-                        the fine-grained W_K/W_V-first weight stream.
+                        (uniform fast path or vectorized ragged gather)
+                        and the fine-grained W_K/W_V-first weight
+                        stream.  All fetches stage through persistent
+                        double-buffered host buffers — the steady-state
+                        decode loop performs zero numpy allocations.
   - ``ComputeStep``     the jitted per-layer device compute (recompute +
                         merged segment attention + FFN) and the embed /
                         unembed ends of a decode step.
 
 ``OffloadDecodeRuntime`` composes the stages and *executes* an
 ``ExecutionPlan`` from ``core/scheduler.py`` — it contains no solver
-calls of its own: per-step/per-slot ``SplitDecision``s come from the
-plan (paper §3.2), which amortizes and caches the solves.  ``step()``
-advances every active slot by one token and is the single decode hot
-path shared by static batching (``decode()`` loop), the serving engine,
-and the continuous-batching engine.
+calls of its own and chooses no shapes of its own: per-step/per-slot
+``SplitDecision``s AND the bucket-padded static shapes (``l_pad``,
+``s_pad``) come from the plan's ``step_geometry`` (paper §3.2), which
+amortizes the solves and bounds the XLA trace cache at O(#buckets)
+entries.  ``step()`` advances every active slot by one token and is the
+single decode hot path shared by static batching (``decode()`` loop),
+the serving engine, and the continuous-batching engine.
 
 The KV cache (and attention-input activations) live in HOST memory
 (numpy, emulating CPU DRAM / `pinned_host`). Each decode step streams,
@@ -38,7 +48,14 @@ Six overlapped flows of paper Alg. 1 and their mapping here:
   load_activation_recompute / load_cache / load_activation
                          -> TransferEngine.fetch_layer futures
   compute                -> ComputeStep.layer (jitted)
-  store_activation / store_cache -> host_store.append() on the pool
+  store_activation / store_cache -> per-layer fenced append on the
+                                    dedicated store pool
+
+Exactness invariant for the padded buffers: every position beyond a
+slot's valid length is masked out of attention (scores replaced before
+the softmax, so padded V rows receive exactly zero weight).  Stale
+staging content is therefore never *read into* the result — padding can
+carry any finite garbage without changing a single token.
 """
 from __future__ import annotations
 
@@ -46,7 +63,7 @@ import dataclasses
 import threading
 import time
 from concurrent.futures import ThreadPoolExecutor
-from typing import List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -72,6 +89,12 @@ class HostKVStore:
     ``clear_slot`` frees it for the next admission.  The legacy ``len``
     property views the store as a uniform batch (max length; assigning
     sets every slot) for the static-batching path.
+
+    Write-back fences: ``set_fence(li, fut)`` records the in-flight host
+    store of layer li's new token; ``wait_fence(li)`` (called by the
+    transfer engine before reading layer li) and ``sync()`` (called
+    before bulk writes) are the only synchronization points — there is
+    no global end-of-step barrier.
 
     compress="int4" keeps the KV cache group-wise 4-bit quantized in host
     memory (paper §4.4 / beyond-paper executable path): appends quantize
@@ -104,6 +127,8 @@ class HostKVStore:
         self.act = np.zeros((Lh, batch, max_len, h), dtype)
         self.seq_lens = np.zeros((batch,), np.int64)
         self.lock = threading.Lock()
+        self.num_layers = Lh
+        self._fences: List[Optional[object]] = [None] * Lh
 
     # `len` views the store as a uniform batch (static-batching path).
     @property
@@ -113,6 +138,26 @@ class HostKVStore:
     @len.setter
     def len(self, value: int) -> None:
         self.seq_lens[:] = value
+
+    # ------------------------------------------------------------- fences
+
+    def set_fence(self, layer: int, fut) -> None:
+        """Record layer li's in-flight write-back (a Future)."""
+        self._fences[layer] = fut
+
+    def wait_fence(self, layer: int) -> None:
+        """Block until layer li's last write-back has landed (no-op when
+        none is in flight).  Fetches call this so a step never reads a
+        layer the previous step is still storing."""
+        f = self._fences[layer]
+        if f is not None:
+            f.result()
+
+    def sync(self) -> None:
+        """Drain every in-flight write-back (bulk writes + end of decode
+        call this; the steady-state decode loop never does)."""
+        for li in range(len(self._fences)):
+            self.wait_fence(li)
 
     # ------------------------------------------------------------- writes
 
@@ -156,6 +201,7 @@ class HostKVStore:
 
     def bulk_fill(self, ks, vs, acts, s: int) -> None:
         """Fill from prefill outputs: (L, b, s, KV, dh) / (L, b, s, h)."""
+        self.sync()
         if self.compress == "int4":
             for li in range(ks.shape[0]):
                 self._put_kv(li, slice(0, s), ks[li], vs[li])
@@ -167,7 +213,10 @@ class HostKVStore:
 
     def fill_slot(self, slot: int, ks, vs, acts, s: int) -> None:
         """Spill a b=1 prefill — (L, 1, s, KV, dh) / (L, 1, s, h) — into
-        one slot (iteration-level admission)."""
+        one slot (iteration-level admission).  Drains in-flight
+        write-backs first: a pending append from the slot's previous
+        tenant must not land on top of the new request's prefill."""
+        self.sync()
         for li in range(ks.shape[0]):
             self._put_kv_slot(li, slot, slice(0, s), ks[li, 0], vs[li, 0])
         self.act[:, slot, :s] = acts[:, 0]
@@ -182,18 +231,66 @@ class HostKVStore:
 class TransferEngine:
     """The copy-thread pool emulating the DMA / CUDA-stream engine:
     issues host→device copies for KV, activations, and (optionally)
-    streamed layer weights, and counts the bytes it moves."""
+    streamed layer weights, and counts the bytes it moves.
+
+    Host write-back runs on a separate single-thread pool so a queued
+    store can never sit behind (or starve) the latency-critical fetch
+    stream — and a fetch blocked on a store fence always has a running
+    store to wait on (no pool self-deadlock).
+
+    Fetches stage through *persistent* host buffers, double-buffered by
+    layer parity: buffer (kind, parity, shape) is allocated once per
+    distinct plan bucket shape and reused across layers and steps, so
+    the steady-state decode loop performs zero numpy allocations
+    (``staging_allocs`` counts the one-time allocations; a regression
+    test asserts it stops growing after warmup).  ``jax.device_put``
+    copies out of the staging buffer before returning, so reuse two
+    fetches later (same parity) is safe.
+    """
 
     _KV_KEYS = ("wk", "wv")
 
     def __init__(self, n_copy_threads: int = 2, host_layers=None,
                  fine_grained: bool = True):
         self.pool = ThreadPoolExecutor(max_workers=n_copy_threads)
+        self.store_pool = ThreadPoolExecutor(max_workers=1)
         self._host_layers = host_layers
         self.fine_grained = fine_grained
+        self._staging: Dict[tuple, np.ndarray] = {}
+        self.staging_allocs = 0
+        self._t_fence = 0.0
+        self._t_fence_lock = threading.Lock()
 
     def submit(self, fn, *args):
         return self.pool.submit(fn, *args)
+
+    def submit_store(self, fn, *args):
+        return self.store_pool.submit(fn, *args)
+
+    def drain_t_fence(self) -> float:
+        """Seconds fetch workers spent blocked on write-back fences
+        since the last drain.  Fence waits cover the *previous* layer's
+        device compute (the store task blocks on its outputs), so this
+        portion of a step's t_wait is really overlapped compute, not
+        link stall — StepStats reports it separately as t_fence."""
+        with self._t_fence_lock:
+            t, self._t_fence = self._t_fence, 0.0
+        return t
+
+    # ------------------------------------------------------------ staging
+
+    def _stage(self, kind: str, parity: int, shape: tuple,
+               dtype) -> np.ndarray:
+        """Persistent staging buffer for (kind, parity, shape).  Shapes
+        are plan-bucketed, so the dict stays O(#buckets) and steady-state
+        lookups allocate nothing."""
+        key = (kind, parity, shape, np.dtype(dtype).str)
+        buf = self._staging.get(key)
+        if buf is None:
+            buf = np.zeros(shape, dtype)
+            self._staging[key] = buf
+            self.staging_allocs += 1
+        return buf
 
     # ---------------------------------------------------------- KV fetch
 
@@ -202,18 +299,53 @@ class TransferEngine:
                     l_pad: int, s_pad: int):
         """Copy host slices to device (the 'PCIe' transfer).
 
-        ls / s_strs are per-slot recompute lengths and streamed lengths.
-        Uniform batches take the fast whole-batch slice path; ragged
-        batches gather each slot's own [l_i, l_i + s_i) window into a
-        zero-padded (b, s_pad, ...) buffer before the device_put.
+        ls / s_strs are per-slot recompute lengths and streamed lengths;
+        l_pad / s_pad are the plan's bucket-padded static shapes.
+        Uniform batches take the whole-batch slice path; ragged batches
+        gather each slot's own [l_i, l_i + s_pad) window with one
+        batched strided take.  Both paths write into persistent staging
+        (positions beyond a slot's valid length carry stale-but-finite
+        bytes that attention masks to exactly zero weight).
+
+        Waits the layer's write-back fence first: the previous step's
+        store of this layer must land before its bytes are re-read.
+        Also waits the fence of the layer that last consumed this
+        parity's staging buffers: on CPU, jax.device_put zero-copies
+        aligned numpy buffers, so the device arrays handed to the
+        jitted layer may ALIAS the staging memory — that layer's
+        write-back fence resolves only after its outputs materialized,
+        i.e. after its (aliased) inputs were fully read, which makes
+        the overwrite safe.  When device_put copies instead (other
+        backends), the extra wait is a cheap no-op.
         """
-        uniform = bool((ls == ls[0]).all() and (s_strs == s_strs[0]).all())
-        if uniform:
-            h_np, k_np, v_np = self._slice_uniform(store, layer,
-                                                   int(ls[0]), l_pad, s_pad)
+        t0 = time.perf_counter()
+        store.wait_fence(layer)
+        if layer >= 2:
+            prev = layer - 2             # same parity, same step
         else:
-            h_np, k_np, v_np = self._gather_ragged(store, layer, ls,
-                                                   s_strs, l_pad, s_pad)
+            # wrap: the previous step's LAST same-parity layer (L-1 or
+            # L-2 depending on whether L is even — NOT always L-2)
+            n = store.num_layers
+            prev = n - 1 if (n - 1) & 1 == (layer & 1) else max(n - 2, 0)
+        store.wait_fence(prev)
+        with self._t_fence_lock:
+            self._t_fence += time.perf_counter() - t0
+        parity = layer & 1
+        b = store.batch
+        # activations: every slot's window starts at 0, so uniform and
+        # ragged share one whole-batch copy of the padded prefix
+        h_np = self._stage("h", parity,
+                           (b, max(l_pad, 1)) + store.act.shape[3:],
+                           store.act.dtype)
+        h_np[:] = store.act[layer, :, :max(l_pad, 1)]
+
+        uniform = bool((ls == ls[0]).all())
+        if uniform:
+            k_np, v_np = self._slice_uniform(store, layer, int(ls[0]),
+                                             s_pad, parity)
+        else:
+            k_np, v_np = self._gather_ragged(store, layer, ls, s_pad,
+                                             parity)
         h_res = jax.device_put(h_np)
         if store.compress == "int4":
             k_str = tuple(jax.device_put(a) for a in k_np)
@@ -226,47 +358,62 @@ class TransferEngine:
         nbytes = (h_res.nbytes if l_pad else 0) + (kv_bytes if s_pad else 0)
         return h_res, k_str, v_str, nbytes
 
-    def _slice_uniform(self, store, layer, l, l_pad, s_pad):
-        h_np = store.act[layer, :, :max(l_pad, 1)]
-        sl = slice(l, l + s_pad) if s_pad else slice(0, 1)
+    def _kv_bufs(self, store: HostKVStore):
         if store.compress == "int4":
-            k_np = tuple(np.ascontiguousarray(b[layer, :, sl])
-                         for b in store.kq)
-            v_np = tuple(np.ascontiguousarray(b[layer, :, sl])
-                         for b in store.vq)
-        else:
-            k_np = np.ascontiguousarray(store.k[layer, :, sl])
-            v_np = np.ascontiguousarray(store.v[layer, :, sl])
-        return h_np, k_np, v_np
+            return (("kp", "ks", "kz"), tuple(store.kq),
+                    ("vp", "vs", "vz"), tuple(store.vq))
+        return (("k",), (store.k,), ("v",), (store.v,))
 
-    def _gather_ragged(self, store, layer, ls, s_strs, l_pad, s_pad):
-        b = store.batch
-        h_np = np.zeros((b, max(l_pad, 1)) + store.act.shape[3:],
-                        store.act.dtype)
-        for i in range(b):
-            li = int(ls[i])
-            if li:
-                h_np[i, :li] = store.act[layer, i, :li]
+    def _slice_uniform(self, store, layer, l, s_pad, parity):
+        """Whole-batch window [l, l + s_pad) copied into staging."""
+        sl = slice(l, l + s_pad) if s_pad else slice(0, 1)
+        k_names, k_srcs, v_names, v_srcs = self._kv_bufs(store)
 
-        def gather(bufs):
+        def stage_copy(names, srcs):
             outs = []
-            for buf in bufs:
-                out = np.zeros((b, max(s_pad, 1)) + buf.shape[3:],
-                               buf.dtype)
-                for i in range(b):
-                    li, si = int(ls[i]), int(s_strs[i])
-                    if si:
-                        out[i, :si] = buf[layer, i, li:li + si]
+            for name, src in zip(names, srcs):
+                win = src[layer, :, sl]
+                out = self._stage(name, parity, win.shape, src.dtype)
+                out[:] = win
                 outs.append(out)
             return outs
 
+        k_np = stage_copy(k_names, k_srcs)
+        v_np = stage_copy(v_names, v_srcs)
         if store.compress == "int4":
-            k_np = tuple(gather(store.kq))
-            v_np = tuple(gather(store.vq))
-        else:
-            (k_np,) = gather([store.k])
-            (v_np,) = gather([store.v])
-        return h_np, k_np, v_np
+            return tuple(k_np), tuple(v_np)
+        return k_np[0], v_np[0]
+
+    def _gather_ragged(self, store, layer, ls, s_pad, parity):
+        """Vectorized ragged gather: one batched strided take per buffer
+        (no per-slot Python loop, no allocation).  Slot i's window is
+        [l_i, l_i + s_pad), clamped to the preallocated max_len; rows
+        beyond the slot's valid streamed length are masked in attention.
+        """
+        b, max_len = store.batch, store.max_len
+        w = max(s_pad, 1)
+        if s_pad:
+            idx = np.minimum(ls[:, None] + np.arange(s_pad), max_len - 1)
+            flat_idx = (np.arange(b)[:, None] * max_len + idx).ravel()
+        k_names, k_srcs, v_names, v_srcs = self._kv_bufs(store)
+
+        def take(names, srcs):
+            outs = []
+            for name, src in zip(names, srcs):
+                tail = src.shape[3:]
+                out = self._stage(name, parity, (b, w) + tail, src.dtype)
+                if s_pad:
+                    flat_src = src[layer].reshape(b * max_len, -1)
+                    np.take(flat_src, flat_idx, axis=0,
+                            out=out.reshape(b * s_pad, -1))
+                outs.append(out)
+            return outs
+
+        k_np = take(k_names, k_srcs)
+        v_np = take(v_names, v_srcs)
+        if store.compress == "int4":
+            return tuple(k_np), tuple(v_np)
+        return k_np[0], v_np[0]
 
     # ------------------------------------------------------ weight fetch
     # Weight offloading (paper's throughput mode, §3.2/§3.3): layer
@@ -320,7 +467,9 @@ class ComputeStep:
     """Jitted device compute for one offload decode step: per-layer
     recompute + merged segment attention + FFN, plus the embed/unembed
     ends.  Per-slot positions and valid lengths make the same compiled
-    function serve uniform static batches and ragged continuous slots."""
+    function serve uniform static batches and ragged continuous slots —
+    the runtime always passes (b,) valid vectors, so one trace per
+    (l_pad, s_pad) bucket pair covers both."""
 
     def __init__(self, cfg: ModelConfig, compress: Optional[str] = None,
                  group: int = 32):
@@ -329,6 +478,14 @@ class ComputeStep:
         self.group = group
         self.layer = jax.jit(self._layer_step,
                              static_argnames=("l_pad", "s_pad"))
+
+    def traces(self) -> int:
+        """Number of compiled variants of the per-layer step (-1 when
+        the running jax version exposes no cache-size hook)."""
+        try:
+            return int(self.layer._cache_size())
+        except Exception:
+            return -1
 
     def embed(self, params, token: Array, positions: Array) -> Array:
         return L.embed(token, params["embed"], self.cfg, positions)
@@ -340,8 +497,8 @@ class ComputeStep:
     def _layer_step(self, x, lp, h_res, k_str, v_str, positions,
                     l_valid, s_valid, l_pad: int, s_pad: int):
         """positions: (b, 1) per-slot decode positions; l_valid: None
-        (uniform, h_res exact) or (b,) per-slot recompute lengths;
-        s_valid: scalar or (b,) streamed valid lengths."""
+        (h_res exact) or (b,) per-slot recompute lengths; s_valid:
+        scalar or (b,) streamed valid lengths."""
         cfg = self.cfg
         b = x.shape[0]
         h = L.apply_norm(x, lp["ln1"], cfg.rms_eps)
@@ -377,10 +534,21 @@ class ComputeStep:
 class StepStats:
     t_total: float
     t_wait_transfer: float      # GPU idle waiting on host data
-    t_compute: float
+    t_compute: float            # dt - t_wait: device compute + dispatch
     bytes_transferred: int
     split_l: int                             # max over slots
     split_ls: Optional[Tuple[int, ...]] = None   # per-slot (ragged steps)
+    t_store: float = 0.0        # host write-back drained in this step's
+                                # window (overlapped, NOT part of t_total
+                                # critical path)
+    t_fence: float = 0.0        # portion of t_wait_transfer that fetch
+                                # workers spent on write-back fences —
+                                # mostly overlapped device compute, so
+                                # t_compute underestimates device-busy
+                                # by up to this much
+    retraces: int = 0           # new XLA traces of the layer step
+    l_pad: int = 0              # static shapes the step ran with
+    s_pad: int = 0
 
 
 class OffloadDecodeRuntime:
@@ -388,9 +556,10 @@ class OffloadDecodeRuntime:
     host-offloaded KV cache.
 
     mode: "flexgen" (full KV streamed) | "kvpr" (partial recompute).
-    Splits come from the scheduler's ExecutionPlan — never solved here.
-    ``step()`` advances every active slot one token (slots may sit at
-    ragged positions); ``decode()`` is the static-batch loop on top.
+    Splits AND pad geometry come from the scheduler's ExecutionPlan —
+    never solved or chosen here.  ``step()`` advances every active slot
+    one token (slots may sit at ragged positions); ``decode()`` is the
+    static-batch loop on top.
     """
 
     def __init__(self, cfg: ModelConfig, params,
@@ -408,6 +577,7 @@ class OffloadDecodeRuntime:
         self.schedule = schedule
         self.align = align
         self.compress = compress
+        self.group = group
         self.offload_weights = offload_weights
         host_layers = None
         if offload_weights:
@@ -419,6 +589,8 @@ class OffloadDecodeRuntime:
         self.xfer = TransferEngine(n_copy_threads, host_layers,
                                    fine_grained)
         self.compute = ComputeStep(cfg, compress=compress, group=group)
+        self._t_store = 0.0
+        self._t_store_lock = threading.Lock()
 
     # ------------------------------------------------------------ planning
 
@@ -426,21 +598,46 @@ class OffloadDecodeRuntime:
         """The runtime's schedule, from the scheduler's plan cache."""
         return self.scheduler.plan_for(
             self.cfg, batch, mode=self.mode, schedule=self.schedule,
-            align=self.align, compress=self.compress, dtype_bytes=4)
+            align=self.align, compress=self.compress, dtype_bytes=4,
+            group=self.group)
+
+    # ----------------------------------------------------------- plumbing
+
+    def _store_layer(self, store: HostKVStore, li: int, k_new, v_new,
+                     h_new, pos) -> None:
+        """Write-back task (store pool): block on the device values
+        *here* — off the critical path — then append to host memory."""
+        t0 = time.perf_counter()
+        store.append(li, np.asarray(k_new), np.asarray(v_new),
+                     np.asarray(h_new), pos)
+        with self._t_store_lock:
+            self._t_store += time.perf_counter() - t0
+
+    def _drain_t_store(self) -> float:
+        with self._t_store_lock:
+            t, self._t_store = self._t_store, 0.0
+        return t
 
     # ---------------------------------------------------------------- step
 
     def step(self, store: HostKVStore, token,
              plan: Optional[ExecutionPlan] = None, *,
-             active: Optional[np.ndarray] = None,
-             pad_to: Optional[int] = None) -> Tuple[Array, StepStats]:
+             active: Optional[np.ndarray] = None
+             ) -> Tuple[Array, StepStats]:
         """One decode step for every slot; returns (logits, stats).
 
         Slots advance at their own positions (``store.seq_lens``); the
-        plan supplies one SplitDecision per distinct (bucketed) length.
-        ``active`` masks which slots store their new token and advance —
-        inactive slots (empty, awaiting admission) compute garbage that
-        is fully masked out of attention and never written back.
+        plan supplies one SplitDecision per distinct (bucketed) length
+        plus the step's static pad geometry.  ``active`` masks which
+        slots store their new token and advance — inactive slots (empty,
+        awaiting admission) compute garbage that is fully masked out of
+        attention and never written back.
+
+        The returned logits are NOT blocked on: callers sample on-device
+        and pull a single small token array per step, so device compute
+        overlaps the host-side loop.  Host write-back of the new token
+        is fenced per layer — this step's store of layer li gates only
+        the next step's fetch of layer li.
         """
         cfg = self.cfg
         params = self.params
@@ -449,28 +646,22 @@ class OffloadDecodeRuntime:
         seq_lens = np.asarray(store.seq_lens, np.int64).copy()
         if active is None:
             active = np.ones(b, bool)
-        uniform = bool((seq_lens == seq_lens[0]).all())
-        if uniform:
-            split = plan.split_for(int(seq_lens[0]))
-            ls = np.full(b, split.l, np.int64)
-        else:
-            ls = np.array([d.l for d in plan.splits_for_slots(seq_lens)],
-                          np.int64)
-        s_strs = seq_lens - ls
-        l_pad = int(ls.max())
-        s_exact = int(s_strs.max())
-        if pad_to is None:
-            s_pad = s_exact
-        else:
-            s_pad = min(-(-s_exact // pad_to) * pad_to,
-                        store.max_len - int(ls.min()))
+        geom = plan.step_geometry(seq_lens, max_len=store.max_len)
+        ls, s_strs = geom.ls, geom.s_strs
+        l_pad, s_pad = geom.l_pad, geom.s_pad
 
         t0 = time.perf_counter()
+        traces0 = self.compute.traces()
         positions = jnp.asarray(seq_lens[:, None], jnp.int32)
         x = self.compute.embed(params, jnp.asarray(token), positions)
-        l_valid = None if uniform else jnp.asarray(ls, jnp.int32)
-        s_valid = (jnp.asarray(s_exact, jnp.int32) if uniform
-                   else jnp.asarray(s_strs, jnp.int32))
+        # always (b,) valid vectors: uniform and ragged steps share the
+        # same compiled variant per (l_pad, s_pad) bucket
+        l_valid = jnp.asarray(ls, jnp.int32)
+        s_valid = jnp.asarray(s_strs, jnp.int32)
+        if geom.uniform and active.all():
+            store_pos = int(seq_lens[0])
+        else:
+            store_pos = np.where(active, seq_lens, -1)
 
         t_wait = 0.0
         nbytes_total = 0
@@ -480,7 +671,6 @@ class OffloadDecodeRuntime:
                  else None)
         fut = self.xfer.submit(self.xfer.fetch_layer, store, 0, ls,
                                s_strs, l_pad, s_pad)
-        new_kv = []
         for li in range(cfg.num_layers):
             tw0 = time.perf_counter()
             if self.offload_weights:
@@ -499,37 +689,32 @@ class OffloadDecodeRuntime:
             x, k_new, v_new, h_new = self.compute.layer(
                 x, lp, h_res, k_str, v_str, positions, l_valid, s_valid,
                 l_pad=l_pad, s_pad=s_pad)
-            new_kv.append((li, k_new, v_new, h_new))
+            # paper Alg. 1 store_cache/store_activation, fence-grained:
+            # submit the write-back NOW; only the NEXT step's fetch of
+            # this layer waits on it, so stores overlap the tail of this
+            # step and the head of the next
+            store.set_fence(li, self.xfer.submit_store(
+                self._store_layer, store, li, k_new, v_new, h_new,
+                store_pos))
 
         logits = self.compute.finalize(params, x)
-        logits.block_until_ready()
-
-        # store new KV + activations back to host (async), then the
-        # paper's Alg. 1 `synchronize()`: the next step's fetches must
-        # not race with this step's stores.
-        if uniform and active.all():
-            store_pos = int(seq_lens[0])
-        else:
-            store_pos = np.where(active, seq_lens, -1)
-        store_futs = [
-            self.xfer.submit(store.append, li, np.asarray(k_new),
-                             np.asarray(v_new), np.asarray(h_new),
-                             store_pos)
-            for (li, k_new, v_new, h_new) in new_kv]
-        for f in store_futs:
-            f.result()
         store.seq_lens[active] += 1
 
         dt = time.perf_counter() - t0
-        stats = StepStats(dt, t_wait, dt - t_wait, nbytes_total, l_pad,
-                          None if uniform else tuple(int(l) for l in ls))
+        traces1 = self.compute.traces()
+        stats = StepStats(
+            dt, t_wait, dt - t_wait, nbytes_total, int(ls.max()),
+            None if geom.uniform else tuple(int(l) for l in ls),
+            t_store=self._drain_t_store(),
+            t_fence=self.xfer.drain_t_fence(),
+            retraces=max(0, traces1 - traces0) if traces0 >= 0 else 0,
+            l_pad=l_pad, s_pad=s_pad)
         return logits, stats
 
     # -------------------------------------------------------------- decode
 
     def decode(self, store: HostKVStore, first_token: np.ndarray,
-               gen_len: int, pad_to: Optional[int] = None,
-               sample_fn=None, key=None
+               gen_len: int, sample_fn=None, key=None
                ) -> Tuple[np.ndarray, List[StepStats]]:
         """Generate `gen_len` tokens for a uniform batch.
 
@@ -538,14 +723,15 @@ class OffloadDecodeRuntime:
         generated token — engines mirror that consumption to keep their
         own PRNG stream in sync with the resident path, so any change
         here must keep the one-split-per-token contract.
-        Returns (tokens, stats).
+        Sampling runs on-device; the only per-step host transfer is the
+        (b,) token array itself.  Returns (tokens, stats).
         """
         token = jnp.asarray(first_token)
         plan = self.plan_for(int(token.shape[0]))
         stats: List[StepStats] = []
         out_tokens = []
         for _ in range(gen_len):
-            logits, st = self.step(store, token, plan, pad_to=pad_to)
+            logits, st = self.step(store, token, plan)
             if sample_fn is None:
                 token = jnp.argmax(logits[:, -1:], axis=-1).astype(
                     jnp.int32)
@@ -556,6 +742,13 @@ class OffloadDecodeRuntime:
                 token = sample_fn(logits[:, -1], sub)[:, None]
             out_tokens.append(np.asarray(token))
             stats.append(st)
+        # leave the store consistent for the caller (and surface any
+        # write-back error): drain the final step's fences
+        t0 = time.perf_counter()
+        store.sync()
+        if stats:
+            stats[-1].t_store += self._drain_t_store()
+            stats[-1].t_total += time.perf_counter() - t0
         return np.concatenate(out_tokens, axis=1), stats
 
 

@@ -18,6 +18,15 @@ the schedule (§3.3).  This module is the scheduler half of that loop:
                         ``l <= seq_len`` always holds), and memoizes per
                         (bucket, batch) so ragged per-slot lookups under
                         continuous batching share work across slots.
+                        The plan also owns the *pad geometry* of the
+                        decode hot path: every decision carries
+                        ``(l_pad, s_pad)`` rounded UP to ``pad_every``
+                        buckets, and ``step_geometry`` aggregates them
+                        per step, so the jitted layer step's static
+                        shapes take O(#buckets) distinct values and the
+                        XLA trace cache stops growing with sequence
+                        length.  Runtimes and engines never choose pads
+                        themselves.
   - ``Scheduler``     — the plan cache + profiler glue.  Engines ask it
                         for a plan; identical requests hit the cache,
                         and ``invalidate()`` drops all plans (e.g. after
@@ -34,7 +43,10 @@ import threading
 from collections import OrderedDict
 from typing import Dict, List, Optional, Sequence, Tuple
 
-from repro.core.cost_model import HardwareProfile, Workload
+import numpy as np
+
+from repro.core.cost_model import (HardwareProfile, Workload,
+                                   int4_kv_bytes_per_el)
 from repro.core.solver import SplitDecision, optimal_split
 
 
@@ -53,6 +65,23 @@ class PlanKey:
     kv_dim: int
     dtype_bytes: int
     compress: Optional[str]
+    # effective link bytes per KV element (None -> dtype_bytes); set by
+    # the Scheduler from `compress` so the solver prices the compressed
+    # stream correctly instead of ~8x over for int4
+    kv_bytes_per_el: Optional[float] = None
+
+
+@dataclasses.dataclass
+class StepGeometry:
+    """Everything the runtime needs to execute one decode step: per-slot
+    recompute / streamed lengths and the bucket-padded static shapes for
+    the jitted layer.  Produced only by ``ExecutionPlan.step_geometry``
+    — the runtime executes it verbatim."""
+    ls: np.ndarray               # (b,) per-slot recompute lengths
+    s_strs: np.ndarray           # (b,) per-slot streamed valid lengths
+    l_pad: int                   # static recompute buffer length
+    s_pad: int                   # static streamed buffer length
+    uniform: bool                # every slot at the same length
 
 
 class ExecutionPlan:
@@ -68,9 +97,14 @@ class ExecutionPlan:
     a batch-1 workload since each slot streams independently.
     """
 
-    def __init__(self, key: PlanKey, resolve_every: int = 16):
+    def __init__(self, key: PlanKey, resolve_every: int = 16,
+                 pad_every: Optional[int] = None):
         self.key = key
         self.resolve_every = max(1, int(resolve_every))
+        # pad bucket for the static shapes of the jitted layer step; one
+        # XLA trace serves pad_every tokens of sequence growth
+        self.pad_every = max(1, int(pad_every if pad_every is not None
+                                    else self.resolve_every))
         self._splits: Dict[Tuple[int, int], SplitDecision] = {}
         self._lock = threading.Lock()
         self.solves = 0
@@ -80,9 +114,17 @@ class ExecutionPlan:
         b = (seq_len // self.resolve_every) * self.resolve_every
         return b if b > 0 else seq_len
 
+    def _pad_up(self, n: int) -> int:
+        return -(-int(n) // self.pad_every) * self.pad_every if n > 0 else 0
+
     def split_for(self, seq_len: int,
                   batch: Optional[int] = None) -> SplitDecision:
-        """Decision for the current sequence length (bucketed, memoized)."""
+        """Decision for the current sequence length (bucketed, memoized).
+
+        The returned decision carries pad geometry for THIS seq_len:
+        ``l_pad`` / ``s_pad`` rounded up to ``pad_every`` (the solve is
+        memoized per bucket; the pads are recomputed per lookup since the
+        streamed length keeps growing inside a solve bucket)."""
         self.lookups += 1
         if seq_len <= 0:
             return SplitDecision.flexgen(0, self.key.schedule)
@@ -91,19 +133,22 @@ class ExecutionPlan:
         ck = (s, batch)
         with self._lock:
             hit = self._splits.get(ck)
-        if hit is not None:
-            return hit
-        k = self.key
-        if k.mode == "flexgen":
-            d = SplitDecision.flexgen(s, k.schedule)
-        else:
-            wl = Workload(batch=batch, seq_len=s, d_model=k.d_model,
-                          kv_dim=k.kv_dim, dtype_bytes=k.dtype_bytes)
-            d = optimal_split(wl, k.hw, schedule=k.schedule, align=k.align)
-        with self._lock:
-            self._splits[ck] = d
-            self.solves += 1
-        return d
+        if hit is None:
+            k = self.key
+            if k.mode == "flexgen":
+                hit = SplitDecision.flexgen(s, k.schedule)
+            else:
+                wl = Workload(batch=batch, seq_len=s, d_model=k.d_model,
+                              kv_dim=k.kv_dim, dtype_bytes=k.dtype_bytes,
+                              kv_bytes_per_el=k.kv_bytes_per_el)
+                hit = optimal_split(wl, k.hw, schedule=k.schedule,
+                                    align=k.align)
+            with self._lock:
+                self._splits[ck] = hit
+                self.solves += 1
+        return dataclasses.replace(
+            hit, l_pad=self._pad_up(hit.l),
+            s_pad=self._pad_up(seq_len - hit.l))
 
     def splits_for_slots(self, seq_lens: Sequence[int]
                          ) -> List[SplitDecision]:
@@ -111,6 +156,35 @@ class ExecutionPlan:
         batching): each slot's KV streams independently, so each is a
         batch-1 workload at its own length."""
         return [self.split_for(int(s), batch=1) for s in seq_lens]
+
+    def step_geometry(self, seq_lens: Sequence[int],
+                      max_len: Optional[int] = None) -> StepGeometry:
+        """Geometry for one decode step over every slot.
+
+        Aggregates the per-slot decisions into the step's static shapes:
+        ``l_pad`` / ``s_pad`` are the bucket-padded maxima over slots
+        (the max of bucket multiples is a bucket multiple, so the trace
+        count stays O(#buckets)), clamped to the store capacity
+        ``max_len`` so padded fetch windows never run past the
+        preallocated host buffers."""
+        seq = np.asarray(seq_lens, np.int64)
+        uniform = bool((seq == seq[0]).all())
+        if uniform:
+            decs = [self.split_for(int(seq[0]))]
+            ls = np.full(seq.shape[0], decs[0].l, np.int64)
+        else:
+            decs = self.splits_for_slots(seq)
+            ls = np.array([d.l for d in decs], np.int64)
+        s_strs = seq - ls
+        # max over bucket multiples is a bucket multiple: the step's
+        # static shapes aggregate the decisions' own pad geometry
+        l_pad = max(d.l_pad for d in decs)
+        s_pad = max(d.s_pad for d in decs)
+        if max_len is not None:
+            l_pad = min(l_pad, int(max_len))
+            s_pad = min(s_pad, int(max_len) - int(ls.min()))
+        return StepGeometry(ls=ls, s_strs=s_strs, l_pad=l_pad,
+                            s_pad=s_pad, uniform=uniform)
 
 
 class Scheduler:
@@ -128,9 +202,11 @@ class Scheduler:
                                  # workloads shouldn't grow the cache forever
 
     def __init__(self, hw: Optional[HardwareProfile] = None,
-                 resolve_every: int = 16):
+                 resolve_every: int = 16,
+                 pad_every: Optional[int] = None):
         self._hw = hw
         self.resolve_every = resolve_every
+        self.pad_every = pad_every
         self._plans: "OrderedDict[PlanKey, ExecutionPlan]" = OrderedDict()
         self._lock = threading.Lock()
         self.hits = 0
@@ -145,15 +221,24 @@ class Scheduler:
 
     # ------------------------------------------------------------ planning
 
+    @staticmethod
+    def _kv_el_bytes(compress: Optional[str], dtype_bytes: int,
+                     group: int) -> Optional[float]:
+        if compress == "int4":
+            return int4_kv_bytes_per_el(group)
+        return None                          # uncompressed: dtype_bytes
+
     def plan_for(self, cfg, batch: int, mode: str = "kvpr",
                  schedule: str = "row", align: int = 1,
                  compress: Optional[str] = None,
-                 dtype_bytes: int = 4) -> ExecutionPlan:
+                 dtype_bytes: int = 4, group: int = 32) -> ExecutionPlan:
         """Plan for a model config (engines' entry point)."""
         key = PlanKey(hw=self.hw, mode=mode, schedule=schedule, align=align,
                       batch=batch, d_model=cfg.d_model,
                       kv_dim=cfg.num_kv_heads * cfg.dh,
-                      dtype_bytes=dtype_bytes, compress=compress)
+                      dtype_bytes=dtype_bytes, compress=compress,
+                      kv_bytes_per_el=self._kv_el_bytes(
+                          compress, dtype_bytes, group))
         return self._get(key)
 
     def plan_for_workload(self, wl: Workload, mode: str = "kvpr",
@@ -162,7 +247,8 @@ class Scheduler:
         """Plan from a raw Workload (analytic pipeline entry point)."""
         key = PlanKey(hw=self.hw, mode=mode, schedule=schedule, align=align,
                       batch=wl.batch, d_model=wl.d_model, kv_dim=wl.kv_dim,
-                      dtype_bytes=wl.dtype_bytes, compress=compress)
+                      dtype_bytes=wl.dtype_bytes, compress=compress,
+                      kv_bytes_per_el=wl.kv_bytes_per_el)
         return self._get(key)
 
     def _get(self, key: PlanKey) -> ExecutionPlan:
@@ -173,7 +259,7 @@ class Scheduler:
                 self._plans.move_to_end(key)
                 return plan
             self.misses += 1
-            plan = ExecutionPlan(key, self.resolve_every)
+            plan = ExecutionPlan(key, self.resolve_every, self.pad_every)
             self._plans[key] = plan
             while len(self._plans) > self._MAX_PLANS:
                 self._plans.popitem(last=False)

@@ -31,6 +31,13 @@ class SplitDecision:
     t_act: float
     schedule: str               # "row" | "column"
     bound: int                  # upper bound used (prompt len s for column)
+    # Pad geometry, filled by the ExecutionPlan: static shapes for the
+    # jitted layer step, rounded up to the plan's pad bucket so the XLA
+    # trace cache converges to O(#buckets) entries instead of retracing
+    # as the streamed length grows token by token.  Valid lengths are
+    # masked exactly in attention, so padding never changes tokens.
+    l_pad: int = 0              # recompute buffer length (>= l)
+    s_pad: int = 0              # streamed KV buffer length (>= s' - l)
 
     @classmethod
     def flexgen(cls, seq_len: int, schedule: str = "row") -> "SplitDecision":
@@ -54,15 +61,16 @@ def optimal_split(wl: Workload, hw: HardwareProfile,
 
     B = wl.batch
     p = wl.dtype_bytes
+    p_kv = wl.kv_el_bytes        # compressed streams move fewer bytes/el
     h = wl.d_model
     kv = wl.kv_dim
 
     # t(l) = include_act * (B l h p)/v_com
-    #        + max( 4 B l h kv / v_gpu , 2 B (s-l) kv p / v_com )
+    #        + max( 4 B l h kv / v_gpu , 2 B (s-l) kv p_kv / v_com )
     # crossing point of the two max arms:
-    #   4 B h kv / v_gpu * l = 2 B kv p / v_com * (s - l)
+    #   4 B h kv / v_gpu * l = 2 B kv p_kv / v_com * (s - l)
     a = 4 * B * h * kv / hw.v_gpu              # recompute slope
-    c = 2 * B * kv * p / hw.v_com              # kv transfer slope
+    c = 2 * B * kv * p_kv / hw.v_com           # kv transfer slope
     l_cross = c * s / (a + c) if (a + c) > 0 else 0.0
 
     # The act-transfer term grows in l, so if it is included the optimum can

@@ -63,19 +63,19 @@ def main(argv=None):
             for i in range(args.requests)]
 
     sched = Scheduler(profile_system() if args.profile else TPU_V5E)
-    t0 = time.perf_counter()
     if args.mode.startswith("continuous"):
-        gens = ContinuousBatchingEngine(
+        engine = ContinuousBatchingEngine(
             model, params, num_slots=args.slots,
             max_len=args.prompt + args.gen + 8,
             mode="offload" if args.mode.endswith("offload") else "resident",
             scheduler=sched, kvpr=not args.no_kvpr,
-            compress=args.compress).serve(reqs)
+            compress=args.compress)
     else:
-        gens = ServingEngine(model, params, mode=args.mode,
-                             kvpr=not args.no_kvpr, sampler=args.sampler,
-                             scheduler=sched,
-                             compress=args.compress).serve(reqs)
+        engine = ServingEngine(model, params, mode=args.mode,
+                               kvpr=not args.no_kvpr, sampler=args.sampler,
+                               scheduler=sched, compress=args.compress)
+    t0 = time.perf_counter()
+    gens = engine.serve(reqs)
     dt = time.perf_counter() - t0
 
     total = sum(len(g.tokens) for g in gens)
@@ -84,6 +84,10 @@ def main(argv=None):
           f"{len(reqs)} requests, {total} tokens in {dt:.2f}s "
           f"({total/dt:.1f} tok/s) "
           f"plan_cache[hits={sched.hits} misses={sched.misses}]")
+    rt = getattr(engine, "runtime", None)
+    if rt is not None:
+        print(f"  hot path: xla_traces={rt.compute.traces()} "
+              f"staging_buffers={rt.xfer.staging_allocs}")
     for g in gens[:4]:
         print(f"  uid={g.uid}: {np.asarray(g.tokens)[:8]}...")
 

@@ -183,13 +183,15 @@ class ContinuousBatchingEngine:
             for i, s in enumerate(slots):
                 if s.uid < 0 and queue:
                     admit(i)
-            # pad_to keeps the jitted layer's static streamed length on
-            # resolve_every-sized buckets: without it every token grows
-            # s_pad by 1 and forces an XLA recompile per step
+            # the plan owns the pad geometry: step_geometry buckets the
+            # jitted layer's static shapes, so the trace cache stays at
+            # O(#buckets) instead of recompiling as sequences grow
             logits, _ = self.runtime.step(
-                store, jnp.asarray(tokens), plan, active=active.copy(),
-                pad_to=plan.resolve_every)
+                store, jnp.asarray(tokens), plan, active=active.copy())
             nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1),
                              np.int32)
             self._advance(slots, tokens, nxt, done, release)
+        # drain the final step's write-back fences: surfaces any store
+        # error and leaves the pool idle before the store is dropped
+        store.sync()
         return [done[r.uid] for r in reqs]

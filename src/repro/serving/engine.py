@@ -96,6 +96,14 @@ class ServingEngine:
         self._prefill = jax.jit(self.model.prefill,
                                 static_argnames=("max_len",))
         self._decode = jax.jit(self.model.decode_step)
+        # one persistent runtime: jit traces and the transfer engine's
+        # staging buffers survive across serve() calls
+        self.runtime = None
+        if mode == "offload":
+            self.runtime = OffloadDecodeRuntime(
+                self.cfg, params, scheduler=self.scheduler,
+                mode="kvpr" if kvpr else "flexgen",
+                schedule=schedule, align=align, compress=compress)
 
     # -------------------------------------------------------------- serve
 
@@ -154,11 +162,7 @@ class ServingEngine:
         self.key, k = jax.random.split(self.key)
         first = self.sample(logits[:, -1], k)[:, None]
 
-        rt = OffloadDecodeRuntime(
-            cfg, self.params, scheduler=self.scheduler,
-            mode="kvpr" if self.kvpr else "flexgen",
-            schedule=self.schedule, align=self.align,
-            compress=self.compress)
+        rt = self.runtime
         t0 = time.perf_counter()
         # Hand the runtime the engine's PRNG stream; the runtime splits it
         # once per step exactly as the resident loop does, so the two

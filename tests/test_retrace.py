@@ -1,0 +1,152 @@
+"""Hot-path regression tests: the steady-state decode loop must be
+retrace-free (XLA trace cache bounded by the plan's pad buckets) and
+allocation-free (persistent staging reused across layers and steps),
+and bucket-padded execution must stay token-identical to the resident
+reference.  Guards the perf properties of the fenced/staged runtime."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.cost_model import A100_PCIE4
+from repro.core.runtime import (HostKVStore, OffloadDecodeRuntime,
+                                prefill_with_activations)
+from repro.core.scheduler import Scheduler
+from repro.models.transformer import Model
+from repro.serving.continuous import ContinuousBatchingEngine
+from repro.serving.engine import Request, ServingEngine
+
+GEN = 33          # >= 32 generated tokens crosses several pad buckets
+
+
+@pytest.fixture(scope="module")
+def tiny_setup():
+    cfg = get_smoke_config("tinyllama-1.1b")
+    model = Model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _spill(cfg, model, params, toks, gen, compress=None):
+    logits, ks, vs, hs = prefill_with_activations(model, params, toks)
+    first = np.asarray(np.argmax(logits, axis=-1), np.int32)
+    store = HostKVStore(cfg, toks.shape[0], toks.shape[1] + gen + 2,
+                        compress=compress)
+    store.bulk_fill(np.asarray(ks), np.asarray(vs), np.asarray(hs),
+                    toks.shape[1])
+    return store, first
+
+
+def _distinct_geometries(plan, start, gen, max_len):
+    """Replay the plan over the decoded range: the trace count must be
+    bounded by the number of distinct (l_pad, s_pad) pairs it emits."""
+    return {(g.l_pad, g.s_pad)
+            for g in (plan.step_geometry([s] * 2, max_len=max_len)
+                      for s in range(start, start + gen))}
+
+
+@pytest.mark.parametrize("compress", [None, "int4"])
+def test_uniform_decode_retrace_and_alloc_free(tiny_setup, compress):
+    """Steady state = zero retraces and zero staging allocations: decode
+    the same trajectory twice (fresh store, same runtime); the second
+    pass must add no traces and no buffers."""
+    cfg, model, params = tiny_setup
+    b, s = 2, 12
+    rng = np.random.default_rng(0)
+    toks = rng.integers(1, cfg.vocab_size, (b, s)).astype(np.int32)
+    rt = OffloadDecodeRuntime(cfg, params, A100_PCIE4, mode="kvpr",
+                              compress=compress)
+
+    store, first = _spill(cfg, model, params, toks, GEN, compress)
+    out1, stats1 = rt.decode(store, first, GEN)
+
+    # trace cache bounded by the plan's distinct pad geometries
+    plan = rt.plan_for(b)
+    n_geoms = len(_distinct_geometries(plan, s, GEN, store.max_len))
+    traces = rt.compute.traces()
+    if traces >= 0:
+        assert traces <= n_geoms
+    assert n_geoms <= GEN // plan.pad_every + 2   # buckets, not steps
+    assert sum(st.retraces for st in stats1) <= n_geoms
+
+    # warm pass: identical tokens, zero new traces, zero new staging
+    store2, first2 = _spill(cfg, model, params, toks, GEN, compress)
+    allocs0, traces0 = rt.xfer.staging_allocs, rt.compute.traces()
+    out2, stats2 = rt.decode(store2, first2, GEN)
+    np.testing.assert_array_equal(out1, out2)
+    assert rt.xfer.staging_allocs == allocs0
+    if traces0 >= 0:
+        assert rt.compute.traces() == traces0
+    assert sum(st.retraces for st in stats2) == 0
+
+
+def test_bucketed_padding_token_identity(tiny_setup):
+    """Bucket-padded, masked execution must emit exactly the tokens the
+    resident (unpadded) reference emits over a long decode."""
+    cfg, model, params = tiny_setup
+    b, s = 2, 12
+    rng = np.random.default_rng(1)
+    toks = jnp.asarray(rng.integers(1, cfg.vocab_size, (b, s)),
+                       jnp.int32)
+    lg, cache = model.prefill(params, toks, max_len=s + GEN + 2)
+    ref, tok = [], jnp.argmax(lg, axis=-1).astype(jnp.int32)
+    for _ in range(GEN + 1):
+        ref.append(np.asarray(tok))
+        lg, cache = model.decode_step(params, cache, tok)
+        tok = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+    ref = np.concatenate(ref, axis=1)
+
+    rt = OffloadDecodeRuntime(cfg, params, A100_PCIE4, mode="kvpr")
+    store, first = _spill(cfg, model, params, np.asarray(toks), GEN)
+    np.testing.assert_array_equal(first, ref[:, :1])
+    out, _ = rt.decode(store, first, GEN)
+    np.testing.assert_array_equal(out, ref[:, 1:GEN + 1])
+
+
+def test_ragged_continuous_retrace_bounded(tiny_setup):
+    """Continuous batching (ragged slots, mid-decode admission) shares
+    the uniform path's traces; a second serve() over the same workload
+    must be completely retrace- and allocation-free."""
+    cfg, model, params = tiny_setup
+    rng = np.random.default_rng(2)
+    reqs = [Request(uid=i,
+                    prompt=rng.integers(1, cfg.vocab_size,
+                                        8 + 3 * i).astype(np.int32),
+                    max_new_tokens=10 + (i % 3))
+            for i in range(4)]
+    eng = ContinuousBatchingEngine(model, params, num_slots=2,
+                                   max_len=64, mode="offload",
+                                   scheduler=Scheduler(A100_PCIE4))
+    gens1 = eng.serve(reqs)
+    traces = eng.runtime.compute.traces()
+    if traces >= 0:
+        # every step shares a (l_pad, s_pad) variant; far fewer traces
+        # than total decode steps (~40 here)
+        assert traces <= 8
+    allocs0, traces0 = (eng.runtime.xfer.staging_allocs,
+                        eng.runtime.compute.traces())
+    gens2 = eng.serve(reqs)
+    assert eng.runtime.xfer.staging_allocs == allocs0
+    if traces0 >= 0:
+        assert eng.runtime.compute.traces() == traces0
+    for g1, g2 in zip(gens1, gens2):
+        np.testing.assert_array_equal(g1.tokens, g2.tokens)
+
+
+def test_serving_engine_reuses_runtime(tiny_setup):
+    """The offload engine keeps one runtime across serve() calls, so jit
+    traces and staging buffers persist (and StepStats report the new
+    t_store / retraces fields)."""
+    cfg, model, params = tiny_setup
+    rng = np.random.default_rng(3)
+    reqs = [Request(uid=i, prompt=rng.integers(
+        1, cfg.vocab_size, 12).astype(np.int32), max_new_tokens=6)
+        for i in range(2)]
+    eng = ServingEngine(model, params, mode="offload")
+    assert eng.runtime is not None
+    eng.serve(reqs)
+    allocs0 = eng.runtime.xfer.staging_allocs
+    assert allocs0 > 0
+    eng.serve(reqs)
+    assert eng.runtime.xfer.staging_allocs == allocs0

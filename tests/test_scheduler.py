@@ -82,10 +82,10 @@ def test_runtime_has_no_inline_solver():
 
 # -------------------------------------------------- runtime regressions
 
-def test_int4_pad_to_decode(tiny_setup):
-    """pad_to + compress="int4" used to crash on `store.k.shape` (the
-    quantized store has no `.k`); the padded length now comes from
-    store.max_len."""
+def test_int4_padded_decode(tiny_setup):
+    """Padded geometry + compress="int4" used to crash on
+    `store.k.shape` (the quantized store has no `.k`); pad windows are
+    now clamped to store.max_len by the plan's step_geometry."""
     cfg, model, params = tiny_setup
     b, s, gen = 2, 12, 3
     rng = np.random.default_rng(0)
@@ -97,9 +97,48 @@ def test_int4_pad_to_decode(tiny_setup):
     store.bulk_fill(np.asarray(ks), np.asarray(vs), np.asarray(hs), s)
     rt = OffloadDecodeRuntime(cfg, params, A100_PCIE4, mode="kvpr",
                               compress="int4")
-    out, stats = rt.decode(store, first, gen, pad_to=8)
+    out, stats = rt.decode(store, first, gen)
     assert out.shape == (b, gen)
     assert all(st.bytes_transferred > 0 for st in stats)
+    # the plan's pads are bucket multiples clamped to the store capacity
+    assert all(st.s_pad + min(st.split_ls or [st.split_l])
+               <= store.max_len for st in stats)
+
+
+def test_step_geometry_buckets_and_clamps(tiny_setup):
+    """Pad geometry is plan-owned: bucket multiples of pad_every, maxima
+    over ragged slots, clamped to the store capacity."""
+    cfg, _, _ = tiny_setup
+    sched = Scheduler(A100_PCIE4, resolve_every=16)
+    plan = sched.plan_for(cfg, batch=3, mode="flexgen")
+    g = plan.step_geometry([10, 50, 0], max_len=256)
+    assert not g.uniform
+    assert list(g.ls) == [0, 0, 0]           # flexgen never recomputes
+    assert list(g.s_strs) == [10, 50, 0]
+    assert g.s_pad == 64                     # 50 padded up to 16-bucket
+    assert g.s_pad % plan.pad_every == 0
+    # uniform case: one decision, pads still bucketed
+    gu = plan.step_geometry([40, 40, 40], max_len=256)
+    assert gu.uniform and gu.s_pad == 48
+    # clamp: padded window must stay inside the preallocated store
+    gc = plan.step_geometry([50, 50, 50], max_len=51)
+    assert gc.s_pad <= 51
+
+
+def test_int4_plan_prices_compressed_stream(tiny_setup):
+    """The int4 plan must build its Workload from effective streamed
+    bytes-per-element, not dtype_bytes=4 — otherwise the solver
+    overestimates KV bytes ~8x and picks an over-large recompute l."""
+    cfg, _, _ = tiny_setup
+    sched = Scheduler(A100_PCIE4)
+    pf = sched.plan_for(cfg, batch=4, mode="kvpr", dtype_bytes=4)
+    pq = sched.plan_for(cfg, batch=4, mode="kvpr", dtype_bytes=4,
+                        compress="int4")
+    assert pq.key.kv_bytes_per_el == pytest.approx(0.75)  # group=32
+    assert pf.key.kv_bytes_per_el is None
+    # cheaper streaming => recomputation pays off at most as often
+    for s in (64, 256, 1024, 4096):
+        assert pq.split_for(s).l <= pf.split_for(s).l
 
 
 def test_offload_respects_engine_sampler(tiny_setup):
