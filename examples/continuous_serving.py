@@ -1,18 +1,24 @@
-"""Example: continuous (iteration-level) batching — resident AND
-offloaded — plus int4 KV streaming, on a small dense model.
+"""Example: the request-level serving API under continuous
+(iteration-level) batching — resident AND offloaded — plus streaming,
+early EOS, and int4 KV streaming, on a small dense model.
 
   PYTHONPATH=src python examples/continuous_serving.py
 
-1. Serves a bursty queue of variable-length requests through the
-   ContinuousBatchingEngine (Orca-style slot admission; no cross-request
-   padding) and verifies against one-at-a-time serving.
-2. Re-serves the same queue with mode="offload": the paper's KVPR
-   host-offload runtime under iteration-level admission — requests are
-   prefetched into free HostKVStore slots mid-decode and the scheduler's
-   ExecutionPlan picks a per-slot split for the ragged lengths.  Exact:
-   generations still match one-at-a-time resident serving.
-3. Serves through the offload engine with the host KV store quantized
-   to int4 (paper §4.4 made executable), and reports token agreement.
+1. Serves a bursty queue of variable-length requests through
+   ``LLMEngine`` with ``EngineConfig(batching="continuous")``
+   (Orca-style slot admission; no cross-request padding) and verifies
+   against one-at-a-time serving.
+2. Re-serves the same queue with ``backend="offload"``: the paper's
+   KVPR host-offload runtime under iteration-level admission — requests
+   are prefilled into free HostKVStore slots mid-decode and the
+   scheduler's ExecutionPlan picks a per-slot split for the ragged
+   lengths.  Exact: generations still match one-at-a-time resident
+   serving.
+3. Streams a mixed batch (greedy + temperature + early-EOS requests)
+   with ``generate_stream`` — the EOS request frees its slot mid-decode
+   and the next queued request is admitted into it.
+4. Serves with the host KV store quantized to int4 (paper §4.4 made
+   executable), and reports token agreement.
 """
 import time
 
@@ -22,8 +28,8 @@ import numpy as np
 from repro.configs import get_smoke_config
 from repro.core.scheduler import Scheduler
 from repro.models.transformer import Model
-from repro.serving.continuous import ContinuousBatchingEngine
-from repro.serving.engine import Request, ServingEngine
+from repro.serving import (EngineConfig, LLMEngine, Request,
+                           SamplingParams)
 
 
 def main():
@@ -38,14 +44,17 @@ def main():
                                         ).astype(np.int32),
                     max_new_tokens=int(rng.integers(3, 8)))
             for i in range(6)]
+    one = LLMEngine.from_config(model, params,
+                                EngineConfig(backend="resident"))
 
     print(f"== continuous batching: {len(reqs)} requests, 2 slots ==")
     t0 = time.perf_counter()
-    cont = ContinuousBatchingEngine(model, params, num_slots=2,
-                                    max_len=64).serve(reqs)
+    cont = LLMEngine.from_config(
+        model, params,
+        EngineConfig(batching="continuous", slots=2, max_len=64)
+    ).generate(reqs)
     t_cont = time.perf_counter() - t0
-    eng = ServingEngine(model, params, mode="resident")
-    ok = all(np.array_equal(c.tokens, eng.serve([r])[0].tokens)
+    ok = all(np.array_equal(c.tokens, one.generate([r])[0].tokens)
              for r, c in zip(reqs, cont))
     print(f"   all {len(reqs)} generations match one-at-a-time serving: "
           f"{ok}  ({t_cont:.1f}s)")
@@ -53,23 +62,45 @@ def main():
     print("== continuous batching over the KVPR offload runtime ==")
     sched = Scheduler()          # profiles the machine once, caches plans
     t0 = time.perf_counter()
-    cont_off = ContinuousBatchingEngine(
-        model, params, num_slots=2, max_len=64, mode="offload",
-        scheduler=sched).serve(reqs)
+    cont_off = LLMEngine.from_config(
+        model, params,
+        EngineConfig(backend="offload", batching="continuous", slots=2,
+                     max_len=64), scheduler=sched).generate(reqs)
     t_off = time.perf_counter() - t0
-    ok_off = all(np.array_equal(c.tokens, eng.serve([r])[0].tokens)
+    ok_off = all(np.array_equal(c.tokens, one.generate([r])[0].tokens)
                  for r, c in zip(reqs, cont_off))
     print(f"   mid-decode admission over host-offloaded KV, per-slot "
           f"splits: match={ok_off}  ({t_off:.1f}s, "
           f"plan misses={sched.misses})")
 
+    print("== streaming a mixed batch (greedy + temperature + EOS) ==")
+    eos = int(cont[0].tokens[1])         # greedy token #2 of request 0
+    sps = [SamplingParams(max_tokens=6, eos_id=eos),
+           SamplingParams(max_tokens=6, temperature=0.9, top_k=40,
+                          seed=1),
+           SamplingParams(max_tokens=6)]
+    eng = LLMEngine.from_config(
+        model, params,
+        EngineConfig(backend="offload", batching="continuous", slots=2,
+                     max_len=64), scheduler=sched)
+    finish = {}
+    for ev in eng.generate_stream(reqs[:3], sps):
+        if ev.finish_reason:
+            finish[ev.uid] = (ev.finish_reason, ev.index + 1, ev.step)
+    for uid, (reason, n, step) in sorted(finish.items()):
+        print(f"   uid={uid}: finish={reason!r} after {n} tokens "
+              f"(engine step {step})")
+
     print("== int4-compressed KVPR offload serving ==")
-    uni = [Request(uid=i, prompt=rng.integers(
-        1, cfg.vocab_size, 16).astype(np.int32), max_new_tokens=5)
-        for i in range(2)]
-    exact = ServingEngine(model, params, mode="offload").serve(uni)
-    quant = ServingEngine(model, params, mode="offload",
-                          compress="int4").serve(uni)
+    uni = [rng.integers(1, cfg.vocab_size, 16).astype(np.int32)
+           for _ in range(2)]
+    sp = SamplingParams(max_tokens=5)
+    exact = LLMEngine.from_config(
+        model, params, EngineConfig(backend="offload")
+    ).generate(uni, sp)
+    quant = LLMEngine.from_config(
+        model, params, EngineConfig(backend="offload", compress="int4")
+    ).generate(uni, sp)
     agree = np.mean([np.mean(e.tokens == q.tokens)
                      for e, q in zip(exact, quant)])
     print(f"   token agreement exact-vs-int4: {agree*100:.0f}% "

@@ -14,7 +14,7 @@ from repro.configs import get_smoke_config
 from repro.core import A100_PCIE4, Workload, flexgen_step, kvpr_step, optimal_split
 from repro.core.profiler import profile_system
 from repro.models.transformer import Model
-from repro.serving.engine import Request, ServingEngine
+from repro.serving import EngineConfig, LLMEngine, SamplingParams
 
 
 def main():
@@ -39,16 +39,20 @@ def main():
     model = Model(cfg)
     params = model.init_params(jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
-    reqs = [Request(uid=i,
-                    prompt=rng.integers(1, cfg.vocab_size, 24,
-                                        ).astype(np.int32),
-                    max_new_tokens=8) for i in range(2)]
+    prompts = [rng.integers(1, cfg.vocab_size, 24).astype(np.int32)
+               for _ in range(2)]
+    sampling = SamplingParams(max_tokens=8)       # greedy, no early stop
 
-    res = ServingEngine(model, params, mode="resident").serve(reqs)
-    off = ServingEngine(model, params, mode="offload", hw=hw).serve(reqs)
+    res = LLMEngine.from_config(
+        model, params, EngineConfig(backend="resident")
+    ).generate(prompts, sampling)
+    off = LLMEngine.from_config(
+        model, params, EngineConfig(backend="offload", hw=hw)
+    ).generate(prompts, sampling)
     for r, o in zip(res, off):
         assert np.array_equal(r.tokens, o.tokens), "KVPR must be exact"
-        print(f"req {r.uid}: {r.tokens} (offload == resident ✓)")
+        print(f"req {r.uid}: {r.tokens} (offload == resident ✓, "
+              f"finish={o.finish_reason})")
     print("KVPR partial recomputation is exact; no approximation.")
 
 

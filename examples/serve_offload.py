@@ -14,7 +14,7 @@ import numpy as np
 from repro.configs import get_smoke_config, get_config
 from repro.core.profiler import profile_system
 from repro.models.transformer import Model
-from repro.serving.engine import Request, ServingEngine
+from repro.serving import EngineConfig, LLMEngine, Request, SamplingParams
 
 
 def main():
@@ -37,15 +37,18 @@ def main():
                                         args.prompt).astype(np.int32),
                     max_new_tokens=args.gen) for i in range(args.batch)]
 
+    sampling = SamplingParams(max_tokens=args.gen)
     results = {}
     for name, eng in [
         ("flexgen (full KV transfer)",
-         ServingEngine(model, params, mode="offload", hw=hw, kvpr=False)),
+         LLMEngine.from_config(model, params, EngineConfig(
+             backend="offload", hw=hw, kvpr=False))),
         ("kvpr (partial recompute)",
-         ServingEngine(model, params, mode="offload", hw=hw, kvpr=True)),
+         LLMEngine.from_config(model, params, EngineConfig(
+             backend="offload", hw=hw, kvpr=True))),
     ]:
         t0 = time.perf_counter()
-        gens = eng.serve(reqs)
+        gens = eng.generate(reqs, sampling)
         dt = time.perf_counter() - t0
         tput = args.batch * args.gen / gens[0].decode_time
         results[name] = (gens, tput)

@@ -32,4 +32,10 @@ timeout "${QUICKSTART_TIMEOUT:-300}" python examples/quickstart.py
 timeout "${BREAKDOWN_TIMEOUT:-300}" \
     python benchmarks/bench_step_breakdown.py --smoke
 
+# 5. Serve-API round-trip: the request-level front door (EngineConfig +
+#    SamplingParams + streaming) over static+continuous x
+#    resident+offload, incl. a mixed greedy/temperature/early-EOS batch
+#    (see docs/api.md).
+timeout "${SERVE_TIMEOUT:-300}" python -m repro.launch.serve --smoke
+
 echo "ci.sh: all checks passed"

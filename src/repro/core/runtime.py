@@ -714,23 +714,27 @@ class OffloadDecodeRuntime:
     # -------------------------------------------------------------- decode
 
     def decode(self, store: HostKVStore, first_token: np.ndarray,
-               gen_len: int, sample_fn=None, key=None
-               ) -> Tuple[np.ndarray, List[StepStats]]:
+               gen_len: int, sample_fn=None, key=None, *,
+               on_token=None) -> Tuple[np.ndarray, List[StepStats]]:
         """Generate `gen_len` tokens for a uniform batch.
 
         sample_fn(logits (b, V), key) -> (b,) picks the next token
-        (greedy argmax when None).  `key` is split EXACTLY once per
-        generated token — engines mirror that consumption to keep their
-        own PRNG stream in sync with the resident path, so any change
-        here must keep the one-split-per-token contract.
-        Sampling runs on-device; the only per-step host transfer is the
-        (b,) token array itself.  Returns (tokens, stats).
+        (greedy argmax when None).  Step i's key is derived as
+        ``fold_in(key, i)`` — a counter-derived stream, so a caller that
+        needs to continue the stream later advances a counter instead of
+        mirroring per-step splits.  Sampling runs on-device; the only
+        per-step host transfer is the (b,) token array itself.
+
+        on_token(step, tokens (b,) np.int32, stats) is the streaming
+        hook: called once per generated token block, after it landed on
+        host; returning a truthy value stops decoding early (e.g. every
+        request hit EOS).  Returns (tokens, stats).
         """
         token = jnp.asarray(first_token)
         plan = self.plan_for(int(token.shape[0]))
         stats: List[StepStats] = []
         out_tokens = []
-        for _ in range(gen_len):
+        for i in range(gen_len):
             logits, st = self.step(store, token, plan)
             if sample_fn is None:
                 token = jnp.argmax(logits[:, -1:], axis=-1).astype(
@@ -738,10 +742,13 @@ class OffloadDecodeRuntime:
             else:
                 sub = None
                 if key is not None:
-                    key, sub = jax.random.split(key)
+                    sub = jax.random.fold_in(key, i)
                 token = sample_fn(logits[:, -1], sub)[:, None]
             out_tokens.append(np.asarray(token))
             stats.append(st)
+            if on_token is not None and on_token(
+                    i, out_tokens[-1][:, 0], st):
+                break
         # leave the store consistent for the caller (and surface any
         # write-back error): drain the final step's fences
         t0 = time.perf_counter()

@@ -1,18 +1,22 @@
-"""Serving launcher: batch of synthetic requests through any engine mode.
+"""Serving launcher: batch of synthetic requests through the
+request-level API (serving.api — EngineConfig + SamplingParams).
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b \
-        --mode resident --requests 8 --gen 16
+        --backend resident --requests 8 --gen 16
     PYTHONPATH=src python -m repro.launch.serve --arch opt-6.7b \
-        --mode offload --compress int4          # KVPR host-offload path
+        --backend offload --compress int4    # KVPR host-offload path
     PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b \
-        --mode continuous --slots 2             # iteration-level batching
+        --batching continuous --slots 2      # iteration-level batching
     PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
-        --mode continuous-offload --slots 2     # KVPR + admission
+        --backend offload --batching continuous --slots 2
+    PYTHONPATH=src python -m repro.launch.serve --smoke
+        # CI round-trip: static+continuous x resident+offload
 
-Every mode runs through one Scheduler (profiler → scheduler → runtime,
-paper §3): the launcher builds it once and both engines draw their
-ExecutionPlans from its cache.  Always uses the reduced (smoke) config
-on this CPU container; the full configs are exercised by the dry-run
+The legacy ``--mode`` strings (resident / offload / continuous /
+continuous-offload) still work via ``EngineConfig.from_mode``.  Every
+combination runs through one Scheduler (profiler → scheduler → runtime,
+paper §3).  Always uses the reduced (smoke) config on this CPU
+container; the full configs are exercised by the dry-run
 (`repro.launch.dryrun`).
 """
 from __future__ import annotations
@@ -28,29 +32,104 @@ from repro.core.cost_model import TPU_V5E
 from repro.core.profiler import profile_system
 from repro.core.scheduler import Scheduler
 from repro.models.transformer import Model
-from repro.serving.continuous import ContinuousBatchingEngine
-from repro.serving.engine import Request, ServingEngine
+from repro.serving import (EngineConfig, LLMEngine, Request,
+                           SamplingParams)
+
+
+def run_smoke() -> None:
+    """CI round-trip over the serve API: all four backend x batching
+    combinations, greedy exactness across backends, and a mixed batch
+    with an early-EOS request."""
+    cfg = get_smoke_config("tinyllama-1.1b")
+    model = Model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    reqs = [Request(uid=i, prompt=rng.integers(
+        1, cfg.vocab_size, 8 + 2 * i).astype(np.int32),
+        max_new_tokens=4) for i in range(3)]
+    sched = Scheduler(TPU_V5E)
+
+    outs = {}
+    for backend in ("resident", "offload"):
+        for batching in ("static", "continuous"):
+            eng = LLMEngine.from_config(
+                model, params,
+                EngineConfig(backend=backend, batching=batching,
+                             slots=2, max_len=32), scheduler=sched)
+            t0 = time.perf_counter()
+            outs[(backend, batching)] = eng.generate(reqs)
+            dt = time.perf_counter() - t0
+            n = sum(len(o.tokens) for o in outs[(backend, batching)])
+            assert all(o.finish_reason == "length"
+                       for o in outs[(backend, batching)])
+            print(f"  {backend:8s} x {batching:10s}: {n} tokens "
+                  f"in {dt:.2f}s ok")
+    # greedy decode is backend-independent under continuous batching
+    # (per-request prefill); static backends must agree with each other
+    for batching in ("static", "continuous"):
+        for a, b in zip(outs[("resident", batching)],
+                        outs[("offload", batching)]):
+            assert np.array_equal(a.tokens, b.tokens), \
+                f"backend mismatch under {batching} (uid={a.uid})"
+    # mixed batch: greedy + temperature + early EOS, streamed
+    ref = outs[("resident", "static")][0].tokens
+    sps = [SamplingParams(max_tokens=4, eos_id=int(ref[1])),
+           SamplingParams(max_tokens=4, temperature=0.8, seed=11),
+           SamplingParams(max_tokens=4)]
+    eng = LLMEngine.from_config(model, params,
+                                EngineConfig(backend="offload"),
+                                scheduler=sched)
+    events = list(eng.generate_stream(reqs, sps))
+    finals = {e.uid: e.finish_reason for e in events
+              if e.finish_reason is not None}
+    assert finals[0] == "stop" and finals[1] == "length" \
+        and finals[2] == "length", finals
+    print(f"  mixed batch (greedy+temperature+eos): "
+          f"{len(events)} events, finish={finals} ok")
+    print("serve --smoke: all checks passed")
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True, choices=list(ARCH_IDS))
-    ap.add_argument("--mode", default="resident",
+    ap.add_argument("--arch", default=None, choices=list(ARCH_IDS))
+    ap.add_argument("--backend", default="resident",
+                    choices=["resident", "offload"])
+    ap.add_argument("--batching", default="static",
+                    choices=["static", "continuous"])
+    ap.add_argument("--mode", default=None,
                     choices=["resident", "offload", "continuous",
-                             "continuous-offload"])
+                             "continuous-offload"],
+                    help="legacy mode string (overrides "
+                         "--backend/--batching)")
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--prompt", type=int, default=32)
     ap.add_argument("--gen", type=int, default=8)
     ap.add_argument("--slots", type=int, default=2)
     ap.add_argument("--compress", default=None, choices=[None, "int4"])
-    ap.add_argument("--sampler", default="greedy",
-                    choices=["greedy", "temperature"])
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy")
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--eos-id", type=int, default=None,
+                    help="terminate a request early on this token")
+    ap.add_argument("--sampler", default=None,
+                    choices=[None, "greedy", "temperature"],
+                    help="legacy alias: temperature -> 0.8")
+    ap.add_argument("--stream", action="store_true",
+                    help="print per-token events as they are produced")
     ap.add_argument("--no-kvpr", action="store_true",
-                    help="offload modes: stream full KV (FlexGen baseline)")
+                    help="offload: stream full KV (FlexGen baseline)")
     ap.add_argument("--profile", action="store_true",
                     help="measure the link/GEMM profile instead of preset")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI round-trip over all four engine combos")
     args = ap.parse_args(argv)
+
+    if args.smoke:
+        run_smoke()
+        return
+    if args.arch is None:
+        ap.error("--arch is required (unless --smoke)")
 
     cfg = get_smoke_config(args.arch)
     model = Model(cfg)
@@ -58,38 +137,52 @@ def main(argv=None):
     rng = np.random.default_rng(args.seed)
     reqs = [Request(uid=i,
                     prompt=rng.integers(1, cfg.vocab_size,
-                                        args.prompt).astype(np.int32),
-                    max_new_tokens=args.gen)
+                                        args.prompt).astype(np.int32))
             for i in range(args.requests)]
+    temp = args.temperature
+    if args.sampler == "temperature" and temp <= 0:
+        temp = 0.8
+    sampling = SamplingParams(max_tokens=args.gen, temperature=temp,
+                              top_k=args.top_k, eos_id=args.eos_id)
 
-    sched = Scheduler(profile_system() if args.profile else TPU_V5E)
-    if args.mode.startswith("continuous"):
-        engine = ContinuousBatchingEngine(
-            model, params, num_slots=args.slots,
-            max_len=args.prompt + args.gen + 8,
-            mode="offload" if args.mode.endswith("offload") else "resident",
-            scheduler=sched, kvpr=not args.no_kvpr,
-            compress=args.compress)
+    base = dict(slots=args.slots, max_len=args.prompt + args.gen + 8,
+                kvpr=not args.no_kvpr, compress=args.compress,
+                seed=args.seed)
+    if args.mode is not None:
+        config = EngineConfig.from_mode(args.mode, **base)
     else:
-        engine = ServingEngine(model, params, mode=args.mode,
-                               kvpr=not args.no_kvpr, sampler=args.sampler,
-                               scheduler=sched, compress=args.compress)
+        config = EngineConfig(backend=args.backend,
+                              batching=args.batching, **base)
+    sched = Scheduler(profile_system() if args.profile else TPU_V5E)
+    engine = LLMEngine.from_config(model, params, config,
+                                   scheduler=sched)
+
     t0 = time.perf_counter()
-    gens = engine.serve(reqs)
+    if args.stream:
+        total = 0
+        for ev in engine.generate_stream(reqs, sampling):
+            total += 1
+            tail = f" [{ev.finish_reason}]" if ev.finish_reason else ""
+            print(f"  step {ev.step:3d} uid={ev.uid} "
+                  f"tok={ev.token}{tail}")
+    else:
+        outs = engine.generate(reqs, sampling)
+        total = sum(len(o.tokens) for o in outs)
     dt = time.perf_counter() - t0
 
-    total = sum(len(g.tokens) for g in gens)
-    print(f"{args.arch} [{args.mode}"
+    print(f"{args.arch} [{config.backend}/{config.batching}"
           f"{'/int4' if args.compress else ''}]: "
           f"{len(reqs)} requests, {total} tokens in {dt:.2f}s "
           f"({total/dt:.1f} tok/s) "
           f"plan_cache[hits={sched.hits} misses={sched.misses}]")
-    rt = getattr(engine, "runtime", None)
+    rt = engine.runtime
     if rt is not None:
         print(f"  hot path: xla_traces={rt.compute.traces()} "
               f"staging_buffers={rt.xfer.staging_allocs}")
-    for g in gens[:4]:
-        print(f"  uid={g.uid}: {np.asarray(g.tokens)[:8]}...")
+    if not args.stream:
+        for o in outs[:4]:
+            print(f"  uid={o.uid} [{o.finish_reason}]: "
+                  f"{np.asarray(o.tokens)[:8]}...")
 
 
 if __name__ == "__main__":

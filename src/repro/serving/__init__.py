@@ -1,0 +1,15 @@
+"""Request-level serving API (see docs/api.md).
+
+    from repro.serving import EngineConfig, LLMEngine, SamplingParams
+"""
+from repro.serving.api import (EngineConfig, LLMEngine, Request,
+                               RequestOutput, SamplingParams,
+                               TokenEvent, pad_batch)
+from repro.serving.continuous import ContinuousBatchingEngine
+from repro.serving.engine import Generation, ServingEngine
+
+__all__ = [
+    "ContinuousBatchingEngine", "EngineConfig", "Generation",
+    "LLMEngine", "Request", "RequestOutput", "SamplingParams",
+    "ServingEngine", "TokenEvent", "pad_batch",
+]

@@ -1,0 +1,613 @@
+"""One request-level serving API over every decode path.
+
+This module is the single front door to the serving stack (the
+ROADMAP's "serving system" layer on top of the paper's profiler →
+scheduler → runtime loop):
+
+  - ``EngineConfig``    declarative engine choice — ``backend``
+                        ("resident" HBM cache vs "offload" host KV +
+                        KVPR) × ``batching`` ("static" padded batches
+                        vs "continuous" iteration-level slots) —
+                        replacing the old four mode strings.
+  - ``SamplingParams``  per-request sampling + termination: greedy or
+                        temperature/top-k, an optional per-request
+                        seed, ``max_tokens``, and EOS/stop ids.  One
+                        batch can mix greedy and stochastic requests;
+                        the params travel as vectorized per-slot arrays
+                        through ``serving.sampler.sample_step``.
+  - ``LLMEngine``       ``generate()`` → ``RequestOutput``s and
+                        ``generate_stream()`` → per-token
+                        ``TokenEvent``s, over all four backend×batching
+                        combinations, with request lifecycle: a request
+                        whose EOS fires at step k finishes with
+                        ``finish_reason="stop"`` after exactly k tokens
+                        (the stop token is included), its slot is
+                        released mid-decode, and — under continuous
+                        batching — the next queued request is admitted
+                        into the freed slot.
+
+Sampling-stream invariant (see ``serving.sampler``): request uid's t-th
+token is always drawn with ``fold_in(request_key, t)``, so generations
+are identical across backends and batch compositions given one seed —
+the property the old engines maintained with an O(gen_len) host-side
+key-mirroring loop, now by construction.
+
+The legacy ``ServingEngine`` / ``ContinuousBatchingEngine`` classes are
+thin shims over this module; new code should use::
+
+    from repro.serving import EngineConfig, LLMEngine, SamplingParams
+    eng = LLMEngine.from_config(model, params,
+                                EngineConfig(backend="offload"))
+    outs = eng.generate(prompts, SamplingParams(max_tokens=16,
+                                                eos_id=2))
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import (Deque, Dict, Iterable, Iterator, List, Optional,
+                    Sequence, Tuple, Union)
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cost_model import HardwareProfile, TPU_V5E
+from repro.core.runtime import (HostKVStore, OffloadDecodeRuntime,
+                                StepStats, prefill_with_activations)
+from repro.core.scheduler import Scheduler
+from repro.models.cache import broadcast_slots, splice_slot
+from repro.models.transformer import Model
+from repro.serving import sampler as samplers
+
+Array = jax.Array
+
+_MODE_MAP = {
+    "resident": ("resident", "static"),
+    "offload": ("offload", "static"),
+    "continuous": ("resident", "continuous"),
+    "continuous-offload": ("offload", "continuous"),
+}
+
+
+# ------------------------------------------------------------- configs
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request sampling + termination parameters (vLLM-style).
+
+    temperature <= 0 (or greedy=True) means argmax decoding.  ``seed``
+    pins the request's PRNG stream independently of the engine seed.
+    ``eos_id`` / ``stop_ids`` terminate the request early with
+    ``finish_reason="stop"``; the stop token itself is included in the
+    returned tokens.
+    """
+    max_tokens: int = 32
+    temperature: float = 0.0
+    top_k: int = 0
+    greedy: Optional[bool] = None        # None -> temperature <= 0
+    seed: Optional[int] = None
+    eos_id: Optional[int] = None
+    stop_ids: Tuple[int, ...] = ()
+
+    @property
+    def is_greedy(self) -> bool:
+        return self.greedy if self.greedy is not None \
+            else self.temperature <= 0
+
+    @property
+    def stop_set(self) -> frozenset:
+        ids = set(self.stop_ids)
+        if self.eos_id is not None:
+            ids.add(self.eos_id)
+        return frozenset(ids)
+
+    def validate(self) -> "SamplingParams":
+        if self.max_tokens < 1:
+            raise ValueError(f"max_tokens must be >= 1, got "
+                             f"{self.max_tokens}")
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0, got {self.top_k}")
+        return self
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Declarative engine configuration: which KV backend and which
+    batching discipline, plus the KVPR knobs the scheduler needs.
+    Replaces the old mode strings ("resident" / "offload" /
+    "continuous" / "continuous-offload") — see ``from_mode`` for the
+    migration map (documented in docs/api.md)."""
+    backend: str = "resident"            # "resident" | "offload"
+    batching: str = "static"             # "static" | "continuous"
+    slots: int = 4                       # continuous: concurrent slots
+    max_len: int = 256                   # continuous: per-slot capacity
+    compress: Optional[str] = None       # None | "int4" (offload)
+    kvpr: bool = True                    # offload: partial recompute
+    schedule: str = "row"                # KVPR split schedule
+    align: int = 1                       # KVPR split alignment
+    hw: Optional[HardwareProfile] = None
+    seed: int = 0
+
+    def validate(self) -> "EngineConfig":
+        if self.backend not in ("resident", "offload"):
+            raise ValueError(
+                f"backend must be 'resident' or 'offload', got "
+                f"{self.backend!r}")
+        if self.batching not in ("static", "continuous"):
+            raise ValueError(
+                f"batching must be 'static' or 'continuous', got "
+                f"{self.batching!r}")
+        if self.compress not in (None, "int4"):
+            raise ValueError(f"compress must be None or 'int4', got "
+                             f"{self.compress!r}")
+        if self.batching == "continuous" and self.slots < 1:
+            raise ValueError(f"slots must be >= 1, got {self.slots}")
+        return self
+
+    @property
+    def mode(self) -> str:
+        """The legacy mode string this config corresponds to."""
+        for mode, (backend, batching) in _MODE_MAP.items():
+            if (backend, batching) == (self.backend, self.batching):
+                return mode
+        raise AssertionError(self)
+
+    @classmethod
+    def from_mode(cls, mode: str, **overrides) -> "EngineConfig":
+        """Migration helper: map an old mode string to an EngineConfig."""
+        if mode not in _MODE_MAP:
+            raise ValueError(
+                f"unknown mode {mode!r}; expected one of "
+                f"{sorted(_MODE_MAP)} — or construct EngineConfig("
+                f"backend=..., batching=...) directly")
+        backend, batching = _MODE_MAP[mode]
+        return cls(backend=backend, batching=batching,
+                   **overrides).validate()
+
+
+# ------------------------------------------------------------ requests
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray                   # (s,) int32
+    max_new_tokens: int = 32             # legacy budget (no params)
+    params: Optional[SamplingParams] = None
+
+
+@dataclasses.dataclass
+class RequestOutput:
+    """One finished request.  Also serves as the legacy ``Generation``
+    (same leading fields, positionally compatible)."""
+    uid: int
+    tokens: np.ndarray
+    prefill_time: float = 0.0
+    decode_time: float = 0.0
+    finish_reason: str = "length"        # "length" | "stop"
+
+    @property
+    def decode_tps(self) -> float:
+        return len(self.tokens) / max(self.decode_time, 1e-9)
+
+
+@dataclasses.dataclass
+class TokenEvent:
+    """One streamed token: request uid, the token, its index within the
+    request, the engine step that produced it, the finish reason when
+    this is the request's last token, and the producing step's
+    ``StepStats`` on offload backends."""
+    uid: int
+    token: int
+    index: int
+    step: int
+    finish_reason: Optional[str] = None
+    stats: Optional[StepStats] = None
+
+
+def pad_batch(reqs: Sequence[Request]) -> np.ndarray:
+    """Left-pad prompts to a common length (static batching)."""
+    s = max(len(r.prompt) for r in reqs)
+    out = np.zeros((len(reqs), s), np.int32)
+    for i, r in enumerate(reqs):
+        out[i, s - len(r.prompt):] = r.prompt
+    return out
+
+
+# --------------------------------------------------- internal plumbing
+
+@dataclasses.dataclass
+class _Live:
+    """One in-flight request's lifecycle state."""
+    req: Request
+    sp: SamplingParams
+    stop: frozenset
+    tokens: List[int]
+    t_prefill: float = 0.0
+    t_start: float = 0.0
+    finish_reason: Optional[str] = None
+
+
+class _SlotSampling:
+    """Vectorized per-slot sampling state: request base keys and
+    sampling params as (b,) arrays, one row per batch slot, consumed by
+    ``sampler.sample_step``.  Static batches fill every row once;
+    continuous engines rewrite a row at each admission."""
+
+    def __init__(self, engine_key: Array, b: int):
+        self.engine_key = engine_key
+        self.keys = np.zeros((b, 2), np.uint32)
+        self.temps = np.zeros((b,), np.float32)
+        self.top_ks = np.zeros((b,), np.int32)
+        self.greedy = np.ones((b,), bool)
+        self._dev = None             # device copies, rebuilt on set_slot
+
+    def set_slot(self, i: int, uid: int, sp: SamplingParams) -> None:
+        self.keys[i] = np.asarray(
+            samplers.request_key(self.engine_key, uid, sp.seed))
+        self.temps[i] = max(sp.temperature, 0.0)
+        self.top_ks[i] = sp.top_k
+        self.greedy[i] = sp.is_greedy
+        self._dev = None
+
+    def _device(self):
+        """Slot params change only at admission; keep their device
+        copies across decode steps (the hot loop transfers only the
+        per-step ``steps`` vector)."""
+        if self._dev is None:
+            self._dev = (jnp.asarray(self.keys), jnp.asarray(self.temps),
+                         jnp.asarray(self.top_ks),
+                         jnp.asarray(self.greedy))
+        return self._dev
+
+    def sample(self, logits: Array, steps) -> Array:
+        """Draw every slot's next token; ``steps`` is the per-slot token
+        index t (scalar broadcasts), feeding fold_in(request_key, t)."""
+        keys, temps, top_ks, greedy = self._device()
+        b = self.keys.shape[0]
+        if np.ndim(steps) == 0:
+            steps = np.full((b,), steps)
+        return samplers.sample_step(
+            logits, keys, jnp.asarray(np.asarray(steps), jnp.uint32),
+            temps, top_ks, greedy)
+
+    def sample_one(self, logits_row: Array, i: int, step: int) -> int:
+        """Draw slot i's token t=``step`` alone (admission prefill)."""
+        out = samplers.sample_step(
+            logits_row, jnp.asarray(self.keys[i:i + 1]),
+            jnp.asarray([step], jnp.uint32),
+            jnp.asarray(self.temps[i:i + 1]),
+            jnp.asarray(self.top_ks[i:i + 1]),
+            jnp.asarray(self.greedy[i:i + 1]))
+        return int(out[0])
+
+
+RequestLike = Union[Request, np.ndarray, Sequence[int]]
+SamplingLike = Union[None, SamplingParams, Sequence[SamplingParams]]
+
+
+# -------------------------------------------------------------- engine
+
+class LLMEngine:
+    """The request-level serving engine over all four decode paths.
+
+    One instance owns one persistent offload runtime (jit traces and
+    staging buffers survive across ``generate()`` calls) and one
+    Scheduler, so every path runs through the paper's profiler →
+    scheduler → runtime automation loop.
+    """
+
+    def __init__(self, model: Model, params,
+                 config: Optional[EngineConfig] = None,
+                 scheduler: Optional[Scheduler] = None):
+        self.model = model
+        self.cfg = model.cfg
+        self.params = params
+        self.config = (config or EngineConfig()).validate()
+        self.scheduler = scheduler or Scheduler(self.config.hw or TPU_V5E)
+        self.key = jax.random.PRNGKey(self.config.seed)
+        self._prefill = jax.jit(model.prefill,
+                                static_argnames=("max_len",))
+        self.runtime: Optional[OffloadDecodeRuntime] = None
+        if self.config.backend == "offload":
+            self.runtime = OffloadDecodeRuntime(
+                self.cfg, params, scheduler=self.scheduler,
+                mode="kvpr" if self.config.kvpr else "flexgen",
+                schedule=self.config.schedule, align=self.config.align,
+                compress=self.config.compress)
+        elif self.config.batching == "continuous":
+            # vmap over the slot axis: params broadcast, cache + token
+            # mapped
+            self._vstep = jax.jit(jax.vmap(model.decode_step,
+                                           in_axes=(None, 0, 0)))
+        else:
+            self._decode = jax.jit(model.decode_step)
+
+    @classmethod
+    def from_config(cls, model: Model, params, config: EngineConfig,
+                    scheduler: Optional[Scheduler] = None) -> "LLMEngine":
+        return cls(model, params, config, scheduler)
+
+    # -------------------------------------------------------- frontend
+
+    def generate(self, requests: Iterable[RequestLike],
+                 sampling: SamplingLike = None,
+                 extra: Optional[Dict[str, Array]] = None
+                 ) -> List[RequestOutput]:
+        """Serve the requests to completion; outputs in request order."""
+        pairs = self._normalize(requests, sampling)
+        done: Dict[int, RequestOutput] = {}
+        for _ in self._stream(pairs, done, extra):
+            pass
+        return [done[r.uid] for r, _ in pairs]
+
+    def generate_stream(self, requests: Iterable[RequestLike],
+                        sampling: SamplingLike = None,
+                        extra: Optional[Dict[str, Array]] = None
+                        ) -> Iterator[TokenEvent]:
+        """Yield one ``TokenEvent`` per generated token, in engine-step
+        order (slots of one step yield consecutively)."""
+        pairs = self._normalize(requests, sampling)
+        done: Dict[int, RequestOutput] = {}
+        yield from self._stream(pairs, done, extra)
+
+    def _normalize(self, requests, sampling
+                   ) -> List[Tuple[Request, SamplingParams]]:
+        requests = list(requests)
+        sampling_seq = isinstance(sampling, (list, tuple))
+        if sampling_seq and len(sampling) != len(requests):
+            raise ValueError(
+                f"per-request sampling list has {len(sampling)} "
+                f"entries for {len(requests)} requests")
+        pairs = []
+        for i, r in enumerate(requests):
+            if not isinstance(r, Request):
+                r = Request(uid=i, prompt=np.asarray(r, np.int32))
+            sp = sampling[i] if sampling_seq else sampling
+            if sp is None:
+                sp = r.params or SamplingParams(
+                    max_tokens=r.max_new_tokens)
+            pairs.append((r, sp.validate()))
+        if not pairs:
+            raise ValueError("generate() needs at least one request")
+        return pairs
+
+    def _stream(self, pairs, done, extra) -> Iterator[TokenEvent]:
+        if self.config.batching == "continuous":
+            if extra:
+                raise ValueError(
+                    "extra (VLM patches) is only supported under "
+                    "static batching")
+            return self._stream_continuous(pairs, done)
+        if self.config.backend == "offload":
+            if extra:
+                raise ValueError(
+                    "extra (VLM patches) is only supported on the "
+                    "resident backend")
+            return self._stream_static_offload(pairs, done)
+        return self._stream_static_resident(pairs, done, extra)
+
+    # ----------------------------------------------- shared lifecycle
+
+    def _lives(self, pairs, t_prefill: float, t_start: float
+               ) -> List[_Live]:
+        return [_Live(r, sp, sp.stop_set, [], t_prefill, t_start)
+                for r, sp in pairs]
+
+    def _advance(self, lives: List[_Live], toks: np.ndarray, step: int,
+                 stats: Optional[StepStats], done
+                 ) -> List[TokenEvent]:
+        """Append each unfinished request's next token; mark stop/length
+        finishes and record their outputs."""
+        now = time.perf_counter()
+        events = []
+        for i, lv in enumerate(lives):
+            if lv.finish_reason is not None:
+                continue
+            tok = int(toks[i])
+            lv.tokens.append(tok)
+            fin = None
+            if tok in lv.stop:
+                fin = "stop"
+            elif len(lv.tokens) >= lv.sp.max_tokens:
+                fin = "length"
+            events.append(TokenEvent(lv.req.uid, tok,
+                                     len(lv.tokens) - 1, step, fin,
+                                     stats))
+            if fin is not None:
+                lv.finish_reason = fin
+                done[lv.req.uid] = RequestOutput(
+                    lv.req.uid, np.asarray(lv.tokens, np.int32),
+                    lv.t_prefill, now - lv.t_start, fin)
+        return events
+
+    # ------------------------------------------------ static resident
+
+    def _stream_static_resident(self, pairs, done, extra
+                                ) -> Iterator[TokenEvent]:
+        reqs = [r for r, _ in pairs]
+        prompts = pad_batch(reqs)
+        b, s = prompts.shape
+        gen_len = max(sp.max_tokens for _, sp in pairs)
+        max_len = s + gen_len + 1
+        if self.cfg.arch_type == "vlm" and extra:
+            max_len += extra["patches"].shape[1]
+        t0 = time.perf_counter()
+        logits, cache = self._prefill(self.params, jnp.asarray(prompts),
+                                      extra, max_len=max_len)
+        logits.block_until_ready()
+        t1 = time.perf_counter()
+
+        lives = self._lives(pairs, t1 - t0, t1)
+        ss = self._static_sampling(pairs)
+        tok = ss.sample(logits[:, -1], 0)[:, None]
+        t = 0
+        while True:
+            yield from self._advance(lives, np.asarray(tok)[:, 0], t,
+                                     None, done)
+            if all(lv.finish_reason for lv in lives):
+                break
+            logits, cache = self._decode(self.params, cache, tok)
+            t += 1
+            tok = ss.sample(logits[:, -1], t)[:, None]
+
+    def _static_sampling(self, pairs) -> _SlotSampling:
+        ss = _SlotSampling(self.key, len(pairs))
+        for i, (r, sp) in enumerate(pairs):
+            ss.set_slot(i, r.uid, sp)
+        return ss
+
+    # ------------------------------------------------- static offload
+
+    def _stream_static_offload(self, pairs, done
+                               ) -> Iterator[TokenEvent]:
+        """Prefill on-device, spill KV + activations to host, decode
+        with the KVPR runtime under the scheduler's plan.  Finished
+        slots drop out of the ``active`` mask, so an early-EOS request
+        stops paying write-back immediately."""
+        reqs = [r for r, _ in pairs]
+        prompts = pad_batch(reqs)
+        b, s = prompts.shape
+        gen_len = max(sp.max_tokens for _, sp in pairs)
+        store = HostKVStore(self.cfg, b, s + gen_len + 1,
+                            compress=self.config.compress)
+        t0 = time.perf_counter()
+        logits, ks, vs, hs = prefill_with_activations(
+            self.model, self.params, jnp.asarray(prompts))
+        store.bulk_fill(np.asarray(ks), np.asarray(vs), np.asarray(hs),
+                        s)
+        t1 = time.perf_counter()
+
+        lives = self._lives(pairs, t1 - t0, t1)
+        ss = self._static_sampling(pairs)
+        rt = self.runtime
+        plan = rt.plan_for(b)
+        tok = ss.sample(logits[:, -1], 0)[:, None]
+        t = 0
+        stats: Optional[StepStats] = None
+        try:
+            while True:
+                yield from self._advance(lives, np.asarray(tok)[:, 0],
+                                         t, stats, done)
+                if all(lv.finish_reason for lv in lives):
+                    break
+                active = np.array([lv.finish_reason is None
+                                   for lv in lives])
+                logits, stats = rt.step(store, tok, plan, active=active)
+                t += 1
+                tok = ss.sample(logits[:, -1], t)[:, None]
+        finally:
+            # drain the write-back fences before dropping the store
+            # (surfaces any store error, leaves the pool idle) — also
+            # when the consumer abandons the stream mid-iteration
+            store.sync()
+
+    # ----------------------------------------------------- continuous
+
+    def _stream_continuous(self, pairs, done) -> Iterator[TokenEvent]:
+        """Iteration-level batching over either backend: one slot per
+        request in flight, admission between steps — including into
+        slots freed mid-decode by early-EOS finishes."""
+        B = self.config.slots
+        max_len = self.config.max_len
+        queue: Deque[Tuple[Request, SamplingParams]] = deque(pairs)
+        slots: List[Optional[_Live]] = [None] * B
+        ss = _SlotSampling(self.key, B)
+        tokens = np.zeros((B, 1), np.int32)
+        offload = self.config.backend == "offload"
+        if offload:
+            store = HostKVStore(self.cfg, B, max_len,
+                                compress=self.config.compress)
+            plan = self.runtime.plan_for(B)
+            active = np.zeros(B, bool)
+        else:
+            stacked = None
+        t = 0
+
+        def release(i: int) -> None:
+            slots[i] = None
+            if offload:
+                active[i] = False
+                store.clear_slot(i)
+
+        def finish(i: int, lv: _Live, reason: str, now: float) -> None:
+            lv.finish_reason = reason
+            done[lv.req.uid] = RequestOutput(
+                lv.req.uid, np.asarray(lv.tokens, np.int32),
+                lv.t_prefill, now - lv.t_start, reason)
+            release(i)
+
+        def admit(i: int) -> TokenEvent:
+            nonlocal stacked
+            r, sp = queue.popleft()
+            t0 = time.perf_counter()
+            if offload:
+                logits, ks, vs, hs = prefill_with_activations(
+                    self.model, self.params, jnp.asarray(r.prompt)[None])
+                store.fill_slot(i, np.asarray(ks), np.asarray(vs),
+                                np.asarray(hs), len(r.prompt))
+            else:
+                logits, cache = self._prefill(
+                    self.params, jnp.asarray(r.prompt)[None],
+                    max_len=max_len)
+            ss.set_slot(i, r.uid, sp)
+            first = ss.sample_one(logits[:, -1], i, 0)
+            t1 = time.perf_counter()
+            lv = _Live(r, sp, sp.stop_set, [first], t1 - t0, t1)
+            slots[i] = lv
+            tokens[i, 0] = first
+            if offload:
+                active[i] = True
+            else:
+                stacked = (broadcast_slots(cache, B) if stacked is None
+                           else splice_slot(stacked, cache, i))
+            fin = ("stop" if first in lv.stop else
+                   "length" if 1 >= sp.max_tokens else None)
+            if fin is not None:
+                finish(i, lv, fin, t1)
+            return TokenEvent(r.uid, first, 0, t, fin, None)
+
+        try:
+            while queue or any(s is not None for s in slots):
+                for i in range(B):
+                    if slots[i] is None and queue:
+                        yield admit(i)
+                if not any(s is not None for s in slots):
+                    continue
+                steps = np.array([len(s.tokens) if s is not None else 0
+                                  for s in slots])
+                if offload:
+                    logits, st = self.runtime.step(
+                        store, jnp.asarray(tokens), plan,
+                        active=active.copy())
+                    nxt = np.asarray(ss.sample(logits[:, -1], steps))
+                else:
+                    # per-slot token shape is (1, 1): add the slot axis
+                    # up front
+                    logits, stacked = self._vstep(
+                        self.params, stacked,
+                        jnp.asarray(tokens)[:, None])
+                    nxt = np.asarray(ss.sample(logits[:, 0, -1], steps))
+                    st = None
+                t += 1
+                now = time.perf_counter()
+                for i in range(B):
+                    lv = slots[i]
+                    if lv is None:
+                        continue
+                    tok = int(nxt[i])
+                    lv.tokens.append(tok)
+                    tokens[i, 0] = tok
+                    fin = ("stop" if tok in lv.stop else
+                           "length" if len(lv.tokens) >= lv.sp.max_tokens
+                           else None)
+                    yield TokenEvent(lv.req.uid, tok, len(lv.tokens) - 1,
+                                     t, fin, st)
+                    if fin is not None:
+                        finish(i, lv, fin, now)
+        finally:
+            # drain write-back fences even when the consumer abandons
+            # the stream mid-iteration
+            if offload:
+                store.sync()

@@ -1,197 +1,45 @@
-"""Continuous (iteration-level) batching engine — Orca-style slot
-scheduling over both decode backends:
+"""Legacy continuous (iteration-level) batching engine — a thin shim
+over the request-level API in ``serving.api``.
 
-  - mode="resident": B slots of HBM-resident KV caches; `decode_step`
-    is vmapped over the slot axis, so slots advance in lockstep while
-    carrying independent positions (the original beyond-paper path).
-  - mode="offload":  the paper's host-offloaded KVPR runtime, made
-    iteration-level: each HostKVStore slot holds one request's KV +
-    activations at its own length, a new request is admitted mid-decode
-    by prefilling (b=1) and spilling into a free slot, and the
-    scheduler's ExecutionPlan picks a per-slot split for the ragged
-    lengths every step.  The runtime masks inactive/padded positions
-    exactly, so an admitted request's tokens are identical to serving
-    it alone.
-
-Both backends share the admission/bookkeeping loop below and the
-Request/Generation plumbing from `serving.engine`; the offload backend
-shares `OffloadDecodeRuntime.step` with the static engine, so there is
-one decode hot path and one scheduler across the whole serving stack.
+``ContinuousBatchingEngine(model, params, mode="resident"|"offload")``
+maps onto ``LLMEngine`` with ``EngineConfig(batching="continuous")``:
+Orca-style slot admission over either the vmapped resident cache or the
+paper's host-offloaded KVPR runtime, now with the full request
+lifecycle (per-request ``SamplingParams``, early EOS freeing the slot
+mid-decode).  New code should use ``LLMEngine`` directly — see
+docs/api.md.
 """
 from __future__ import annotations
 
-import dataclasses
-import time
-from collections import deque
-from typing import Deque, Dict, List, Optional
-
-import jax
-import jax.numpy as jnp
-import numpy as np
+from typing import Optional
 
 from repro.core.cost_model import HardwareProfile, TPU_V5E
-from repro.core.runtime import (HostKVStore, OffloadDecodeRuntime,
-                                prefill_with_activations)
 from repro.core.scheduler import Scheduler
-from repro.models.cache import broadcast_slots, splice_slot
 from repro.models.transformer import Model
-from repro.serving.engine import Generation, Request
+from repro.serving.api import EngineConfig, LLMEngine
+from repro.serving.engine import EngineShim
+
+__all__ = ["ContinuousBatchingEngine"]
 
 
-@dataclasses.dataclass
-class _Slot:
-    uid: int = -1                 # -1 = empty
-    emitted: int = 0
-    budget: int = 0
-    tokens: Optional[list] = None
-    t_prefill: float = 0.0
-    t_admit: float = 0.0
-
-
-class ContinuousBatchingEngine:
+class ContinuousBatchingEngine(EngineShim):
     """serve(requests) with iteration-level admission into fixed slots,
-    over a resident (HBM) or offloaded (host DRAM, KVPR) KV cache."""
+    over a resident (HBM) or offloaded (host DRAM, KVPR) KV cache.
+    Thin shim over ``api.LLMEngine``."""
 
     def __init__(self, model: Model, params, num_slots: int = 4,
                  max_len: int = 256, mode: str = "resident",
                  hw: Optional[HardwareProfile] = None,
                  scheduler: Optional[Scheduler] = None,
                  kvpr: bool = True, schedule: str = "row",
-                 align: int = 1, compress: Optional[str] = None):
-        self.model = model
-        self.cfg = model.cfg
-        self.params = params
-        self.B = num_slots
-        self.max_len = max_len
+                 align: int = 1, compress: Optional[str] = None,
+                 sampler: str = "greedy", seed: int = 0):
         self.mode = mode
-        self.compress = compress
-        self.scheduler = scheduler or Scheduler(hw or TPU_V5E)
-        self._prefill = jax.jit(model.prefill,
-                                static_argnames=("max_len",))
-        if mode == "offload":
-            self.runtime = OffloadDecodeRuntime(
-                self.cfg, params, scheduler=self.scheduler,
-                mode="kvpr" if kvpr else "flexgen", schedule=schedule,
-                align=align, compress=compress)
-        else:
-            # vmap over the slot axis: params broadcast, cache + token
-            # mapped
-            self._step = jax.jit(jax.vmap(model.decode_step,
-                                          in_axes=(None, 0, 0)))
-
-    # --------------------------------------------------------------- serve
-
-    def serve(self, reqs: List[Request]) -> List[Generation]:
-        if self.mode == "offload":
-            return self._serve_offload(reqs)
-        return self._serve_resident(reqs)
-
-    # ------------------------------------------------- shared bookkeeping
-
-    def _advance(self, slots, tokens, nxt, done, release):
-        """Append each active slot's next token; finalize exhausted
-        slots (calling `release(i)` to free backend state)."""
-        now = time.perf_counter()
-        for i, s in enumerate(slots):
-            if s.uid < 0:
-                continue
-            if s.emitted < s.budget:
-                s.tokens.append(int(nxt[i]))
-                s.emitted += 1
-                tokens[i, 0] = nxt[i]
-            if s.emitted >= s.budget:
-                done[s.uid] = Generation(
-                    s.uid, np.asarray(s.tokens[:s.budget], np.int32),
-                    s.t_prefill, now - s.t_admit)
-                slots[i] = _Slot()
-                release(i)
-
-    # ------------------------------------------------------------ resident
-
-    def _serve_resident(self, reqs: List[Request]) -> List[Generation]:
-        queue: Deque[Request] = deque(reqs)
-        done: Dict[int, Generation] = {}
-        slots = [_Slot() for _ in range(self.B)]
-
-        # bootstrap: build the stacked cache from the first admission
-        stacked = None
-        tokens = np.zeros((self.B, 1), np.int32)
-
-        def admit(i):
-            nonlocal stacked
-            r = queue.popleft()
-            t0 = time.perf_counter()
-            logits, cache = self._prefill(
-                self.params, jnp.asarray(r.prompt)[None],
-                max_len=self.max_len)
-            first = int(jnp.argmax(logits[0, -1]))
-            t1 = time.perf_counter()
-            slots[i] = _Slot(uid=r.uid, emitted=1, budget=r.max_new_tokens,
-                             tokens=[first], t_prefill=t1 - t0, t_admit=t1)
-            tokens[i, 0] = first
-            if stacked is None:
-                stacked = broadcast_slots(cache, self.B)
-            else:
-                stacked = splice_slot(stacked, cache, i)
-
-        while queue or any(s.uid >= 0 for s in slots):
-            for i, s in enumerate(slots):
-                if s.uid < 0 and queue:
-                    admit(i)
-            # per-slot token shape is (1, 1): add the slot axis up front
-            logits, stacked = self._step(self.params, stacked,
-                                         jnp.asarray(tokens)[:, None])
-            nxt = np.asarray(jnp.argmax(logits[:, 0, -1], axis=-1),
-                             np.int32)
-            self._advance(slots, tokens, nxt, done, lambda i: None)
-        return [done[r.uid] for r in reqs]
-
-    # ------------------------------------------------------------- offload
-
-    def _serve_offload(self, reqs: List[Request]) -> List[Generation]:
-        """Iteration-level batching over the KVPR offload runtime: one
-        HostKVStore slot per request in flight, per-slot splits from the
-        scheduler's plan, admission between steps."""
-        queue: Deque[Request] = deque(reqs)
-        done: Dict[int, Generation] = {}
-        slots = [_Slot() for _ in range(self.B)]
-        store = HostKVStore(self.cfg, self.B, self.max_len,
-                            compress=self.compress)
-        plan = self.runtime.plan_for(self.B)
-        tokens = np.zeros((self.B, 1), np.int32)
-        active = np.zeros(self.B, bool)
-
-        def admit(i):
-            r = queue.popleft()
-            t0 = time.perf_counter()
-            logits, ks, vs, hs = prefill_with_activations(
-                self.model, self.params, jnp.asarray(r.prompt)[None])
-            store.fill_slot(i, np.asarray(ks), np.asarray(vs),
-                            np.asarray(hs), len(r.prompt))
-            first = int(jnp.argmax(logits[0, -1]))
-            t1 = time.perf_counter()
-            slots[i] = _Slot(uid=r.uid, emitted=1, budget=r.max_new_tokens,
-                             tokens=[first], t_prefill=t1 - t0, t_admit=t1)
-            tokens[i, 0] = first
-            active[i] = True
-
-        def release(i):
-            active[i] = False
-            store.clear_slot(i)
-
-        while queue or active.any():
-            for i, s in enumerate(slots):
-                if s.uid < 0 and queue:
-                    admit(i)
-            # the plan owns the pad geometry: step_geometry buckets the
-            # jitted layer's static shapes, so the trace cache stays at
-            # O(#buckets) instead of recompiling as sequences grow
-            logits, _ = self.runtime.step(
-                store, jnp.asarray(tokens), plan, active=active.copy())
-            nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1),
-                             np.int32)
-            self._advance(slots, tokens, nxt, done, release)
-        # drain the final step's write-back fences: surfaces any store
-        # error and leaves the pool idle before the store is dropped
-        store.sync()
-        return [done[r.uid] for r in reqs]
+        self.sampler = sampler
+        config = EngineConfig(
+            backend="offload" if mode == "offload" else "resident",
+            batching="continuous", slots=num_slots, max_len=max_len,
+            kvpr=kvpr, schedule=schedule, align=align,
+            compress=compress, hw=hw or TPU_V5E, seed=seed)
+        self.engine = LLMEngine(model, params, config,
+                                scheduler=scheduler)

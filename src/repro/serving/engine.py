@@ -1,191 +1,101 @@
-"""Batched serving engine with KVPR-aware decode.
+"""Legacy static-batching serving engine — a thin shim over the
+request-level API in ``serving.api``.
 
-Two execution modes, both driven by the profiler → scheduler → runtime
-automation loop (paper §3; `core/scheduler.py`):
-  - "resident": classic HBM-resident KV cache (prefill + decode_step);
-    this is the baseline serving path and the dry-run `serve_step`.
-  - "offload":  host-offloaded KV via core.runtime.OffloadDecodeRuntime —
-    the paper's system. The engine asks its Scheduler for an
-    ExecutionPlan; the runtime merely executes it (no inline solves).
-
-Requests are grouped into fixed-size batches (padded to the same prompt
-length); the engine runs prefill once and then the decode loop,
-returning per-request generations.  The configured sampler (greedy or
-temperature) applies identically in both modes — the offload runtime
-receives the engine's sampling function and PRNG stream.
-
-For iteration-level admission (slots at ragged decode positions, new
-requests admitted mid-decode, in either mode) use
-`serving.continuous.ContinuousBatchingEngine`, which shares this
-module's Request/Generation plumbing and the same scheduler-driven
-offload runtime.
+``ServingEngine(model, params, mode="resident"|"offload", ...)`` maps
+straight onto ``LLMEngine`` with ``EngineConfig(backend=mode,
+batching="static")``; ``serve()`` translates each ``Request`` into
+per-request ``SamplingParams`` (the engine-level ``sampler=`` /
+``seed=`` become request defaults) and returns the same ``Generation``
+records as before (``Generation`` is an alias of
+``api.RequestOutput``).  New code should use ``LLMEngine`` directly —
+see docs/api.md for the migration table.
 """
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Dict, List, Optional
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
-from repro.configs.base import ModelConfig
 from repro.core.cost_model import HardwareProfile, TPU_V5E
-from repro.core.runtime import (HostKVStore, OffloadDecodeRuntime,
-                                prefill_with_activations)
 from repro.core.scheduler import Scheduler
-from repro.models import layers as L
 from repro.models.transformer import Model
 from repro.serving import sampler as samplers
+from repro.serving.api import (EngineConfig, LLMEngine, Request,
+                               RequestOutput, SamplingParams, pad_batch)
 
 Array = jax.Array
 
+# back-compat aliases: Generation(uid, tokens, prefill_time,
+# decode_time) is positionally unchanged
+Generation = RequestOutput
 
-@dataclasses.dataclass
-class Request:
-    uid: int
-    prompt: np.ndarray          # (s,) int32
-    max_new_tokens: int = 32
-
-
-@dataclasses.dataclass
-class Generation:
-    uid: int
-    tokens: np.ndarray
-    prefill_time: float
-    decode_time: float
-
-    @property
-    def decode_tps(self) -> float:
-        return len(self.tokens) / max(self.decode_time, 1e-9)
-
-
-def pad_batch(reqs: List[Request]) -> np.ndarray:
-    """Left-pad prompts to a common length (shared by both engines)."""
-    s = max(len(r.prompt) for r in reqs)
-    out = np.zeros((len(reqs), s), np.int32)
-    for i, r in enumerate(reqs):
-        out[i, s - len(r.prompt):] = r.prompt
-    return out
+__all__ = ["Generation", "Request", "ServingEngine", "get_sampler",
+           "pad_batch"]
 
 
 def get_sampler(name: str):
     return samplers.greedy if name == "greedy" else samplers.temperature
 
 
-class ServingEngine:
+class EngineShim:
+    """Shared plumbing of the legacy engine facades: proxy the
+    introspected LLMEngine internals and translate the engine-level
+    ``sampler=`` default into per-request SamplingParams."""
+
+    engine: LLMEngine
+    sampler: str
+
+    # engine internals some callers/tests introspect
+    @property
+    def model(self) -> Model:
+        return self.engine.model
+
+    @property
+    def cfg(self):
+        return self.engine.cfg
+
+    @property
+    def params(self):
+        return self.engine.params
+
+    @property
+    def scheduler(self) -> Scheduler:
+        return self.engine.scheduler
+
+    @property
+    def runtime(self):
+        return self.engine.runtime
+
+    def _default_params(self, r: Request) -> SamplingParams:
+        base = r.params or SamplingParams(max_tokens=r.max_new_tokens)
+        if self.sampler == "temperature" and base.greedy is None \
+                and base.temperature <= 0:
+            base = dataclasses.replace(base, temperature=0.8)
+        return base
+
+    def serve(self, reqs: List[Request],
+              extra: Optional[Dict[str, Array]] = None
+              ) -> List[Generation]:
+        sps = [self._default_params(r) for r in reqs]
+        return self.engine.generate(reqs, sps, extra=extra)
+
+
+class ServingEngine(EngineShim):
+    """Fixed-batch serving over a resident or host-offloaded (KVPR) KV
+    cache.  Thin shim over ``api.LLMEngine``."""
+
     def __init__(self, model: Model, params, mode: str = "resident",
                  hw: Optional[HardwareProfile] = None,
                  sampler: str = "greedy", seed: int = 0,
                  kvpr: bool = True, schedule: str = "row",
                  align: int = 1, compress: Optional[str] = None,
                  scheduler: Optional[Scheduler] = None):
-        self.model = model
-        self.cfg = model.cfg
-        self.params = params
         self.mode = mode
-        self.hw = hw or TPU_V5E
-        self.kvpr = kvpr
-        self.schedule = schedule
-        self.align = align
-        self.compress = compress
-        self.scheduler = scheduler or Scheduler(self.hw)
-        self.key = jax.random.PRNGKey(seed)
-        self.sample = get_sampler(sampler)
-        self._prefill = jax.jit(self.model.prefill,
-                                static_argnames=("max_len",))
-        self._decode = jax.jit(self.model.decode_step)
-        # one persistent runtime: jit traces and the transfer engine's
-        # staging buffers survive across serve() calls
-        self.runtime = None
-        if mode == "offload":
-            self.runtime = OffloadDecodeRuntime(
-                self.cfg, params, scheduler=self.scheduler,
-                mode="kvpr" if kvpr else "flexgen",
-                schedule=schedule, align=align, compress=compress)
-
-    # -------------------------------------------------------------- serve
-
-    def serve(self, reqs: List[Request],
-              extra: Optional[Dict[str, Array]] = None
-              ) -> List[Generation]:
-        prompts = pad_batch(reqs)
-        gen_len = max(r.max_new_tokens for r in reqs)
-        if self.mode == "offload":
-            return self._serve_offload(reqs, prompts, gen_len)
-        return self._serve_resident(reqs, prompts, gen_len, extra)
-
-    def _serve_resident(self, reqs, prompts, gen_len, extra):
-        b, s = prompts.shape
-        max_len = s + gen_len + 1
-        if self.cfg.arch_type == "vlm" and extra:
-            max_len += extra["patches"].shape[1]
-        t0 = time.perf_counter()
-        logits, cache = self._prefill(self.params, jnp.asarray(prompts),
-                                      extra, max_len=max_len)
-        logits.block_until_ready()
-        t_prefill = time.perf_counter() - t0
-
-        toks = []
-        self.key, k = jax.random.split(self.key)
-        tok = self.sample(logits[:, -1], k)[:, None]
-        t0 = time.perf_counter()
-        for _ in range(gen_len):
-            toks.append(np.asarray(tok))
-            logits, cache = self._decode(self.params, cache, tok)
-            self.key, k = jax.random.split(self.key)
-            tok = self.sample(logits[:, -1], k)[:, None]
-        jax.block_until_ready(tok)
-        t_decode = time.perf_counter() - t0
-        all_toks = np.concatenate(toks, axis=1)
-        return [Generation(r.uid, all_toks[i, : r.max_new_tokens],
-                           t_prefill, t_decode)
-                for i, r in enumerate(reqs)]
-
-    # --------------------------------------------------- offload (KVPR)
-
-    def _serve_offload(self, reqs, prompts, gen_len):
-        """Prefill on-device, spill KV + activations to host, decode with
-        the KVPR runtime (dense-family archs) under the scheduler's
-        ExecutionPlan, sampling with the engine's configured sampler."""
-        cfg = self.cfg
-        b, s = prompts.shape
-        store = HostKVStore(cfg, b, s + gen_len + 1,
-                            compress=self.compress)
-        t0 = time.perf_counter()
-        logits, ks, vs, hs = prefill_with_activations(
-            self.model, self.params, jnp.asarray(prompts))
-        store.bulk_fill(np.asarray(ks), np.asarray(vs), np.asarray(hs), s)
-        t_prefill = time.perf_counter() - t0
-
-        self.key, k = jax.random.split(self.key)
-        first = self.sample(logits[:, -1], k)[:, None]
-
-        rt = self.runtime
-        t0 = time.perf_counter()
-        # Hand the runtime the engine's PRNG stream; the runtime splits it
-        # once per step exactly as the resident loop does, so the two
-        # modes draw identical sampling keys from the same seed.
-        toks, stats = rt.decode(store, np.asarray(first), gen_len,
-                                sample_fn=self.sample, key=self.key)
-        t_decode = time.perf_counter() - t0
-        # mirror the runtime's key consumption (decode() contract: one
-        # split per generated token) so a later serve() continues the
-        # stream exactly where the resident loop would
-        for _ in range(gen_len):
-            self.key, _ = jax.random.split(self.key)
-        # runtime emits tokens *after* consuming `first`; prepend it
-        all_toks = np.concatenate([np.asarray(first), toks], axis=1)
-        return [Generation(r.uid, all_toks[i, : r.max_new_tokens],
-                           t_prefill, t_decode)
-                for i, r in enumerate(reqs)]
-
-
-def _prefill_with_activations(model: Model, params, tokens: Array):
-    """Back-compat shim: greedy first token + spill tensors.  New code
-    should use core.runtime.prefill_with_activations (returns logits so
-    the caller's sampler decides the first token)."""
-    logits, ks, vs, hs = prefill_with_activations(model, params, tokens)
-    first = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    return first, ks, vs, hs
+        self.sampler = sampler
+        config = EngineConfig(
+            backend="offload" if mode == "offload" else "resident",
+            batching="static", kvpr=kvpr, schedule=schedule,
+            align=align, compress=compress, hw=hw or TPU_V5E, seed=seed)
+        self.engine = LLMEngine(model, params, config,
+                                scheduler=scheduler)

@@ -1,5 +1,26 @@
-"""Token samplers for the serving engine."""
+"""Token samplers for the serving stack.
+
+Two layers:
+
+  - the legacy scalar-config samplers (``greedy`` / ``temperature``)
+    kept for direct use and back-compat;
+  - the vectorized request-level path used by ``serving.api``: one
+    jitted ``sample_step`` draws every batch slot's next token in a
+    single call, with *per-slot* temperature / top-k / greediness and
+    *per-slot* PRNG keys, so one batch can mix greedy and temperature
+    requests (paper-style static batches and continuous slots alike).
+
+PRNG convention (the request-level sampling stream): every request owns
+a base key — ``request_key(engine_key, uid, seed)`` — and its t-th
+token is always drawn with ``fold_in(base, t)``.  The draw therefore
+depends only on (request identity, token index), never on which engine,
+backend, or batch composition executed it: resident and offload decode
+are sampling-stream identical by construction, and a request admitted
+mid-decode draws the same tokens it would draw served alone.
+"""
 from __future__ import annotations
+
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -16,3 +37,42 @@ def temperature(logits: jax.Array, key, temp: float = 0.8,
         kth = jnp.sort(logits, axis=-1)[..., -top_k][..., None]
         logits = jnp.where(logits < kth, -1e30, logits)
     return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
+
+
+# --------------------------------------------------- request-level path
+
+def request_key(engine_key: jax.Array, uid: int,
+                seed: Optional[int] = None) -> jax.Array:
+    """A request's base PRNG key: its own seed when it carries one,
+    otherwise derived from the engine key by uid."""
+    if seed is not None:
+        return jax.random.PRNGKey(seed)
+    return jax.random.fold_in(engine_key, uid)
+
+
+@jax.jit
+def sample_step(logits: jax.Array, req_keys: jax.Array, steps: jax.Array,
+                temps: jax.Array, top_ks: jax.Array,
+                greedy_mask: jax.Array) -> jax.Array:
+    """Draw one token per batch slot, each slot under its own sampling
+    params and PRNG stream.
+
+    logits      (b, V)   last-position logits
+    req_keys    (b, 2)   per-slot request base keys (stacked raw keys)
+    steps       (b,)     per-slot token index t (fold_in counter)
+    temps       (b,)     per-slot temperature (ignored where greedy)
+    top_ks      (b,)     per-slot top-k (0 = no truncation)
+    greedy_mask (b,)     True -> argmax, ignoring the stochastic draw
+    """
+    V = logits.shape[-1]
+    arg = jnp.argmax(logits, axis=-1)
+    scaled = logits.astype(jnp.float32) / jnp.maximum(temps, 1e-6)[:, None]
+    # per-row top-k with per-row k: kth largest via a sorted row
+    srt = jnp.sort(scaled, axis=-1)                     # ascending
+    kth_idx = jnp.clip(V - top_ks, 0, V - 1)
+    kth = jnp.take_along_axis(srt, kth_idx[:, None], axis=-1)
+    truncated = jnp.where(scaled < kth, -1e30, scaled)
+    scaled = jnp.where((top_ks > 0)[:, None], truncated, scaled)
+    keys = jax.vmap(jax.random.fold_in)(req_keys, steps)
+    drawn = jax.vmap(jax.random.categorical)(keys, scaled)
+    return jnp.where(greedy_mask, arg, drawn).astype(jnp.int32)

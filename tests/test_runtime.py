@@ -6,10 +6,10 @@ import pytest
 
 from repro.configs import get_smoke_config
 from repro.core.cost_model import A100_PCIE4
-from repro.core.runtime import HostKVStore, OffloadDecodeRuntime
+from repro.core.runtime import (HostKVStore, OffloadDecodeRuntime,
+                                prefill_with_activations)
 from repro.models.transformer import Model
-from repro.serving.engine import (Request, ServingEngine,
-                                  _prefill_with_activations)
+from repro.serving.engine import Request, ServingEngine
 
 
 @pytest.fixture(scope="module")
@@ -39,7 +39,8 @@ def test_offload_runtime_matches_resident(opt_setup, mode):
                               cfg.vocab_size)
     ref = _reference_greedy(model, params, toks, gen)
 
-    first, ks, vs, hs = _prefill_with_activations(model, params, toks)
+    logits, ks, vs, hs = prefill_with_activations(model, params, toks)
+    first = jnp.argmax(logits, axis=-1).astype(jnp.int32)
     store = HostKVStore(cfg, b, s + gen + 2)
     store.bulk_fill(np.asarray(ks), np.asarray(vs), np.asarray(hs), s)
     rt = OffloadDecodeRuntime(cfg, params, A100_PCIE4, mode=mode)

@@ -8,9 +8,9 @@ import pytest
 
 from repro.configs import get_smoke_config
 from repro.core.profiler import profile_system
-from repro.core.runtime import HostKVStore, OffloadDecodeRuntime
+from repro.core.runtime import (HostKVStore, OffloadDecodeRuntime,
+                                prefill_with_activations)
 from repro.models.transformer import Model
-from repro.serving.engine import _prefill_with_activations
 
 
 @pytest.fixture(scope="module")
@@ -20,8 +20,9 @@ def setup():
     params = model.init_params(jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
     toks = rng.integers(1, cfg.vocab_size, (2, 24)).astype(np.int32)
-    first, ks, vs, hs = _prefill_with_activations(model, params,
+    logits, ks, vs, hs = prefill_with_activations(model, params,
                                                   np.asarray(toks))
+    first = np.asarray(np.argmax(logits, axis=-1), np.int32)
     return cfg, params, first, ks, vs, hs
 
 
