@@ -61,11 +61,12 @@ def run(print_csv: bool = True, prompt: int = 192, gen: int = 8,
                                   mode="kvpr" if compress else mode,
                                   schedule="row", align=32,
                                   compress=compress)
-        # warmup jit caches with one token, then measure
-        _t, _ = rt.decode(store, np.asarray(first), 1)
-        t0 = time.perf_counter()
-        toks_out, stats = rt.decode(store, np.asarray(_t), gen)
-        dt = time.perf_counter() - t0
+        with rt:
+            # warmup jit caches with one token, then measure
+            _t, _ = rt.decode(store, np.asarray(first), 1)
+            t0 = time.perf_counter()
+            toks_out, stats = rt.decode(store, np.asarray(_t), gen)
+            dt = time.perf_counter() - t0
         nbytes = sum(s.bytes_transferred for s in stats)
         results[mode] = (toks_out, dt, nbytes, stats)
         tps = batch * gen / dt

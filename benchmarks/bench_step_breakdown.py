@@ -53,22 +53,22 @@ def run(mode: str = "kvpr", compress=None, batch: int = 2,
     toks = rng.integers(1, cfg.vocab_size,
                         (batch, prompt)).astype(np.int32)
     sched = Scheduler(profile_system())
-    rt = OffloadDecodeRuntime(cfg, params, scheduler=sched,
-                              mode=mode, compress=compress)
+    with OffloadDecodeRuntime(cfg, params, scheduler=sched,
+                              mode=mode, compress=compress) as rt:
+        # warmup: compile every pad bucket of the trajectory + allocate
+        # the staging buffers once
+        store, first = _spill(cfg, model, params, toks, gen, compress)
+        t0 = time.perf_counter()
+        _, warm_stats = rt.decode(store, first, gen)
+        t_warm = time.perf_counter() - t0
 
-    # warmup: compile every pad bucket of the trajectory + allocate the
-    # staging buffers once
-    store, first = _spill(cfg, model, params, toks, gen, compress)
-    t0 = time.perf_counter()
-    _, warm_stats = rt.decode(store, first, gen)
-    t_warm = time.perf_counter() - t0
-
-    # measured steady state: same trajectory, fresh store, warm caches
-    store, first = _spill(cfg, model, params, toks, gen, compress)
-    allocs0, traces0 = rt.xfer.staging_allocs, rt.compute.traces()
-    t0 = time.perf_counter()
-    _, stats = rt.decode(store, first, gen)
-    dt = time.perf_counter() - t0
+        # measured steady state: same trajectory, fresh store, warm
+        # caches
+        store, first = _spill(cfg, model, params, toks, gen, compress)
+        allocs0, traces0 = rt.xfer.staging_allocs, rt.compute.traces()
+        t0 = time.perf_counter()
+        _, stats = rt.decode(store, first, gen)
+        dt = time.perf_counter() - t0
 
     retraces = sum(st.retraces for st in stats)
     new_allocs = rt.xfer.staging_allocs - allocs0

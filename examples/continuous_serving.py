@@ -49,10 +49,11 @@ def main():
 
     print(f"== continuous batching: {len(reqs)} requests, 2 slots ==")
     t0 = time.perf_counter()
-    cont = LLMEngine.from_config(
-        model, params,
-        EngineConfig(batching="continuous", slots=2, max_len=64)
-    ).generate(reqs)
+    with LLMEngine.from_config(
+            model, params,
+            EngineConfig(batching="continuous", slots=2,
+                         max_len=64)) as eng_cont:
+        cont = eng_cont.generate(reqs)
     t_cont = time.perf_counter() - t0
     ok = all(np.array_equal(c.tokens, one.generate([r])[0].tokens)
              for r, c in zip(reqs, cont))
@@ -62,10 +63,12 @@ def main():
     print("== continuous batching over the KVPR offload runtime ==")
     sched = Scheduler()          # profiles the machine once, caches plans
     t0 = time.perf_counter()
-    cont_off = LLMEngine.from_config(
-        model, params,
-        EngineConfig(backend="offload", batching="continuous", slots=2,
-                     max_len=64), scheduler=sched).generate(reqs)
+    with LLMEngine.from_config(
+            model, params,
+            EngineConfig(backend="offload", batching="continuous",
+                         slots=2, max_len=64),
+            scheduler=sched) as eng_off:
+        cont_off = eng_off.generate(reqs)
     t_off = time.perf_counter() - t0
     ok_off = all(np.array_equal(c.tokens, one.generate([r])[0].tokens)
                  for r, c in zip(reqs, cont_off))
@@ -79,14 +82,15 @@ def main():
            SamplingParams(max_tokens=6, temperature=0.9, top_k=40,
                           seed=1),
            SamplingParams(max_tokens=6)]
-    eng = LLMEngine.from_config(
-        model, params,
-        EngineConfig(backend="offload", batching="continuous", slots=2,
-                     max_len=64), scheduler=sched)
     finish = {}
-    for ev in eng.generate_stream(reqs[:3], sps):
-        if ev.finish_reason:
-            finish[ev.uid] = (ev.finish_reason, ev.index + 1, ev.step)
+    with LLMEngine.from_config(
+            model, params,
+            EngineConfig(backend="offload", batching="continuous",
+                         slots=2, max_len=64), scheduler=sched) as eng:
+        for ev in eng.generate_stream(reqs[:3], sps):
+            if ev.finish_reason:
+                finish[ev.uid] = (ev.finish_reason, ev.index + 1,
+                                  ev.step)
     for uid, (reason, n, step) in sorted(finish.items()):
         print(f"   uid={uid}: finish={reason!r} after {n} tokens "
               f"(engine step {step})")
@@ -95,16 +99,18 @@ def main():
     uni = [rng.integers(1, cfg.vocab_size, 16).astype(np.int32)
            for _ in range(2)]
     sp = SamplingParams(max_tokens=5)
-    exact = LLMEngine.from_config(
-        model, params, EngineConfig(backend="offload")
-    ).generate(uni, sp)
-    quant = LLMEngine.from_config(
-        model, params, EngineConfig(backend="offload", compress="int4")
-    ).generate(uni, sp)
+    with LLMEngine.from_config(
+            model, params, EngineConfig(backend="offload")) as e1:
+        exact = e1.generate(uni, sp)
+    with LLMEngine.from_config(
+            model, params,
+            EngineConfig(backend="offload", compress="int4")) as e2:
+        quant = e2.generate(uni, sp)
     agree = np.mean([np.mean(e.tokens == q.tokens)
                      for e, q in zip(exact, quant)])
     print(f"   token agreement exact-vs-int4: {agree*100:.0f}% "
           f"(int4 streams ~4x fewer KV bytes; recomputed prefix exact)")
+    one.close()
 
 
 if __name__ == "__main__":

@@ -43,12 +43,12 @@ def main():
                for _ in range(2)]
     sampling = SamplingParams(max_tokens=8)       # greedy, no early stop
 
-    res = LLMEngine.from_config(
-        model, params, EngineConfig(backend="resident")
-    ).generate(prompts, sampling)
-    off = LLMEngine.from_config(
-        model, params, EngineConfig(backend="offload", hw=hw)
-    ).generate(prompts, sampling)
+    with LLMEngine.from_config(
+            model, params, EngineConfig(backend="resident")) as eng:
+        res = eng.generate(prompts, sampling)
+    with LLMEngine.from_config(
+            model, params, EngineConfig(backend="offload", hw=hw)) as eng:
+        off = eng.generate(prompts, sampling)
     for r, o in zip(res, off):
         assert np.array_equal(r.tokens, o.tokens), "KVPR must be exact"
         print(f"req {r.uid}: {r.tokens} (offload == resident ✓, "

@@ -48,7 +48,8 @@ def main():
              backend="offload", hw=hw, kvpr=True))),
     ]:
         t0 = time.perf_counter()
-        gens = eng.generate(reqs, sampling)
+        with eng:
+            gens = eng.generate(reqs, sampling)
         dt = time.perf_counter() - t0
         tput = args.batch * args.gen / gens[0].decode_time
         results[name] = (gens, tput)

@@ -1,8 +1,12 @@
 #!/usr/bin/env bash
-# Tier-1 CI: collection sanity, the full test suite, and a smoke of the
-# quickstart example.  Run from the repo root:
+# Tier-1 CI: collection sanity, the test suite, and end-to-end smokes.
+# Run from the repo root:
 #
-#     bash scripts/ci.sh [--no-install]
+#     bash scripts/ci.sh [--no-install] [--fast]
+#
+# --fast runs the fast test tier only (pytest -m "not slow") — the
+# pre-push lane.  The full suite (slow tests included) stays the
+# default and is what the GitHub workflow runs.
 #
 # `hypothesis` is an optional test dependency (the property suites skip
 # without it — see docs/automation.md); CI installs it so they run.
@@ -11,7 +15,17 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-if [[ "${1:-}" != "--no-install" ]]; then
+INSTALL=1
+FAST=0
+for arg in "$@"; do
+    case "$arg" in
+        --no-install) INSTALL=0 ;;
+        --fast) FAST=1 ;;
+        *) echo "unknown argument: $arg" >&2; exit 2 ;;
+    esac
+done
+
+if [[ "$INSTALL" == "1" ]]; then
     python -m pip install --quiet "jax[cpu]" pytest hypothesis
 fi
 
@@ -20,8 +34,12 @@ fi
 #    whole suite has run.
 python -m pytest -q --collect-only >/dev/null
 
-# 2. Tier-1 suite.
-python -m pytest -x -q
+# 2. Tier-1 suite: fast tier on --fast, everything otherwise.
+if [[ "$FAST" == "1" ]]; then
+    python -m pytest -x -q -m "not slow"
+else
+    python -m pytest -x -q
+fi
 
 # 3. Smoke the quickstart end-to-end (profiler -> scheduler -> serving);
 #    the timeout guards CI against pathological slowdowns.
@@ -34,8 +52,13 @@ timeout "${BREAKDOWN_TIMEOUT:-300}" \
 
 # 5. Serve-API round-trip: the request-level front door (EngineConfig +
 #    SamplingParams + streaming) over static+continuous x
-#    resident+offload, incl. a mixed greedy/temperature/early-EOS batch
-#    (see docs/api.md).
+#    resident+offload, incl. a ragged static batch checked against the
+#    per-request reference, a mixed greedy/temperature/early-EOS batch,
+#    and a prefix-cache restore round-trip (see docs/api.md).
 timeout "${SERVE_TIMEOUT:-300}" python -m repro.launch.serve --smoke
+
+# 6. Shared-prefix cache smoke: a warm run must skip prefill for the
+#    matched tokens AND emit tokens identical to the cold run.
+timeout "${PREFIX_TIMEOUT:-300}" python benchmarks/bench_prefix.py --smoke
 
 echo "ci.sh: all checks passed"

@@ -5,6 +5,10 @@ from repro.core.cost_model import (
 )
 from repro.core.solver import SplitDecision, brute_force_split, optimal_split
 from repro.core.scheduler import ExecutionPlan, PlanKey, Scheduler
+from repro.core.prefix_cache import (
+    PrefixCache, PrefixCacheConfig, PrefixCacheStats, PrefixEntry,
+    RadixPrefixIndex,
+)
 from repro.core.pipeline import (
     StepTimeline, decode_latency, flexgen_step, kvpr_step,
 )
@@ -14,5 +18,7 @@ __all__ = [
     "HardwareProfile", "Workload", "layer_times",
     "SplitDecision", "brute_force_split", "optimal_split",
     "ExecutionPlan", "PlanKey", "Scheduler",
+    "PrefixCache", "PrefixCacheConfig", "PrefixCacheStats",
+    "PrefixEntry", "RadixPrefixIndex",
     "StepTimeline", "decode_latency", "flexgen_step", "kvpr_step",
 ]

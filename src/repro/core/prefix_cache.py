@@ -1,0 +1,343 @@
+"""Host-side shared-prefix KV cache: a radix-trie index over host-
+resident KV + activation blocks, keyed by token prefixes.
+
+This is the ROADMAP's cross-request prompt-reuse step: a request whose
+prompt extends a prefix some earlier request already prefilled skips
+prefill for the matched tokens — the scheduler's *restore split*
+(``Scheduler.restore_split``, the paper's transfer-vs-recompute LP
+applied at admission time) decides how much of the match is recomputed
+on device from the cached activations versus streamed as KV over the
+link (``core.runtime.restore_prefix_kv``).
+
+The index is a radix (compressed) trie modeled on prompt-cache-engine's
+``RadixTrie``, with two serving-oriented twists:
+
+  - nodes index ``PrefixEntry`` objects (the host KV/activation blocks)
+    directly instead of opaque cache keys;
+  - lookups count PARTIAL edge matches: if a new prompt diverges k
+    tokens into an entry's edge, every entry below that edge still
+    shares the first ``matched`` tokens, so its blocks are valid for
+    them — the "prefix longer than the match" case costs nothing.
+
+Capacity is bounded in TOKENS (the blocks dominate memory, and their
+size is linear in tokens); eviction is LRU over whole entries.
+Thread-safe: continuous engines admit from their serving loop while
+other engines sharing the cache do the same.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class PrefixCacheConfig:
+    """Knobs for the shared-prefix cache (``EngineConfig.prefix_cache``).
+
+    capacity_tokens: total tokens of stored prefixes before LRU
+        eviction kicks in.
+    min_prefix: shortest prefix worth matching or inserting — tiny
+        matches cost more restore bookkeeping than they save.
+    insert_on_finish: record each finished request's prompt blocks
+        (the serving engine captures them at admission).
+    """
+    capacity_tokens: int = 65536
+    min_prefix: int = 4
+    insert_on_finish: bool = True
+
+    def validate(self) -> "PrefixCacheConfig":
+        if self.capacity_tokens < 1:
+            raise ValueError(f"capacity_tokens must be >= 1, got "
+                             f"{self.capacity_tokens}")
+        if self.min_prefix < 1:
+            raise ValueError(f"min_prefix must be >= 1, got "
+                             f"{self.min_prefix}")
+        return self
+
+
+@dataclasses.dataclass
+class PrefixEntry:
+    """One cached prefix: its tokens and host-resident blocks.
+
+    ks/vs: (L, 1, p, KV, dh) float32; hs: (L, 1, p, h) float32 —
+    exactly what ``prefill_with_activations`` returns for a b=1
+    prefill, position-native (block index == RoPE position).
+    """
+    tokens: Tuple[int, ...]
+    ks: np.ndarray
+    vs: np.ndarray
+    hs: np.ndarray
+    last_used: int = 0
+    hits: int = 0
+
+    def __len__(self) -> int:
+        return len(self.tokens)
+
+    @property
+    def nbytes(self) -> int:
+        return self.ks.nbytes + self.vs.nbytes + self.hs.nbytes
+
+
+class _Node:
+    """Radix-trie node: ``tokens`` is the edge label leading INTO this
+    node; ``entry`` is the entry whose token sequence ends exactly
+    here.  Invariant: every non-root node's subtree contains at least
+    one entry (``remove`` prunes otherwise)."""
+
+    __slots__ = ("tokens", "children", "entry")
+
+    def __init__(self, tokens: Tuple[int, ...] = ()):
+        self.tokens = tokens
+        self.children: Dict[int, _Node] = {}
+        self.entry: Optional[PrefixEntry] = None
+
+
+class RadixPrefixIndex:
+    """Radix trie over token sequences -> ``PrefixEntry``."""
+
+    def __init__(self) -> None:
+        self.root = _Node()
+        self._size = 0
+
+    @property
+    def size(self) -> int:
+        return self._size
+
+    # ------------------------------------------------------------ insert
+
+    def insert(self, tokens: Tuple[int, ...], entry: PrefixEntry) -> None:
+        if not tokens:
+            return
+        node = self.root
+        pos = 0
+        while pos < len(tokens):
+            child = node.children.get(tokens[pos])
+            if child is None:
+                leaf = _Node(tokens[pos:])
+                leaf.entry = entry
+                node.children[tokens[pos]] = leaf
+                self._size += 1
+                return
+            et = child.tokens
+            m = 0
+            while (m < len(et) and pos + m < len(tokens)
+                   and et[m] == tokens[pos + m]):
+                m += 1
+            if m == len(et):
+                pos += m
+                node = child
+                continue
+            # partial match: split the edge at m
+            split = _Node(et[:m])
+            child.tokens = et[m:]
+            split.children[child.tokens[0]] = child
+            rest = tokens[pos + m:]
+            if rest:
+                leaf = _Node(rest)
+                leaf.entry = entry
+                split.children[rest[0]] = leaf
+            else:
+                split.entry = entry
+            node.children[tokens[pos]] = split
+            self._size += 1
+            return
+        # landed exactly on an existing node
+        if node.entry is None:
+            self._size += 1
+        node.entry = entry
+
+    # ------------------------------------------------------------- match
+
+    def match(self, tokens) -> Tuple[int, Optional[PrefixEntry]]:
+        """Longest usable prefix of ``tokens`` covered by some entry.
+
+        Returns (matched_len, entry) where ``entry.tokens[:matched_len]
+        == tokens[:matched_len]``.  Partial edge matches count: when the
+        walk diverges k tokens into an edge, every entry in that edge's
+        subtree shares the matched span, so one of them is returned
+        even though none ends there."""
+        node = self.root
+        pos = 0
+        n = len(tokens)
+        while pos < n:
+            child = node.children.get(int(tokens[pos]))
+            if child is None:
+                break
+            et = child.tokens
+            m = 0
+            while (m < len(et) and pos + m < n
+                   and et[m] == tokens[pos + m]):
+                m += 1
+            pos += m
+            if m < len(et):
+                # diverged (or ran out of query) inside the edge: the
+                # subtree below still covers the matched span
+                return pos, self._any_entry(child)
+            node = child
+        if pos == 0 or node is self.root:
+            return 0, None
+        return pos, self._any_entry(node)
+
+    def _any_entry(self, node: _Node) -> PrefixEntry:
+        while node.entry is None:
+            node = next(iter(node.children.values()))
+        return node.entry
+
+    # ------------------------------------------------------------ remove
+
+    def remove(self, tokens: Tuple[int, ...]) -> bool:
+        """Remove the entry ending exactly at ``tokens``; prune nodes
+        left with neither entry nor children (keeps the every-subtree-
+        has-an-entry invariant ``match`` relies on)."""
+        if not tokens:
+            return False
+        node = self.root
+        pos = 0
+        path: List[Tuple[_Node, int]] = []       # (parent, first_token)
+        while pos < len(tokens):
+            child = node.children.get(tokens[pos])
+            if child is None:
+                return False
+            et = child.tokens
+            if tokens[pos:pos + len(et)] != et:
+                return False
+            path.append((node, tokens[pos]))
+            pos += len(et)
+            node = child
+        if node.entry is None:
+            return False
+        node.entry = None
+        self._size -= 1
+        # prune upward: drop entry-less leaves
+        while path:
+            parent, tok = path.pop()
+            if node.entry is None and not node.children:
+                del parent.children[tok]
+            node = parent
+        return True
+
+    def entries(self) -> List[PrefixEntry]:
+        out: List[PrefixEntry] = []
+
+        def walk(node: _Node) -> None:
+            if node.entry is not None:
+                out.append(node.entry)
+            for c in node.children.values():
+                walk(c)
+
+        walk(self.root)
+        return out
+
+
+@dataclasses.dataclass
+class PrefixCacheStats:
+    """Cumulative counters (a snapshot; see ``PrefixCache.stats``)."""
+    lookups: int = 0
+    hits: int = 0
+    misses: int = 0
+    tokens_matched: int = 0      # prefill tokens skipped via restore
+    tokens_inserted: int = 0
+    entries: int = 0
+    tokens_stored: int = 0
+    bytes_stored: int = 0
+    evictions: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / max(self.lookups, 1)
+
+
+class PrefixCache:
+    """The host-side shared-prefix store: radix index + LRU eviction.
+
+    ``lookup`` caps the match at ``len(prompt) - 1`` so at least one
+    prompt token always goes through (partial) prefill — the engine
+    needs that position's logits to sample the first output token.
+    """
+
+    def __init__(self, config: Optional[PrefixCacheConfig] = None):
+        self.config = (config or PrefixCacheConfig()).validate()
+        self.index = RadixPrefixIndex()
+        self._entries: Dict[Tuple[int, ...], PrefixEntry] = {}
+        self._lock = threading.Lock()
+        self._clock = 0
+        self._tokens_stored = 0      # running total (O(1) eviction test)
+        self._stats = PrefixCacheStats()
+
+    # ------------------------------------------------------------ lookup
+
+    def lookup(self, prompt) -> Tuple[int, Optional[PrefixEntry]]:
+        """Longest cached prefix usable for ``prompt`` (a 1-D int
+        sequence): returns (matched_len, entry), (0, None) on miss.
+        Bumps the entry's LRU clock and the hit counters."""
+        toks = [int(t) for t in prompt]
+        with self._lock:
+            self._stats.lookups += 1
+            p, entry = self.index.match(toks)
+            p = min(p, len(toks) - 1)
+            if entry is None or p < self.config.min_prefix:
+                self._stats.misses += 1
+                return 0, None
+            self._clock += 1
+            entry.last_used = self._clock
+            entry.hits += 1
+            self._stats.hits += 1
+            self._stats.tokens_matched += p
+            return p, entry
+
+    # ------------------------------------------------------------ insert
+
+    def insert(self, prompt, ks: np.ndarray, vs: np.ndarray,
+               hs: np.ndarray) -> bool:
+        """Store ``prompt``'s blocks (host copies are taken).  Skipped
+        when an existing entry already covers the whole prompt, or the
+        prompt is shorter than ``min_prefix``.  Evicts LRU entries when
+        over ``capacity_tokens``."""
+        toks = tuple(int(t) for t in prompt)
+        if len(toks) < self.config.min_prefix:
+            return False
+        if len(toks) > self.config.capacity_tokens:
+            return False
+        with self._lock:
+            covered, _ = self.index.match(list(toks))
+            if covered == len(toks):
+                return False
+            entry = PrefixEntry(toks, np.array(ks, np.float32, copy=True),
+                                np.array(vs, np.float32, copy=True),
+                                np.array(hs, np.float32, copy=True))
+            self._clock += 1
+            entry.last_used = self._clock
+            self.index.insert(toks, entry)
+            self._entries[toks] = entry
+            self._tokens_stored += len(toks)
+            self._stats.tokens_inserted += len(toks)
+            self._evict_locked()
+            return True
+
+    def _evict_locked(self) -> None:
+        while (self._tokens_stored > self.config.capacity_tokens
+               and len(self._entries) > 1):
+            victim = min(self._entries.values(),
+                         key=lambda e: e.last_used)
+            self.index.remove(victim.tokens)
+            del self._entries[victim.tokens]
+            self._tokens_stored -= len(victim.tokens)
+            self._stats.evictions += 1
+
+    # ------------------------------------------------------------- stats
+
+    @property
+    def stats(self) -> PrefixCacheStats:
+        with self._lock:
+            s = dataclasses.replace(self._stats)
+            s.entries = len(self._entries)
+            s.tokens_stored = self._tokens_stored
+            s.bytes_stored = sum(e.nbytes for e in self._entries.values())
+            return s
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._entries)

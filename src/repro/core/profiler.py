@@ -9,7 +9,9 @@ HBM and a jit'd GEMM; the interfaces are identical.
 """
 from __future__ import annotations
 
+import threading
 import time
+import weakref
 
 import jax
 import jax.numpy as jnp
@@ -46,23 +48,48 @@ def measure_gemm_flops(m: int = 2048, k: int = 2048, n: int = 2048,
 
 
 _PROFILE_CACHE: dict = {}
+_PROFILE_LOCK = threading.Lock()
+# Schedulers whose HardwareProfile came from profile_system(), keyed by
+# the profile NAME they adopted: a later force=True re-measure of that
+# name pushes the fresh profile into them (and only them — re-measuring
+# another name must not clobber their profile).  WeakSets so a
+# registered scheduler's lifetime is unchanged.
+_LIVE_SCHEDULERS: dict = {}
+
+
+def register_scheduler(sched, name: str = "measured") -> None:
+    """Register a live Scheduler that adopted the measured profile
+    ``name``, so a later ``profile_system(name, force=True)``
+    re-measure notifies it (``invalidate(hw=new_profile)``) instead of
+    leaving it holding a stale profile and stale plans."""
+    with _PROFILE_LOCK:
+        _LIVE_SCHEDULERS.setdefault(name, weakref.WeakSet()).add(sched)
 
 
 def profile_system(name: str = "measured",
                    force: bool = False) -> HardwareProfile:
     """Measure (once) and return the system profile.
 
-    The measurement is memoized per `name`: the profiler runs once per
-    process and every scheduler/engine constructed afterwards reuses the
-    same profile — which also makes their plan-cache keys identical.
-    Pass force=True to re-measure (callers should then
-    `Scheduler.invalidate(hw=...)` so stale plans are dropped).
+    The measurement is memoized per `name` and guarded by a process
+    lock: engines profile from multiple threads under continuous
+    batching, and every caller must observe the SAME profile object —
+    identical profiles make their plan-cache keys identical.
+
+    Pass force=True to re-measure: the fresh profile replaces the
+    cached one AND is pushed into every live Scheduler registered via
+    ``register_scheduler`` (``invalidate(hw=...)``), so cached plans
+    keyed by the stale profile are dropped automatically.
     """
-    if not force and name in _PROFILE_CACHE:
-        return _PROFILE_CACHE[name]
-    link = measure_link_bandwidth()
-    flops = measure_gemm_flops()
-    prof = HardwareProfile(name=name, link_bandwidth=link, gpu_flops=flops,
-                           hbm_bandwidth=link * 4, gemm_efficiency=1.0)
-    _PROFILE_CACHE[name] = prof
+    with _PROFILE_LOCK:
+        if not force and name in _PROFILE_CACHE:
+            return _PROFILE_CACHE[name]
+        link = measure_link_bandwidth()
+        flops = measure_gemm_flops()
+        prof = HardwareProfile(name=name, link_bandwidth=link,
+                               gpu_flops=flops, hbm_bandwidth=link * 4,
+                               gemm_efficiency=1.0)
+        _PROFILE_CACHE[name] = prof
+        scheds = (list(_LIVE_SCHEDULERS.get(name, ())) if force else [])
+    for s in scheds:
+        s.invalidate(hw=prof)
     return prof

@@ -199,9 +199,33 @@ class HostKVStore:
                               k[i], v[i])
             self.act[layer, i, p:p + act.shape[1]] = act[i]
 
-    def bulk_fill(self, ks, vs, acts, s: int) -> None:
-        """Fill from prefill outputs: (L, b, s, KV, dh) / (L, b, s, h)."""
+    def bulk_fill(self, ks, vs, acts, s: int, seq_lens=None) -> None:
+        """Fill from prefill outputs: (L, b, s, KV, dh) / (L, b, s, h).
+
+        ``seq_lens`` (optional, (b,)) are the TRUE per-slot prompt
+        lengths of a LEFT-padded ragged prefill: slot i's real tokens
+        occupy columns [s - len_i, s) of ks/vs/acts and are shifted to
+        host positions [0, len_i), so every slot's cached prefix is
+        position-native (host index == RoPE position, matching the
+        per-slot ragged decode convention) and ``self.seq_lens`` records
+        true lengths instead of the padded batch length."""
         self.sync()
+        if seq_lens is not None:
+            lens = np.asarray(seq_lens, np.int64)
+            if lens.shape != (self.batch,):
+                raise ValueError(f"seq_lens shape {lens.shape} != "
+                                 f"({self.batch},)")
+            if not (lens == s).all():
+                for i, n in enumerate(lens):
+                    n = int(n)
+                    pad = s - n
+                    for li in range(ks.shape[0]):
+                        self._put_kv_slot(li, i, slice(0, n),
+                                          ks[li, i, pad:s],
+                                          vs[li, i, pad:s])
+                    self.act[:, i, :n] = acts[:, i, pad:s]
+                self.seq_lens[:] = lens
+                return
         if self.compress == "int4":
             for li in range(ks.shape[0]):
                 self._put_kv(li, slice(0, s), ks[li], vs[li])
@@ -266,6 +290,13 @@ class TransferEngine:
 
     def submit_store(self, fn, *args):
         return self.store_pool.submit(fn, *args)
+
+    def close(self) -> None:
+        """Shut down the copy and store pools (joins the worker
+        threads; queued work finishes first).  Idempotent — safe to
+        call from both an owning runtime and a context manager."""
+        self.pool.shutdown(wait=True)
+        self.store_pool.shutdown(wait=True)
 
     def drain_t_fence(self) -> float:
         """Seconds fetch workers spent blocked on write-back fences
@@ -592,6 +623,19 @@ class OffloadDecodeRuntime:
         self._t_store = 0.0
         self._t_store_lock = threading.Lock()
 
+    # ---------------------------------------------------------- lifecycle
+
+    def close(self) -> None:
+        """Release the transfer engine's thread pools (idempotent)."""
+        self.xfer.close()
+
+    def __enter__(self) -> "OffloadDecodeRuntime":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.close()
+        return False
+
     # ------------------------------------------------------------ planning
 
     def plan_for(self, batch: int) -> ExecutionPlan:
@@ -759,30 +803,153 @@ class OffloadDecodeRuntime:
         return np.concatenate(out_tokens, axis=1), stats
 
 
-def prefill_with_activations(model, params, tokens: Array):
+def prefill_with_activations(model, params, tokens: Array,
+                             prompt_lens=None, prefix=None):
     """Dense-family prefill that also returns per-layer attention-input
     activations (the host-resident tensors KVPR recomputes from).
 
     Returns (last_logits (b, 1, V), ks, vs, hs) — the caller samples the
     first token (so the engine's configured sampler applies) and spills
     ks/vs/hs into a HostKVStore slot.
+
+    prompt_lens: optional (b,) TRUE per-row prompt lengths of a
+    LEFT-padded ragged batch.  Row i's first real token gets RoPE /
+    embedding position 0 and its left-padding is masked out of every
+    attention with exactly zero weight, so each row's ks/vs/hs columns
+    [s - len_i, s) equal a solo prefill of that prompt.
+
+    prefix: optional ``(k_pre, v_pre, p)`` — device KV for the first
+    ``p`` tokens of the prompt, already materialized (e.g. restored
+    from a shared-prefix cache via ``restore_prefix_kv``).  ``tokens``
+    are then only the SUFFIX (positions p .. p+s-1); every suffix query
+    attends over [prefix | causal suffix] and the returned ks/vs/hs
+    cover the suffix only.  Mutually exclusive with ``prompt_lens``.
     """
     cfg = model.cfg
     b, s = tokens.shape
-    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
-    x = L.embed(tokens, params["embed"], cfg, jnp.arange(s))
+    kv_start = None
+    p0 = 0
+    if prefix is not None:
+        if prompt_lens is not None:
+            raise ValueError("prefix and prompt_lens are mutually "
+                             "exclusive (prefix restore is per-request)")
+        k_pre, v_pre, p0 = prefix
+        positions = jnp.broadcast_to(jnp.arange(s) + p0, (b, s))
+    elif prompt_lens is not None:
+        pads = (s - jnp.asarray(prompt_lens)).astype(jnp.int32)
+        positions = jnp.maximum(jnp.arange(s)[None, :] - pads[:, None], 0)
+        kv_start = pads
+    else:
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    x = L.embed(tokens, params["embed"], cfg, positions)
 
-    def body(x, lp):
+    def body(x, inp):
+        if prefix is not None:
+            lp, kp, vp = inp
+        else:
+            lp = inp
         h = L.apply_norm(x, lp["ln1"], cfg.rms_eps)
         q, k, v = L.qkv_proj(h, lp["attn"], cfg, positions)
-        out = L.chunked_causal_attend(q, k, v)
+        if prefix is not None:
+            out = L.chunked_causal_attend(
+                q, jnp.concatenate([kp.astype(k.dtype), k], axis=1),
+                jnp.concatenate([vp.astype(v.dtype), v], axis=1),
+                q_offset=p0)
+        else:
+            out = L.chunked_causal_attend(q, k, v, kv_start=kv_start)
         out = out.reshape(b, s, cfg.num_heads * cfg.dh)
         x = x + jnp.einsum("bsD,Dh->bsh", out, lp["attn"]["wo"])
         h2 = L.apply_norm(x, lp["ln2"], cfg.rms_eps)
         x = x + L.mlp_block(h2, lp["mlp"], cfg.act)
         return x, (k, v, h)
 
-    x, (ks, vs, hs) = jax.lax.scan(body, x, params["layers"])
+    xs = ((params["layers"], k_pre, v_pre) if prefix is not None
+          else params["layers"])
+    x, (ks, vs, hs) = jax.lax.scan(body, x, xs)
     x = L.apply_norm(x, params["final_norm"], cfg.rms_eps)
     logits = L.unembed(x[:, -1:], params["embed"], cfg)
     return logits, ks, vs, hs
+
+
+# ---------------------------------------------------------------- restore
+# Shared-prefix restore (admission-time KVPR): materialize device KV for
+# a cached prefix by the scheduler's split — stream KV[l:p] over the
+# emulated link while the device recomputes KV[0:l] from the (smaller)
+# cached activations.  This is the paper's decode-time transfer-vs-
+# recompute decision applied once, at admission, to a prompt prefix
+# another request already paid to prefill.
+
+
+@dataclasses.dataclass
+class RestoreStats:
+    """One prefix restore: how the matched tokens were materialized."""
+    matched: int                 # tokens restored from the prefix cache
+    recomputed: int              # l — recomputed on device from acts
+    streamed: int                # matched - l — KV streamed on the link
+    bytes_streamed: int          # link bytes (KV[l:p] + acts[0:l])
+    t_restore: float             # wall seconds for the whole restore
+
+
+def _recompute_prefix_kv(hs, wk, wv, theta, rope: bool):
+    """All-layer KV recompute from stacked activations: hs (L, b, l, h),
+    wk/wv (L, h, KV, dh) -> k/v (L, b, l, KV, dh), roped at [0, l)."""
+    k = jnp.einsum("Lblh,Lhnd->Lblnd", hs, wk)
+    v = jnp.einsum("Lblh,Lhnd->Lblnd", hs, wv)
+    if rope:
+        k = L.apply_rope(k, jnp.arange(hs.shape[2]), theta)
+    return k, v
+
+
+_recompute_prefix_kv = jax.jit(_recompute_prefix_kv,
+                               static_argnames=("rope",))
+
+
+def restore_prefix_kv(cfg: ModelConfig, params, entry_ks, entry_vs,
+                      entry_hs, p: int, split_l: int,
+                      xfer: TransferEngine
+                      ) -> Tuple[Array, Array, RestoreStats]:
+    """Materialize device KV for the first ``p`` tokens of a cached
+    prefix entry, split at ``split_l`` (the scheduler's restore-split
+    decision, paper Eq. 11 at admission time).
+
+    entry_ks/vs: host (L, 1, >=p, KV, dh); entry_hs: host (L, 1, >=p, h).
+    The streamed tail KV[l:p) goes through the TransferEngine's copy
+    pool (counted link bytes, overlapped), while activations[0:l) are
+    put on device and KV[0:l) recomputed there — the same GEMM+RoPE the
+    decode-path ComputeStep runs, batched over all layers.
+    Returns (k_dev, v_dev) each (L, 1, p, KV, dh) plus RestoreStats.
+    """
+    t0 = time.perf_counter()
+    l = max(0, min(int(split_l), int(p)))
+    nbytes = 0
+    fut = None
+    if l < p:
+        k_tail = np.ascontiguousarray(entry_ks[:, :, l:p])
+        v_tail = np.ascontiguousarray(entry_vs[:, :, l:p])
+        nbytes += k_tail.nbytes + v_tail.nbytes
+        fut = xfer.submit(
+            lambda a, b: (jax.device_put(a), jax.device_put(b)),
+            k_tail, v_tail)
+    parts_k, parts_v = [], []
+    if l > 0:
+        hs_dev = jax.device_put(np.ascontiguousarray(entry_hs[:, :, :l]))
+        nbytes += int(hs_dev.nbytes)
+        wk = params["layers"]["attn"]["wk"]
+        wv = params["layers"]["attn"]["wv"]
+        k_rec, v_rec = _recompute_prefix_kv(
+            hs_dev, wk, wv, cfg.rope_theta,
+            rope=cfg.pos_embedding == "rope")
+        parts_k.append(k_rec)
+        parts_v.append(v_rec)
+    if fut is not None:
+        k_str, v_str = fut.result()
+        parts_k.append(k_str)
+        parts_v.append(v_str)
+    k_dev = parts_k[0] if len(parts_k) == 1 else jnp.concatenate(
+        parts_k, axis=2)
+    v_dev = parts_v[0] if len(parts_v) == 1 else jnp.concatenate(
+        parts_v, axis=2)
+    stats = RestoreStats(matched=int(p), recomputed=l,
+                         streamed=int(p) - l, bytes_streamed=int(nbytes),
+                         t_restore=time.perf_counter() - t0)
+    return k_dev, v_dev, stats

@@ -215,8 +215,11 @@ class Scheduler:
     @property
     def hw(self) -> HardwareProfile:
         if self._hw is None:
-            from repro.core.profiler import profile_system
-            self._hw = profile_system()
+            from repro.core import profiler
+            self._hw = profiler.profile_system()
+            # a later profile_system(force=True) re-measure pushes the
+            # fresh profile into this scheduler (invalidate(hw=...))
+            profiler.register_scheduler(self)
         return self._hw
 
     # ------------------------------------------------------------ planning
@@ -240,6 +243,26 @@ class Scheduler:
                       kv_bytes_per_el=self._kv_el_bytes(
                           compress, dtype_bytes, group))
         return self._get(key)
+
+    def restore_split(self, cfg, p: int, mode: str = "kvpr",
+                      align: int = 1, dtype_bytes: int = 4):
+        """Admission-time restore split for a cached p-token prompt
+        prefix (shared-prefix KV cache): how many of the matched tokens
+        the device recomputes from cached activations ([0, l)) versus
+        streams as KV over the link ([l, p)).
+
+        This is the paper's decode-time transfer-vs-recompute LP
+        applied once at admission: a batch-1 workload at seq_len p
+        under the COLUMN schedule, because the activations for the
+        recomputed part must cross the link too (unlike the row
+        schedule's already-resident decode activations).  The decision
+        is cached under its own batch-1/column ``PlanKey``, so decode
+        plans are untouched and identical restores share one solve.
+        ``mode="flexgen"`` degrades to stream-everything (l = 0).
+        """
+        plan = self.plan_for(cfg, batch=1, mode=mode, schedule="column",
+                             align=align, dtype_bytes=dtype_bytes)
+        return plan.split_for(int(p))
 
     def plan_for_workload(self, wl: Workload, mode: str = "kvpr",
                           schedule: str = "row", align: int = 1,

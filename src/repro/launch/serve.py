@@ -32,8 +32,8 @@ from repro.core.cost_model import TPU_V5E
 from repro.core.profiler import profile_system
 from repro.core.scheduler import Scheduler
 from repro.models.transformer import Model
-from repro.serving import (EngineConfig, LLMEngine, Request,
-                           SamplingParams)
+from repro.serving import (EngineConfig, LLMEngine, PrefixCacheConfig,
+                           Request, SamplingParams)
 
 
 def run_smoke() -> None:
@@ -52,40 +52,67 @@ def run_smoke() -> None:
     outs = {}
     for backend in ("resident", "offload"):
         for batching in ("static", "continuous"):
-            eng = LLMEngine.from_config(
-                model, params,
-                EngineConfig(backend=backend, batching=batching,
-                             slots=2, max_len=32), scheduler=sched)
-            t0 = time.perf_counter()
-            outs[(backend, batching)] = eng.generate(reqs)
-            dt = time.perf_counter() - t0
+            with LLMEngine.from_config(
+                    model, params,
+                    EngineConfig(backend=backend, batching=batching,
+                                 slots=2, max_len=32),
+                    scheduler=sched) as eng:
+                t0 = time.perf_counter()
+                outs[(backend, batching)] = eng.generate(reqs)
+                dt = time.perf_counter() - t0
             n = sum(len(o.tokens) for o in outs[(backend, batching)])
             assert all(o.finish_reason == "length"
                        for o in outs[(backend, batching)])
             print(f"  {backend:8s} x {batching:10s}: {n} tokens "
                   f"in {dt:.2f}s ok")
-    # greedy decode is backend-independent under continuous batching
-    # (per-request prefill); static backends must agree with each other
-    for batching in ("static", "continuous"):
-        for a, b in zip(outs[("resident", batching)],
-                        outs[("offload", batching)]):
+    # greedy decode is path-independent: the RAGGED static batch (8/10/
+    # 12-token prompts) must agree with the per-request continuous runs
+    # across every backend x batching combination
+    base = outs[("resident", "continuous")]
+    for combo, got in outs.items():
+        for a, b in zip(base, got):
             assert np.array_equal(a.tokens, b.tokens), \
-                f"backend mismatch under {batching} (uid={a.uid})"
+                f"ragged-batch mismatch under {combo} (uid={a.uid})"
     # mixed batch: greedy + temperature + early EOS, streamed
     ref = outs[("resident", "static")][0].tokens
     sps = [SamplingParams(max_tokens=4, eos_id=int(ref[1])),
            SamplingParams(max_tokens=4, temperature=0.8, seed=11),
            SamplingParams(max_tokens=4)]
-    eng = LLMEngine.from_config(model, params,
-                                EngineConfig(backend="offload"),
-                                scheduler=sched)
-    events = list(eng.generate_stream(reqs, sps))
+    with LLMEngine.from_config(model, params,
+                               EngineConfig(backend="offload"),
+                               scheduler=sched) as eng:
+        events = list(eng.generate_stream(reqs, sps))
     finals = {e.uid: e.finish_reason for e in events
               if e.finish_reason is not None}
     assert finals[0] == "stop" and finals[1] == "length" \
         and finals[2] == "length", finals
     print(f"  mixed batch (greedy+temperature+eos): "
           f"{len(events)} events, finish={finals} ok")
+    # shared-prefix cache: the second request extends the first's
+    # prompt; its prefill must be restored, not recomputed, and its
+    # tokens must match the cold run
+    shared = rng.integers(1, cfg.vocab_size, 10).astype(np.int32)
+    ext = np.concatenate([shared, rng.integers(
+        1, cfg.vocab_size, 4).astype(np.int32)])
+    with LLMEngine.from_config(
+            model, params, EngineConfig(backend="offload"),
+            scheduler=sched) as eng:
+        cold = eng.generate([Request(uid=0, prompt=ext,
+                                     max_new_tokens=4)])
+    with LLMEngine.from_config(
+            model, params,
+            EngineConfig(backend="offload",
+                         prefix_cache=PrefixCacheConfig()),
+            scheduler=sched) as eng:
+        eng.generate([Request(uid=0, prompt=shared, max_new_tokens=4)])
+        warm = eng.generate([Request(uid=1, prompt=ext,
+                                     max_new_tokens=4)])
+        st = eng.prefix_stats
+    assert np.array_equal(cold[0].tokens, warm[0].tokens)
+    assert warm[0].cached_prefix == len(shared), warm[0].cached_prefix
+    print(f"  prefix cache: {warm[0].cached_prefix} tokens restored "
+          f"(split l={warm[0].restore.recomputed}), hit_rate="
+          f"{st.hit_rate:.2f} ok")
     print("serve --smoke: all checks passed")
 
 
@@ -118,6 +145,11 @@ def main(argv=None):
                     help="print per-token events as they are produced")
     ap.add_argument("--no-kvpr", action="store_true",
                     help="offload: stream full KV (FlexGen baseline)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="enable the shared-prefix KV cache (cross-"
+                         "request prompt reuse with KVPR-split restore)")
+    ap.add_argument("--prefix-capacity", type=int, default=65536,
+                    help="prefix cache capacity in tokens (LRU beyond)")
     ap.add_argument("--profile", action="store_true",
                     help="measure the link/GEMM profile instead of preset")
     ap.add_argument("--seed", type=int, default=0)
@@ -147,42 +179,50 @@ def main(argv=None):
 
     base = dict(slots=args.slots, max_len=args.prompt + args.gen + 8,
                 kvpr=not args.no_kvpr, compress=args.compress,
-                seed=args.seed)
+                seed=args.seed,
+                prefix_cache=(PrefixCacheConfig(
+                    capacity_tokens=args.prefix_capacity)
+                    if args.prefix_cache else None))
     if args.mode is not None:
         config = EngineConfig.from_mode(args.mode, **base)
     else:
         config = EngineConfig(backend=args.backend,
                               batching=args.batching, **base)
     sched = Scheduler(profile_system() if args.profile else TPU_V5E)
-    engine = LLMEngine.from_config(model, params, config,
-                                   scheduler=sched)
+    with LLMEngine.from_config(model, params, config,
+                               scheduler=sched) as engine:
+        t0 = time.perf_counter()
+        if args.stream:
+            total = 0
+            for ev in engine.generate_stream(reqs, sampling):
+                total += 1
+                tail = (f" [{ev.finish_reason}]" if ev.finish_reason
+                        else "")
+                print(f"  step {ev.step:3d} uid={ev.uid} "
+                      f"tok={ev.token}{tail}")
+        else:
+            outs = engine.generate(reqs, sampling)
+            total = sum(len(o.tokens) for o in outs)
+        dt = time.perf_counter() - t0
 
-    t0 = time.perf_counter()
-    if args.stream:
-        total = 0
-        for ev in engine.generate_stream(reqs, sampling):
-            total += 1
-            tail = f" [{ev.finish_reason}]" if ev.finish_reason else ""
-            print(f"  step {ev.step:3d} uid={ev.uid} "
-                  f"tok={ev.token}{tail}")
-    else:
-        outs = engine.generate(reqs, sampling)
-        total = sum(len(o.tokens) for o in outs)
-    dt = time.perf_counter() - t0
-
-    print(f"{args.arch} [{config.backend}/{config.batching}"
-          f"{'/int4' if args.compress else ''}]: "
-          f"{len(reqs)} requests, {total} tokens in {dt:.2f}s "
-          f"({total/dt:.1f} tok/s) "
-          f"plan_cache[hits={sched.hits} misses={sched.misses}]")
-    rt = engine.runtime
-    if rt is not None:
-        print(f"  hot path: xla_traces={rt.compute.traces()} "
-              f"staging_buffers={rt.xfer.staging_allocs}")
-    if not args.stream:
-        for o in outs[:4]:
-            print(f"  uid={o.uid} [{o.finish_reason}]: "
-                  f"{np.asarray(o.tokens)[:8]}...")
+        print(f"{args.arch} [{config.backend}/{config.batching}"
+              f"{'/int4' if args.compress else ''}]: "
+              f"{len(reqs)} requests, {total} tokens in {dt:.2f}s "
+              f"({total/dt:.1f} tok/s) "
+              f"plan_cache[hits={sched.hits} misses={sched.misses}]")
+        rt = engine.runtime
+        if rt is not None:
+            print(f"  hot path: xla_traces={rt.compute.traces()} "
+                  f"staging_buffers={rt.xfer.staging_allocs}")
+        ps = engine.prefix_stats
+        if ps is not None:
+            print(f"  prefix cache: hit_rate={ps.hit_rate:.2f} "
+                  f"saved_tokens={ps.tokens_matched} "
+                  f"entries={ps.entries} evictions={ps.evictions}")
+        if not args.stream:
+            for o in outs[:4]:
+                print(f"  uid={o.uid} [{o.finish_reason}]: "
+                      f"{np.asarray(o.tokens)[:8]}...")
 
 
 if __name__ == "__main__":

@@ -38,11 +38,14 @@ def update_kv(k_cache: Array, v_cache: Array, k_new: Array, v_new: Array,
 
 
 def decode_attend(q: Array, k_cache: Array, v_cache: Array, pos: Array,
-                  ring: bool = False) -> Array:
+                  ring: bool = False,
+                  kv_start: Optional[Array] = None) -> Array:
     """Single-token GQA attention over a cache.
 
     q: (b, 1, H, dh); k/v_cache: (b, S, KV, dh); pos: current position.
     ring=True -> all slots older than S are valid (sliding window cache).
+    kv_start: optional (b,) first valid slot per row — slots before it
+    (a left-padded ragged prefill) are masked to zero weight.
     Returns (b, 1, H, dh).
     """
     b, S, KV, dh = k_cache.shape
@@ -56,7 +59,12 @@ def decode_attend(q: Array, k_cache: Array, v_cache: Array, pos: Array,
     if ring:
         valid = (slot <= pos)  # until the ring wraps, later slots are empty
         valid = valid | (pos >= S)
-    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+    if kv_start is not None:
+        valid = valid[None, :] & (slot[None, :] >= kv_start[:, None])
+        valid = valid[:, None, None, :]        # (b, 1, 1, S)
+    else:
+        valid = valid[None, None, None, :]
+    scores = jnp.where(valid, scores, NEG_INF)
     w = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bkgs,bskd->bkgd", w.astype(v_cache.dtype), v_cache)
     return out.reshape(b, 1, H, dh)

@@ -156,19 +156,28 @@ def attention_block(x: Array, p: dict, cfg: ModelConfig, positions: Array,
 
 def chunked_causal_attend(q: Array, k: Array, v: Array, window: int = 0,
                           q_block: int = 512, q_offset: int = 0,
-                          unroll: bool = False) -> Array:
+                          unroll: bool = False,
+                          kv_start: Optional[Array] = None) -> Array:
     """Memory-bounded causal GQA attention: scan over query blocks so the
     (sq x skv) score matrix is never materialized at full size. Exact.
 
     q: (b, sq, H, dh); k/v: (b, skv, KV, dh). window>0 = sliding window.
     unroll=True emits every block statically (accurate XLA cost analysis
     for the roofline dry-run; scan bodies are costed once).
+    kv_start: optional (b,) per-row first VALID key index — keys before
+    it (a ragged batch's left-padding) get exactly zero attention
+    weight.  Queries in the padded region see only masked keys; the
+    NEG_INF trick keeps their (discarded) outputs finite.
     """
     b, sq, H, dh = q.shape
     skv, KV = k.shape[1], k.shape[2]
     g = H // KV
     if sq <= q_block:
-        return gqa_attend(q, k, v, causal_mask(sq, skv, q_offset, window))
+        mask = causal_mask(sq, skv, q_offset, window)
+        if kv_start is not None:
+            mask = mask & (jnp.arange(skv)[None, None, None, :]
+                           >= kv_start[:, None, None, None])
+        return gqa_attend(q, k, v, mask)
     assert sq % q_block == 0, (sq, q_block)
     nb = sq // q_block
     qb = q.reshape(b, nb, q_block, KV, g, dh)
@@ -183,7 +192,12 @@ def chunked_causal_attend(q: Array, k: Array, v: Array, window: int = 0,
         m = kj <= qi
         if window > 0:
             m = m & (kj > qi - window)
-        scores = jnp.where(m[None, None, None], scores, NEG_INF)
+        if kv_start is not None:
+            m = m[None] & (kj[None] >= kv_start[:, None, None])
+            m = m[:, None, None]               # (b, 1, 1, qB, skv)
+        else:
+            m = m[None, None, None]
+        scores = jnp.where(m, scores, NEG_INF)
         w = jax.nn.softmax(scores, axis=-1)
         out = jnp.einsum("bkgst,btkd->bskgd", w.astype(v.dtype), v)
         return None, out

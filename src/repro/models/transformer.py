@@ -190,15 +190,18 @@ class Model:
     # ------------------------------------------------------------ shared bits
 
     def _attn_sublayer(self, x, lp, positions, window: int,
-                       collect_kv: bool = False):
-        """Pre-norm attention sublayer on full sequences (chunked)."""
+                       collect_kv: bool = False, kv_start=None):
+        """Pre-norm attention sublayer on full sequences (chunked).
+        kv_start: optional (b,) first valid key per row (left-padded
+        ragged batches)."""
         cfg = self.cfg
         b, s = x.shape[:2]
         h = L.apply_norm(x, lp["ln1"], cfg.rms_eps)
         q, k, v = L.qkv_proj(h, lp["attn"], cfg, positions)
         out = L.chunked_causal_attend(q, k, v, window=window,
                                       q_block=self.q_block,
-                                      unroll=not self.scan_layers)
+                                      unroll=not self.scan_layers,
+                                      kv_start=kv_start)
         out = out.reshape(b, s, cfg.num_heads * cfg.dh)
         x = x + jnp.einsum("bsD,Dh->bsh", out, lp["attn"]["wo"])
         if collect_kv:
@@ -347,6 +350,10 @@ class Model:
             else:
                 cache["k"], cache["v"] = cache_lib.init_kv(
                     batch, max_len, KV, dh, dtype, cfg.num_layers)
+                # per-row left-pad of a ragged prefill: the first `pad`
+                # cache slots of each row are masked out of decode
+                # attention and RoPE positions are shifted by -pad
+                cache["pad"] = jnp.zeros((batch,), jnp.int32)
         elif at == "hybrid":
             every = cfg.shared_attn_every
             n_groups = cfg.num_layers // every
@@ -377,17 +384,48 @@ class Model:
     def prefill(self, params, tokens: Array,
                 extra: Optional[Dict[str, Array]] = None,
                 max_len: Optional[int] = None,
-                cache_dtype=None) -> Tuple[Array, PyTree]:
-        """Process the prompt, fill the cache, return last-position logits."""
+                cache_dtype=None,
+                prompt_lens: Optional[Array] = None) -> Tuple[Array, PyTree]:
+        """Process the prompt, fill the cache, return last-position logits.
+
+        prompt_lens: optional (b,) true per-row prompt lengths of a
+        LEFT-padded ragged batch.  Row i's real tokens occupy columns
+        [s - len_i, s); its first real token gets position 0 (RoPE /
+        learned embeddings shifted per row), padding columns are masked
+        out of every attention (exactly zero weight), and the per-row
+        pad width is recorded in ``cache["pad"]`` so ``decode_step``
+        keeps masking and shifting.  Dense-family archs only — SSM /
+        hybrid recurrences would thread pad tokens through their state.
+        """
         cfg = self.cfg
         at = cfg.arch_type
         b = tokens.shape[0]
         max_len = max_len or cfg.max_seq_len
-        x = self._embed_inputs(params, tokens, extra)
-        s = x.shape[1]
+        kv_start = None
+        if prompt_lens is not None:
+            if (at not in ("dense", "vlm", "moe") or self.is_local_global
+                    or (extra is not None and extra)):
+                raise NotImplementedError(
+                    "ragged prompt_lens is only supported for dense-family "
+                    f"archs without extra inputs (arch_type={at!r})")
+            if self.seq_shard and self.seq_shard_impl == "shard_map":
+                # the shard_map decode attend has no kv_start masking —
+                # refuse rather than silently attend over pad keys
+                raise NotImplementedError(
+                    "ragged prompt_lens is not supported with "
+                    "seq_shard_impl='shard_map'")
+            s = tokens.shape[1]
+            pads = (s - jnp.asarray(prompt_lens)).astype(jnp.int32)
+            positions = jnp.maximum(
+                jnp.arange(s)[None, :] - pads[:, None], 0)
+            x = L.embed(tokens, params["embed"], cfg, positions)
+            kv_start = pads
+        else:
+            x = self._embed_inputs(params, tokens, extra)
+            s = x.shape[1]
+            positions = jnp.broadcast_to(jnp.arange(s), (b, s))
         cache_dtype = cache_dtype or x.dtype
         cache = self.init_cache(b, max_len, cache_dtype)
-        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
 
         def put(c, kv, offset=(0, 0, 0, 0, 0)):
             return jax.lax.dynamic_update_slice(c, kv.astype(c.dtype), offset)
@@ -395,11 +433,14 @@ class Model:
         if at in ("dense", "vlm", "moe") and not self.is_local_global:
             def body(x, lp):
                 x, (k, v) = self._attn_sublayer(x, lp, positions, 0,
-                                                collect_kv=True)
+                                                collect_kv=True,
+                                                kv_start=kv_start)
                 x, _ = self._mlp_sublayer(x, lp)
                 return x, (k, v)
             x, (ks, vs) = self._scan(body, x, params["layers"])
             cache["k"], cache["v"] = put(cache["k"], ks), put(cache["v"], vs)
+            if kv_start is not None:
+                cache["pad"] = kv_start
         elif self.is_local_global:
             W = min(cfg.sliding_window, max_len)
 
@@ -495,7 +536,12 @@ class Model:
         b = token.shape[0]
         pos = cache["pos"]
         positions = jnp.broadcast_to(pos[None, None], (b, 1))
-        x = L.embed(token, params["embed"], cfg, positions[0])
+        # ragged left-padded prefill: row i's token position is shifted
+        # down by its pad width, and its padded cache slots stay masked
+        pad = cache.get("pad")
+        if pad is not None:
+            positions = positions - pad[:, None]
+        x = L.embed(token, params["embed"], cfg, positions)
 
         def _pin(kc, vc):
             # keep the cache sharding stable through the scan body so GSPMD
@@ -506,7 +552,7 @@ class Model:
 
         use_sm = self.seq_shard and self.seq_shard_impl == "shard_map"
 
-        def attn_decode(x, lp, kc, vc, ring):
+        def attn_decode(x, lp, kc, vc, ring, kv_start=None):
             h = L.apply_norm(x, lp["ln1"], cfg.rms_eps)
             q, k, v = L.qkv_proj(h, lp["attn"], cfg, positions)
             if use_sm and not ring:
@@ -519,7 +565,8 @@ class Model:
                     masked=self.seq_shard and not ring)
                 if not ring:
                     kc, vc = _pin(kc, vc)
-                out = cache_lib.decode_attend(q, kc, vc, pos, ring)
+                out = cache_lib.decode_attend(q, kc, vc, pos, ring,
+                                              kv_start=kv_start)
             out = out.reshape(b, 1, cfg.num_heads * cfg.dh)
             x = x + jnp.einsum("bsD,Dh->bsh", out, lp["attn"]["wo"])
             return x, kc, vc
@@ -527,7 +574,7 @@ class Model:
         if at in ("dense", "vlm", "moe") and not self.is_local_global:
             def body(x, inp):
                 lp, kc, vc = inp
-                x, kc, vc = attn_decode(x, lp, kc, vc, False)
+                x, kc, vc = attn_decode(x, lp, kc, vc, False, kv_start=pad)
                 x, _ = self._mlp_sublayer(x, lp)
                 return x, (kc, vc)
             x, (kn, vn) = self._scan(

@@ -2,6 +2,7 @@
 
     from repro.serving import EngineConfig, LLMEngine, SamplingParams
 """
+from repro.core.prefix_cache import PrefixCacheConfig, PrefixCacheStats
 from repro.serving.api import (EngineConfig, LLMEngine, Request,
                                RequestOutput, SamplingParams,
                                TokenEvent, pad_batch)
@@ -10,6 +11,7 @@ from repro.serving.engine import Generation, ServingEngine
 
 __all__ = [
     "ContinuousBatchingEngine", "EngineConfig", "Generation",
-    "LLMEngine", "Request", "RequestOutput", "SamplingParams",
-    "ServingEngine", "TokenEvent", "pad_batch",
+    "LLMEngine", "PrefixCacheConfig", "PrefixCacheStats", "Request",
+    "RequestOutput", "SamplingParams", "ServingEngine", "TokenEvent",
+    "pad_batch",
 ]

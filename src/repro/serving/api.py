@@ -54,8 +54,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.cost_model import HardwareProfile, TPU_V5E
+from repro.core.prefix_cache import (PrefixCache, PrefixCacheConfig,
+                                     PrefixCacheStats)
 from repro.core.runtime import (HostKVStore, OffloadDecodeRuntime,
-                                StepStats, prefill_with_activations)
+                                RestoreStats, StepStats, TransferEngine,
+                                prefill_with_activations,
+                                restore_prefix_kv)
 from repro.core.scheduler import Scheduler
 from repro.models.cache import broadcast_slots, splice_slot
 from repro.models.transformer import Model
@@ -129,6 +133,11 @@ class EngineConfig:
     align: int = 1                       # KVPR split alignment
     hw: Optional[HardwareProfile] = None
     seed: int = 0
+    # shared-prefix KV cache (cross-request prompt reuse): admission
+    # looks up the longest cached prefix of each prompt and restores it
+    # via the scheduler's KVPR split instead of prefilling it.  None
+    # disables.  Dense-family archs only.
+    prefix_cache: Optional[PrefixCacheConfig] = None
 
     def validate(self) -> "EngineConfig":
         if self.backend not in ("resident", "offload"):
@@ -144,6 +153,8 @@ class EngineConfig:
                              f"{self.compress!r}")
         if self.batching == "continuous" and self.slots < 1:
             raise ValueError(f"slots must be >= 1, got {self.slots}")
+        if self.prefix_cache is not None:
+            self.prefix_cache.validate()
         return self
 
     @property
@@ -186,6 +197,9 @@ class RequestOutput:
     prefill_time: float = 0.0
     decode_time: float = 0.0
     finish_reason: str = "length"        # "length" | "stop"
+    cached_prefix: int = 0               # prompt tokens restored from
+                                         # the shared-prefix cache
+    restore: Optional[RestoreStats] = None   # how they were restored
 
     @property
     def decode_tps(self) -> float:
@@ -227,6 +241,10 @@ class _Live:
     t_prefill: float = 0.0
     t_start: float = 0.0
     finish_reason: Optional[str] = None
+    restore: Optional[RestoreStats] = None   # prefix-cache restore info
+    blocks: Optional[tuple] = None       # (ks, vs, hs) prompt blocks,
+                                         # inserted into the prefix
+                                         # cache when the request ends
 
 
 class _SlotSampling:
@@ -323,11 +341,57 @@ class LLMEngine:
                                            in_axes=(None, 0, 0)))
         else:
             self._decode = jax.jit(model.decode_step)
+        self.prefix_cache: Optional[PrefixCache] = None
+        self._restore_xfer: Optional[TransferEngine] = None
+        self._owns_restore_xfer = False
+        self._keep_blocks = False
+        if self.config.prefix_cache is not None:
+            # same support envelope as prefill_with_activations (the
+            # admission path): dense layers only — MoE layer params
+            # carry "moe", not "mlp"
+            if self.cfg.arch_type != "dense" or model.is_local_global:
+                raise ValueError(
+                    "prefix_cache requires a dense arch without "
+                    f"local/global layers, got {self.cfg.arch_type!r}")
+            self.prefix_cache = PrefixCache(self.config.prefix_cache)
+            # only hold prompt blocks across a request's lifetime when
+            # they will actually be inserted at finish
+            self._keep_blocks = self.prefix_cache.config.insert_on_finish
+            if self.runtime is not None:
+                self._restore_xfer = self.runtime.xfer
+            else:
+                self._restore_xfer = TransferEngine(n_copy_threads=1)
+                self._owns_restore_xfer = True
 
     @classmethod
     def from_config(cls, model: Model, params, config: EngineConfig,
                     scheduler: Optional[Scheduler] = None) -> "LLMEngine":
         return cls(model, params, config, scheduler)
+
+    # ------------------------------------------------------- lifecycle
+
+    def close(self) -> None:
+        """Release the engine's thread pools (the offload runtime's
+        transfer engine and/or the resident prefix-restore pool).
+        Idempotent; the engine must not be used afterwards."""
+        if self.runtime is not None:
+            self.runtime.close()
+        if self._owns_restore_xfer and self._restore_xfer is not None:
+            self._restore_xfer.close()
+
+    def __enter__(self) -> "LLMEngine":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.close()
+        return False
+
+    @property
+    def prefix_stats(self) -> Optional[PrefixCacheStats]:
+        """Hit/eviction/saved-token counters of the shared-prefix cache
+        (None when the cache is disabled)."""
+        return (self.prefix_cache.stats if self.prefix_cache is not None
+                else None)
 
     # -------------------------------------------------------- frontend
 
@@ -395,6 +459,20 @@ class LLMEngine:
         return [_Live(r, sp, sp.stop_set, [], t_prefill, t_start)
                 for r, sp in pairs]
 
+    def _finish(self, lv: _Live, reason: str, now: float, done) -> None:
+        """Record a finished request's output; feed its prompt blocks
+        into the shared-prefix cache (insertion on finish)."""
+        lv.finish_reason = reason
+        done[lv.req.uid] = RequestOutput(
+            lv.req.uid, np.asarray(lv.tokens, np.int32),
+            lv.t_prefill, now - lv.t_start, reason,
+            cached_prefix=lv.restore.matched if lv.restore else 0,
+            restore=lv.restore)
+        if (self.prefix_cache is not None and lv.blocks is not None
+                and self.prefix_cache.config.insert_on_finish):
+            self.prefix_cache.insert(lv.req.prompt, *lv.blocks)
+        lv.blocks = None
+
     def _advance(self, lives: List[_Live], toks: np.ndarray, step: int,
                  stats: Optional[StepStats], done
                  ) -> List[TokenEvent]:
@@ -416,11 +494,51 @@ class LLMEngine:
                                      len(lv.tokens) - 1, step, fin,
                                      stats))
             if fin is not None:
-                lv.finish_reason = fin
-                done[lv.req.uid] = RequestOutput(
-                    lv.req.uid, np.asarray(lv.tokens, np.int32),
-                    lv.t_prefill, now - lv.t_start, fin)
+                self._finish(lv, fin, now, done)
         return events
+
+    # --------------------------------------- prefix-cache admission
+
+    def _prefill_request(self, prompt: np.ndarray):
+        """Per-request prefill with shared-prefix restore.
+
+        Looks up the longest cached prefix of ``prompt``; on a hit the
+        scheduler's restore split decides how many of the matched
+        tokens the device recomputes from cached activations vs
+        streams as KV over the link (``restore_prefix_kv``), and only
+        the suffix goes through prefill — attending over
+        [restored prefix | causal suffix] from position p.
+
+        Returns (last_logits (1,1,V), ks, vs, hs host blocks covering
+        the WHOLE prompt, RestoreStats or None).
+        """
+        prompt = np.asarray(prompt, np.int32)
+        restore = None
+        p, entry = (self.prefix_cache.lookup(prompt)
+                    if self.prefix_cache is not None else (0, None))
+        if entry is not None and p > 0:
+            split = self.scheduler.restore_split(
+                self.cfg, p,
+                mode="kvpr" if self.config.kvpr else "flexgen",
+                align=self.config.align)
+            k_pre, v_pre, restore = restore_prefix_kv(
+                self.cfg, self.params, entry.ks, entry.vs, entry.hs,
+                p, split.l, self._restore_xfer)
+            logits, ks_s, vs_s, hs_s = prefill_with_activations(
+                self.model, self.params, jnp.asarray(prompt[p:])[None],
+                prefix=(k_pre, v_pre, p))
+            ks = np.concatenate([entry.ks[:, :, :p],
+                                 np.asarray(ks_s)], axis=2)
+            vs = np.concatenate([entry.vs[:, :, :p],
+                                 np.asarray(vs_s)], axis=2)
+            hs = np.concatenate([entry.hs[:, :, :p],
+                                 np.asarray(hs_s)], axis=2)
+        else:
+            logits, ks, vs, hs = prefill_with_activations(
+                self.model, self.params, jnp.asarray(prompt)[None])
+            ks, vs, hs = (np.asarray(ks), np.asarray(vs),
+                          np.asarray(hs))
+        return logits, ks, vs, hs, restore
 
     # ------------------------------------------------ static resident
 
@@ -429,17 +547,33 @@ class LLMEngine:
         reqs = [r for r, _ in pairs]
         prompts = pad_batch(reqs)
         b, s = prompts.shape
+        lens = np.array([len(r.prompt) for r in reqs], np.int64)
+        ragged = bool((lens != s).any())
         gen_len = max(sp.max_tokens for _, sp in pairs)
         max_len = s + gen_len + 1
         if self.cfg.arch_type == "vlm" and extra:
             max_len += extra["patches"].shape[1]
         t0 = time.perf_counter()
-        logits, cache = self._prefill(self.params, jnp.asarray(prompts),
-                                      extra, max_len=max_len)
+        blocks = restores = None
+        if self.prefix_cache is not None:
+            if extra:
+                raise ValueError("extra (VLM patches) is not supported "
+                                 "with prefix_cache")
+            logits, cache, blocks, restores = \
+                self._prefix_resident_batch(reqs, s, lens, max_len)
+        else:
+            pl = jnp.asarray(lens, jnp.int32) if ragged else None
+            logits, cache = self._prefill(self.params,
+                                          jnp.asarray(prompts),
+                                          extra, max_len=max_len,
+                                          prompt_lens=pl)
         logits.block_until_ready()
         t1 = time.perf_counter()
 
         lives = self._lives(pairs, t1 - t0, t1)
+        if blocks is not None:
+            for lv, bl, rs in zip(lives, blocks, restores):
+                lv.blocks, lv.restore = bl, rs
         ss = self._static_sampling(pairs)
         tok = ss.sample(logits[:, -1], 0)[:, None]
         t = 0
@@ -458,6 +592,46 @@ class LLMEngine:
             ss.set_slot(i, r.uid, sp)
         return ss
 
+    def _prefix_resident_batch(self, reqs, s: int, lens, max_len: int):
+        """Admit a static batch per-request through the prefix cache
+        and assemble the LEFT-padded resident cache: request i's
+        restored + prefilled KV occupies cache slots [s - len_i, s)
+        with position-native RoPE, the padded slots masked via
+        ``cache["pad"]`` — the ragged-prefill convention, which is what
+        lets per-request restores splice into one static batch."""
+        cfg = self.cfg
+        Lh, KV, dh = cfg.num_layers, cfg.num_kv_heads, cfg.dh
+        b = len(reqs)
+        k_all = np.zeros((Lh, b, max_len, KV, dh), np.float32)
+        v_all = np.zeros_like(k_all)
+        rows, blocks, restores = [], [], []
+        for i, r in enumerate(reqs):
+            lg, ks, vs, hs, restore = self._prefill_request(r.prompt)
+            pad = s - len(r.prompt)
+            k_all[:, i, pad:s] = ks[:, 0]
+            v_all[:, i, pad:s] = vs[:, 0]
+            rows.append(lg)
+            blocks.append((ks, vs, hs) if self._keep_blocks else None)
+            restores.append(restore)
+        cache = {"k": jnp.asarray(k_all), "v": jnp.asarray(v_all),
+                 "pos": jnp.asarray(s, jnp.int32),
+                 "pad": jnp.asarray(s - lens, jnp.int32)}
+        return jnp.concatenate(rows, axis=0), cache, blocks, restores
+
+    def _resident_cache_from_blocks(self, ks, vs, n: int, max_len: int):
+        """Build a b=1 resident decode cache from host KV blocks
+        (continuous admission of a prefix-cache hit): same structure as
+        ``model.prefill``'s cache, KV at slots [0, n)."""
+        cfg = self.cfg
+        Lh, KV, dh = cfg.num_layers, cfg.num_kv_heads, cfg.dh
+        k1 = np.zeros((Lh, 1, max_len, KV, dh), np.float32)
+        v1 = np.zeros_like(k1)
+        k1[:, :, :n] = ks
+        v1[:, :, :n] = vs
+        return {"k": jnp.asarray(k1), "v": jnp.asarray(v1),
+                "pos": jnp.asarray(n, jnp.int32),
+                "pad": jnp.zeros((1,), jnp.int32)}
+
     # ------------------------------------------------- static offload
 
     def _stream_static_offload(self, pairs, done
@@ -469,17 +643,37 @@ class LLMEngine:
         reqs = [r for r, _ in pairs]
         prompts = pad_batch(reqs)
         b, s = prompts.shape
+        lens = np.array([len(r.prompt) for r in reqs], np.int64)
+        ragged = bool((lens != s).any())
         gen_len = max(sp.max_tokens for _, sp in pairs)
         store = HostKVStore(self.cfg, b, s + gen_len + 1,
                             compress=self.config.compress)
         t0 = time.perf_counter()
-        logits, ks, vs, hs = prefill_with_activations(
-            self.model, self.params, jnp.asarray(prompts))
-        store.bulk_fill(np.asarray(ks), np.asarray(vs), np.asarray(hs),
-                        s)
+        blocks = restores = None
+        if self.prefix_cache is not None:
+            rows, blocks, restores = [], [], []
+            for i, r in enumerate(reqs):
+                lg, ks, vs, hs, restore = self._prefill_request(r.prompt)
+                store.fill_slot(i, ks, vs, hs, len(r.prompt))
+                rows.append(lg)
+                blocks.append((ks, vs, hs) if self._keep_blocks
+                              else None)
+                restores.append(restore)
+            logits = jnp.concatenate(rows, axis=0)
+        else:
+            pl = jnp.asarray(lens, jnp.int32) if ragged else None
+            logits, ks, vs, hs = prefill_with_activations(
+                self.model, self.params, jnp.asarray(prompts),
+                prompt_lens=pl)
+            store.bulk_fill(np.asarray(ks), np.asarray(vs),
+                            np.asarray(hs), s,
+                            seq_lens=lens if ragged else None)
         t1 = time.perf_counter()
 
         lives = self._lives(pairs, t1 - t0, t1)
+        if blocks is not None:
+            for lv, bl, rs in zip(lives, blocks, restores):
+                lv.blocks, lv.restore = bl, rs
         ss = self._static_sampling(pairs)
         rt = self.runtime
         plan = rt.plan_for(b)
@@ -532,17 +726,24 @@ class LLMEngine:
                 store.clear_slot(i)
 
         def finish(i: int, lv: _Live, reason: str, now: float) -> None:
-            lv.finish_reason = reason
-            done[lv.req.uid] = RequestOutput(
-                lv.req.uid, np.asarray(lv.tokens, np.int32),
-                lv.t_prefill, now - lv.t_start, reason)
+            self._finish(lv, reason, now, done)
             release(i)
 
         def admit(i: int) -> TokenEvent:
             nonlocal stacked
             r, sp = queue.popleft()
             t0 = time.perf_counter()
-            if offload:
+            blocks = restore = None
+            if self.prefix_cache is not None:
+                logits, ks, vs, hs, restore = \
+                    self._prefill_request(r.prompt)
+                blocks = (ks, vs, hs) if self._keep_blocks else None
+                if offload:
+                    store.fill_slot(i, ks, vs, hs, len(r.prompt))
+                else:
+                    cache = self._resident_cache_from_blocks(
+                        ks, vs, len(r.prompt), max_len)
+            elif offload:
                 logits, ks, vs, hs = prefill_with_activations(
                     self.model, self.params, jnp.asarray(r.prompt)[None])
                 store.fill_slot(i, np.asarray(ks), np.asarray(vs),
@@ -554,7 +755,8 @@ class LLMEngine:
             ss.set_slot(i, r.uid, sp)
             first = ss.sample_one(logits[:, -1], i, 0)
             t1 = time.perf_counter()
-            lv = _Live(r, sp, sp.stop_set, [first], t1 - t0, t1)
+            lv = _Live(r, sp, sp.stop_set, [first], t1 - t0, t1,
+                       restore=restore, blocks=blocks)
             slots[i] = lv
             tokens[i, 0] = first
             if offload:

@@ -67,6 +67,17 @@ class EngineShim:
     def runtime(self):
         return self.engine.runtime
 
+    def close(self) -> None:
+        """Release the underlying engine's thread pools (idempotent)."""
+        self.engine.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.close()
+        return False
+
     def _default_params(self, r: Request) -> SamplingParams:
         base = r.params or SamplingParams(max_tokens=r.max_new_tokens)
         if self.sampler == "temperature" and base.greedy is None \

@@ -7,3 +7,10 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 import jax  # noqa: E402
 
 jax.config.update("jax_enable_x64", False)
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: long-running test, excluded from the fast CI lane "
+        "(pytest -m 'not slow'); the full suite still runs it")

@@ -34,12 +34,25 @@ def sched():
     return Scheduler(A100_PCIE4)
 
 
+_ENGINES = []
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _close_engines():
+    """Close every engine the module created (thread-pool hygiene)."""
+    yield
+    while _ENGINES:
+        _ENGINES.pop().close()
+
+
 def _engine(setup, sched, backend, batching, **kw):
     cfg, model, params = setup
-    return LLMEngine.from_config(
+    eng = LLMEngine.from_config(
         model, params,
         EngineConfig(backend=backend, batching=batching, slots=2,
                      max_len=64, **kw), scheduler=sched)
+    _ENGINES.append(eng)
+    return eng
 
 
 def _ref_greedy(model, params, prompt, gen):
@@ -63,14 +76,17 @@ def _reqs(cfg, lens, budgets, seed=0):
 
 # ------------------------------------------------- greedy identity (AC)
 
+@pytest.mark.slow
 @pytest.mark.parametrize("backend,batching", COMBOS)
 def test_generate_matches_greedy_reference(setup, sched, backend,
                                            batching):
     """Default SamplingParams (greedy, no EOS): generate() is
     token-identical to the per-request reference on every
-    backend x batching combination."""
+    backend x batching combination — with RAGGED prompt lengths, so
+    static batching exercises the left-pad mask / per-row RoPE shift /
+    true per-slot seq_lens path."""
     cfg, model, params = setup
-    lens = [10, 10, 10] if batching == "static" else [8, 11, 14]
+    lens = [8, 11, 14]
     reqs = _reqs(cfg, lens, [5, 4, 6])
     eng = _engine(setup, sched, backend, batching)
     outs = eng.generate(reqs)
@@ -107,6 +123,7 @@ def test_sampling_stream_identical_across_all_paths(setup, sched):
 
 # ------------------------------------- continuous sampler + seed (sat 1)
 
+@pytest.mark.slow
 @pytest.mark.parametrize("backend", ["resident", "offload"])
 def test_continuous_temperature_seeded(setup, sched, backend):
     """The continuous engine must draw from the sampler path (not
@@ -136,8 +153,11 @@ def test_continuous_temperature_seeded(setup, sched, backend):
            for r in reqs]
     want = _engine(setup, sched, backend, "continuous", seed=5
                    ).generate(reqs, sps)
-    for x, y in zip(shim.serve(reqs), want):
-        np.testing.assert_array_equal(x.tokens, y.tokens)
+    try:
+        for x, y in zip(shim.serve(reqs), want):
+            np.testing.assert_array_equal(x.tokens, y.tokens)
+    finally:
+        shim.close()
 
 
 # --------------------------------------------------- early EOS (sat 4)
@@ -172,6 +192,7 @@ def test_early_eos_finish_reason_and_token_count(setup, sched, backend,
     assert outs[1].finish_reason == "length"
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("backend", ["resident", "offload"])
 def test_early_eos_frees_slot_for_admission(setup, sched, backend):
     """Continuous batching, 2 slots, 3 requests: the early-EOS request's
@@ -239,6 +260,7 @@ def test_stream_events_match_generate(setup, sched):
     assert all(a.step <= b.step for a, b in zip(events, events[1:]))
 
 
+@pytest.mark.slow
 def test_mixed_batch_finish_reasons(setup, sched):
     """Acceptance: one batch mixing greedy, temperature, and early-EOS
     requests completes with the right per-request finish_reason."""
@@ -309,8 +331,6 @@ def test_decode_on_token_hook(setup, sched):
     first = np.asarray(np.argmax(logits, axis=-1), np.int32)
     store = HostKVStore(cfg, 2, 10 + 8 + 2)
     store.bulk_fill(np.asarray(ks), np.asarray(vs), np.asarray(hs), 10)
-    rt = OffloadDecodeRuntime(cfg, params, A100_PCIE4, mode="kvpr",
-                              scheduler=sched)
     seen = []
 
     def hook(step, tokens, stats):
@@ -318,6 +338,8 @@ def test_decode_on_token_hook(setup, sched):
         assert stats.t_total > 0
         return step == 2           # stop after the third token
 
-    out, stats = rt.decode(store, first, 8, on_token=hook)
+    with OffloadDecodeRuntime(cfg, params, A100_PCIE4, mode="kvpr",
+                              scheduler=sched) as rt:
+        out, stats = rt.decode(store, first, 8, on_token=hook)
     assert len(seen) == 3 and [s for s, _ in seen] == [0, 1, 2]
     assert out.shape == (2, 3) and len(stats) == 3

@@ -11,6 +11,7 @@ from repro.serving.continuous import ContinuousBatchingEngine
 from repro.serving.engine import Request, ServingEngine
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["llama3.2-1b", "opt-6.7b"])
 def test_continuous_matches_sequential(arch):
     cfg = get_smoke_config(arch)
@@ -23,12 +24,13 @@ def test_continuous_matches_sequential(arch):
                                         8 + 3 * i).astype(np.int32),
                     max_new_tokens=4 + (i % 3))
             for i in range(5)]
-    cont = ContinuousBatchingEngine(model, params, num_slots=2,
-                                    max_len=64).serve(reqs)
+    with ContinuousBatchingEngine(model, params, num_slots=2,
+                                  max_len=64) as ceng:
+        cont = ceng.serve(reqs)
     # reference: each request served alone (no padding interference)
-    eng = ServingEngine(model, params, mode="resident")
-    for r, c in zip(reqs, cont):
-        ref = eng.serve([r])[0]
-        np.testing.assert_array_equal(c.tokens, ref.tokens,
-                                      err_msg=f"uid={r.uid}")
-        assert len(c.tokens) == r.max_new_tokens
+    with ServingEngine(model, params, mode="resident") as eng:
+        for r, c in zip(reqs, cont):
+            ref = eng.serve([r])[0]
+            np.testing.assert_array_equal(c.tokens, ref.tokens,
+                                          err_msg=f"uid={r.uid}")
+            assert len(c.tokens) == r.max_new_tokens

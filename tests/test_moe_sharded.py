@@ -9,6 +9,7 @@ import sys
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import get_smoke_config
 from repro.models import moe as MOE
@@ -65,6 +66,7 @@ print("SHARDED_MOE_OK")
 """
 
 
+@pytest.mark.slow
 def test_sharded_matches_gspmd_on_mesh():
     env = dict(os.environ)
     env["PYTHONPATH"] = "src"

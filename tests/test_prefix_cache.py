@@ -1,0 +1,286 @@
+"""Shared-prefix KV cache: radix-index semantics (partial-edge matches,
+eviction, pruning), the scheduler's restore-split decision, and
+end-to-end hit/eviction/partial-match serving identity — a prefix-cache
+hit must emit tokens IDENTICAL to a cold-cache run."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.cost_model import A100_PCIE4
+from repro.core.prefix_cache import (PrefixCache, PrefixCacheConfig,
+                                     PrefixEntry, RadixPrefixIndex)
+from repro.core.runtime import restore_prefix_kv
+from repro.core.scheduler import Scheduler
+from repro.models.transformer import Model
+from repro.serving import (EngineConfig, LLMEngine, Request,
+                           SamplingParams)
+
+COMBOS = [("resident", "static"), ("offload", "static"),
+          ("resident", "continuous"), ("offload", "continuous")]
+
+
+def _entry(tokens):
+    p = len(tokens)
+    z = np.zeros((2, 1, p, 2, 4), np.float32)
+    return PrefixEntry(tuple(tokens), z, z.copy(),
+                       np.zeros((2, 1, p, 8), np.float32))
+
+
+# ------------------------------------------------------------ the index
+
+def test_radix_index_exact_and_nested_matches():
+    idx = RadixPrefixIndex()
+    idx.insert((1, 2, 3, 4), _entry((1, 2, 3, 4)))
+    idx.insert((1, 2, 3, 4, 5, 6), _entry((1, 2, 3, 4, 5, 6)))
+    assert idx.size == 2
+    n, e = idx.match([1, 2, 3, 4])
+    assert n == 4 and e.tokens[:4] == (1, 2, 3, 4)
+    n, e = idx.match([1, 2, 3, 4, 5, 6, 7])
+    assert n == 6 and e.tokens == (1, 2, 3, 4, 5, 6)
+    n, e = idx.match([9, 9])
+    assert n == 0 and e is None
+
+
+def test_radix_index_partial_edge_match():
+    """A query diverging mid-edge still matches the shared span: every
+    entry under the edge covers those tokens ('prefix longer than the
+    match' costs nothing)."""
+    idx = RadixPrefixIndex()
+    idx.insert((1, 2, 3, 4, 5), _entry((1, 2, 3, 4, 5)))
+    n, e = idx.match([1, 2, 3, 9, 9])
+    assert n == 3 and e.tokens == (1, 2, 3, 4, 5)
+    # query shorter than the stored entry: full-query cover
+    n, e = idx.match([1, 2, 3])
+    assert n == 3 and e.tokens == (1, 2, 3, 4, 5)
+
+
+def test_radix_index_remove_prunes():
+    idx = RadixPrefixIndex()
+    idx.insert((1, 2, 3), _entry((1, 2, 3)))
+    idx.insert((1, 2, 9), _entry((1, 2, 9)))
+    assert idx.remove((1, 2, 3)) and not idx.remove((1, 2, 3))
+    assert idx.size == 1
+    n, e = idx.match([1, 2, 3])
+    assert n == 2 and e.tokens == (1, 2, 9)      # shared span survives
+    assert idx.remove((1, 2, 9)) and idx.size == 0
+    assert idx.match([1, 2, 9]) == (0, None)
+    assert not idx.root.children                 # fully pruned
+
+
+# ------------------------------------------------------------ the cache
+
+def test_prefix_cache_lookup_caps_and_min_prefix():
+    pc = PrefixCache(PrefixCacheConfig(min_prefix=4))
+    toks = np.arange(1, 9, dtype=np.int32)
+    z = np.zeros((2, 1, 8, 2, 4), np.float32)
+    h = np.zeros((2, 1, 8, 8), np.float32)
+    assert pc.insert(toks, z, z, h)
+    # whole-prompt match is capped at len-1 (one token must prefill)
+    p, e = pc.lookup(toks)
+    assert p == 7 and e is not None
+    # below min_prefix -> miss
+    p, e = pc.lookup(np.array([1, 2, 3, 99], np.int32))
+    assert (p, e) == (0, None)
+    # re-inserting a covered prompt is a no-op
+    assert not pc.insert(toks, z, z, h)
+    assert pc.stats.entries == 1
+
+
+def test_prefix_cache_lru_eviction():
+    pc = PrefixCache(PrefixCacheConfig(capacity_tokens=16, min_prefix=4))
+    z8 = np.zeros((2, 1, 8, 2, 4), np.float32)
+    h8 = np.zeros((2, 1, 8, 8), np.float32)
+    a = np.arange(1, 9, dtype=np.int32)
+    b = np.arange(11, 19, dtype=np.int32)
+    c = np.arange(21, 29, dtype=np.int32)
+    pc.insert(a, z8, z8, h8)
+    pc.insert(b, z8, z8, h8)
+    pc.lookup(a)                          # a is now more recent than b
+    pc.insert(c, z8, z8, h8)              # 24 tokens > 16 -> evict b
+    st = pc.stats
+    assert st.evictions == 1 and st.tokens_stored == 16
+    assert pc.lookup(np.concatenate([b, [99]]))[1] is None
+    assert pc.lookup(np.concatenate([a, [99]]))[1] is not None
+
+
+# --------------------------------------------------- the restore split
+
+def test_restore_split_modes():
+    """MHA (kv_dim == d_model): recomputing from activations beats
+    streaming K+V, so the split is interior; flexgen restores stream
+    everything; GQA (2*kv_dim <= d_model) streams everything too, by
+    the same byte arithmetic."""
+    sched = Scheduler(A100_PCIE4)
+    mha = get_smoke_config("opt-6.7b")
+    d = sched.restore_split(mha, 64)
+    assert 0 < d.l <= 64
+    assert sched.restore_split(mha, 64, mode="flexgen").l == 0
+    gqa = get_smoke_config("tinyllama-1.1b")
+    assert sched.restore_split(gqa, 64).l == 0
+
+
+def test_restore_prefix_kv_exact():
+    """restore_prefix_kv(split) reproduces the entry's KV exactly:
+    the streamed tail verbatim, the recomputed head from activations
+    through the same GEMM+RoPE the prefill ran."""
+    from repro.core.runtime import TransferEngine, \
+        prefill_with_activations
+    import jax.numpy as jnp
+    cfg = get_smoke_config("tinyllama-1.1b")
+    model = Model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    toks = rng.integers(1, cfg.vocab_size, (1, 12)).astype(np.int32)
+    _, ks, vs, hs = prefill_with_activations(model, params,
+                                             jnp.asarray(toks))
+    ks, vs, hs = np.asarray(ks), np.asarray(vs), np.asarray(hs)
+    xfer = TransferEngine(1)
+    try:
+        for l in (0, 5, 12):
+            k_dev, v_dev, st = restore_prefix_kv(
+                cfg, params, ks, vs, hs, p=12, split_l=l, xfer=xfer)
+            assert (st.recomputed, st.streamed) == (l, 12 - l)
+            np.testing.assert_allclose(np.asarray(k_dev), ks[:, :, :12],
+                                       rtol=1e-5, atol=1e-5)
+            np.testing.assert_allclose(np.asarray(v_dev), vs[:, :, :12],
+                                       rtol=1e-5, atol=1e-5)
+            assert st.bytes_streamed > 0
+    finally:
+        xfer.close()
+
+
+# ------------------------------------------------------------ end to end
+
+@pytest.fixture(scope="module")
+def tiny_setup():
+    cfg = get_smoke_config("tinyllama-1.1b")
+    model = Model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+@pytest.fixture(scope="module")
+def sched():
+    return Scheduler(A100_PCIE4)
+
+
+def _family(cfg, seed=0, shared=12, tails=(3, 5)):
+    rng = np.random.default_rng(seed)
+    base = rng.integers(1, cfg.vocab_size, shared).astype(np.int32)
+    return [np.concatenate([base, rng.integers(
+        1, cfg.vocab_size, t).astype(np.int32)]) for t in tails]
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("backend,batching", COMBOS)
+def test_prefix_hit_identical_to_cold(tiny_setup, sched, backend,
+                                      batching):
+    """Acceptance: a second generate() sharing an N-token prefix skips
+    prefill for the matched tokens while emitting tokens identical to
+    the cold-cache run — on every backend x batching combo."""
+    cfg, model, params = tiny_setup
+    p1, p2 = _family(cfg, seed=1)
+    config = EngineConfig(backend=backend, batching=batching, slots=2,
+                          max_len=64)
+    with LLMEngine.from_config(model, params, config,
+                               scheduler=sched) as cold:
+        ref = cold.generate([Request(0, p2, 5)])[0]
+    warm_cfg = dataclasses.replace(config,
+                                   prefix_cache=PrefixCacheConfig())
+    with LLMEngine.from_config(model, params, warm_cfg,
+                               scheduler=sched) as eng:
+        eng.generate([Request(0, p1, 4)])
+        out = eng.generate([Request(1, p2, 5)])[0]
+        st = eng.prefix_stats
+    np.testing.assert_array_equal(out.tokens, ref.tokens)
+    assert out.cached_prefix == 12               # the shared prefix
+    assert out.restore is not None
+    assert out.restore.recomputed + out.restore.streamed == 12
+    assert st.hits == 1 and st.tokens_matched == 12
+
+
+@pytest.mark.slow
+def test_prefix_partial_match_and_batch_hit(tiny_setup, sched):
+    """One static batch mixing a full hit, a PARTIAL match (prompt
+    diverging inside the cached prefix), and a cold prompt — all
+    token-identical to cold serving."""
+    cfg, model, params = tiny_setup
+    rng = np.random.default_rng(5)
+    base = rng.integers(1, cfg.vocab_size, 12).astype(np.int32)
+    full = np.concatenate([base, rng.integers(
+        1, cfg.vocab_size, 4).astype(np.int32)])
+    diverge = np.concatenate([base[:7], rng.integers(
+        1, cfg.vocab_size, 6).astype(np.int32)])
+    cold_p = rng.integers(1, cfg.vocab_size, 10).astype(np.int32)
+    reqs = [Request(i, p, 4) for i, p in enumerate(
+        (full, diverge, cold_p))]
+    config = EngineConfig(backend="offload")
+    with LLMEngine.from_config(model, params, config,
+                               scheduler=sched) as cold:
+        refs = cold.generate(reqs)
+    warm_cfg = dataclasses.replace(config,
+                                   prefix_cache=PrefixCacheConfig())
+    with LLMEngine.from_config(model, params, warm_cfg,
+                               scheduler=sched) as eng:
+        eng.generate([Request(9, base, 4)])      # seed the cache
+        outs = eng.generate(reqs)
+    for o, r in zip(outs, refs):
+        np.testing.assert_array_equal(o.tokens, r.tokens)
+    assert outs[0].cached_prefix == 12           # full prefix restored
+    assert outs[1].cached_prefix == 7            # partial-edge match
+    assert outs[2].cached_prefix == 0            # cold
+
+
+def test_prefix_eviction_end_to_end(tiny_setup, sched):
+    """With a capacity of one prompt, serving a second family evicts
+    the first: re-serving family A misses (cached_prefix == 0) but
+    stays token-identical."""
+    cfg, model, params = tiny_setup
+    a1, a2 = _family(cfg, seed=2)
+    b1, _ = _family(cfg, seed=3)
+    warm_cfg = EngineConfig(
+        backend="offload",
+        prefix_cache=PrefixCacheConfig(capacity_tokens=20))
+    with LLMEngine.from_config(model, params,
+                               EngineConfig(backend="offload"),
+                               scheduler=sched) as cold:
+        ref = cold.generate([Request(0, a2, 4)])[0]
+    with LLMEngine.from_config(model, params, warm_cfg,
+                               scheduler=sched) as eng:
+        eng.generate([Request(0, a1, 4)])        # insert A (15 tokens)
+        eng.generate([Request(1, b1, 4)])        # insert B -> evict A
+        out = eng.generate([Request(2, a2, 4)])[0]
+        st = eng.prefix_stats
+    assert st.evictions >= 1
+    assert out.cached_prefix == 0                # A was evicted
+    np.testing.assert_array_equal(out.tokens, ref.tokens)
+
+
+def test_prefix_insert_on_finish_streaming(tiny_setup, sched):
+    """Insertion happens when the request FINISHES: a second stream
+    over the same prompt family hits the prefix the first inserted."""
+    cfg, model, params = tiny_setup
+    p1, p2 = _family(cfg, seed=4)
+    warm_cfg = EngineConfig(backend="offload", batching="continuous",
+                            slots=2, max_len=64,
+                            prefix_cache=PrefixCacheConfig())
+    with LLMEngine.from_config(model, params, warm_cfg,
+                               scheduler=sched) as eng:
+        list(eng.generate_stream([Request(0, p1, 3)]))
+        outs = eng.generate([Request(1, p2, 3)])
+        assert outs[0].cached_prefix == 12
+        assert eng.prefix_stats.entries == 2
+
+
+def test_prefix_cache_rejects_unsupported_arch(sched):
+    cfg = get_smoke_config("zamba2-1.2b")
+    model = Model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="dense"):
+        LLMEngine.from_config(
+            model, params,
+            EngineConfig(prefix_cache=PrefixCacheConfig()),
+            scheduler=sched)

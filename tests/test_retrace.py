@@ -79,8 +79,10 @@ def test_uniform_decode_retrace_and_alloc_free(tiny_setup, compress):
     if traces0 >= 0:
         assert rt.compute.traces() == traces0
     assert sum(st.retraces for st in stats2) == 0
+    rt.close()
 
 
+@pytest.mark.slow
 def test_bucketed_padding_token_identity(tiny_setup):
     """Bucket-padded, masked execution must emit exactly the tokens the
     resident (unpadded) reference emits over a long decode."""
@@ -97,13 +99,15 @@ def test_bucketed_padding_token_identity(tiny_setup):
         tok = jnp.argmax(lg, axis=-1).astype(jnp.int32)
     ref = np.concatenate(ref, axis=1)
 
-    rt = OffloadDecodeRuntime(cfg, params, A100_PCIE4, mode="kvpr")
-    store, first = _spill(cfg, model, params, np.asarray(toks), GEN)
-    np.testing.assert_array_equal(first, ref[:, :1])
-    out, _ = rt.decode(store, first, GEN)
+    with OffloadDecodeRuntime(cfg, params, A100_PCIE4,
+                              mode="kvpr") as rt:
+        store, first = _spill(cfg, model, params, np.asarray(toks), GEN)
+        np.testing.assert_array_equal(first, ref[:, :1])
+        out, _ = rt.decode(store, first, GEN)
     np.testing.assert_array_equal(out, ref[:, 1:GEN + 1])
 
 
+@pytest.mark.slow
 def test_ragged_continuous_retrace_bounded(tiny_setup):
     """Continuous batching (ragged slots, mid-decode admission) shares
     the uniform path's traces; a second serve() over the same workload
@@ -132,6 +136,7 @@ def test_ragged_continuous_retrace_bounded(tiny_setup):
         assert eng.runtime.compute.traces() == traces0
     for g1, g2 in zip(gens1, gens2):
         np.testing.assert_array_equal(g1.tokens, g2.tokens)
+    eng.close()
 
 
 def test_serving_engine_reuses_runtime(tiny_setup):
@@ -150,3 +155,4 @@ def test_serving_engine_reuses_runtime(tiny_setup):
     assert allocs0 > 0
     eng.serve(reqs)
     assert eng.runtime.xfer.staging_allocs == allocs0
+    eng.close()

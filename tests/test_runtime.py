@@ -43,8 +43,8 @@ def test_offload_runtime_matches_resident(opt_setup, mode):
     first = jnp.argmax(logits, axis=-1).astype(jnp.int32)
     store = HostKVStore(cfg, b, s + gen + 2)
     store.bulk_fill(np.asarray(ks), np.asarray(vs), np.asarray(hs), s)
-    rt = OffloadDecodeRuntime(cfg, params, A100_PCIE4, mode=mode)
-    out, stats = rt.decode(store, np.asarray(first), gen - 1)
+    with OffloadDecodeRuntime(cfg, params, A100_PCIE4, mode=mode) as rt:
+        out, stats = rt.decode(store, np.asarray(first), gen - 1)
     # runtime emits tokens produced AFTER consuming `first` == ref[1:]
     np.testing.assert_array_equal(np.asarray(first), ref[:, :1])
     np.testing.assert_array_equal(out, ref[:, 1:gen])
@@ -57,8 +57,10 @@ def test_serving_engine_modes_agree(opt_setup):
     reqs = [Request(uid=i, prompt=rng.integers(
         1, cfg.vocab_size, 12).astype(np.int32), max_new_tokens=4)
         for i in range(2)]
-    res = ServingEngine(model, params, mode="resident").serve(reqs)
-    off = ServingEngine(model, params, mode="offload").serve(reqs)
+    with ServingEngine(model, params, mode="resident") as eng:
+        res = eng.serve(reqs)
+    with ServingEngine(model, params, mode="offload") as eng:
+        off = eng.serve(reqs)
     for r, o in zip(res, off):
         np.testing.assert_array_equal(r.tokens, o.tokens)
         assert r.decode_time > 0 and o.decode_time > 0
@@ -74,7 +76,8 @@ def test_serving_engine_vlm(opt_setup):
     extra = {"patches": jnp.asarray(
         rng.normal(size=(1, cfg.num_patch_tokens, cfg.d_model)),
         jnp.float32)}
-    gens = ServingEngine(model, params, mode="resident").serve(reqs, extra)
+    with ServingEngine(model, params, mode="resident") as eng:
+        gens = eng.serve(reqs, extra)
     assert gens[0].tokens.shape == (3,)
 
 
@@ -85,3 +88,14 @@ def test_host_store_roundtrip():
     store.append(0, k, k * 2, np.ones((2, 1, cfg.d_model)), pos=3)
     assert store.k[0, :, 3].sum() == k.sum()
     assert store.v[0, :, 3].sum() == 2 * k.sum()
+
+
+def test_runtime_close_idempotent(opt_setup):
+    """The thread-leak fix: close() joins the transfer-engine pools and
+    is safe to call twice / via the context manager."""
+    cfg, model, params = opt_setup
+    rt = OffloadDecodeRuntime(cfg, params, A100_PCIE4, mode="kvpr")
+    with rt:
+        pass
+    rt.close()                               # second close is a no-op
+    assert rt.xfer.pool._shutdown and rt.xfer.store_pool._shutdown

@@ -95,9 +95,9 @@ def test_int4_padded_decode(tiny_setup):
     first = np.asarray(np.argmax(logits, axis=-1), np.int32)
     store = HostKVStore(cfg, b, s + gen + 2, compress="int4")
     store.bulk_fill(np.asarray(ks), np.asarray(vs), np.asarray(hs), s)
-    rt = OffloadDecodeRuntime(cfg, params, A100_PCIE4, mode="kvpr",
-                              compress="int4")
-    out, stats = rt.decode(store, first, gen)
+    with OffloadDecodeRuntime(cfg, params, A100_PCIE4, mode="kvpr",
+                              compress="int4") as rt:
+        out, stats = rt.decode(store, first, gen)
     assert out.shape == (b, gen)
     assert all(st.bytes_transferred > 0 for st in stats)
     # the plan's pads are bucket multiples clamped to the store capacity
@@ -150,20 +150,24 @@ def test_offload_respects_engine_sampler(tiny_setup):
     reqs = [Request(uid=i, prompt=rng.integers(
         1, cfg.vocab_size, 10).astype(np.int32), max_new_tokens=5)
         for i in range(2)]
-    res = ServingEngine(model, params, mode="resident",
-                        sampler="temperature", seed=7).serve(reqs)
-    off = ServingEngine(model, params, mode="offload",
-                        sampler="temperature", seed=7).serve(reqs)
+    with ServingEngine(model, params, mode="resident",
+                       sampler="temperature", seed=7) as eng:
+        res = eng.serve(reqs)
+    with ServingEngine(model, params, mode="offload",
+                       sampler="temperature", seed=7) as eng:
+        off = eng.serve(reqs)
     for r, o in zip(res, off):
         np.testing.assert_array_equal(r.tokens, o.tokens)
-    grd = ServingEngine(model, params, mode="offload", sampler="greedy",
-                        seed=7).serve(reqs)
+    with ServingEngine(model, params, mode="offload", sampler="greedy",
+                       seed=7) as eng:
+        grd = eng.serve(reqs)
     assert any(not np.array_equal(g.tokens, o.tokens)
                for g, o in zip(grd, off))
 
 
 # ------------------------------------------- continuous offload serving
 
+@pytest.mark.slow
 @pytest.mark.parametrize("compress", [None, "int4"])
 def test_continuous_offload_matches_resident_alone(tiny_setup, compress):
     """A request admitted mid-decode into the offload engine must produce
@@ -179,14 +183,69 @@ def test_continuous_offload_matches_resident_alone(tiny_setup, compress):
                     max_new_tokens=4 + (i % 3))
             for i in range(5)]
     sched = Scheduler(A100_PCIE4)
-    cont = ContinuousBatchingEngine(
-        model, params, num_slots=2, max_len=64, mode="offload",
-        scheduler=sched, compress=compress).serve(reqs)
+    with ContinuousBatchingEngine(
+            model, params, num_slots=2, max_len=64, mode="offload",
+            scheduler=sched, compress=compress) as ceng:
+        cont = ceng.serve(reqs)
     assert sched.misses >= 1     # the engine planned through the scheduler
-    eng = ServingEngine(model, params, mode="resident")
-    for r, c in zip(reqs, cont):
-        assert len(c.tokens) == r.max_new_tokens
-        if compress is None:
-            ref = eng.serve([r])[0]
-            np.testing.assert_array_equal(c.tokens, ref.tokens,
-                                          err_msg=f"uid={r.uid}")
+    with ServingEngine(model, params, mode="resident") as eng:
+        for r, c in zip(reqs, cont):
+            assert len(c.tokens) == r.max_new_tokens
+            if compress is None:
+                ref = eng.serve([r])[0]
+                np.testing.assert_array_equal(c.tokens, ref.tokens,
+                                              err_msg=f"uid={r.uid}")
+
+
+# ----------------------------------------------------- profiler hygiene
+
+def test_profile_system_locked_and_memoized(monkeypatch):
+    """Concurrent profile_system calls must all observe the SAME
+    profile object (one measurement under the lock), so every
+    scheduler's plan-cache keys agree."""
+    from concurrent.futures import ThreadPoolExecutor
+    from repro.core import profiler
+    calls = []
+
+    def fake_link():
+        calls.append(1)
+        return 1e9
+
+    monkeypatch.setattr(profiler, "measure_link_bandwidth", fake_link)
+    monkeypatch.setattr(profiler, "measure_gemm_flops", lambda: 1e12)
+    saved = dict(profiler._PROFILE_CACHE)
+    profiler._PROFILE_CACHE.clear()
+    try:
+        with ThreadPoolExecutor(8) as pool:
+            profs = list(pool.map(
+                lambda _: profiler.profile_system("t-lock"), range(16)))
+        assert all(p is profs[0] for p in profs)
+        assert len(calls) == 1
+    finally:
+        profiler._PROFILE_CACHE.clear()
+        profiler._PROFILE_CACHE.update(saved)
+
+
+def test_profile_force_notifies_live_schedulers(tiny_setup, monkeypatch):
+    """profile_system(force=True) must push the fresh profile into live
+    Schedulers that adopted a measured profile — dropping their stale
+    plans — instead of relying on callers to invalidate by hand."""
+    from repro.core import profiler
+    cfg, _, _ = tiny_setup
+    monkeypatch.setattr(profiler, "measure_link_bandwidth", lambda: 1e9)
+    monkeypatch.setattr(profiler, "measure_gemm_flops", lambda: 1e12)
+    saved = dict(profiler._PROFILE_CACHE)
+    profiler._PROFILE_CACHE.clear()
+    try:
+        sched = Scheduler()                  # lazy: measures on first use
+        hw1 = sched.hw
+        plan1 = sched.plan_for(cfg, batch=2)
+        monkeypatch.setattr(profiler, "measure_link_bandwidth",
+                            lambda: 2e9)
+        hw2 = profiler.profile_system(force=True)
+        assert hw2 != hw1
+        assert sched.hw == hw2               # profile pushed in
+        assert sched.plan_for(cfg, batch=2) is not plan1   # plans dropped
+    finally:
+        profiler._PROFILE_CACHE.clear()
+        profiler._PROFILE_CACHE.update(saved)

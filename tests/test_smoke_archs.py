@@ -37,6 +37,7 @@ def test_forward_shapes_no_nan(arch):
     assert jnp.isfinite(aux)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ASSIGNED)
 def test_one_train_step(arch):
     cfg = get_smoke_config(arch)

@@ -41,8 +41,10 @@ def test_full_serving_path_exactness():
     reqs = [Request(uid=i, prompt=rng.integers(
         1, cfg.vocab_size, 16).astype(np.int32), max_new_tokens=6)
         for i in range(2)]
-    res = ServingEngine(model, params, mode="resident").serve(reqs)
-    off = ServingEngine(model, params, mode="offload").serve(reqs)
+    with ServingEngine(model, params, mode="resident") as eng:
+        res = eng.serve(reqs)
+    with ServingEngine(model, params, mode="offload") as eng:
+        off = eng.serve(reqs)
     for r, o in zip(res, off):
         np.testing.assert_array_equal(r.tokens, o.tokens)
 

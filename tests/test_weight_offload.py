@@ -30,9 +30,10 @@ def _decode(setup, gen=4, **rt_kwargs):
     cfg, params, first, ks, vs, hs = setup
     store = HostKVStore(cfg, first.shape[0], 24 + gen + 2)
     store.bulk_fill(np.asarray(ks), np.asarray(vs), np.asarray(hs), 24)
-    rt = OffloadDecodeRuntime(cfg, params, profile_system(), mode="kvpr",
-                              schedule="row", **rt_kwargs)
-    toks, stats = rt.decode(store, np.asarray(first), gen)
+    with OffloadDecodeRuntime(cfg, params, profile_system(),
+                              mode="kvpr", schedule="row",
+                              **rt_kwargs) as rt:
+        toks, stats = rt.decode(store, np.asarray(first), gen)
     return toks, stats
 
 
@@ -56,8 +57,9 @@ def test_weight_offload_with_int4_stream(setup):
     store = HostKVStore(cfg, first.shape[0], 24 + gen + 2,
                         compress="int4")
     store.bulk_fill(np.asarray(ks), np.asarray(vs), np.asarray(hs), 24)
-    rt = OffloadDecodeRuntime(cfg, params, profile_system(), mode="kvpr",
-                              offload_weights=True, compress="int4")
-    toks, stats = rt.decode(store, np.asarray(first), gen)
+    with OffloadDecodeRuntime(cfg, params, profile_system(),
+                              mode="kvpr", offload_weights=True,
+                              compress="int4") as rt:
+        toks, stats = rt.decode(store, np.asarray(first), gen)
     assert toks.shape == (first.shape[0], gen)
     assert np.isfinite(stats[-1].t_total)
