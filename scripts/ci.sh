@@ -35,10 +35,12 @@ fi
 python -m pytest -q --collect-only >/dev/null
 
 # 2. Tier-1 suite: fast tier on --fast, everything otherwise.
+#    --durations=15 keeps the slowest tests visible in the CI log, so a
+#    creeping suite is caught by eye before it is caught by timeout.
 if [[ "$FAST" == "1" ]]; then
-    python -m pytest -x -q -m "not slow"
+    python -m pytest -x -q --durations=15 -m "not slow"
 else
-    python -m pytest -x -q
+    python -m pytest -x -q --durations=15
 fi
 
 # 3. Smoke the quickstart end-to-end (profiler -> scheduler -> serving);
@@ -60,5 +62,12 @@ timeout "${SERVE_TIMEOUT:-300}" python -m repro.launch.serve --smoke
 # 6. Shared-prefix cache smoke: a warm run must skip prefill for the
 #    matched tokens AND emit tokens identical to the cold run.
 timeout "${PREFIX_TIMEOUT:-300}" python benchmarks/bench_prefix.py --smoke
+
+# 7. Chunked-prefill smoke: token-budgeted chunked admission of a
+#    >=1k-token prompt under continuous batching must stall in-flight
+#    decodes strictly less than inline admission, with identical
+#    tokens (see docs/performance.md).
+timeout "${CHUNKED_TIMEOUT:-300}" \
+    python benchmarks/bench_chunked_prefill.py --smoke
 
 echo "ci.sh: all checks passed"

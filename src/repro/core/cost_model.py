@@ -18,6 +18,11 @@ class HardwareProfile:
     hbm_bandwidth: float         # device memory bytes/s
     # efficiency factor applied to peak for small-GEMM recompute workloads
     gemm_efficiency: float = 1.0
+    # fixed per-kernel-launch latency (seconds): one jitted dispatch on
+    # the device queue.  The chunked-prefill planner charges it once per
+    # chunk — it is what makes very small chunks lose (measured by
+    # core/profiler.measure_dispatch_overhead on live systems).
+    dispatch_overhead: float = 5e-4
 
     @property
     def v_com(self) -> float:
@@ -115,6 +120,31 @@ def int4_kv_bytes_per_el(group: int = 32) -> float:
     (core/kvquant.py layout): a packed half-byte code plus two f32
     (scale, zero) values amortized over each ``group`` elements."""
     return 0.5 + 8.0 / group
+
+
+def chunk_compute_flops(wl: Workload, n_layers: int, d_ff: int,
+                        prefix: int, c: int, mlp_mults: int = 3) -> float:
+    """Device FLOPs to prefill one ``c``-token chunk whose queries attend
+    over ``prefix`` already-cached tokens plus their own causal block.
+
+    Linear part (QKVO + MLP GEMMs) is per-token; the attention part is
+    the quadratic term that chunking cannot remove — query t of the
+    chunk scores against prefix + t + 1 keys (QK^T and PV, 2 MACs per
+    key per channel).  ``mlp_mults`` is the number of h x d_ff matmuls
+    in the MLP (2 plain, 3 gated)."""
+    h, kv, b = wl.d_model, wl.kv_dim, wl.batch
+    linear = 4 * h * h + 4 * h * kv + 2 * h * d_ff * mlp_mults
+    attn = 4 * h * (prefix * c + c * (c + 1) / 2)
+    return float(b * n_layers * (c * linear + attn))
+
+
+def chunk_writeback_bytes(wl: Workload, n_layers: int, c: int) -> float:
+    """Host write-back bytes for one finished c-token chunk: K + V
+    (at the effective streamed element width) plus the attention-input
+    activations KVPR keeps for later recomputation."""
+    kv_b = 2 * wl.kv_dim * wl.kv_el_bytes
+    act_b = wl.d_model * wl.dtype_bytes
+    return float(wl.batch * n_layers * c * (kv_b + act_b))
 
 
 def layer_times(wl: Workload, hw: HardwareProfile, l: int,

@@ -47,6 +47,19 @@ def measure_gemm_flops(m: int = 2048, k: int = 2048, n: int = 2048,
     return 2 * m * k * n / dt
 
 
+def measure_dispatch_overhead(iters: int = 20) -> float:
+    """Fixed per-dispatch latency (s) of one already-compiled jitted
+    call on a tiny array: the launch cost the chunked-prefill planner
+    charges once per chunk (small chunks pay it n/c times)."""
+    f = jax.jit(lambda a: a + 1.0)
+    x = jnp.zeros((8,), jnp.float32)
+    f(x).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        f(x).block_until_ready()
+    return (time.perf_counter() - t0) / iters
+
+
 _PROFILE_CACHE: dict = {}
 _PROFILE_LOCK = threading.Lock()
 # Schedulers whose HardwareProfile came from profile_system(), keyed by
@@ -85,9 +98,11 @@ def profile_system(name: str = "measured",
             return _PROFILE_CACHE[name]
         link = measure_link_bandwidth()
         flops = measure_gemm_flops()
+        disp = measure_dispatch_overhead()
         prof = HardwareProfile(name=name, link_bandwidth=link,
                                gpu_flops=flops, hbm_bandwidth=link * 4,
-                               gemm_efficiency=1.0)
+                               gemm_efficiency=1.0,
+                               dispatch_overhead=disp)
         _PROFILE_CACHE[name] = prof
         scheds = (list(_LIVE_SCHEDULERS.get(name, ())) if force else [])
     for s in scheds:

@@ -129,6 +129,10 @@ class HostKVStore:
         self.lock = threading.Lock()
         self.num_layers = Lh
         self._fences: List[Optional[object]] = [None] * Lh
+        # chunk fences bucketed per slot (None = whole-batch fills), so
+        # one slot's admission never waits another's in-flight chunks
+        self._chunk_fences: Dict[Optional[int], List[object]] = {}
+        self._chunk_lock = threading.Lock()
 
     # `len` views the store as a uniform batch (static-batching path).
     @property
@@ -153,11 +157,46 @@ class HostKVStore:
         if f is not None:
             f.result()
 
+    _ALL_SLOTS = object()        # wait_chunks sentinel: every bucket
+
+    def push_chunk_fence(self, fut, slot: Optional[int] = None) -> None:
+        """Record an in-flight prefill-chunk write-back (a Future),
+        bucketed by the slot it targets (None = a whole-batch fill).
+        Chunk fences are coarser than the per-layer decode fences: one
+        covers a whole chunk's K/V/activations across every layer.  A
+        slot being chunk-filled is never decoded (its ``seq_lens`` entry
+        stays at its pre-admission value until the prompt completes), so
+        only ``wait_chunks``/``sync`` — not the per-layer fetch path —
+        synchronize on them."""
+        with self._chunk_lock:
+            self._chunk_fences.setdefault(slot, []).append(fut)
+
+    def wait_chunks(self, slot=_ALL_SLOTS) -> None:
+        """Drain in-flight chunk write-backs (surfacing any store
+        error) — one slot's bucket, or every bucket by default.
+        Admission calls this once for ITS slot, after the LAST chunk
+        was submitted, so the only un-overlapped write-back is the
+        final chunk's (exactly the pipeline-drain term the chunk_split
+        cost model charges) and a concurrent admission's in-flight
+        chunks are never waited on."""
+        while True:
+            with self._chunk_lock:
+                if slot is self._ALL_SLOTS:
+                    bucket = next((b for b in self._chunk_fences.values()
+                                   if b), None)
+                else:
+                    bucket = self._chunk_fences.get(slot)
+                if not bucket:
+                    return
+                fut = bucket.pop()
+            fut.result()
+
     def sync(self) -> None:
         """Drain every in-flight write-back (bulk writes + end of decode
         call this; the steady-state decode loop never does)."""
         for li in range(len(self._fences)):
             self.wait_fence(li)
+        self.wait_chunks()
 
     # ------------------------------------------------------------- writes
 
@@ -245,6 +284,49 @@ class HostKVStore:
             self._put_kv_slot(li, slot, slice(0, s), ks[li, 0], vs[li, 0])
         self.act[:, slot, :s] = acts[:, 0]
         self.seq_lens[slot] = s
+
+    def fill_chunk(self, ks, vs, acts, start: int, pads=None) -> None:
+        """Write one prefill chunk — (L, b, c, KV, dh) / (L, b, c, h)
+        covering global prompt columns [start, start + c) — into host
+        memory.  ``pads`` (optional, (b,)) are the per-slot left-pad
+        widths of a ragged batch: slot i's real columns
+        [max(start, pad_i), start + c) land at position-native host
+        indices [col - pad_i, ...); rows entirely inside a slot's pad
+        are skipped.  Does NOT touch ``seq_lens`` — the prefill driver
+        marks the slot length once the whole prompt has landed, so a
+        partially-filled slot is never decoded."""
+        c = ks.shape[2]
+        if pads is None:
+            if self.compress == "int4":
+                for li in range(ks.shape[0]):
+                    self._put_kv(li, slice(start, start + c),
+                                 ks[li], vs[li])
+            else:
+                self.k[:, :, start:start + c] = ks
+                self.v[:, :, start:start + c] = vs
+            self.act[:, :, start:start + c] = acts
+            return
+        for i, pad in enumerate(np.asarray(pads)):
+            lo = max(start, int(pad))          # first real global column
+            if lo >= start + c:
+                continue
+            off = lo - start
+            dst = slice(lo - int(pad), start + c - int(pad))
+            for li in range(ks.shape[0]):
+                self._put_kv_slot(li, i, dst, ks[li, i, off:],
+                                  vs[li, i, off:])
+            self.act[:, i, dst] = acts[:, i, off:]
+
+    def fill_chunk_slot(self, slot: int, ks, vs, acts, start: int
+                        ) -> None:
+        """Write a b=1 prefill chunk — (L, 1, c, ...) at positions
+        [start, start + c) — into one slot (iteration-level chunked
+        admission).  Like ``fill_chunk``, never touches ``seq_lens``."""
+        c = ks.shape[2]
+        sl = slice(start, start + c)
+        for li in range(ks.shape[0]):
+            self._put_kv_slot(li, slot, sl, ks[li, 0], vs[li, 0])
+        self.act[:, slot, sl] = acts[:, 0]
 
     def clear_slot(self, slot: int) -> None:
         """Free a slot for the next admission (data may stay stale: every
@@ -804,7 +886,7 @@ class OffloadDecodeRuntime:
 
 
 def prefill_with_activations(model, params, tokens: Array,
-                             prompt_lens=None, prefix=None):
+                             prompt_lens=None, prefix=None, pads=None):
     """Dense-family prefill that also returns per-layer attention-input
     activations (the host-resident tensors KVPR recomputes from).
 
@@ -819,28 +901,38 @@ def prefill_with_activations(model, params, tokens: Array,
     [s - len_i, s) equal a solo prefill of that prompt.
 
     prefix: optional ``(k_pre, v_pre, p)`` — device KV for the first
-    ``p`` tokens of the prompt, already materialized (e.g. restored
-    from a shared-prefix cache via ``restore_prefix_kv``).  ``tokens``
-    are then only the SUFFIX (positions p .. p+s-1); every suffix query
-    attends over [prefix | causal suffix] and the returned ks/vs/hs
-    cover the suffix only.  Mutually exclusive with ``prompt_lens``.
+    ``p`` GLOBAL columns of the (padded) prompt, already materialized
+    (restored from a shared-prefix cache via ``restore_prefix_kv``, or
+    accumulated by ``ChunkedPrefill``).  ``tokens`` are then only the
+    next columns (p .. p+s-1); every query attends over
+    [prefix | causal block] and the returned ks/vs/hs cover those
+    columns only.
+
+    pads: optional (b,) per-row LEFT-pad widths in GLOBAL columns —
+    the chunked-prefill form of ``prompt_lens`` (which it is mutually
+    exclusive with): pad keys get exactly zero weight and positions are
+    shifted per row, composing with ``prefix`` so a chunk of a ragged
+    batch stays exact.
     """
     cfg = model.cfg
     b, s = tokens.shape
-    kv_start = None
     p0 = 0
     if prefix is not None:
         if prompt_lens is not None:
             raise ValueError("prefix and prompt_lens are mutually "
-                             "exclusive (prefix restore is per-request)")
+                             "exclusive (pass pads for chunked ragged "
+                             "prefill)")
         k_pre, v_pre, p0 = prefix
-        positions = jnp.broadcast_to(jnp.arange(s) + p0, (b, s))
-    elif prompt_lens is not None:
+    if prompt_lens is not None:
         pads = (s - jnp.asarray(prompt_lens)).astype(jnp.int32)
-        positions = jnp.maximum(jnp.arange(s)[None, :] - pads[:, None], 0)
-        kv_start = pads
+    elif pads is not None:
+        pads = jnp.asarray(pads, jnp.int32)
+    kv_start = pads
+    if pads is not None:
+        positions = jnp.maximum(
+            jnp.arange(s)[None, :] + p0 - pads[:, None], 0)
     else:
-        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+        positions = jnp.broadcast_to(jnp.arange(s) + p0, (b, s))
     x = L.embed(tokens, params["embed"], cfg, positions)
 
     def body(x, inp):
@@ -854,7 +946,7 @@ def prefill_with_activations(model, params, tokens: Array,
             out = L.chunked_causal_attend(
                 q, jnp.concatenate([kp.astype(k.dtype), k], axis=1),
                 jnp.concatenate([vp.astype(v.dtype), v], axis=1),
-                q_offset=p0)
+                q_offset=p0, kv_start=kv_start)
         else:
             out = L.chunked_causal_attend(q, k, v, kv_start=kv_start)
         out = out.reshape(b, s, cfg.num_heads * cfg.dh)
@@ -869,6 +961,153 @@ def prefill_with_activations(model, params, tokens: Array,
     x = L.apply_norm(x, params["final_norm"], cfg.rms_eps)
     logits = L.unembed(x[:, -1:], params["embed"], cfg)
     return logits, ks, vs, hs
+
+
+# --------------------------------------------------------- chunked prefill
+# Streamed prefill (the last unpipelined stage of the offload path):
+# instead of one monolithic prefill followed by one monolithic
+# bulk_fill, the prompt is processed in scheduler-chosen chunks, and
+# each finished chunk's KV + activations go to host THROUGH the
+# TransferEngine's store pool while the next chunk computes — the same
+# transfer/compute overlap the decode hot path gets from its per-layer
+# fences, applied at chunk grain to prefill write-back.
+
+
+def chunk_width(chunk: int, remaining: int, q_block: int = 512) -> int:
+    """The one place the chunk-shape contract lives: clamp a chunk
+    width to the remaining prompt and to a shape
+    ``chunked_causal_attend`` accepts (<= q_block, or a multiple of
+    it).  Both the offload driver (``ChunkedPrefill``) and the
+    resident engine path use it.  Widths are always GRID widths — the
+    configured chunk or the final partial one, never a budget-truncated
+    sliver — so the XLA trace set stays O(n / chunk) per prompt
+    length."""
+    w = min(chunk, remaining)
+    if w > q_block:
+        w = (w // q_block) * q_block
+    return max(w, 1)
+
+
+def _chunk_prefill_fn(model):
+    """Per-model jitted chunk step (cached ON the model so traces are
+    shared across ChunkedPrefill instances, i.e. across admissions):
+    one XLA executable per (chunk width, prefix length, pads?) shape
+    triple — a warm engine re-admitting same-length prompts compiles
+    nothing."""
+    fn = getattr(model, "_chunked_prefill_jit", None)
+    if fn is None:
+        def step(params, tokens, k_pre, v_pre, p0, pads):
+            prefix = (k_pre, v_pre, p0) if k_pre is not None else None
+            return prefill_with_activations(model, params, tokens,
+                                            prefix=prefix, pads=pads)
+        fn = jax.jit(step, static_argnames=("p0",))
+        model._chunked_prefill_jit = fn
+    return fn
+
+
+class ChunkedPrefill:
+    """Resumable chunked prefill of one (possibly ragged, LEFT-padded)
+    prompt batch, with optional streamed host write-back.
+
+    Each ``step()`` prefills the next chunk — its queries attend over
+    the device-accumulated prefix KV plus their own causal block via
+    ``prefill_with_activations(prefix=..., pads=...)`` — and, when a
+    ``store`` is given, submits the finished chunk's host write-back on
+    the TransferEngine's store pool (device→host conversion happens on
+    that pool, off the critical path) behind a chunk fence.  The driver
+    itself never blocks on a store: only ``finish()`` drains the
+    fences, so the lone un-overlapped write-back is the final chunk's.
+
+    ``step(budget)`` runs the next GRID-width chunk only when the
+    budget covers it (and nothing otherwise) — budgets gate progress,
+    they never shrink chunk shapes, so a budget-driven caller compiles
+    the same O(n / chunk) trace set as an unbudgeted one.  That is what
+    lets a continuous-batching engine interleave prompt chunks with
+    decode steps under a per-step token budget.  Token-identity: the
+    chunk decomposition changes execution order only — the last
+    chunk's logits equal a monolithic prefill's last-position logits
+    exactly.
+    """
+
+    def __init__(self, model, params, tokens, chunk: int, *,
+                 prompt_lens=None, store: Optional[HostKVStore] = None,
+                 xfer: Optional[TransferEngine] = None,
+                 slot: Optional[int] = None, q_block: int = 512):
+        self.model, self.params = model, params
+        self.tokens = jnp.asarray(tokens)
+        self.b, self.n = self.tokens.shape
+        self.chunk = max(1, int(chunk))
+        self.q_block = q_block
+        if (store is None) != (xfer is None):
+            raise ValueError("store and xfer must be given together")
+        self.store, self.xfer, self.slot = store, xfer, slot
+        self.pads = None
+        if prompt_lens is not None:
+            lens = np.asarray(prompt_lens, np.int64)
+            if not (lens == self.n).all():
+                self.pads = (self.n - lens).astype(np.int32)
+        self.pos = 0
+        self.logits: Optional[Array] = None
+        self.k_pre: Optional[Array] = None     # device (L, b, pos, KV, dh)
+        self.v_pre: Optional[Array] = None
+        self.chunks_run = 0
+        self._fn = _chunk_prefill_fn(model)
+
+    @property
+    def done(self) -> bool:
+        return self.pos >= self.n
+
+    @property
+    def remaining(self) -> int:
+        return self.n - self.pos
+
+    @property
+    def next_width(self) -> int:
+        """The next grid chunk width (full chunk, or the final partial
+        one)."""
+        return chunk_width(self.chunk, self.remaining, self.q_block)
+
+    def step(self, budget: Optional[int] = None) -> int:
+        """Prefill the next grid-width chunk — only if ``budget``
+        covers it — submit its write-back, and return the tokens
+        consumed (0 when done or under-budget)."""
+        w = self.next_width
+        if self.done or (budget is not None and budget < w):
+            return 0
+        chunk_toks = self.tokens[:, self.pos:self.pos + w]
+        pads = None if self.pads is None else jnp.asarray(self.pads)
+        lg, ks, vs, hs = self._fn(self.params, chunk_toks, self.k_pre,
+                                  self.v_pre, self.pos, pads)
+        self.logits = lg
+        self.k_pre = (ks if self.k_pre is None
+                      else jnp.concatenate([self.k_pre, ks], axis=2))
+        self.v_pre = (vs if self.v_pre is None
+                      else jnp.concatenate([self.v_pre, vs], axis=2))
+        if self.store is not None:
+            self.store.push_chunk_fence(
+                self.xfer.submit_store(self._store_chunk, ks, vs, hs,
+                                       self.pos), slot=self.slot)
+        self.pos += w
+        self.chunks_run += 1
+        return w
+
+    def _store_chunk(self, ks, vs, hs, start: int) -> None:
+        """Write-back task (store pool): block on the device values
+        here — off the critical path — then copy into host memory."""
+        ks, vs, hs = np.asarray(ks), np.asarray(vs), np.asarray(hs)
+        if self.slot is not None:
+            self.store.fill_chunk_slot(self.slot, ks, vs, hs, start)
+        else:
+            self.store.fill_chunk(ks, vs, hs, start, pads=self.pads)
+
+    def finish(self) -> Array:
+        """Drive any remaining chunks, drain THIS prefill's chunk
+        fences, and return the last-position logits (b, 1, V)."""
+        while not self.done:
+            self.step()
+        if self.store is not None:
+            self.store.wait_chunks(self.slot)
+        return self.logits
 
 
 # ---------------------------------------------------------------- restore

@@ -47,7 +47,8 @@ import numpy as np
 
 from repro.core.cost_model import (HardwareProfile, Workload,
                                    int4_kv_bytes_per_el)
-from repro.core.solver import SplitDecision, optimal_split
+from repro.core.solver import (ChunkDecision, SplitDecision,
+                               optimal_chunk, optimal_split)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -208,6 +209,7 @@ class Scheduler:
         self.resolve_every = resolve_every
         self.pad_every = pad_every
         self._plans: "OrderedDict[PlanKey, ExecutionPlan]" = OrderedDict()
+        self._chunks: "OrderedDict[tuple, ChunkDecision]" = OrderedDict()
         self._lock = threading.Lock()
         self.hits = 0
         self.misses = 0
@@ -264,6 +266,39 @@ class Scheduler:
                              align=align, dtype_bytes=dtype_bytes)
         return plan.split_for(int(p))
 
+    def chunk_split(self, cfg, n: int, batch: int = 1, align: int = 16,
+                    dtype_bytes: int = 4,
+                    compress: Optional[str] = None,
+                    group: int = 32) -> ChunkDecision:
+        """The third plan kind (after ``plan_for``'s decode split and
+        ``restore_split``): the prefill chunk width for an ``n``-token
+        prompt whose finished chunks stream to the host while the next
+        chunk computes.  Same profiler-backed cost model — the solve
+        balances chunk-i compute (GEMM throughput) against chunk-(i-1)
+        write-back (link bandwidth) plus the per-chunk dispatch
+        overhead, and is memoized per (dims, n, batch) so repeated
+        admissions of same-length prompts share one solve."""
+        mlp_mults = 3 if getattr(cfg, "gated_mlp", True) else 2
+        key = (self.hw, int(n), int(batch), cfg.d_model,
+               cfg.num_kv_heads * cfg.dh, cfg.num_layers, cfg.d_ff,
+               align, dtype_bytes, compress, mlp_mults)
+        with self._lock:
+            hit = self._chunks.get(key)
+        if hit is not None:
+            return hit
+        wl = Workload(batch=batch, seq_len=int(n), d_model=cfg.d_model,
+                      kv_dim=cfg.num_kv_heads * cfg.dh,
+                      dtype_bytes=dtype_bytes,
+                      kv_bytes_per_el=self._kv_el_bytes(
+                          compress, dtype_bytes, group))
+        dec = optimal_chunk(int(n), wl, self.hw, cfg.num_layers,
+                            cfg.d_ff, align=align, mlp_mults=mlp_mults)
+        with self._lock:
+            self._chunks[key] = dec
+            while len(self._chunks) > self._MAX_PLANS:
+                self._chunks.popitem(last=False)
+        return dec
+
     def plan_for_workload(self, wl: Workload, mode: str = "kvpr",
                           schedule: str = "row", align: int = 1,
                           compress: Optional[str] = None) -> ExecutionPlan:
@@ -294,3 +329,4 @@ class Scheduler:
             if hw is not None:
                 self._hw = hw
             self._plans.clear()
+            self._chunks.clear()

@@ -19,7 +19,9 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional
 
-from repro.core.cost_model import HardwareProfile, Workload, layer_times
+from repro.core.cost_model import (HardwareProfile, Workload,
+                                   chunk_compute_flops,
+                                   chunk_writeback_bytes, layer_times)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -105,6 +107,97 @@ def optimal_split(wl: Workload, hw: HardwareProfile,
     return SplitDecision(l=li, t_total=t["total"], t_recomp=t["t_recomp"],
                          t_kv=t["t_kv"], t_act=t["t_act"],
                          schedule=schedule, bound=bound)
+
+
+# -------------------------------------------------------- chunked prefill
+# The third plan kind (after the decode split and the admission-time
+# restore split): pick the prefill chunk width c so chunk i's device
+# compute overlaps chunk i-1's host write-back.  Both steady-state terms
+# are ~linear in c, so the pipeline's per-token rate is fixed at
+# max(compute, write-back); what the choice of c actually trades is the
+# fixed dispatch overhead paid once per chunk (favoring LARGE chunks)
+# against the un-overlapped pipeline fill (first chunk's compute) and
+# drain (last chunk's write-back) plus the quadratic attention term
+# (favoring SMALL chunks).
+
+
+@dataclasses.dataclass(frozen=True)
+class ChunkDecision:
+    """Chunk width for a pipelined (streamed write-back) prefill."""
+    chunk: int                  # chosen chunk width (tokens)
+    n_chunks: int
+    t_total: float              # predicted pipelined prefill time (s)
+    t_monolithic: float         # c = n endpoint: compute then write back
+    t_compute: float            # total device compute across chunks
+    t_writeback: float          # total host write-back across chunks
+    bound: int                  # prompt length n
+
+
+def chunk_pipeline_time(n: int, c: int, wl: Workload, hw: HardwareProfile,
+                        n_layers: int, d_ff: int,
+                        overhead: Optional[float] = None,
+                        mlp_mults: int = 3) -> dict:
+    """Predicted wall time of prefilling ``n`` tokens in ``c``-token
+    chunks with each finished chunk's write-back overlapping the next
+    chunk's compute:
+
+        T = t_comp(1) + sum_{i>=2} max(t_comp(i), t_wb(i-1)) + t_wb(m)
+
+    plus one dispatch overhead per chunk (charged inside t_comp)."""
+    o = hw.dispatch_overhead if overhead is None else overhead
+    c = max(1, min(int(c), int(n)))
+    widths = [c] * (n // c) + ([n % c] if n % c else [])
+    t_comps, t_wbs, prefix = [], [], 0
+    for w in widths:
+        t_comps.append(chunk_compute_flops(wl, n_layers, d_ff, prefix, w,
+                                           mlp_mults) / hw.v_gpu + o)
+        t_wbs.append(chunk_writeback_bytes(wl, n_layers, w) / hw.v_com)
+        prefix += w
+    total = t_comps[0]
+    for i in range(1, len(widths)):
+        total += max(t_comps[i], t_wbs[i - 1])
+    total += t_wbs[-1]
+    return {"total": total, "t_compute": sum(t_comps),
+            "t_writeback": sum(t_wbs), "n_chunks": len(widths)}
+
+
+def optimal_chunk(n: int, wl: Workload, hw: HardwareProfile,
+                  n_layers: int, d_ff: int, align: int = 16,
+                  min_chunk: int = 16,
+                  overhead: Optional[float] = None,
+                  mlp_mults: int = 3) -> ChunkDecision:
+    """Pick the chunk width minimizing ``chunk_pipeline_time`` over
+    power-of-two candidates in [min_chunk, n] (plus n itself — the
+    monolithic endpoint, so chunking is never predicted to lose).
+    Candidates are rounded down to ``align`` (the same MXU-alignment
+    knob the decode split honors)."""
+    n = int(n)
+    if n <= 0:
+        return ChunkDecision(chunk=0, n_chunks=0, t_total=0.0,
+                             t_monolithic=0.0, t_compute=0.0,
+                             t_writeback=0.0, bound=0)
+    min_chunk = max(1, min(min_chunk, n))
+    cands = {n, min_chunk}
+    c = min_chunk
+    while c < n:
+        cands.add(c)
+        c *= 2
+    if align > 1:
+        cands = {max(min((cc // align) * align, n), min(align, n))
+                 for cc in cands} | {n}
+    best = None
+    for cc in sorted(cands):
+        t = chunk_pipeline_time(n, cc, wl, hw, n_layers, d_ff, overhead,
+                                mlp_mults)
+        if best is None or t["total"] < best[1]["total"]:
+            best = (cc, t)
+    mono = chunk_pipeline_time(n, n, wl, hw, n_layers, d_ff, overhead,
+                               mlp_mults)
+    cc, t = best
+    return ChunkDecision(chunk=cc, n_chunks=t["n_chunks"],
+                         t_total=t["total"], t_monolithic=mono["total"],
+                         t_compute=t["t_compute"],
+                         t_writeback=t["t_writeback"], bound=n)
 
 
 def brute_force_split(wl: Workload, hw: HardwareProfile,

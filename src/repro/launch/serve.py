@@ -88,6 +88,27 @@ def run_smoke() -> None:
         and finals[2] == "length", finals
     print(f"  mixed batch (greedy+temperature+eos): "
           f"{len(events)} events, finish={finals} ok")
+    # chunked prefill is an execution strategy, not a semantics change:
+    # every backend x batching combo must emit tokens identical to its
+    # inline-prefill run — chunks streamed to the host store behind
+    # write-back fences on offload, token-budgeted mixed
+    # prefill/decode steps under continuous batching
+    for backend in ("resident", "offload"):
+        for batching in ("static", "continuous"):
+            kw = dict(prefill_chunk=5)
+            if batching == "continuous":
+                kw["max_step_tokens"] = 6
+            with LLMEngine.from_config(
+                    model, params,
+                    EngineConfig(backend=backend, batching=batching,
+                                 slots=2, max_len=32, **kw),
+                    scheduler=sched) as eng:
+                got = eng.generate(reqs)
+            for a, b in zip(outs[(backend, batching)], got):
+                assert np.array_equal(a.tokens, b.tokens), \
+                    f"chunked-prefill mismatch under {(backend, batching)}"
+    print("  chunked prefill: token-identical to inline on all "
+          "4 combos ok")
     # shared-prefix cache: the second request extends the first's
     # prompt; its prefill must be restored, not recomputed, and its
     # tokens must match the cold run
@@ -145,6 +166,14 @@ def main(argv=None):
                     help="print per-token events as they are produced")
     ap.add_argument("--no-kvpr", action="store_true",
                     help="offload: stream full KV (FlexGen baseline)")
+    ap.add_argument("--prefill-chunk", default=None,
+                    help="chunked prefill: a chunk width in tokens, or "
+                         "'auto' for the scheduler's chunk_split "
+                         "decision (default: inline prefill)")
+    ap.add_argument("--max-step-tokens", type=int, default=None,
+                    help="continuous batching: per-step token budget "
+                         "shared by decodes and admission prefill "
+                         "chunks (requires --prefill-chunk)")
     ap.add_argument("--prefix-cache", action="store_true",
                     help="enable the shared-prefix KV cache (cross-"
                          "request prompt reuse with KVPR-split restore)")
@@ -177,9 +206,13 @@ def main(argv=None):
     sampling = SamplingParams(max_tokens=args.gen, temperature=temp,
                               top_k=args.top_k, eos_id=args.eos_id)
 
+    chunk = args.prefill_chunk
+    if chunk is not None and chunk != "auto":
+        chunk = int(chunk)
     base = dict(slots=args.slots, max_len=args.prompt + args.gen + 8,
                 kvpr=not args.no_kvpr, compress=args.compress,
-                seed=args.seed,
+                seed=args.seed, prefill_chunk=chunk,
+                max_step_tokens=args.max_step_tokens,
                 prefix_cache=(PrefixCacheConfig(
                     capacity_tokens=args.prefix_capacity)
                     if args.prefix_cache else None))

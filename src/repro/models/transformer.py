@@ -526,6 +526,73 @@ class Model:
         logits = L.unembed(x[:, -1:], params["embed"], cfg)
         return logits, cache
 
+    # ------------------------------------------------------ chunked prefill
+
+    def prefill_chunk(self, params, cache: PyTree, tokens: Array,
+                      p0: int) -> Tuple[Array, PyTree]:
+        """Resumable prefill: process prompt columns [p0, p0 + c) of a
+        (possibly LEFT-padded ragged) batch against an existing cache.
+
+        ``tokens`` (b, c) are the next c columns of the padded prompt;
+        ``p0`` must equal the number of columns already prefilled (a
+        static int — each (p0, c) pair is one XLA trace, so drivers
+        should keep chunk widths bucketed).  Each chunk's queries attend
+        over the cache's [0, p0) keys plus their own causal block, with
+        the per-row pad recorded in ``cache["pad"]`` masked to exactly
+        zero weight and RoPE/learned positions shifted per row — so a
+        chunked prefill is token-identical to ``prefill`` on the same
+        batch.  Start from ``init_cache`` (set ``cache["pad"]`` for
+        ragged batches); dense-family archs only (the same envelope as
+        ragged ``prompt_lens``).
+        """
+        cfg = self.cfg
+        at = cfg.arch_type
+        if at not in ("dense", "vlm", "moe") or self.is_local_global:
+            raise NotImplementedError(
+                "chunked prefill is only supported for dense-family "
+                f"archs without local/global layers (arch_type={at!r})")
+        b, c = tokens.shape
+        pad = cache.get("pad")
+        cols = jnp.arange(c) + p0
+        if pad is not None:
+            positions = jnp.maximum(cols[None, :] - pad[:, None], 0)
+        else:
+            positions = jnp.broadcast_to(cols, (b, c))
+        x = L.embed(tokens, params["embed"], cfg, positions)
+        kv_start = pad
+
+        def body(x, inp):
+            lp, kc, vc = inp
+            h = L.apply_norm(x, lp["ln1"], cfg.rms_eps)
+            q, k, v = L.qkv_proj(h, lp["attn"], cfg, positions)
+            # context = already-cached prefix + this chunk's own keys
+            # (exact values, not the possibly-downcast cache copies)
+            k_ctx = jnp.concatenate([kc[:, :p0].astype(k.dtype), k],
+                                    axis=1)
+            v_ctx = jnp.concatenate([vc[:, :p0].astype(v.dtype), v],
+                                    axis=1)
+            out = L.chunked_causal_attend(q, k_ctx, v_ctx,
+                                          q_block=self.q_block,
+                                          q_offset=p0,
+                                          unroll=not self.scan_layers,
+                                          kv_start=kv_start)
+            out = out.reshape(b, c, cfg.num_heads * cfg.dh)
+            x = x + jnp.einsum("bsD,Dh->bsh", out, lp["attn"]["wo"])
+            x, _ = self._mlp_sublayer(x, lp)
+            kc = jax.lax.dynamic_update_slice(
+                kc, k.astype(kc.dtype), (0, p0, 0, 0))
+            vc = jax.lax.dynamic_update_slice(
+                vc, v.astype(vc.dtype), (0, p0, 0, 0))
+            return x, (kc, vc)
+
+        x, (kn, vn) = self._scan(
+            body, x, (params["layers"], cache["k"], cache["v"]))
+        cache["k"], cache["v"] = kn, vn
+        cache["pos"] = jnp.asarray(p0 + c, jnp.int32)
+        x = L.apply_norm(x, params["final_norm"], cfg.rms_eps)
+        logits = L.unembed(x[:, -1:], params["embed"], cfg)
+        return logits, cache
+
     # -------------------------------------------------------------- decode
 
     def decode_step(self, params, cache: PyTree, token: Array,

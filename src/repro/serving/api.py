@@ -56,8 +56,9 @@ import numpy as np
 from repro.core.cost_model import HardwareProfile, TPU_V5E
 from repro.core.prefix_cache import (PrefixCache, PrefixCacheConfig,
                                      PrefixCacheStats)
-from repro.core.runtime import (HostKVStore, OffloadDecodeRuntime,
-                                RestoreStats, StepStats, TransferEngine,
+from repro.core.runtime import (ChunkedPrefill, HostKVStore,
+                                OffloadDecodeRuntime, RestoreStats,
+                                StepStats, TransferEngine, chunk_width,
                                 prefill_with_activations,
                                 restore_prefix_kv)
 from repro.core.scheduler import Scheduler
@@ -138,6 +139,21 @@ class EngineConfig:
     # via the scheduler's KVPR split instead of prefilling it.  None
     # disables.  Dense-family archs only.
     prefix_cache: Optional[PrefixCacheConfig] = None
+    # chunked prefill: process prompts in chunks instead of one
+    # monolithic pass.  On the offload backend each finished chunk's KV
+    # streams to the host while the next chunk computes; under
+    # continuous batching prompt chunks interleave with decode steps
+    # (see max_step_tokens).  A positive int fixes the chunk width;
+    # "auto" asks the scheduler's chunk_split cost model; None keeps
+    # inline (monolithic) prefill.  Execution strategy only — tokens
+    # are identical either way.  Dense-family archs only.
+    prefill_chunk: Optional[Union[int, str]] = None
+    # continuous batching: per-step token budget shared by decode (one
+    # token per active slot, always served first) and admission prefill
+    # chunks (the remainder) — a long prompt admits over several steps
+    # instead of stalling every in-flight decode.  Requires
+    # prefill_chunk.
+    max_step_tokens: Optional[int] = None
 
     def validate(self) -> "EngineConfig":
         if self.backend not in ("resident", "offload"):
@@ -155,6 +171,30 @@ class EngineConfig:
             raise ValueError(f"slots must be >= 1, got {self.slots}")
         if self.prefix_cache is not None:
             self.prefix_cache.validate()
+        pc = self.prefill_chunk
+        if pc is not None:
+            if pc != "auto" and not (isinstance(pc, int)
+                                     and not isinstance(pc, bool)
+                                     and pc >= 1):
+                raise ValueError(
+                    f"prefill_chunk must be a positive int or 'auto', "
+                    f"got {pc!r}")
+            if self.prefix_cache is not None:
+                raise ValueError(
+                    "prefill_chunk is not supported together with "
+                    "prefix_cache (prefix-cache hits admit inline)")
+        if self.max_step_tokens is not None:
+            if self.max_step_tokens < 1:
+                raise ValueError(f"max_step_tokens must be >= 1, got "
+                                 f"{self.max_step_tokens}")
+            if self.batching != "continuous":
+                raise ValueError(
+                    "max_step_tokens requires batching='continuous' "
+                    "(static batches have no step loop to budget)")
+            if pc is None:
+                raise ValueError(
+                    "max_step_tokens requires prefill_chunk (an inline "
+                    "prefill cannot be split across steps)")
         return self
 
     @property
@@ -247,6 +287,47 @@ class _Live:
                                          # cache when the request ends
 
 
+@dataclasses.dataclass
+class _ResidentChunk:
+    """Resumable chunked prefill of one b=1 resident cache (continuous
+    admission): the mirror of the offload path's ``ChunkedPrefill``,
+    building the device cache chunk by chunk via ``Model.prefill_chunk``
+    instead of streaming host blocks."""
+    cache: dict
+    prompt: np.ndarray
+    chunk: int
+    q_block: int = 512
+    pos: int = 0
+    logits: Optional[Array] = None
+
+    @property
+    def done(self) -> bool:
+        return self.pos >= len(self.prompt)
+
+    @property
+    def remaining(self) -> int:
+        return len(self.prompt) - self.pos
+
+    @property
+    def next_width(self) -> int:
+        return chunk_width(self.chunk, self.remaining, self.q_block)
+
+
+@dataclasses.dataclass
+class _Pending:
+    """One admission in flight under chunked (mixed-step) prefill.
+    ``credit`` banks unspent step-budget tokens: chunks only run at
+    their full (grid) width once enough credit accrued, so the XLA
+    trace set stays O(n / chunk) instead of one trace per
+    budget-truncated sliver, while the budget stays an amortized
+    per-step cap."""
+    req: Request
+    sp: SamplingParams
+    state: object                  # ChunkedPrefill | _ResidentChunk
+    t_start: float
+    credit: int = 0
+
+
 class _SlotSampling:
     """Vectorized per-slot sampling state: request base keys and
     sampling params as (b,) arrays, one row per batch slot, consumed by
@@ -327,6 +408,10 @@ class LLMEngine:
         self.key = jax.random.PRNGKey(self.config.seed)
         self._prefill = jax.jit(model.prefill,
                                 static_argnames=("max_len",))
+        # resumable chunked prefill: one XLA trace per (p0, chunk) pair
+        # (drivers keep chunk widths fixed, so traces stay O(n / chunk))
+        self._prefill_chunk = jax.jit(model.prefill_chunk,
+                                      static_argnames=("p0",))
         self.runtime: Optional[OffloadDecodeRuntime] = None
         if self.config.backend == "offload":
             self.runtime = OffloadDecodeRuntime(
@@ -497,6 +582,43 @@ class LLMEngine:
                 self._finish(lv, fin, now, done)
         return events
 
+    # ----------------------------------------------- chunked prefill
+
+    @property
+    def _chunked(self) -> bool:
+        return self.config.prefill_chunk is not None
+
+    def _chunk_for(self, n: int, batch: int = 1) -> int:
+        """Resolve the configured chunk width for an n-token prompt —
+        a fixed int, or the scheduler's chunk_split decision (the
+        profiler-backed compute-vs-write-back balance, solved for the
+        batch that will actually prefill) on "auto"."""
+        pc = self.config.prefill_chunk
+        if pc == "auto":
+            return max(1, self.scheduler.chunk_split(
+                self.cfg, n, batch=batch,
+                compress=self.config.compress).chunk)
+        return int(pc)
+
+    def _chunked_resident_prefill(self, prompts: np.ndarray, lens,
+                                  ragged: bool, max_len: int):
+        """Static-resident chunked prefill: drive Model.prefill_chunk
+        over the padded batch, returning (last logits, decode cache) —
+        bit-identical to the monolithic ``self._prefill`` call."""
+        b, s = prompts.shape
+        cache = self.model.init_cache(b, max_len, jnp.float32)
+        if ragged:
+            cache["pad"] = jnp.asarray(s - lens, jnp.int32)
+        chunk = self._chunk_for(s, batch=b)
+        logits, pos = None, 0
+        while pos < s:
+            w = chunk_width(chunk, s - pos, q_block=self.model.q_block)
+            logits, cache = self._prefill_chunk(
+                self.params, cache, jnp.asarray(prompts[:, pos:pos + w]),
+                p0=pos)
+            pos += w
+        return logits, cache
+
     # --------------------------------------- prefix-cache admission
 
     def _prefill_request(self, prompt: np.ndarray):
@@ -561,6 +683,12 @@ class LLMEngine:
                                  "with prefix_cache")
             logits, cache, blocks, restores = \
                 self._prefix_resident_batch(reqs, s, lens, max_len)
+        elif self._chunked:
+            if extra:
+                raise ValueError("extra (VLM patches) is not supported "
+                                 "with prefill_chunk")
+            logits, cache = self._chunked_resident_prefill(
+                prompts, lens, ragged, max_len)
         else:
             pl = jnp.asarray(lens, jnp.int32) if ragged else None
             logits, cache = self._prefill(self.params,
@@ -660,6 +788,17 @@ class LLMEngine:
                               else None)
                 restores.append(restore)
             logits = jnp.concatenate(rows, axis=0)
+        elif self._chunked:
+            # streamed prefill: each finished chunk's KV/activation
+            # write-back overlaps the next chunk's compute (the
+            # TransferEngine store pool + HostKVStore chunk fences)
+            cp = ChunkedPrefill(self.model, self.params,
+                                jnp.asarray(prompts),
+                                self._chunk_for(s, batch=b),
+                                prompt_lens=lens,
+                                store=store, xfer=self.runtime.xfer)
+            logits = cp.finish()
+            store.seq_lens[:] = lens
         else:
             pl = jnp.asarray(lens, jnp.int32) if ragged else None
             logits, ks, vs, hs = prefill_with_activations(
@@ -702,14 +841,25 @@ class LLMEngine:
     def _stream_continuous(self, pairs, done) -> Iterator[TokenEvent]:
         """Iteration-level batching over either backend: one slot per
         request in flight, admission between steps — including into
-        slots freed mid-decode by early-EOS finishes."""
+        slots freed mid-decode by early-EOS finishes.
+
+        With ``prefill_chunk`` set, admission is CHUNKED: a queued
+        prompt becomes a pending prefill that advances chunk by chunk
+        between decode steps instead of prefilling inline, and
+        ``max_step_tokens`` budgets each step — active decodes (one
+        token per slot) are served first, pending prefills consume the
+        remainder — so a long prompt admits over several steps without
+        ever stalling in-flight decodes for its whole prefill."""
         B = self.config.slots
         max_len = self.config.max_len
         queue: Deque[Tuple[Request, SamplingParams]] = deque(pairs)
         slots: List[Optional[_Live]] = [None] * B
+        pending: Dict[int, _Pending] = {}
         ss = _SlotSampling(self.key, B)
         tokens = np.zeros((B, 1), np.int32)
         offload = self.config.backend == "offload"
+        chunked = self._chunked
+        budget_cap = self.config.max_step_tokens
         if offload:
             store = HostKVStore(self.cfg, B, max_len,
                                 compress=self.config.compress)
@@ -729,29 +879,11 @@ class LLMEngine:
             self._finish(lv, reason, now, done)
             release(i)
 
-        def admit(i: int) -> TokenEvent:
+        def activate(i, r, sp, logits, t0, cache=None, restore=None,
+                     blocks=None) -> TokenEvent:
+            """Admit a finished prefill into slot i: sample its first
+            token and make the slot live (decode joins next step)."""
             nonlocal stacked
-            r, sp = queue.popleft()
-            t0 = time.perf_counter()
-            blocks = restore = None
-            if self.prefix_cache is not None:
-                logits, ks, vs, hs, restore = \
-                    self._prefill_request(r.prompt)
-                blocks = (ks, vs, hs) if self._keep_blocks else None
-                if offload:
-                    store.fill_slot(i, ks, vs, hs, len(r.prompt))
-                else:
-                    cache = self._resident_cache_from_blocks(
-                        ks, vs, len(r.prompt), max_len)
-            elif offload:
-                logits, ks, vs, hs = prefill_with_activations(
-                    self.model, self.params, jnp.asarray(r.prompt)[None])
-                store.fill_slot(i, np.asarray(ks), np.asarray(vs),
-                                np.asarray(hs), len(r.prompt))
-            else:
-                logits, cache = self._prefill(
-                    self.params, jnp.asarray(r.prompt)[None],
-                    max_len=max_len)
             ss.set_slot(i, r.uid, sp)
             first = ss.sample_one(logits[:, -1], i, 0)
             t1 = time.perf_counter()
@@ -770,11 +902,129 @@ class LLMEngine:
                 finish(i, lv, fin, t1)
             return TokenEvent(r.uid, first, 0, t, fin, None)
 
+        def admit(i: int) -> TokenEvent:
+            """Inline (whole-prompt) admission into slot i."""
+            r, sp = queue.popleft()
+            t0 = time.perf_counter()
+            blocks = restore = cache = None
+            if self.prefix_cache is not None:
+                logits, ks, vs, hs, restore = \
+                    self._prefill_request(r.prompt)
+                blocks = (ks, vs, hs) if self._keep_blocks else None
+                if offload:
+                    store.fill_slot(i, ks, vs, hs, len(r.prompt))
+                else:
+                    cache = self._resident_cache_from_blocks(
+                        ks, vs, len(r.prompt), max_len)
+            elif offload:
+                logits, ks, vs, hs = prefill_with_activations(
+                    self.model, self.params, jnp.asarray(r.prompt)[None])
+                store.fill_slot(i, np.asarray(ks), np.asarray(vs),
+                                np.asarray(hs), len(r.prompt))
+            else:
+                logits, cache = self._prefill(
+                    self.params, jnp.asarray(r.prompt)[None],
+                    max_len=max_len)
+            return activate(i, r, sp, logits, t0, cache=cache,
+                            restore=restore, blocks=blocks)
+
+        def start_pending(i: int) -> None:
+            """Chunked admission: claim slot i for a pending prefill
+            that advances under the per-step token budget."""
+            r, sp = queue.popleft()
+            t0 = time.perf_counter()
+            chunk = self._chunk_for(len(r.prompt))
+            if offload:
+                state = ChunkedPrefill(
+                    self.model, self.params, np.asarray(r.prompt)[None],
+                    chunk, store=store, xfer=self.runtime.xfer, slot=i)
+            else:
+                cache = self.model.init_cache(1, max_len, jnp.float32)
+                state = _ResidentChunk(cache, np.asarray(r.prompt),
+                                       chunk,
+                                       q_block=self.model.q_block)
+            pending[i] = _Pending(r, sp, state, t0)
+
+        def pending_step(pd: _Pending) -> int:
+            """Run the pending prefill's next FULL chunk (grid width:
+            the configured chunk or the final partial one — never a
+            budget-truncated sliver, so the XLA trace set stays
+            O(n / chunk) per prompt length)."""
+            st = pd.state
+            if isinstance(st, ChunkedPrefill):
+                return st.step()
+            w = st.next_width
+            st.logits, st.cache = self._prefill_chunk(
+                self.params, st.cache,
+                jnp.asarray(st.prompt[st.pos:st.pos + w])[None],
+                p0=st.pos)
+            st.pos += w
+            return w
+
+        def advance_pending(i: int, grant: Optional[int]
+                            ) -> Tuple[int, Optional[TokenEvent]]:
+            """Bank ``grant`` budget tokens with slot i's pending
+            prefill, run whole chunks while the credit covers them,
+            and on completion activate the slot (returning its
+            first-token event)."""
+            pd = pending[i]
+            used = 0
+            if grant is None:
+                # no explicit budget: still interleave — ONE chunk per
+                # engine step (an idle engine loops straight back here,
+                # so a lone prompt completes without artificial delay;
+                # with decodes in flight the stall is one chunk)
+                used += pending_step(pd)
+            else:
+                pd.credit = min(pd.credit + grant, pd.state.remaining)
+                while (not pd.state.done
+                       and pd.credit >= pd.state.next_width):
+                    n = pending_step(pd)
+                    pd.credit -= n
+                    used += n
+            if not pd.state.done:
+                return used, None
+            del pending[i]
+            st = pd.state
+            if offload:
+                # the only un-overlapped write-back: the last chunk's
+                # (waits THIS slot's fences only — a concurrent
+                # admission's in-flight chunks are not ours to drain)
+                store.wait_chunks(i)
+                store.seq_lens[i] = len(pd.req.prompt)
+                return used, activate(i, pd.req, pd.sp, st.logits,
+                                      pd.t_start)
+            return used, activate(i, pd.req, pd.sp, st.logits,
+                                  pd.t_start, cache=st.cache)
+
         try:
-            while queue or any(s is not None for s in slots):
+            while queue or pending or any(s is not None for s in slots):
                 for i in range(B):
-                    if slots[i] is None and queue:
-                        yield admit(i)
+                    if slots[i] is None and i not in pending and queue:
+                        if chunked:
+                            start_pending(i)
+                        else:
+                            yield admit(i)
+                if pending:
+                    # decode has priority: each active slot advances one
+                    # token per step, pending prefills get the remaining
+                    # budget (a step with no actives always moves >= 1
+                    # token, so admission cannot starve).  The whole
+                    # remainder is banked with the OLDEST pending
+                    # (dict order = admission order), so prompts admit
+                    # FIFO and credits are never double-granted.
+                    n_active = sum(s is not None for s in slots)
+                    if budget_cap is None:
+                        budget = None
+                    else:
+                        budget = max(budget_cap - n_active,
+                                     1 if n_active == 0 else 0)
+                    for i in list(pending):
+                        used, ev = advance_pending(i, budget)
+                        if budget is not None:
+                            budget = 0
+                        if ev is not None:
+                            yield ev
                 if not any(s is not None for s in slots):
                     continue
                 steps = np.array([len(s.tokens) if s is not None else 0

@@ -74,28 +74,9 @@ def _reqs(cfg, lens, budgets, seed=0):
         for i, (n, g) in enumerate(zip(lens, budgets))]
 
 
-# ------------------------------------------------- greedy identity (AC)
-
-@pytest.mark.slow
-@pytest.mark.parametrize("backend,batching", COMBOS)
-def test_generate_matches_greedy_reference(setup, sched, backend,
-                                           batching):
-    """Default SamplingParams (greedy, no EOS): generate() is
-    token-identical to the per-request reference on every
-    backend x batching combination — with RAGGED prompt lengths, so
-    static batching exercises the left-pad mask / per-row RoPE shift /
-    true per-slot seq_lens path."""
-    cfg, model, params = setup
-    lens = [8, 11, 14]
-    reqs = _reqs(cfg, lens, [5, 4, 6])
-    eng = _engine(setup, sched, backend, batching)
-    outs = eng.generate(reqs)
-    for r, o in zip(reqs, outs):
-        ref = _ref_greedy(model, params, r.prompt, r.max_new_tokens)
-        assert list(o.tokens) == ref, (backend, batching, r.uid)
-        assert o.finish_reason == "length"
-        assert o.prefill_time >= 0 and o.decode_time > 0
-
+# Greedy identity against the per-request reference (all 4 combos x
+# ragged prompts x chunked/inline prefill x ...) lives in the
+# consolidated golden matrix: tests/test_identity_matrix.py.
 
 # -------------------------------------- sampling-stream invariant (sat 2)
 
@@ -317,6 +298,22 @@ def test_engine_config_validation_and_mode_map():
         EngineConfig(batching="dynamic").validate()
     with pytest.raises(ValueError, match="max_tokens"):
         SamplingParams(max_tokens=0).validate()
+    # chunked-prefill knobs
+    with pytest.raises(ValueError, match="prefill_chunk"):
+        EngineConfig(prefill_chunk=0).validate()
+    with pytest.raises(ValueError, match="prefill_chunk"):
+        EngineConfig(prefill_chunk="sometimes").validate()
+    with pytest.raises(ValueError, match="batching='continuous'"):
+        EngineConfig(prefill_chunk=8, max_step_tokens=16).validate()
+    with pytest.raises(ValueError, match="requires prefill_chunk"):
+        EngineConfig(batching="continuous",
+                     max_step_tokens=16).validate()
+    from repro.serving import PrefixCacheConfig
+    with pytest.raises(ValueError, match="prefix_cache"):
+        EngineConfig(prefill_chunk=8,
+                     prefix_cache=PrefixCacheConfig()).validate()
+    EngineConfig(batching="continuous", prefill_chunk="auto",
+                 max_step_tokens=16).validate()
 
 
 # ------------------------------------------------ runtime step callback

@@ -1,0 +1,174 @@
+"""Cross-combo golden identity matrix.
+
+ONE parametrized suite asserting token-identity against the per-request
+reference across all 4 backend x batching combos x scenario:
+
+  ragged      left-padded static batches / per-slot ragged continuous
+  chunked     chunked prefill (+ token-budgeted mixed steps under
+              continuous batching) vs the inline-prefill reference
+  early_eos   a request stopping mid-decode (exact token count, no
+              cross-request interference)
+  mixed       greedy + seeded-temperature requests in one batch
+  prefix      shared-prefix KV cache warm hits (restore + suffix
+              prefill) vs the cold reference
+
+The per-request reference for EVERY scenario is a fresh batch-1
+resident/static engine run with the same engine seed and request uid —
+the sampling-stream invariant (token t of uid is fold_in(request_key,
+t)) makes that the ground truth for greedy AND stochastic requests.
+
+This suite consolidates the ad-hoc identity checks that used to live in
+test_api.py (test_generate_matches_greedy_reference) and overlapping
+end-to-end assertions in test_ragged.py; those modules keep their
+unit-level coverage.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.cost_model import A100_PCIE4
+from repro.core.scheduler import Scheduler
+from repro.models.transformer import Model
+from repro.serving import (EngineConfig, LLMEngine, PrefixCacheConfig,
+                           Request, SamplingParams)
+
+COMBOS = [("resident", "static"), ("offload", "static"),
+          ("resident", "continuous"), ("offload", "continuous")]
+SCENARIOS = ["ragged", "chunked",
+             pytest.param("chunked_auto", marks=pytest.mark.slow),
+             pytest.param("early_eos", marks=pytest.mark.slow),
+             pytest.param("mixed", marks=pytest.mark.slow),
+             pytest.param("prefix", marks=pytest.mark.slow)]
+
+LENS = [8, 11, 14]
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_smoke_config("tinyllama-1.1b")
+    model = Model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+@pytest.fixture(scope="module")
+def sched():
+    return Scheduler(A100_PCIE4)
+
+
+def _reqs(cfg, seed=0):
+    rng = np.random.default_rng(seed)
+    return [Request(uid=i, prompt=rng.integers(
+        1, cfg.vocab_size, n).astype(np.int32)) for i, n in
+        enumerate(LENS)]
+
+
+_REFS = {}
+
+
+def _reference(setup, sched, reqs, sps):
+    """Per-request ground truth: batch-1 resident/static runs (same
+    engine seed, same uid => same sampling stream), memoized."""
+    cfg, model, params = setup
+    outs = []
+    for r, sp in zip(reqs, sps):
+        key = (r.uid, r.prompt.tobytes(), sp)
+        if key not in _REFS:
+            with LLMEngine.from_config(model, params, EngineConfig(),
+                                       scheduler=sched) as eng:
+                o = eng.generate([r], sp)[0]
+            _REFS[key] = (list(o.tokens), o.finish_reason)
+        outs.append(_REFS[key])
+    return outs
+
+
+def _eos_for(setup, sched, req, budget):
+    """An id the greedy stream emits mid-request (forces early EOS)."""
+    toks, _ = _reference(setup, sched, [req],
+                         [SamplingParams(max_tokens=budget)])[0]
+    return int(toks[2])
+
+
+def _scenario(name, setup, sched):
+    """Returns (requests, sampling params, extra EngineConfig kwargs
+    keyed by batching, n_serve_rounds)."""
+    cfg, _, _ = setup
+    reqs = _reqs(cfg)
+    kw = {"static": {}, "continuous": {}}
+    rounds = 1
+    if name == "ragged":
+        sps = [SamplingParams(max_tokens=g) for g in (5, 4, 6)]
+    elif name == "chunked":
+        sps = [SamplingParams(max_tokens=g) for g in (5, 4, 6)]
+        kw = {"static": dict(prefill_chunk=5),
+              "continuous": dict(prefill_chunk=5, max_step_tokens=6)}
+    elif name == "chunked_auto":
+        sps = [SamplingParams(max_tokens=g) for g in (5, 4, 6)]
+        kw = {"static": dict(prefill_chunk="auto"),
+              "continuous": dict(prefill_chunk="auto",
+                                 max_step_tokens=8)}
+    elif name == "early_eos":
+        eos = _eos_for(setup, sched, reqs[0], 6)
+        sps = [SamplingParams(max_tokens=6, eos_id=eos),
+               SamplingParams(max_tokens=4),
+               SamplingParams(max_tokens=5)]
+    elif name == "mixed":
+        sps = [SamplingParams(max_tokens=5, temperature=0.8, seed=11),
+               SamplingParams(max_tokens=5),
+               SamplingParams(max_tokens=4, temperature=0.6, seed=3)]
+    elif name == "prefix":
+        sps = [SamplingParams(max_tokens=g) for g in (5, 4, 6)]
+        pc = dict(prefix_cache=PrefixCacheConfig())
+        kw = {"static": pc, "continuous": dict(pc)}
+        rounds = 2        # round 2 must hit the prefixes round 1 stored
+    else:
+        raise AssertionError(name)
+    return reqs, sps, kw, rounds
+
+
+@pytest.mark.parametrize("backend,batching", COMBOS)
+@pytest.mark.parametrize("scenario", SCENARIOS)
+def test_identity_matrix(setup, sched, backend, batching, scenario):
+    cfg, model, params = setup
+    reqs, sps, kw, rounds = _scenario(scenario, setup, sched)
+    refs = _reference(setup, sched, reqs, sps)
+    with LLMEngine.from_config(
+            model, params,
+            EngineConfig(backend=backend, batching=batching, slots=2,
+                         max_len=64, **kw[batching]),
+            scheduler=sched) as eng:
+        for rnd in range(rounds):
+            outs = eng.generate(reqs, sps)
+            for r, o, (ref_toks, ref_fin) in zip(reqs, outs, refs):
+                assert list(o.tokens) == ref_toks, \
+                    (scenario, backend, batching, rnd, r.uid)
+                assert o.finish_reason == ref_fin, \
+                    (scenario, backend, batching, rnd, r.uid)
+        if scenario == "prefix":
+            # the warm round genuinely restored instead of prefilled
+            assert sum(o.cached_prefix for o in outs) > 0
+            assert eng.prefix_stats.hits > 0
+
+
+@pytest.mark.parametrize("backend,batching", COMBOS)
+def test_stream_matches_generate_chunked(setup, sched, backend,
+                                         batching):
+    """generate_stream under chunked admission yields exactly the
+    generate() tokens, with exactly one finish event per request."""
+    cfg, model, params = setup
+    reqs = _reqs(cfg, seed=5)
+    sps = [SamplingParams(max_tokens=g) for g in (5, 4, 6)]
+    kw = (dict(prefill_chunk=4, max_step_tokens=5)
+          if batching == "continuous" else dict(prefill_chunk=4))
+    with LLMEngine.from_config(
+            model, params,
+            EngineConfig(backend=backend, batching=batching, slots=2,
+                         max_len=64, **kw), scheduler=sched) as eng:
+        events = list(eng.generate_stream(reqs, sps))
+        outs = eng.generate(reqs, sps)
+    for r, o in zip(reqs, outs):
+        evs = [e for e in events if e.uid == r.uid]
+        assert [e.token for e in evs] == list(o.tokens)
+        fins = [e.finish_reason for e in evs if e.finish_reason]
+        assert fins == [o.finish_reason]

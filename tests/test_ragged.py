@@ -5,9 +5,9 @@ token at position 0, and the host store must record TRUE per-slot
 lengths with position-native (shifted) blocks.
 
 End-to-end identity of ragged static batches against the per-request
-reference on all four backend x batching combos lives in
-tests/test_api.py::test_generate_matches_greedy_reference; this module
-covers the unit-level pieces."""
+reference on all four backend x batching combos lives in the golden
+matrix (tests/test_identity_matrix.py); this module covers the
+unit-level pieces."""
 import jax
 import jax.numpy as jnp
 import numpy as np

@@ -1,0 +1,164 @@
+"""Property tests for the Scheduler's three plan kinds — the decode
+split (``optimal_split``), the admission-time restore split
+(``Scheduler.restore_split``), and the chunked-prefill width
+(``Scheduler.chunk_split`` / ``optimal_chunk``):
+
+  - decisions stay in-bounds,
+  - they never cost more than the pure endpoints (stream-everything /
+    recompute-everything for the splits; the monolithic and
+    minimum-chunk pipelines for the chunk width),
+  - predicted cost is monotone in link bandwidth and compute rate
+    (a strictly better machine never makes the chosen plan slower),
+  - the recompute share is monotone in compute rate.
+"""
+import dataclasses
+
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dep, see docs/automation.md
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core.cost_model import HardwareProfile, Workload, layer_times
+from repro.core.scheduler import Scheduler
+from repro.core.solver import (chunk_pipeline_time, optimal_chunk,
+                               optimal_split)
+
+
+@dataclasses.dataclass(frozen=True)
+class _Cfg:
+    """The model-dims surface the Scheduler's plan entry points read."""
+    d_model: int
+    num_kv_heads: int
+    dh: int
+    num_layers: int
+    d_ff: int
+    gated_mlp: bool = True
+
+
+cfgs = st.builds(
+    _Cfg,
+    d_model=st.sampled_from([256, 1024, 4096]),
+    num_kv_heads=st.sampled_from([2, 8, 32]),
+    dh=st.sampled_from([32, 64, 128]),
+    num_layers=st.sampled_from([2, 16, 48]),
+    d_ff=st.sampled_from([512, 4096, 16384]),
+    gated_mlp=st.booleans(),
+)
+workloads = st.builds(
+    Workload,
+    batch=st.sampled_from([1, 2, 8, 64]),
+    seq_len=st.integers(2, 4096),
+    d_model=st.sampled_from([256, 1024, 4096]),
+    kv_dim=st.sampled_from([64, 512, 4096]),
+    dtype_bytes=st.sampled_from([1, 2, 4]),
+)
+profiles = st.builds(
+    HardwareProfile,
+    name=st.just("hyp"),
+    link_bandwidth=st.floats(1e9, 1e12),
+    gpu_flops=st.floats(1e11, 1e15),
+    hbm_bandwidth=st.just(1e12),
+    gemm_efficiency=st.floats(0.1, 1.0),
+    dispatch_overhead=st.floats(1e-6, 1e-3),
+)
+lengths = st.integers(1, 4096)
+schedules = st.sampled_from(["row", "column"])
+
+
+def _faster(hw: HardwareProfile, link: float = 1.0, flops: float = 1.0):
+    return dataclasses.replace(hw,
+                               link_bandwidth=hw.link_bandwidth * link,
+                               gpu_flops=hw.gpu_flops * flops)
+
+
+# ------------------------------------------------------ decode split
+
+@settings(max_examples=150, deadline=None)
+@given(workloads, profiles, schedules)
+def test_optimal_split_in_bounds_and_beats_endpoints(wl, hw, sched):
+    d = optimal_split(wl, hw, sched)
+    act = sched == "column"
+    assert 0 <= d.l <= wl.seq_len
+    pure_stream = layer_times(wl, hw, 0, act)["total"]
+    pure_recomp = layer_times(wl, hw, wl.seq_len, act)["total"]
+    assert d.t_total <= pure_stream * (1 + 1e-9)
+    assert d.t_total <= pure_recomp * (1 + 1e-9)
+
+
+@settings(max_examples=100, deadline=None)
+@given(workloads, profiles, schedules)
+def test_optimal_split_cost_monotone_in_rates(wl, hw, sched):
+    """A faster link or a faster accelerator never makes the chosen
+    plan slower (the solver re-optimizes, so cost is monotone even
+    where the split direction flips)."""
+    base = optimal_split(wl, hw, sched).t_total
+    assert optimal_split(wl, _faster(hw, link=4.0), sched).t_total \
+        <= base * (1 + 1e-9)
+    assert optimal_split(wl, _faster(hw, flops=4.0), sched).t_total \
+        <= base * (1 + 1e-9)
+
+
+# ----------------------------------------------------- restore split
+
+@settings(max_examples=100, deadline=None)
+@given(cfgs, profiles, lengths)
+def test_restore_split_in_bounds_and_beats_endpoints(cfg, hw, p):
+    d = Scheduler(hw).restore_split(cfg, p)
+    assert 0 <= d.l <= p            # bucketing rounds DOWN: l <= p holds
+    wl = Workload(batch=1, seq_len=d.bound, d_model=cfg.d_model,
+                  kv_dim=cfg.num_kv_heads * cfg.dh, dtype_bytes=4)
+    # column schedule: the recomputed part's activations cross the link
+    assert d.t_total <= layer_times(wl, hw, 0, True)["total"] * (1 + 1e-9)
+    assert d.t_total <= layer_times(wl, hw, d.bound, True)["total"] \
+        * (1 + 1e-9)
+
+
+@settings(max_examples=100, deadline=None)
+@given(cfgs, lengths)
+def test_restore_split_recomputes_more_on_faster_compute(cfg, p):
+    slow = HardwareProfile("slow", 32e9, 1e12, 1e12)
+    fast = HardwareProfile("fast", 32e9, 1e15, 1e12)
+    l_slow = Scheduler(slow).restore_split(cfg, p).l
+    l_fast = Scheduler(fast).restore_split(cfg, p).l
+    assert l_fast >= l_slow
+
+
+# ------------------------------------------------------- chunk split
+
+@settings(max_examples=150, deadline=None)
+@given(cfgs, profiles, lengths)
+def test_chunk_split_in_bounds_and_beats_endpoints(cfg, hw, n):
+    d = Scheduler(hw).chunk_split(cfg, n)
+    assert 1 <= d.chunk <= n
+    assert d.n_chunks == -(-n // d.chunk)        # ceil: tail covered
+    assert d.t_total <= d.t_monolithic * (1 + 1e-9)
+    wl = Workload(batch=1, seq_len=n, d_model=cfg.d_model,
+                  kv_dim=cfg.num_kv_heads * cfg.dh, dtype_bytes=4)
+    mlp = 3 if cfg.gated_mlp else 2
+    t_min = chunk_pipeline_time(n, min(16, n), wl, hw, cfg.num_layers,
+                                cfg.d_ff, mlp_mults=mlp)["total"]
+    assert d.t_total <= t_min * (1 + 1e-9)
+
+
+@settings(max_examples=100, deadline=None)
+@given(cfgs, profiles, lengths)
+def test_chunk_split_cost_monotone_in_rates(cfg, hw, n):
+    """More link bandwidth (faster write-back drain) or more compute
+    never makes the chosen chunk pipeline slower."""
+    base = Scheduler(hw).chunk_split(cfg, n).t_total
+    assert Scheduler(_faster(hw, link=4.0)).chunk_split(cfg, n).t_total \
+        <= base * (1 + 1e-9)
+    assert Scheduler(_faster(hw, flops=4.0)).chunk_split(cfg, n).t_total \
+        <= base * (1 + 1e-9)
+
+
+@settings(max_examples=100, deadline=None)
+@given(workloads, profiles, st.integers(1, 64), st.integers(1, 4096))
+def test_chunk_pipeline_time_vs_sequential(wl, hw, n_layers, n):
+    """The pipelined estimate is never worse than fully serializing
+    every chunk's compute and write-back, and never better than the
+    sum of one side alone (overlap can't create negative time)."""
+    t = chunk_pipeline_time(n, max(n // 4, 1), wl, hw, n_layers, 1024)
+    assert t["total"] <= t["t_compute"] + t["t_writeback"] + 1e-12
+    assert t["total"] >= max(t["t_compute"], t["t_writeback"]) - 1e-12

@@ -1,0 +1,146 @@
+"""Concurrency stress for the HostKVStore fence machinery and the
+TransferEngine's persistent parity-keyed staging buffers.
+
+Three flows run interleaved for N decode steps, the way a mixed
+prefill/decode engine drives them:
+
+  - decode-style per-layer FETCHES on the copy pool (each waits the
+    layer's write-back fence, stages through the parity buffers),
+  - per-layer token APPEND write-backs on the store pool (fenced with
+    ``set_fence``, exactly like ``OffloadDecodeRuntime.step``),
+  - prefill CHUNK write-backs into a different slot on the same store
+    pool (fenced with ``push_chunk_fence``, exactly like
+    ``ChunkedPrefill``).
+
+Every value written is position-derived, so any torn read — a fetch
+observing a half-landed store the fences should have ordered — shows up
+as a wrong float.  Staging buffers must be allocated once (warmup step)
+and never again: ``staging_allocs`` stays zero afterwards.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.runtime import HostKVStore, TransferEngine
+
+STEPS = 24
+CHUNK = 6
+CHUNK_TOTAL = 48
+
+
+def _kv_pattern(pos, KV, dh, base=0.0):
+    """(len(pos), KV, dh) values derived from position: torn reads can't
+    reproduce them."""
+    p = np.asarray(pos, np.float32)[:, None, None]
+    return np.broadcast_to(base + p + 0.5, (len(pos), KV, dh)).copy()
+
+
+@pytest.mark.slow
+def test_fences_survive_interleaved_fetch_store_chunk_writeback():
+    cfg = get_smoke_config("opt-6.7b").replace(num_layers=4)
+    Lh, KV, dh, h = (cfg.num_layers, cfg.num_kv_heads, cfg.dh,
+                     cfg.d_model)
+    max_len = 8 + STEPS + CHUNK_TOTAL
+    store = HostKVStore(cfg, 2, max_len)
+    xfer = TransferEngine(n_copy_threads=2)
+    errors = []
+
+    # slot 0: a decoding request with an 8-token prefix
+    s0 = 8
+    pos0 = np.arange(s0)
+    for li in range(Lh):
+        store.k[li, 0, :s0] = _kv_pattern(pos0, KV, dh)
+        store.v[li, 0, :s0] = _kv_pattern(pos0, KV, dh, base=1000.0)
+    store.act[:, 0, :s0] = np.arange(s0, dtype=np.float32)[:, None]
+    store.seq_lens[0] = s0
+
+    # slot 1: receives prefill chunks concurrently (never decoded here)
+    def chunk_writer():
+        try:
+            for start in range(0, CHUNK_TOTAL, CHUNK):
+                pos = np.arange(start, start + CHUNK)
+                ks = np.broadcast_to(
+                    _kv_pattern(pos, KV, dh, base=5e4)[None, None],
+                    (Lh, 1, CHUNK, KV, dh)).copy()
+                vs = np.broadcast_to(
+                    _kv_pattern(pos, KV, dh, base=6e4)[None, None],
+                    (Lh, 1, CHUNK, KV, dh)).copy()
+                acts = np.broadcast_to(
+                    pos.astype(np.float32)[None, None, :, None],
+                    (Lh, 1, CHUNK, h)).copy()
+                store.push_chunk_fence(xfer.submit_store(
+                    store.fill_chunk_slot, 1, ks, vs, acts, start))
+                time.sleep(0.001)
+        except Exception as e:           # pragma: no cover
+            errors.append(e)
+
+    writer = threading.Thread(target=chunk_writer)
+    writer.start()
+
+    # decode loop over slot 0 (flexgen-style l=0 splits; FIXED pad
+    # geometry so the staging shapes — and hence allocations — are
+    # constant after the first step)
+    ls = np.zeros(2, np.int64)
+    s_pad = max_len
+    allocs_after_warmup = None
+    for step in range(STEPS):
+        seq = store.seq_lens.copy()
+        s_strs = seq - ls
+        for li in range(Lh):
+            fut = xfer.submit(xfer.fetch_layer, store, li, ls, s_strs,
+                              0, s_pad)
+            h_res, k_str, v_str, _ = fut.result()
+            valid = int(seq[0])
+            got_k = np.asarray(k_str)[0, :valid]
+            got_v = np.asarray(v_str)[0, :valid]
+            want_pos = np.arange(valid)
+            np.testing.assert_array_equal(
+                got_k, _kv_pattern(want_pos, KV, dh),
+                err_msg=f"torn K read step={step} layer={li}")
+            np.testing.assert_array_equal(
+                got_v, _kv_pattern(want_pos, KV, dh, base=1000.0),
+                err_msg=f"torn V read step={step} layer={li}")
+            # fenced append of this step's new token (store pool), as
+            # the runtime does: next step's fetch of layer li waits it
+            new_pos = np.array([seq[0], -1])
+            k_new = np.stack([_kv_pattern([seq[0]], KV, dh),
+                              np.zeros((1, KV, dh), np.float32)])
+            v_new = np.stack([_kv_pattern([seq[0]], KV, dh, 1000.0),
+                              np.zeros((1, KV, dh), np.float32)])
+            a_new = np.full((2, 1, h), float(seq[0]), np.float32)
+            store.set_fence(li, xfer.submit_store(
+                store.append, li, k_new, v_new, a_new, new_pos))
+        store.seq_lens[0] += 1
+        if step == 0:
+            allocs_after_warmup = xfer.staging_allocs
+    grew = xfer.staging_allocs - allocs_after_warmup
+
+    writer.join()
+    store.sync()                 # drains layer AND chunk fences
+    assert not errors, errors
+    assert grew == 0, f"staging allocated {grew} buffers after warmup"
+
+    # slot 1's streamed chunks landed exactly, in order, untorn
+    pos = np.arange(CHUNK_TOTAL)
+    for li in range(Lh):
+        np.testing.assert_array_equal(
+            store.k[li, 1, :CHUNK_TOTAL],
+            _kv_pattern(pos, KV, dh, base=5e4))
+        np.testing.assert_array_equal(
+            store.v[li, 1, :CHUNK_TOTAL],
+            _kv_pattern(pos, KV, dh, base=6e4))
+    np.testing.assert_array_equal(
+        store.act[:, 1, :CHUNK_TOTAL],
+        np.broadcast_to(pos.astype(np.float32)[None, :, None],
+                        (Lh, CHUNK_TOTAL, h)))
+    # slot 0's full decode trajectory is intact end to end
+    final = int(store.seq_lens[0])
+    assert final == s0 + STEPS
+    for li in range(Lh):
+        np.testing.assert_array_equal(
+            store.k[li, 0, :final],
+            _kv_pattern(np.arange(final), KV, dh))
+    xfer.close()
