@@ -10,10 +10,18 @@ buffer per step) fail loudly instead of silently eating the overlap win.
 
     PYTHONPATH=src python benchmarks/bench_step_breakdown.py [--smoke]
         [--json out.json] [--mode kvpr|flexgen] [--compress int4]
-        [--batch B] [--prompt S] [--gen N]
+        [--batch B] [--prompt S] [--gen N] [--kernels auto|on|off]
+        [--matrix]
 
 --smoke exits non-zero unless, after a warmup decode, a second decode of
-the same trajectory performs ZERO retraces and ZERO staging allocations.
+the same trajectory performs ZERO retraces and ZERO staging allocations
+— and, when the kernel path is on, unless the kernel-path tokens are
+IDENTICAL to the jnp-oracle tokens for the same trajectory (the CI
+kernel-parity gate).
+
+--matrix runs the committed benchmark trajectory: {kvpr, flexgen, int4}
+x {jnp, kernel} in one combined JSON, each cell with the per-step
+compute / transfer / fence split.
 """
 from __future__ import annotations
 
@@ -44,7 +52,8 @@ def _spill(cfg, model, params, toks, gen, compress):
 
 
 def run(mode: str = "kvpr", compress=None, batch: int = 2,
-        prompt: int = 48, gen: int = 16, smoke: bool = False) -> dict:
+        prompt: int = 48, gen: int = 16, smoke: bool = False,
+        kernels="off") -> dict:
     cfg = get_smoke_config("opt-6.7b").replace(
         num_layers=4, d_model=256, num_heads=4, num_kv_heads=4, d_ff=512)
     model = Model(cfg)
@@ -54,7 +63,8 @@ def run(mode: str = "kvpr", compress=None, batch: int = 2,
                         (batch, prompt)).astype(np.int32)
     sched = Scheduler(profile_system())
     with OffloadDecodeRuntime(cfg, params, scheduler=sched,
-                              mode=mode, compress=compress) as rt:
+                              mode=mode, compress=compress,
+                              kernels=kernels) as rt:
         # warmup: compile every pad bucket of the trajectory + allocate
         # the staging buffers once
         store, first = _spill(cfg, model, params, toks, gen, compress)
@@ -67,8 +77,21 @@ def run(mode: str = "kvpr", compress=None, batch: int = 2,
         store, first = _spill(cfg, model, params, toks, gen, compress)
         allocs0, traces0 = rt.xfer.staging_allocs, rt.compute.traces()
         t0 = time.perf_counter()
-        _, stats = rt.decode(store, first, gen)
+        tokens, stats = rt.decode(store, first, gen)
         dt = time.perf_counter() - t0
+
+    parity_ok = None
+    if smoke and rt.compute.kernel_path:
+        # kernel-parity gate: the jnp oracle over the same trajectory
+        # must emit the IDENTICAL token sequence
+        with OffloadDecodeRuntime(cfg, params, scheduler=sched,
+                                  mode=mode, compress=compress,
+                                  kernels="off") as rt_ref:
+            store, first = _spill(cfg, model, params, toks, gen,
+                                  compress)
+            ref_tokens, _ = rt_ref.decode(store, first, gen)
+        parity_ok = bool(np.array_equal(np.asarray(tokens),
+                                        np.asarray(ref_tokens)))
 
     retraces = sum(st.retraces for st in stats)
     new_allocs = rt.xfer.staging_allocs - allocs0
@@ -77,7 +100,8 @@ def run(mode: str = "kvpr", compress=None, batch: int = 2,
         "config": {"mode": mode, "compress": compress, "batch": batch,
                    "prompt": prompt, "gen": gen,
                    "num_layers": cfg.num_layers,
-                   "d_model": cfg.d_model},
+                   "d_model": cfg.d_model,
+                   "kernels": rt.compute.kernel_mode},
         "warmup": {"wall_s": round(t_warm, 4),
                    "retraces": sum(st.retraces for st in warm_stats)},
         "steady": {
@@ -93,13 +117,41 @@ def run(mode: str = "kvpr", compress=None, batch: int = 2,
             "retraces": int(retraces),
             "staging_allocs": int(new_allocs),
             "traces_total": rt.compute.traces(),
+            "kernel_path": bool(stats[-1].kernel_path),
             "pad_buckets": sorted({(st.l_pad, st.s_pad)
                                    for st in stats}),
         },
     }
     if smoke:
-        out["smoke_ok"] = bool(retraces == 0 and new_allocs == 0)
+        out["smoke_ok"] = bool(retraces == 0 and new_allocs == 0
+                               and parity_ok is not False)
+        if parity_ok is not None:
+            out["kernel_parity_ok"] = parity_ok
     return out
+
+
+#: the committed benchmark trajectory: every offload mode on both the
+#: jnp-oracle path and the Pallas kernel path
+MATRIX = [("kvpr", None), ("flexgen", None), ("int4", "int4")]
+
+
+def run_matrix(batch: int = 2, prompt: int = 48, gen: int = 16) -> dict:
+    cells = {}
+    for label, compress in MATRIX:
+        mode = "flexgen" if label == "flexgen" else "kvpr"
+        for path, kernels in (("jnp", "off"), ("kernel", "on")):
+            r = run(mode=mode, compress=compress, batch=batch,
+                    prompt=prompt, gen=gen, kernels=kernels)
+            cells[f"{label}/{path}"] = {"config": r["config"],
+                                        "steady": r["steady"]}
+            s = r["steady"]
+            print(f"  {label:8s} {path:6s}: step={s['step_ms']:8.2f}ms "
+                  f"compute={s['t_compute_s']:.3f}s "
+                  f"wait={s['t_wait_s']:.3f}s "
+                  f"fence={s['t_fence_s']:.3f}s", file=sys.stderr)
+    return {"benchmark": "step_breakdown_matrix",
+            "shape": {"batch": batch, "prompt": prompt, "gen": gen},
+            "cells": cells}
 
 
 def main(argv=None) -> int:
@@ -110,26 +162,41 @@ def main(argv=None) -> int:
     ap.add_argument("--batch", type=int, default=2)
     ap.add_argument("--prompt", type=int, default=48)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--kernels", default="off",
+                    choices=["auto", "on", "off", "interpret"],
+                    help="Pallas decode hot path (on: native on TPU, "
+                         "interpret mode on CPU)")
+    ap.add_argument("--matrix", action="store_true",
+                    help="run {kvpr,flexgen,int4} x {jnp,kernel} and "
+                         "emit one combined JSON")
     ap.add_argument("--json", default=None,
                     help="also write the JSON to this path")
     ap.add_argument("--smoke", action="store_true",
                     help="small run; exit 1 on any steady-state retrace "
-                         "or staging allocation")
+                         "or staging allocation, or (with --kernels) on "
+                         "any kernel/jnp token mismatch")
     args = ap.parse_args(argv)
 
     if args.smoke:
         args.batch, args.prompt, args.gen = 2, 24, 8
-    res = run(mode=args.mode, compress=args.compress, batch=args.batch,
-              prompt=args.prompt, gen=args.gen, smoke=args.smoke)
+    if args.matrix:
+        res = run_matrix(batch=args.batch, prompt=args.prompt,
+                         gen=args.gen)
+    else:
+        res = run(mode=args.mode, compress=args.compress,
+                  batch=args.batch, prompt=args.prompt, gen=args.gen,
+                  smoke=args.smoke, kernels=args.kernels)
     text = json.dumps(res, indent=2)
     print(text)
     if args.json:
         with open(args.json, "w") as f:
             f.write(text + "\n")
-    if args.smoke and not res["smoke_ok"]:
+    if args.smoke and not args.matrix and not res["smoke_ok"]:
         print("SMOKE FAIL: steady-state decode retraced or allocated "
               f"(retraces={res['steady']['retraces']} "
-              f"staging_allocs={res['steady']['staging_allocs']})",
+              f"staging_allocs={res['steady']['staging_allocs']}) "
+              f"or kernel parity broke "
+              f"(kernel_parity_ok={res.get('kernel_parity_ok')})",
               file=sys.stderr)
         return 1
     return 0

@@ -1,0 +1,123 @@
+#!/usr/bin/env python
+"""Aggregate the committed BENCH_*.json trajectory into one table.
+
+The repo commits machine-readable benchmark snapshots at the root
+(BENCH_step_breakdown.json, BENCH_prefix.json,
+BENCH_chunked_prefill.json) so perf-relevant PRs carry their measured
+effect.  This script renders them side by side — run it after
+regenerating any snapshot to eyeball the trajectory:
+
+    PYTHONPATH=src python scripts/bench_trajectory.py [--dir REPO_ROOT]
+
+Exits non-zero if a committed snapshot recorded a failing gate
+(smoke_ok / tokens_identical false), so CI can keep the committed
+trajectory honest.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+FILES = ["BENCH_step_breakdown.json", "BENCH_prefix.json",
+         "BENCH_chunked_prefill.json"]
+
+
+def _load(root: pathlib.Path):
+    out = {}
+    for name in FILES:
+        p = root / name
+        if p.exists():
+            with open(p) as f:
+                out[name] = json.load(f)
+    return out
+
+
+def _fmt_step_breakdown(d) -> list:
+    rows = []
+    if "cells" in d:  # --matrix snapshot
+        for cell, r in sorted(d["cells"].items()):
+            s = r["steady"]
+            rows.append((cell, f"{s['step_ms']:.2f} ms/step",
+                         f"compute {s['t_compute_s']:.3f}s",
+                         f"wait {s['t_wait_s']:.3f}s",
+                         f"fence {s['t_fence_s']:.3f}s",
+                         f"{s['bytes_transferred'] / 1e6:.1f} MB"))
+    else:  # single-cell snapshot
+        s = d["steady"]
+        c = d["config"]
+        cell = f"{c['mode']}/{c.get('kernels', 'off')}"
+        rows.append((cell, f"{s['step_ms']:.2f} ms/step",
+                     f"compute {s['t_compute_s']:.3f}s",
+                     f"wait {s['t_wait_s']:.3f}s",
+                     f"fence {s['t_fence_s']:.3f}s",
+                     f"{s['bytes_transferred'] / 1e6:.1f} MB"))
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default=".",
+                    help="directory holding the BENCH_*.json snapshots")
+    args = ap.parse_args(argv)
+    data = _load(pathlib.Path(args.dir))
+    if not data:
+        print(f"no BENCH_*.json under {args.dir}", file=sys.stderr)
+        return 1
+
+    failed = []
+    if "BENCH_step_breakdown.json" in data:
+        d = data["BENCH_step_breakdown.json"]
+        print("== decode step breakdown "
+              f"({json.dumps(d.get('shape', d.get('config')))}) ==")
+        for row in _fmt_step_breakdown(d):
+            print("  " + "  ".join(f"{c:>18s}" if i else f"{c:<16s}"
+                                   for i, c in enumerate(row)))
+        for cell, r in d.get("cells", {}).items():
+            if r["steady"]["retraces"] or r["steady"]["staging_allocs"]:
+                failed.append(f"step_breakdown:{cell} retraced/allocated")
+        if d.get("smoke_ok") is False:
+            failed.append("step_breakdown smoke_ok=false")
+
+    if "BENCH_prefix.json" in data:
+        d = data["BENCH_prefix.json"]
+        cold, warm = d["cold"], d["warm"]
+        print("== shared-prefix cache ==")
+        print(f"  cold {cold['wall_s']:.2f}s "
+              f"({cold['prefilled_tokens']} tok prefilled)  ->  "
+              f"warm {warm['wall_s']:.2f}s "
+              f"({warm['restored_tokens']} tok restored, "
+              f"hit_rate {warm['hit_rate']:.2f})")
+        if not d.get("tokens_identical", True):
+            failed.append("prefix tokens_identical=false")
+        if d.get("smoke_ok") is False:
+            failed.append("prefix smoke_ok=false")
+
+    if "BENCH_chunked_prefill.json" in data:
+        d = data["BENCH_chunked_prefill.json"]
+        p, a = d["prefill"], d["admission"]
+        print("== chunked prefill ==")
+        print(f"  prefill {p['inline_tok_s']:.0f} -> "
+              f"{p['chunked_tok_s']:.0f} tok/s "
+              f"({p['n_chunks']} chunks of {p['chunk']})")
+        print(f"  admission stall {a['inline']['max_stall_s']:.3f}s -> "
+              f"{a['chunked']['max_stall_s']:.3f}s "
+              f"(x{a['stall_ratio']:.1f} better)")
+        if not p.get("logits_identical", True) \
+                or not a.get("tokens_identical", True):
+            failed.append("chunked_prefill identity=false")
+        if d.get("smoke_ok") is False:
+            failed.append("chunked_prefill smoke_ok=false")
+
+    missing = [f for f in FILES if f not in data]
+    if missing:
+        print(f"(missing snapshots: {', '.join(missing)})")
+    if failed:
+        print("TRAJECTORY FAIL: " + "; ".join(failed), file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

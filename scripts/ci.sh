@@ -52,6 +52,20 @@ timeout "${QUICKSTART_TIMEOUT:-300}" python examples/quickstart.py
 timeout "${BREAKDOWN_TIMEOUT:-300}" \
     python benchmarks/bench_step_breakdown.py --smoke
 
+# 4b. Kernel-parity smoke: the Pallas decode hot path (interpret mode
+#     on CPU, native on TPU) must emit tokens IDENTICAL to the jnp
+#     oracle over the same trajectory, for both fp and int4 streamed KV
+#     (see docs/performance.md, "The Pallas kernel path").
+timeout "${KERNEL_TIMEOUT:-300}" \
+    python benchmarks/bench_step_breakdown.py --smoke --kernels on
+timeout "${KERNEL_TIMEOUT:-300}" \
+    python benchmarks/bench_step_breakdown.py --smoke --kernels on \
+        --compress int4
+
+# 4c. Committed benchmark trajectory: the BENCH_*.json snapshots at the
+#     repo root must parse and carry passing gates.
+python scripts/bench_trajectory.py
+
 # 5. Serve-API round-trip: the request-level front door (EngineConfig +
 #    SamplingParams + streaming) over static+continuous x
 #    resident+offload, incl. a ragged static batch checked against the

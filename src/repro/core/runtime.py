@@ -74,6 +74,7 @@ from repro.core.cost_model import HardwareProfile
 from repro.core.scheduler import ExecutionPlan, Scheduler
 from repro.core import kvquant as KQ
 from repro.core import recompute as RC
+from repro.kernels import ops as kops
 from repro.models import layers as L
 
 Array = jax.Array
@@ -582,15 +583,28 @@ class ComputeStep:
     ends.  Per-slot positions and valid lengths make the same compiled
     function serve uniform static batches and ragged continuous slots —
     the runtime always passes (b,) valid vectors, so one trace per
-    (l_pad, s_pad) bucket pair covers both."""
+    (l_pad, s_pad) bucket pair covers both.
+
+    ``kernels`` selects the attention implementation: "off" keeps the
+    pure-jnp oracle path; any resolved kernel mode (see
+    ``kernels.ops.kernel_mode``) routes the three KVPR segments through
+    the Pallas suite — fused recompute+attend for the recomputed
+    prefix, flash decode (with in-kernel dequant under int4) for the
+    streamed segment, flash decode for the new token — merged exactly
+    via ``combine_segments``."""
 
     def __init__(self, cfg: ModelConfig, compress: Optional[str] = None,
-                 group: int = 32):
+                 group: int = 32, kernels="off"):
         self.cfg = cfg
         self.compress = compress
         self.group = group
+        self.kernel_mode = kops.kernel_mode(kernels)
         self.layer = jax.jit(self._layer_step,
                              static_argnames=("l_pad", "s_pad"))
+
+    @property
+    def kernel_path(self) -> bool:
+        return self.kernel_mode != "off"
 
     def traces(self) -> int:
         """Number of compiled variants of the per-layer step (-1 when
@@ -621,26 +635,60 @@ class ComputeStep:
         if cfg.pos_embedding == "rope":
             q = L.apply_rope(q, positions, cfg.rope_theta)
             k_new = L.apply_rope(k_new, positions, cfg.rope_theta)
-        segments = []
-        if l_pad > 0:
-            k_rec, v_rec = RC.recompute_kv(h_res, lp["attn"]["wk"],
-                                           lp["attn"]["wv"], cfg)
-            segments.append((k_rec, v_rec, l_valid))
-        if s_pad > 0:
-            if self.compress == "int4":
-                # streamed segment arrives packed; dequantize on device
-                # (on TPU this fuses into the attention kernel — see
-                # kernels/kv_dequant_attention.py)
-                k_str = KQ.dequantize_jnp(*k_str, group=self.group)
-                v_str = KQ.dequantize_jnp(*v_str, group=self.group)
-            segments.append((k_str, v_str, s_valid))
-        segments.append((k_new, v_new, None))
-        out = RC.merged_decode_attention(q, segments, positions[:, 0])
+        if self.kernel_mode != "off":
+            out = self._kernel_attention(q, lp, h_res, k_str, v_str,
+                                         k_new, v_new, l_valid, s_valid,
+                                         l_pad, s_pad)
+        else:
+            segments = []
+            if l_pad > 0:
+                k_rec, v_rec = RC.recompute_kv(h_res, lp["attn"]["wk"],
+                                               lp["attn"]["wv"], cfg)
+                segments.append((k_rec, v_rec, l_valid))
+            if s_pad > 0:
+                if self.compress == "int4":
+                    # kernels off: the packed streamed KV is dequantized
+                    # here as a SEPARATE jnp pass before attention (this
+                    # is the oracle path — with kernels on the packed
+                    # triple goes to the fused dequant-attend kernel
+                    # untouched; see _kernel_attention)
+                    k_str = KQ.dequantize_jnp(*k_str, group=self.group)
+                    v_str = KQ.dequantize_jnp(*v_str, group=self.group)
+                segments.append((k_str, v_str, s_valid))
+            segments.append((k_new, v_new, None))
+            out = RC.merged_decode_attention(q, segments,
+                                             positions[:, 0])
         out = out.reshape(b, 1, cfg.num_heads * cfg.dh).astype(x.dtype)
         x = x + jnp.einsum("bsD,Dh->bsh", out, lp["attn"]["wo"])
         h2 = L.apply_norm(x, lp["ln2"], cfg.rms_eps)
         x = x + L.mlp_block(h2, lp["mlp"], cfg.act)
         return x, k_new, v_new, h
+
+    def _kernel_attention(self, q, lp, h_res, k_str, v_str, k_new,
+                          v_new, l_valid, s_valid, l_pad: int,
+                          s_pad: int):
+        """Pallas decode hot path: build the tagged KVPR segment list
+        and dispatch through kernels.ops.  The recomputed prefix runs
+        the fused recompute+attend kernel (its K/V tiles never leave
+        VMEM); an int4 streamed segment's (packed, scale, zero) triple
+        is passed through UNTOUCHED — only packed bytes cross HBM→VMEM
+        and dequant happens inside the attention kernel."""
+        cfg = self.cfg
+        segments = []
+        if l_pad > 0:
+            segments.append(("recompute", h_res, lp["attn"]["wk"],
+                             lp["attn"]["wv"], l_valid, 0,
+                             cfg.rope_theta,
+                             cfg.pos_embedding == "rope"))
+        if s_pad > 0:
+            if self.compress == "int4":
+                segments.append(("int4", k_str, v_str, s_valid,
+                                 self.group))
+            else:
+                segments.append(("fp", k_str, v_str, s_valid))
+        segments.append(("fp", k_new, v_new, None))
+        return kops.segmented_decode_attention(q, segments,
+                                               mode=self.kernel_mode)
 
 
 @dataclasses.dataclass
@@ -662,6 +710,8 @@ class StepStats:
     retraces: int = 0           # new XLA traces of the layer step
     l_pad: int = 0              # static shapes the step ran with
     s_pad: int = 0
+    kernel_path: bool = False   # attention ran the Pallas suite (vs
+                                # the jnp oracle path)
 
 
 class OffloadDecodeRuntime:
@@ -673,6 +723,11 @@ class OffloadDecodeRuntime:
     never solved or chosen here.  ``step()`` advances every active slot
     one token (slots may sit at ragged positions); ``decode()`` is the
     static-batch loop on top.
+
+    kernels: the Pallas dispatch knob (see ``kernels.ops.kernel_mode``)
+    — "auto" (default) compiles the kernel suite natively on TPU and
+    keeps the jnp oracle path elsewhere; True forces the kernels
+    (interpret mode off-TPU); False/"off" forces the jnp path.
     """
 
     def __init__(self, cfg: ModelConfig, params,
@@ -682,7 +737,7 @@ class OffloadDecodeRuntime:
                  align: int = 1, n_copy_threads: int = 2,
                  compress: Optional[str] = None, group: int = 32,
                  offload_weights: bool = False,
-                 fine_grained: bool = True):
+                 fine_grained: bool = True, kernels="auto"):
         self.cfg = cfg
         self.params = params
         self.scheduler = scheduler or Scheduler(hw)
@@ -701,7 +756,8 @@ class OffloadDecodeRuntime:
                 for i in range(n_layers)]
         self.xfer = TransferEngine(n_copy_threads, host_layers,
                                    fine_grained)
-        self.compute = ComputeStep(cfg, compress=compress, group=group)
+        self.compute = ComputeStep(cfg, compress=compress, group=group,
+                                   kernels=kernels)
         self._t_store = 0.0
         self._t_store_lock = threading.Lock()
 
@@ -834,7 +890,8 @@ class OffloadDecodeRuntime:
             t_store=self._drain_t_store(),
             t_fence=self.xfer.drain_t_fence(),
             retraces=max(0, traces1 - traces0) if traces0 >= 0 else 0,
-            l_pad=l_pad, s_pad=s_pad)
+            l_pad=l_pad, s_pad=s_pad,
+            kernel_path=self.compute.kernel_path)
         return logits, stats
 
     # -------------------------------------------------------------- decode

@@ -5,8 +5,17 @@ can be combined exactly without materializing a merged cache.
 
 Grid: (batch, kv_heads, kv_chunks); the chunk axis is innermost and
 sequential on TPU, so the online-softmax state (m, l, acc) lives in VMEM
-scratch across chunk steps. Chunk positions >= valid_len are masked (the
-segment may be padded to a static length).
+scratch across chunk steps. Chunk positions >= the slot's valid length
+are masked (the segment may be padded to a static length); ``valid_len``
+may be a scalar (uniform batch) or a (b,) vector of per-slot lengths
+(ragged continuous batching) — the kernel reads its slot's entry from
+SMEM either way.
+
+``flash_decode_segment_db`` is the double-buffered variant: grid
+(batch, kv_heads) with K/V left in HBM/ANY memory and chunk tiles moved
+by explicit async DMA into a 2-slot VMEM scratch, prefetching chunk
+i+1's tiles while chunk i is in the MXU (the 3-stage copy/compute
+pipeline). Same (out, m, l) contract, so the two variants interchange.
 """
 from __future__ import annotations
 
@@ -35,7 +44,7 @@ def _kernel(valid_ref, q_ref, k_ref, v_ref,
     q = q_ref[0, 0]                                # (g, dh)
     k = k_ref[0, 0]                                # (C, dh)
     v = v_ref[0, 0]                                # (C, dh)
-    valid = valid_ref[0]
+    valid = valid_ref[pl.program_id(0)]            # this slot's length
 
     s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (g, C)
     s = s / jnp.sqrt(q.shape[-1]).astype(jnp.float32)
@@ -69,11 +78,19 @@ def _chunk_of(s: int, pref: int) -> int:
     return s
 
 
+def valid_vec(valid_len, b: int) -> Array:
+    """Normalize a scalar-or-(b,) valid length to a (b,) int32 vector
+    (the SMEM layout both kernel variants index per slot)."""
+    v = jnp.asarray(valid_len, jnp.int32)
+    return jnp.broadcast_to(v.reshape(-1) if v.ndim else v, (b,))
+
+
 @functools.partial(jax.jit,
                    static_argnames=("interpret", "chunk"))
 def flash_decode_segment(q: Array, k: Array, v: Array, valid_len: Array,
                          interpret: bool = False, chunk: int = 512):
-    """q: (b, KV, g, dh); k/v: (b, KV, S, dh); valid_len: () int32.
+    """q: (b, KV, g, dh); k/v: (b, KV, S, dh); valid_len: () or (b,)
+    int32 — per-slot ragged lengths are masked in-kernel.
 
     Returns (out (b,KV,g,dh) — normalized within this segment,
              m (b,KV,g,1) row maxes, l (b,KV,g,1) softmax sums) so the
@@ -83,7 +100,7 @@ def flash_decode_segment(q: Array, k: Array, v: Array, valid_len: Array,
     S = k.shape[2]
     C = _chunk_of(S, chunk)
     nchunks = S // C
-    valid = jnp.broadcast_to(jnp.asarray(valid_len, jnp.int32), (1,))
+    valid = valid_vec(valid_len, b)
 
     kern = functools.partial(_kernel, nchunks=nchunks, chunk=C)
     out, m, l = pl.pallas_call(
@@ -109,6 +126,118 @@ def flash_decode_segment(q: Array, k: Array, v: Array, valid_len: Array,
             pltpu.VMEM((g, dh), jnp.float32),
             pltpu.VMEM((g, 1), jnp.float32),
             pltpu.VMEM((g, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(valid, q, k, v)
+    return out, m, l
+
+
+def _kernel_db(valid_ref, q_ref, k_hbm, v_hbm, out_ref, m_ref, l_ref,
+               *, nchunks: int, chunk: int, g: int, dh: int):
+    bi = pl.program_id(0)
+    hi = pl.program_id(1)
+    valid = valid_ref[bi]
+    q = q_ref[0, 0]                                # (g, dh)
+    scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+
+    def scoped(k_buf, v_buf, sem, acc, m_s, l_s):
+        # k_buf/v_buf: (2, C, dh) VMEM double buffers; sem: (2, 2) DMA
+        # semaphores (slot x {k, v})
+        def copies(ci, slot):
+            sl = pl.ds(ci * chunk, chunk)
+            return (pltpu.make_async_copy(k_hbm.at[bi, hi, sl],
+                                          k_buf.at[slot], sem.at[slot, 0]),
+                    pltpu.make_async_copy(v_hbm.at[bi, hi, sl],
+                                          v_buf.at[slot], sem.at[slot, 1]))
+
+        for cp in copies(0, 0):
+            cp.start()
+        acc[...] = jnp.zeros_like(acc)
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+
+        def body(ci, carry):
+            slot = jax.lax.rem(ci, 2)
+
+            @pl.when(ci + 1 < nchunks)
+            def _prefetch():                       # overlap chunk i's MXU
+                for cp in copies(ci + 1, 1 - slot):
+                    cp.start()
+
+            for cp in copies(ci, slot):
+                cp.wait()
+            k = k_buf[slot]                        # (C, dh)
+            v = v_buf[slot]
+            s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)
+            s = s * scale
+            posn = ci * chunk + jax.lax.broadcasted_iota(jnp.int32,
+                                                         s.shape, 1)
+            s = jnp.where(posn < valid, s, NEG_INF)
+            m_prev = m_s[...]
+            m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+            alpha = jnp.exp(m_prev - m_new)
+            e = jnp.exp(s - m_new)
+            l_s[...] = l_s[...] * alpha + jnp.sum(e, axis=-1,
+                                                  keepdims=True)
+            acc[...] = acc[...] * alpha + jnp.dot(
+                e, v.astype(jnp.float32),
+                preferred_element_type=jnp.float32)
+            m_s[...] = m_new
+            return carry
+
+        jax.lax.fori_loop(0, nchunks, body, 0)
+        out_ref[0, 0] = (acc[...] /
+                         jnp.maximum(l_s[...], 1e-30)).astype(out_ref.dtype)
+        m_ref[0, 0] = m_s[...]
+        l_ref[0, 0] = l_s[...]
+
+    pl.run_scoped(
+        scoped,
+        pltpu.VMEM((2, chunk, dh), k_hbm.dtype),
+        pltpu.VMEM((2, chunk, dh), v_hbm.dtype),
+        pltpu.SemaphoreType.DMA((2, 2)),
+        pltpu.VMEM((g, dh), jnp.float32),
+        pltpu.VMEM((g, 1), jnp.float32),
+        pltpu.VMEM((g, 1), jnp.float32),
+    )
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("interpret", "chunk"))
+def flash_decode_segment_db(q: Array, k: Array, v: Array,
+                            valid_len: Array, interpret: bool = False,
+                            chunk: int = 512):
+    """Double-buffered flash decode: same contract as
+    ``flash_decode_segment``, but K/V stay in HBM (ANY memory space) and
+    chunk tiles are DMA'd into a 2-slot VMEM scratch so chunk i+1's
+    loads overlap chunk i's MXU work. Grid is (b, KV); the chunk loop
+    runs in-kernel (fori_loop) around the manual copies."""
+    b, KV, g, dh = q.shape
+    S = k.shape[2]
+    C = _chunk_of(S, chunk)
+    nchunks = S // C
+    valid = valid_vec(valid_len, b)
+
+    kern = functools.partial(_kernel_db, nchunks=nchunks, chunk=C,
+                             g=g, dh=dh)
+    out, m, l = pl.pallas_call(
+        kern,
+        grid=(b, KV),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, g, dh), lambda bi, hi: (bi, hi, 0, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, g, dh), lambda bi, hi: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, 1, g, 1), lambda bi, hi: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, 1, g, 1), lambda bi, hi: (bi, hi, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, KV, g, dh), q.dtype),
+            jax.ShapeDtypeStruct((b, KV, g, 1), jnp.float32),
+            jax.ShapeDtypeStruct((b, KV, g, 1), jnp.float32),
         ],
         interpret=interpret,
     )(valid, q, k, v)

@@ -27,6 +27,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.decode_attention import valid_vec
+
 Array = jax.Array
 NEG_INF = -1e30
 
@@ -60,7 +62,7 @@ def _kernel(valid_ref, q_ref, kp_ref, ks_ref, kz_ref, vp_ref, vs_ref,
                        dh, group)                     # (C, dh) f32
     v = _dequant_block(vp_ref[0, 0], vs_ref[0, 0], vz_ref[0, 0],
                        dh, group)
-    valid = valid_ref[0]
+    valid = valid_ref[pl.program_id(0)]            # this slot's length
 
     s = jnp.dot(q.astype(jnp.float32), k.T,
                 preferred_element_type=jnp.float32)   # (g, C)
@@ -105,7 +107,8 @@ def flash_decode_segment_int4(q: Array,
                               valid_len: Array, group: int = 32,
                               interpret: bool = False, chunk: int = 512):
     """q: (b, KV, g, dh); *_packed: (b, KV, S, dh//2) uint8;
-    *_scale/zero: (b, KV, S, dh//group) f32; valid_len: () int32.
+    *_scale/zero: (b, KV, S, dh//group) f32; valid_len: () or (b,)
+    int32 (per-slot ragged lengths are masked in-kernel).
 
     Returns (out, m, l) — same contract as flash_decode_segment, so
     exact cross-segment combine works across precisions.
@@ -115,7 +118,7 @@ def flash_decode_segment_int4(q: Array,
     ng = dh // group
     C = _chunk_of(S, chunk)
     nchunks = S // C
-    valid = jnp.broadcast_to(jnp.asarray(valid_len, jnp.int32), (1,))
+    valid = valid_vec(valid_len, b)
 
     kern = functools.partial(_kernel, nchunks=nchunks, chunk=C, dh=dh,
                              group=group)

@@ -1,12 +1,22 @@
-"""Pallas TPU kernel: fused KV recomputation (paper Eq. 7, the KVPR
+"""Pallas TPU kernels: fused KV recomputation (paper Eq. 7, the KVPR
 decode hot-spot).
 
-Computes K = X @ W_K and V = X @ W_V in ONE pass over the X tiles: each
-X block is loaded from HBM into VMEM once and feeds both MXU GEMMs,
-halving activation bandwidth vs two separate matmuls. Accumulation is
-f32 in VMEM scratch; block sizes are MXU-aligned (128) where shapes
-allow. Grid: (batch, l-blocks, n-blocks, k-blocks), k innermost
-(sequential accumulation).
+``kv_recompute_pallas`` computes K = X @ W_K and V = X @ W_V in ONE
+pass over the X tiles: each X block is loaded from HBM into VMEM once
+and feeds both MXU GEMMs, halving activation bandwidth vs two separate
+matmuls. Accumulation is f32 in VMEM scratch; block sizes are
+MXU-aligned (128) where shapes allow. Grid: (batch, l-blocks, n-blocks,
+k-blocks), k innermost (sequential accumulation).
+
+``recompute_attend_segment`` goes one step further: each recomputed
+(chunk, KV-head) tile feeds STRAIGHT into online-softmax attention
+accumulation — RoPE applied in-kernel from per-slot position offsets —
+so the recomputed prefix KV never round-trips through HBM at all. It
+returns the same per-segment (out, m, l) triple as
+``decode_attention.flash_decode_segment``, making the fused segment
+exactly combinable with streamed/new-token segments.
+``kv_recompute_pallas`` stays as the standalone fallback for callers
+that need the materialized K/V (e.g. prefix restore).
 """
 from __future__ import annotations
 
@@ -81,3 +91,122 @@ def kv_recompute_pallas(x: Array, wk: Array, wv: Array,
         interpret=interpret,
     )(x, wk, wv)
     return k, v
+
+
+# ------------------------------------------------ fused recompute+attend
+
+NEG_INF = -1e30
+
+
+def _fused_kernel(valid_ref, off_ref, q_ref, x_ref, wk_ref, wv_ref,
+                  freqs_ref, out_ref, m_ref, l_ref, acc, m_s, l_s, *,
+                  nchunks: int, chunk: int, rope: bool):
+    bi = pl.program_id(0)
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+
+    q = q_ref[0, 0]                                # (g, dh)
+    x = x_ref[0]                                   # (C, h)
+    dh = q.shape[-1]
+    # paper Eq. 7, one X load for both GEMMs — the recomputed tile
+    # lives only in VMEM from here on
+    k = jnp.dot(x, wk_ref[:, 0], preferred_element_type=jnp.float32)
+    v = jnp.dot(x, wv_ref[:, 0], preferred_element_type=jnp.float32)
+
+    # positions within the segment (the mask index) and their absolute
+    # RoPE positions (segment offset is per slot)
+    idx = ci * chunk + jax.lax.broadcasted_iota(jnp.int32, (chunk, 1), 0)
+    if rope:
+        ang = (off_ref[bi] + idx).astype(jnp.float32) * freqs_ref[...]
+        sin, cos = jnp.sin(ang), jnp.cos(ang)      # (C, dh/2)
+        k1, k2 = k[:, :dh // 2], k[:, dh // 2:]
+        k = jnp.concatenate([k1 * cos - k2 * sin,
+                             k2 * cos + k1 * sin], axis=-1)
+
+    valid = valid_ref[bi]
+    s = jnp.dot(q.astype(jnp.float32), k.T,
+                preferred_element_type=jnp.float32)      # (g, C)
+    s = s / jnp.sqrt(jnp.float32(dh))
+    s = jnp.where(idx.reshape(1, chunk) < valid, s, NEG_INF)
+
+    m_prev = m_s[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    e = jnp.exp(s - m_new)
+    l_s[...] = l_s[...] * alpha + jnp.sum(e, axis=-1, keepdims=True)
+    acc[...] = acc[...] * alpha + jnp.dot(
+        e, v, preferred_element_type=jnp.float32)
+    m_s[...] = m_new
+
+    @pl.when(ci == nchunks - 1)
+    def _flush():
+        out_ref[0, 0] = (acc[...] /
+                         jnp.maximum(l_s[...], 1e-30)).astype(out_ref.dtype)
+        m_ref[0, 0] = m_s[...]
+        l_ref[0, 0] = l_s[...]
+
+
+@functools.partial(jax.jit, static_argnames=("theta", "rope",
+                                             "interpret", "chunk"))
+def recompute_attend_segment(q: Array, x: Array, wk: Array, wv: Array,
+                             valid_len: Array, pos_offset=0,
+                             theta: float = 10000.0, rope: bool = True,
+                             interpret: bool = False, chunk: int = 128):
+    """Fused KVPR recompute+attend over the recomputed-prefix segment.
+
+    q: (b, KV, g, dh) roped queries; x: (b, Lp, h) attention-input
+    activations for segment positions [0, Lp); wk/wv: (h, KV, dh);
+    valid_len: () or (b,) — rows >= a slot's length are masked;
+    pos_offset: () or (b,) absolute position of segment row 0 (RoPE).
+
+    Returns (out, m, l) with the flash_decode_segment contract; the
+    recomputed K/V tiles never leave VMEM.
+    """
+    b, KV, g, dh = q.shape
+    Lp, h = x.shape[1], x.shape[2]
+    C = _block(Lp, chunk)
+    nchunks = Lp // C
+    from repro.kernels.decode_attention import valid_vec
+    valid = valid_vec(valid_len, b)
+    off = valid_vec(pos_offset, b)
+    # matches models.layers.rope_freqs (half-split convention)
+    freqs = (1.0 / (theta ** (jnp.arange(0, dh, 2, dtype=jnp.float32)
+                              / dh))).reshape(1, dh // 2)
+
+    kern = functools.partial(_fused_kernel, nchunks=nchunks, chunk=C,
+                             rope=rope)
+    out, m, l = pl.pallas_call(
+        kern,
+        grid=(b, KV, nchunks),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, g, dh), lambda bi, hi, ci: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, C, h), lambda bi, hi, ci: (bi, ci, 0)),
+            pl.BlockSpec((h, 1, dh), lambda bi, hi, ci: (0, hi, 0)),
+            pl.BlockSpec((h, 1, dh), lambda bi, hi, ci: (0, hi, 0)),
+            pl.BlockSpec((1, dh // 2), lambda bi, hi, ci: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, g, dh), lambda bi, hi, ci: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, 1, g, 1), lambda bi, hi, ci: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, 1, g, 1), lambda bi, hi, ci: (bi, hi, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, KV, g, dh), q.dtype),
+            jax.ShapeDtypeStruct((b, KV, g, 1), jnp.float32),
+            jax.ShapeDtypeStruct((b, KV, g, 1), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((g, dh), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(valid, off, q, x, wk, wv, freqs)
+    return out, m, l

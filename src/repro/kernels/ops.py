@@ -1,6 +1,25 @@
-"""Jit'd public wrappers around the Pallas kernels, with automatic
-interpret-mode on CPU (the container validates kernels in interpret=True;
-on TPU the same calls compile natively)."""
+"""Public dispatch layer over the Pallas kernel suite.
+
+``kernel_mode`` resolves the ``EngineConfig.kernels`` knob to an
+execution mode:
+
+  "off"        jnp oracle path (no Pallas)
+  "interpret"  Pallas kernels in interpret mode (CPU validation — the
+               container runs TPU kernels through the interpreter)
+  "pallas"     natively compiled Pallas (TPU)
+
+``segmented_decode_attention`` is the decode hot path's entry point: it
+takes the KVPR segment list in *tagged* form — fp KV, int4-packed KV,
+or raw activations to recompute — drops zero-length segments statically
+(the l=0 pure-stream split and the s=0 pure-recompute split), launches
+the matching kernel per segment, and merges exactly via
+``combine_segments``. The int4 segment's packed (packed, scale, zero)
+triple is handed to ``flash_decode_segment_int4`` untouched — the
+packed bytes are what cross HBM->VMEM; nothing is materialized at fp
+precision outside the kernel. The recompute segment runs the fused
+recompute+attend kernel, so the recomputed prefix KV never round-trips
+through HBM.
+"""
 from __future__ import annotations
 
 from typing import List, Tuple
@@ -9,13 +28,42 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import decode_attention as DA
+from repro.kernels import kv_dequant_attention as DQA
 from repro.kernels import kv_recompute as KR
 
 Array = jax.Array
 
+#: streamed fp segments at least this many chunks long use the
+#: double-buffered DMA variant (a 1-chunk segment has nothing to
+#: prefetch)
+DB_MIN_CHUNKS = 2
+
 
 def _interpret() -> bool:
     return jax.default_backend() == "cpu"
+
+
+def kernel_mode(setting="auto") -> str:
+    """Resolve a ``kernels`` knob value (bool | str) to an execution
+    mode: "off" | "interpret" | "pallas".
+
+    "auto" means real Pallas on TPU and the jnp path elsewhere (CPU
+    runs stay on the oracle unless a caller opts into interpret mode);
+    True/"on" means Pallas on TPU, interpret mode elsewhere (tests and
+    CI parity lanes opt in this way).
+    """
+    if setting in (False, None, "off"):
+        return "off"
+    on_tpu = jax.default_backend() == "tpu"
+    if setting == "auto":
+        return "pallas" if on_tpu else "off"
+    if setting in (True, "on"):
+        return "pallas" if on_tpu else "interpret"
+    if setting in ("interpret", "pallas"):
+        return setting
+    raise ValueError(
+        f"kernels must be True/False/'auto'/'on'/'off'/'interpret'/"
+        f"'pallas', got {setting!r}")
 
 
 def kv_recompute(x: Array, wk: Array, wv: Array) -> Tuple[Array, Array]:
@@ -28,22 +76,91 @@ def kv_recompute(x: Array, wk: Array, wv: Array) -> Tuple[Array, Array]:
     return k.reshape(b, l, KV, dh), v.reshape(b, l, KV, dh)
 
 
-def two_segment_decode_attention(q: Array, segments, pos: Array) -> Array:
-    """KVPR merged attention via per-segment flash-decode + exact combine.
+def _seg_len(seg) -> int:
+    """Static length of a tagged segment (axis 1 of its data)."""
+    tag = seg[0]
+    if tag == "int4":
+        return seg[1][0].shape[1]
+    return seg[1].shape[1]
 
-    q: (b, 1, H, dh); segments: [(k (b,S,KV,dh), v, valid|None), ...].
+
+def segmented_decode_attention(q: Array, segments: List[tuple], *,
+                               mode: str = "interpret",
+                               chunk: int = 512) -> Array:
+    """KVPR merged attention over tagged segments via per-segment
+    flash-decode + exact combine.
+
+    q: (b, 1, H, dh) roped queries. Each segment is one of
+      ("fp", k (b,S,KV,dh), v, valid)
+      ("int4", (kp,ks,kz), (vp,vs,vz), valid)   # (b,S,KV,*), group=
+      ("recompute", x (b,Lp,h), wk (h,KV,dh), wv, valid, pos_offset,
+       theta, rope)
+    where ``valid`` is None (all S rows), a scalar, or a (b,) vector.
+    int4 segments take a trailing ``group`` element after ``valid``.
+    Zero-length segments are dropped before launching any kernel.
     """
+    if mode == "off":
+        raise ValueError("segmented_decode_attention requires a kernel "
+                         "mode; use core.recompute.merged_decode_"
+                         "attention for the jnp path")
+    interpret = mode != "pallas"
     b, _, H, dh = q.shape
-    KV = segments[0][0].shape[2]
+    segments = [s for s in segments if _seg_len(s) > 0]
+    if not segments:
+        raise ValueError("all segments empty")
+    KV = (segments[0][1][0].shape[2] if segments[0][0] == "int4"
+          else segments[0][1].shape[2] if segments[0][0] == "fp"
+          else segments[0][2].shape[1])
     g = H // KV
     qg = q.reshape(b, KV, g, dh)
+
     parts = []
-    for (k, v, valid) in segments:
-        S = k.shape[1]
-        kk = jnp.moveaxis(k, 2, 1)                 # (b, KV, S, dh)
-        vv = jnp.moveaxis(v, 2, 1)
-        vl = jnp.asarray(S if valid is None else valid, jnp.int32)
-        parts.append(DA.flash_decode_segment(qg, kk, vv, vl,
-                                             interpret=_interpret()))
+    for seg in segments:
+        tag = seg[0]
+        if tag == "fp":
+            _, k, v, valid = seg
+            S = k.shape[1]
+            kk = jnp.moveaxis(k, 2, 1)             # (b, KV, S, dh)
+            vv = jnp.moveaxis(v, 2, 1)
+            vl = jnp.asarray(S if valid is None else valid, jnp.int32)
+            fn = (DA.flash_decode_segment_db
+                  if S >= DB_MIN_CHUNKS * chunk
+                  else DA.flash_decode_segment)
+            parts.append(fn(qg, kk, vv, vl, interpret=interpret,
+                            chunk=chunk))
+        elif tag == "int4":
+            _, kq3, vq3, valid = seg[:4]
+            group = seg[4] if len(seg) > 4 else 32
+            S = kq3[0].shape[1]
+            kq3 = tuple(jnp.moveaxis(a, 2, 1) for a in kq3)
+            vq3 = tuple(jnp.moveaxis(a, 2, 1) for a in vq3)
+            vl = jnp.asarray(S if valid is None else valid, jnp.int32)
+            parts.append(DQA.flash_decode_segment_int4(
+                qg, *kq3, *vq3, vl, group=group, interpret=interpret,
+                chunk=chunk))
+        elif tag == "recompute":
+            _, x, wk, wv, valid, pos_offset, theta, rope = seg
+            Lp = x.shape[1]
+            vl = jnp.asarray(Lp if valid is None else valid, jnp.int32)
+            parts.append(KR.recompute_attend_segment(
+                qg, x, wk, wv, vl, pos_offset, theta=float(theta),
+                rope=bool(rope), interpret=interpret,
+                chunk=min(chunk, 128)))
+        else:
+            raise ValueError(f"unknown segment tag {tag!r}")
     out = DA.combine_segments(parts)
     return out.reshape(b, 1, H, dh)
+
+
+def two_segment_decode_attention(q: Array, segments, pos: Array,
+                                 chunk: int = 512) -> Array:
+    """KVPR merged attention over plain (k, v, valid) fp segments.
+
+    q: (b, 1, H, dh); segments: [(k (b,S,KV,dh), v, valid|None), ...].
+    Zero-length segments (the l=0 pure-stream split) are dropped before
+    any kernel launches — matching merged_decode_attention's jnp path.
+    """
+    tagged = [("fp", k, v, valid) for (k, v, valid) in segments]
+    return segmented_decode_attention(
+        q, tagged, mode="interpret" if _interpret() else "pallas",
+        chunk=chunk)

@@ -18,14 +18,16 @@ def kv_recompute_ref(x: Array, wk: Array, wv: Array):
 
 
 def flash_decode_segment_ref(q: Array, k: Array, v: Array, valid_len):
-    """q: (b,KV,g,dh); k/v: (b,KV,S,dh). Returns (out, m, l) matching
+    """q: (b,KV,g,dh); k/v: (b,KV,S,dh); valid_len: () or (b,).
+    Returns (out, m, l) matching
     kernels.decode_attention.flash_decode_segment."""
-    S = k.shape[2]
+    b, S = k.shape[0], k.shape[2]
     s = jnp.einsum("bkgd,bksd->bkgs", q.astype(jnp.float32),
                    k.astype(jnp.float32))
     s = s / jnp.sqrt(q.shape[-1]).astype(jnp.float32)
-    mask = jnp.arange(S) < valid_len
-    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    valid = jnp.broadcast_to(jnp.asarray(valid_len), (b,))
+    mask = jnp.arange(S)[None, :] < valid[:, None]          # (b, S)
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
     m = jnp.max(s, axis=-1, keepdims=True)
     e = jnp.exp(s - m)
     l = jnp.sum(e, axis=-1, keepdims=True)
@@ -35,26 +37,31 @@ def flash_decode_segment_ref(q: Array, k: Array, v: Array, valid_len):
 
 
 def merged_attention_ref(q: Array, segments):
-    """Exact attention over concatenated segments [(k, v, valid|None)].
-    q: (b, 1, H, dh); k/v: (b, S, KV, dh). Returns (b, 1, H, dh)."""
+    """Exact attention over concatenated segments [(k, v, valid|None)];
+    ``valid`` may be () or (b,). q: (b, 1, H, dh); k/v: (b, S, KV, dh).
+    Returns (b, 1, H, dh)."""
+    b = q.shape[0]
     ks, vs, masks = [], [], []
     for (k, v, valid) in segments:
         S = k.shape[1]
         ks.append(k)
         vs.append(v)
-        m = jnp.ones((S,), bool) if valid is None else \
-            (jnp.arange(S) < valid)
+        if valid is None:
+            m = jnp.ones((b, S), bool)
+        else:
+            vv = jnp.broadcast_to(jnp.asarray(valid), (b,))
+            m = jnp.arange(S)[None, :] < vv[:, None]
         masks.append(m)
     k = jnp.concatenate(ks, axis=1)
     v = jnp.concatenate(vs, axis=1)
-    mask = jnp.concatenate(masks)
-    b, _, H, dh = q.shape
+    mask = jnp.concatenate(masks, axis=1)                   # (b, S_tot)
+    _, _, H, dh = q.shape
     KV = k.shape[2]
     g = H // KV
     qg = q.reshape(b, KV, g, dh)
     s = jnp.einsum("bkgd,bskd->bkgs", qg.astype(jnp.float32),
                    k.astype(jnp.float32)) / jnp.sqrt(dh)
-    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
     w = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bkgs,bskd->bkgd", w, v.astype(jnp.float32))
     return out.reshape(b, 1, H, dh).astype(q.dtype)

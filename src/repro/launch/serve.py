@@ -166,6 +166,11 @@ def main(argv=None):
                     help="print per-token events as they are produced")
     ap.add_argument("--no-kvpr", action="store_true",
                     help="offload: stream full KV (FlexGen baseline)")
+    ap.add_argument("--kernels", default="auto",
+                    choices=["auto", "on", "off", "interpret"],
+                    help="Pallas kernel dispatch for the offload decode "
+                         "hot path (auto: native on TPU, jnp elsewhere; "
+                         "on: kernels everywhere, interpret off-TPU)")
     ap.add_argument("--prefill-chunk", default=None,
                     help="chunked prefill: a chunk width in tokens, or "
                          "'auto' for the scheduler's chunk_split "
@@ -211,6 +216,7 @@ def main(argv=None):
         chunk = int(chunk)
     base = dict(slots=args.slots, max_len=args.prompt + args.gen + 8,
                 kvpr=not args.no_kvpr, compress=args.compress,
+                kernels=args.kernels,
                 seed=args.seed, prefill_chunk=chunk,
                 max_step_tokens=args.max_step_tokens,
                 prefix_cache=(PrefixCacheConfig(

@@ -154,6 +154,13 @@ class EngineConfig:
     # instead of stalling every in-flight decode.  Requires
     # prefill_chunk.
     max_step_tokens: Optional[int] = None
+    # Pallas kernel dispatch for the offload decode hot path (fused
+    # recompute+attend, flash decode, in-kernel int4 dequant).  "auto"
+    # compiles the kernels natively on TPU and keeps the jnp oracle
+    # path elsewhere; True opts in everywhere (interpret mode off-TPU —
+    # what tests and CI parity lanes use); False forces the jnp path.
+    # Tokens are identical either way; see kernels.ops.kernel_mode.
+    kernels: Union[bool, str] = "auto"
 
     def validate(self) -> "EngineConfig":
         if self.backend not in ("resident", "offload"):
@@ -167,6 +174,11 @@ class EngineConfig:
         if self.compress not in (None, "int4"):
             raise ValueError(f"compress must be None or 'int4', got "
                              f"{self.compress!r}")
+        if self.kernels not in (True, False, None, "auto", "on", "off",
+                                "interpret", "pallas"):
+            raise ValueError(
+                f"kernels must be a bool, 'auto', 'on', 'off', "
+                f"'interpret' or 'pallas', got {self.kernels!r}")
         if self.batching == "continuous" and self.slots < 1:
             raise ValueError(f"slots must be >= 1, got {self.slots}")
         if self.prefix_cache is not None:
@@ -418,7 +430,8 @@ class LLMEngine:
                 self.cfg, params, scheduler=self.scheduler,
                 mode="kvpr" if self.config.kvpr else "flexgen",
                 schedule=self.config.schedule, align=self.config.align,
-                compress=self.config.compress)
+                compress=self.config.compress,
+                kernels=self.config.kernels)
         elif self.config.batching == "continuous":
             # vmap over the slot axis: params broadcast, cache + token
             # mapped

@@ -33,13 +33,15 @@ class ContinuousBatchingEngine(EngineShim):
                  scheduler: Optional[Scheduler] = None,
                  kvpr: bool = True, schedule: str = "row",
                  align: int = 1, compress: Optional[str] = None,
-                 sampler: str = "greedy", seed: int = 0):
+                 sampler: str = "greedy", seed: int = 0,
+                 kernels="auto"):
         self.mode = mode
         self.sampler = sampler
         config = EngineConfig(
             backend="offload" if mode == "offload" else "resident",
             batching="continuous", slots=num_slots, max_len=max_len,
             kvpr=kvpr, schedule=schedule, align=align,
-            compress=compress, hw=hw or TPU_V5E, seed=seed)
+            compress=compress, hw=hw or TPU_V5E, seed=seed,
+            kernels=kernels)
         self.engine = LLMEngine(model, params, config,
                                 scheduler=scheduler)

@@ -101,12 +101,14 @@ class ServingEngine(EngineShim):
                  sampler: str = "greedy", seed: int = 0,
                  kvpr: bool = True, schedule: str = "row",
                  align: int = 1, compress: Optional[str] = None,
-                 scheduler: Optional[Scheduler] = None):
+                 scheduler: Optional[Scheduler] = None,
+                 kernels="auto"):
         self.mode = mode
         self.sampler = sampler
         config = EngineConfig(
             backend="offload" if mode == "offload" else "resident",
             batching="static", kvpr=kvpr, schedule=schedule,
-            align=align, compress=compress, hw=hw or TPU_V5E, seed=seed)
+            align=align, compress=compress, hw=hw or TPU_V5E, seed=seed,
+            kernels=kernels)
         self.engine = LLMEngine(model, params, config,
                                 scheduler=scheduler)

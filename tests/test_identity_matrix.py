@@ -11,6 +11,10 @@ reference across all 4 backend x batching combos x scenario:
   mixed       greedy + seeded-temperature requests in one batch
   prefix      shared-prefix KV cache warm hits (restore + suffix
               prefill) vs the cold reference
+  kernels     Pallas decode hot path (kernels=True: interpret mode on
+              this CPU container, native on TPU) vs the jnp-oracle
+              reference on all four combos (the knob is a no-op on the
+              resident backend, which pins the reference)
 
 The per-request reference for EVERY scenario is a fresh batch-1
 resident/static engine run with the same engine seed and request uid —
@@ -39,7 +43,8 @@ SCENARIOS = ["ragged", "chunked",
              pytest.param("chunked_auto", marks=pytest.mark.slow),
              pytest.param("early_eos", marks=pytest.mark.slow),
              pytest.param("mixed", marks=pytest.mark.slow),
-             pytest.param("prefix", marks=pytest.mark.slow)]
+             pytest.param("prefix", marks=pytest.mark.slow),
+             "kernels"]
 
 LENS = [8, 11, 14]
 
@@ -122,6 +127,10 @@ def _scenario(name, setup, sched):
         pc = dict(prefix_cache=PrefixCacheConfig())
         kw = {"static": pc, "continuous": dict(pc)}
         rounds = 2        # round 2 must hit the prefixes round 1 stored
+    elif name == "kernels":
+        sps = [SamplingParams(max_tokens=g) for g in (5, 4, 6)]
+        kw = {"static": dict(kernels=True),
+              "continuous": dict(kernels=True)}
     else:
         raise AssertionError(name)
     return reqs, sps, kw, rounds

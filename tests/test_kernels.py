@@ -4,10 +4,14 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core import kvquant as KQ
 from repro.kernels import ops, ref
 from repro.kernels.decode_attention import (combine_segments,
-                                            flash_decode_segment)
-from repro.kernels.kv_recompute import kv_recompute_pallas
+                                            flash_decode_segment,
+                                            flash_decode_segment_db)
+from repro.kernels.kv_recompute import (kv_recompute_pallas,
+                                        recompute_attend_segment)
+from repro.models import layers as L
 
 SHAPES_KV = [
     (2, 16, 64, 2, 32),
@@ -62,6 +66,187 @@ def test_flash_decode_matches_oracle(b, KV, g, dh, S, valid, dtype):
                                rtol=tol, atol=tol)
     np.testing.assert_allclose(np.asarray(m1), np.asarray(m2),
                                rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------- per-slot ragged valid
+
+RAGGED_FD = [
+    (3, 2, 4, 32, 64, (50, 64, 7)),
+    (2, 4, 1, 128, 96, (96, 17)),
+    (4, 1, 8, 64, 128, (0, 1, 100, 128)),   # incl. an empty slot
+]
+
+
+@pytest.mark.parametrize("b,KV,g,dh,S,valid", RAGGED_FD)
+@pytest.mark.parametrize("variant", ["blockspec", "double_buffered"])
+def test_flash_decode_ragged_valid(b, KV, g, dh, S, valid, variant):
+    """(b,) per-slot valid vectors are masked in-kernel — what ragged
+    continuous batching feeds the decode hot path."""
+    key = jax.random.PRNGKey(S)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, KV, g, dh))
+    k = jax.random.normal(ks[1], (b, KV, S, dh))
+    v = jax.random.normal(ks[2], (b, KV, S, dh))
+    vl = jnp.asarray(valid, jnp.int32)
+    fn = (flash_decode_segment_db if variant == "double_buffered"
+          else flash_decode_segment)
+    o1, m1, l1 = fn(q, k, v, vl, interpret=True, chunk=32)
+    o2, m2, l2 = ref.flash_decode_segment_ref(q, k, v, vl)
+    # rows of an all-masked slot are garbage-but-finite on both paths;
+    # compare only slots with at least one valid position
+    live = np.asarray(valid) > 0
+    np.testing.assert_allclose(np.asarray(o1)[live], np.asarray(o2)[live],
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(m1)[live], np.asarray(m2)[live],
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(l1)[live], np.asarray(l2)[live],
+                               rtol=1e-4, atol=1e-4)
+    assert np.isfinite(np.asarray(o1)).all()
+
+
+def test_double_buffered_matches_blockspec_variant():
+    """The DMA-pipelined variant is numerically interchangeable with
+    the BlockSpec-pipelined one (same chunking, same accumulation)."""
+    key = jax.random.PRNGKey(3)
+    ks = jax.random.split(key, 3)
+    b, KV, g, dh, S = 2, 2, 4, 64, 256
+    q = jax.random.normal(ks[0], (b, KV, g, dh))
+    k = jax.random.normal(ks[1], (b, KV, S, dh))
+    v = jax.random.normal(ks[2], (b, KV, S, dh))
+    vl = jnp.asarray([200, 256], jnp.int32)
+    o1, m1, l1 = flash_decode_segment(q, k, v, vl, interpret=True,
+                                      chunk=64)
+    o2, m2, l2 = flash_decode_segment_db(q, k, v, vl, interpret=True,
+                                         chunk=64)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(m1), np.asarray(m2))
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2),
+                               rtol=1e-6, atol=1e-6)
+
+
+# ------------------------------------------------ fused recompute+attend
+
+FUSED_SHAPES = [
+    # b, Lp, h, KV, g, dh, valid, offsets, rope
+    (2, 48, 96, 2, 4, 64, (30, 48), (0, 0), True),
+    (1, 128, 256, 4, 2, 32, (100,), (16,), True),
+    (3, 16, 64, 1, 8, 64, (16, 5, 0), (0, 3, 0), False),
+]
+
+
+@pytest.mark.parametrize("b,Lp,h,KV,g,dh,valid,off,rope", FUSED_SHAPES)
+def test_fused_recompute_attend_vs_composed(b, Lp, h, KV, g, dh, valid,
+                                            off, rope):
+    """Fused recompute+attend == recompute_kv (einsum + RoPE) composed
+    with the flash-decode oracle — the recomputed KV never needs to
+    materialize."""
+    theta = 10000.0
+    key = jax.random.PRNGKey(Lp + h)
+    ks = jax.random.split(key, 4)
+    q = jax.random.normal(ks[0], (b, KV, g, dh))
+    x = jax.random.normal(ks[1], (b, Lp, h))
+    wk = jax.random.normal(ks[2], (h, KV, dh)) / np.sqrt(h)
+    wv = jax.random.normal(ks[3], (h, KV, dh)) / np.sqrt(h)
+    vl = jnp.asarray(valid, jnp.int32)
+    o1, m1, l1 = recompute_attend_segment(
+        q, x, wk, wv, vl, jnp.asarray(off, jnp.int32), theta=theta,
+        rope=rope, interpret=True, chunk=16)
+    # composed oracle: standalone recompute + rope, then attend
+    kr = jnp.einsum("blh,hnd->blnd", x, wk)
+    vr = jnp.einsum("blh,hnd->blnd", x, wv)
+    if rope:
+        pos = jnp.arange(Lp)[None] + jnp.asarray(off)[:, None]
+        kr = L.apply_rope(kr, pos, theta)
+    o2, m2, l2 = ref.flash_decode_segment_ref(
+        q, jnp.moveaxis(kr, 2, 1), jnp.moveaxis(vr, 2, 1), vl)
+    live = np.asarray(valid) > 0
+    np.testing.assert_allclose(np.asarray(o1)[live], np.asarray(o2)[live],
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(m1)[live], np.asarray(m2)[live],
+                               rtol=1e-4, atol=1e-4)
+    assert np.isfinite(np.asarray(o1)).all()
+
+
+# --------------------------------------------------- segmented dispatch
+
+def test_mixed_precision_three_segment_sweep():
+    """The KVPR decode hot path's exact segment mix: fused-recomputed
+    prefix + int4 streamed + fp new-token, dispatched through
+    segmented_decode_attention, vs the jnp oracle over the dequantized
+    concatenated cache.  GQA head grouping (g=4) included."""
+    b, KV, g, dh, h = 2, 2, 4, 64, 96
+    H = KV * g
+    Lp, S = 32, 64
+    theta = 10000.0
+    key = jax.random.PRNGKey(11)
+    ks = jax.random.split(key, 6)
+    q = jax.random.normal(ks[0], (b, 1, H, dh))
+    x = jax.random.normal(ks[1], (b, Lp, h))
+    wk = jax.random.normal(ks[2], (h, KV, dh)) / np.sqrt(h)
+    wv = jax.random.normal(ks[3], (h, KV, dh)) / np.sqrt(h)
+    k_str = jax.random.normal(ks[4], (b, S, KV, dh))
+    v_str = jax.random.normal(ks[5], (b, S, KV, dh))
+    k_new = jax.random.normal(jax.random.fold_in(key, 1), (b, 1, KV, dh))
+    v_new = jax.random.normal(jax.random.fold_in(key, 2), (b, 1, KV, dh))
+    l_valid = jnp.asarray([20, 32], jnp.int32)
+    s_valid = jnp.asarray([64, 40], jnp.int32)
+
+    kq3 = KQ.quantize_jnp(k_str)
+    vq3 = KQ.quantize_jnp(v_str)
+    out = ops.segmented_decode_attention(
+        q,
+        [("recompute", x, wk, wv, l_valid, 0, theta, True),
+         ("int4", kq3, vq3, s_valid, 32),
+         ("fp", k_new, v_new, None)],
+        mode="interpret", chunk=32)
+
+    kr = L.apply_rope(jnp.einsum("blh,hnd->blnd", x, wk),
+                      jnp.broadcast_to(jnp.arange(Lp), (b, Lp)), theta)
+    vr = jnp.einsum("blh,hnd->blnd", x, wv)
+    kd = KQ.dequantize_jnp(*kq3)
+    vd = KQ.dequantize_jnp(*vq3)
+    o_ref = ref.merged_attention_ref(
+        q, [(kr, vr, l_valid), (kd, vd, s_valid), (k_new, v_new, None)])
+    np.testing.assert_allclose(np.asarray(out), np.asarray(o_ref),
+                               rtol=3e-4, atol=3e-4)
+
+
+def test_zero_length_segment_dropped():
+    """The l=0 pure-stream split hands the kernel dispatch an empty
+    recomputed segment; it must be dropped before any launch (the jnp
+    path already skips it) instead of tiling an S=0 grid."""
+    key = jax.random.PRNGKey(5)
+    b, KV, g, dh, S = 2, 2, 2, 32, 48
+    H = KV * g
+    q = jax.random.normal(key, (b, 1, H, dh))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, S, KV, dh))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, S, KV, dh))
+    empty = jnp.zeros((b, 0, KV, dh))
+    out = ops.two_segment_decode_attention(
+        q, [(empty, empty, None), (k, v, jnp.asarray(40))],
+        jnp.asarray(S))
+    o_ref = ref.merged_attention_ref(q, [(k, v, jnp.asarray(40))])
+    np.testing.assert_allclose(np.asarray(out), np.asarray(o_ref),
+                               rtol=2e-5, atol=2e-5)
+    with pytest.raises(ValueError):
+        ops.segmented_decode_attention(q, [("fp", empty, empty, None)],
+                                       mode="interpret")
+
+
+def test_kernel_mode_resolver():
+    """EngineConfig.kernels knob -> execution mode (on this CPU
+    container: auto stays on the jnp oracle, opt-in means interpret)."""
+    assert ops.kernel_mode(False) == "off"
+    assert ops.kernel_mode("off") == "off"
+    assert ops.kernel_mode(None) == "off"
+    on_tpu = jax.default_backend() == "tpu"
+    assert ops.kernel_mode("auto") == ("pallas" if on_tpu else "off")
+    assert ops.kernel_mode(True) == ("pallas" if on_tpu else "interpret")
+    assert ops.kernel_mode("interpret") == "interpret"
+    assert ops.kernel_mode("pallas") == "pallas"
+    with pytest.raises(ValueError):
+        ops.kernel_mode("sometimes")
 
 
 def test_multi_segment_combine_exact():

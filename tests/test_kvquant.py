@@ -4,31 +4,37 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-pytest.importorskip("hypothesis")  # optional dep, see docs/automation.md
-from hypothesis import given, settings, strategies as st
 
 from repro.core import kvquant as KQ
 from repro.kernels import decode_attention as DA
 from repro.kernels import kv_dequant_attention as DQA
 from repro.kernels import ref
 
+try:  # optional dep, see docs/automation.md — only gates the
+    # property-based round-trip test, not the rest of this module
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
 
 # ------------------------------------------------------------ round trip
 
-@settings(max_examples=20, deadline=None)
-@given(st.integers(1, 4), st.integers(1, 6),
-       st.sampled_from([32, 64, 128]), st.integers(0, 2**31 - 1))
-def test_quant_roundtrip_np(b, s, dh, seed):
-    rng = np.random.default_rng(seed)
-    x = rng.normal(size=(b, s, dh)).astype(np.float32) * 3.0
-    q = KQ.quantize_np(x)
-    y = KQ.dequantize_np(q)
-    # max error within a group is scale/2 = (range/15)/2
-    rng_ = x.reshape(b, s, dh // 32, 32)
-    half_scale = (rng_.max(-1) - rng_.min(-1)) / 15.0 / 2.0 + 1e-6
-    err = np.abs((y - x).reshape(b, s, dh // 32, 32)).max(-1)
-    assert (err <= half_scale + 1e-5).all()
-    assert q.nbytes < x.nbytes / 4  # ⅛ codes + scales overhead < ¼
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(1, 4), st.integers(1, 6),
+           st.sampled_from([32, 64, 128]), st.integers(0, 2**31 - 1))
+    def test_quant_roundtrip_np(b, s, dh, seed):
+        rng = np.random.default_rng(seed)
+        x = rng.normal(size=(b, s, dh)).astype(np.float32) * 3.0
+        q = KQ.quantize_np(x)
+        y = KQ.dequantize_np(q)
+        # max error within a group is scale/2 = (range/15)/2
+        rng_ = x.reshape(b, s, dh // 32, 32)
+        half_scale = (rng_.max(-1) - rng_.min(-1)) / 15.0 / 2.0 + 1e-6
+        err = np.abs((y - x).reshape(b, s, dh // 32, 32)).max(-1)
+        assert (err <= half_scale + 1e-5).all()
+        assert q.nbytes < x.nbytes / 4  # ⅛ codes + scales overhead < ¼
 
 
 def test_np_jnp_agree():
@@ -121,6 +127,35 @@ def test_int4_offload_serving_close_and_smaller():
     agree = np.mean([np.mean(e.tokens == c.tokens)
                      for e, c in zip(exact, quant)])
     assert agree >= 0.5, f"int4 decode diverged too much: {agree}"
+
+
+def test_int4_never_materialized_with_kernels(monkeypatch):
+    """With the kernel path on, the packed streamed KV goes straight to
+    the fused dequant-attend kernel — the jnp dequantize pass must never
+    run during decode.  Poisoning runtime.KQ.dequantize_jnp proves it."""
+    from repro.configs import get_smoke_config
+    from repro.core import runtime as RT
+    from repro.models.transformer import Model
+    from repro.serving.engine import Request, ServingEngine
+
+    cfg = get_smoke_config("tinyllama-1.1b")
+    model = Model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    reqs = [Request(uid=i, prompt=rng.integers(
+        1, cfg.vocab_size, 12).astype(np.int32), max_new_tokens=4)
+        for i in range(2)]
+
+    def boom(*a, **k):
+        raise AssertionError(
+            "int4 KV materialized at fp precision outside the kernel")
+
+    monkeypatch.setattr(RT.KQ, "dequantize_jnp", boom)
+    with ServingEngine(model, params, mode="offload", compress="int4",
+                       kernels=True) as eng:
+        outs = eng.serve(reqs)
+    assert all(len(o.tokens) == 4 for o in outs)
+    assert eng.runtime.compute.kernel_path
 
 
 def test_int4_store_bytes_reduction():
