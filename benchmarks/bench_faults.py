@@ -1,0 +1,216 @@
+"""Fault-layer overhead and recovery-latency benchmark.
+
+The robustness PR threads a fault-injection/recovery layer (op hooks,
+bounded fence waits, retry loops) through the decode hot path — this
+benchmark proves the layer is FREE when idle and measures what
+recovery costs when it is not:
+
+  off        faults=None: the plain hot path.  Gate: its step-time
+             FLOOR stays within ``GATE_PCT`` of the committed PR 6
+             baseline (BENCH_step_breakdown.json, kvpr/jnp cell),
+             i.e. the fault plumbing's disabled-path overhead is
+             noise.  The floor estimate is min over BOTH the off and
+             idle samples: idle runs strictly more work (every off op
+             plus the hook dispatch), so any idle sample is a valid
+             upper bound on the off floor — pooling doubles the
+             samples without biasing the gate optimistic.
+  idle       a FaultPolicy attached but injecting nothing: the hook
+             dispatch overhead itself (same-process comparison, so
+             machine noise cancels).
+  recovery   deterministic transient fetch failures (fail_first)
+             retried with exponential backoff: wall-clock penalty per
+             recovered fault and the retry count the runtime surfaces
+             in StepStats.
+
+    PYTHONPATH=src python benchmarks/bench_faults.py [--smoke]
+        [--json out.json] [--repeats N]
+
+--smoke exits non-zero when the off-path gate fails or a recovery run
+diverges from the no-fault tokens.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core.faults import FaultPolicy
+from repro.core.profiler import profile_system
+from repro.core.runtime import (HostKVStore, OffloadDecodeRuntime,
+                                prefill_with_activations)
+from repro.core.scheduler import Scheduler
+from repro.models.transformer import Model
+
+#: PR 6 committed baseline (BENCH_step_breakdown.json kvpr/jnp) used
+#: when the snapshot is missing; the snapshot wins when present.
+FALLBACK_BASELINE_MS = 11.948
+GATE_PCT = 2.0
+
+
+def _baseline_ms(root: pathlib.Path) -> float:
+    p = root / "BENCH_step_breakdown.json"
+    try:
+        with open(p) as f:
+            d = json.load(f)
+        return float(d["cells"]["kvpr/jnp"]["steady"]["step_ms"])
+    except Exception:
+        return FALLBACK_BASELINE_MS
+
+
+def _spill(cfg, model, params, toks, gen):
+    logits, ks, vs, hs = prefill_with_activations(model, params, toks)
+    first = np.asarray(np.argmax(logits, axis=-1), np.int32)
+    store = HostKVStore(cfg, toks.shape[0], toks.shape[1] + gen + 2)
+    store.bulk_fill(np.asarray(ks), np.asarray(vs), np.asarray(hs),
+                    toks.shape[1])
+    return store, first
+
+
+def _decode_once(rt, cfg, model, params, toks, gen, policy=None):
+    """One timed steady decode (fresh spill; fault schedule replayed
+    from the policy's start when one is attached)."""
+    store, first = _spill(cfg, model, params, toks, gen)
+    if policy is not None:
+        policy.reset()
+    t0 = time.perf_counter()
+    tokens, stats = rt.decode(store, first, gen)
+    return time.perf_counter() - t0, np.asarray(tokens), stats
+
+
+def run(batch: int = 2, prompt: int = 48, gen: int = 16,
+        repeats: int = 3, root: pathlib.Path = pathlib.Path(".")
+        ) -> dict:
+    cfg = get_smoke_config("opt-6.7b").replace(
+        num_layers=4, d_model=256, num_heads=4, num_kv_heads=4, d_ff=512)
+    model = Model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    toks = rng.integers(1, cfg.vocab_size,
+                        (batch, prompt)).astype(np.int32)
+    sched = Scheduler(profile_system())
+    baseline_ms = _baseline_ms(root)
+
+    n_faults, backoff_s = 4, 1e-3
+    policy = FaultPolicy(fail_first={"fetch": n_faults})
+    # the three measured phases; repeats are INTERLEAVED round-robin
+    # (never phase-by-phase) so slow-start machine state — cgroup
+    # quota burned by the compile warmup, thermal ramp — biases every
+    # phase equally instead of whichever ran first
+    rt_off = OffloadDecodeRuntime(cfg, params, scheduler=sched,
+                                  mode="kvpr")
+    rt_idle = OffloadDecodeRuntime(cfg, params, scheduler=sched,
+                                   mode="kvpr", faults=FaultPolicy())
+    rt_rec = OffloadDecodeRuntime(cfg, params, scheduler=sched,
+                                  mode="kvpr", faults=policy,
+                                  io_retries=n_faults,
+                                  io_backoff_s=backoff_s)
+    try:
+        best = {"off": None, "idle": None, "rec": None}
+        ref_tokens = idle_tokens = rec_tokens = rec_stats = None
+        for phase_rt, key in ((rt_off, "off"), (rt_idle, "idle"),
+                              (rt_rec, "rec")):          # warmup all
+            _decode_once(phase_rt, cfg, model, params, toks, gen,
+                         policy=policy if key == "rec" else None)
+        for _ in range(repeats):
+            dt, ref_tokens, _ = _decode_once(rt_off, cfg, model,
+                                             params, toks, gen)
+            best["off"] = dt if best["off"] is None \
+                else min(best["off"], dt)
+            dt, idle_tokens, _ = _decode_once(rt_idle, cfg, model,
+                                              params, toks, gen)
+            best["idle"] = dt if best["idle"] is None \
+                else min(best["idle"], dt)
+            dt, rec_tokens, rec_stats = _decode_once(
+                rt_rec, cfg, model, params, toks, gen, policy=policy)
+            best["rec"] = dt if best["rec"] is None \
+                else min(best["rec"], dt)
+    finally:
+        rt_off.close()
+        rt_idle.close()
+        rt_rec.close()
+    t_off, t_idle, t_rec = best["off"], best["idle"], best["rec"]
+    retries = sum(st.retries for st in rec_stats)
+
+    off_ms = t_off / gen * 1e3
+    idle_ms = t_idle / gen * 1e3
+    rec_ms = t_rec / gen * 1e3
+    # idle does strictly more work than off, so idle samples are valid
+    # upper bounds on the off floor — pool them (see module docstring)
+    floor_ms = min(off_ms, idle_ms)
+    overhead_pct = (floor_ms - baseline_ms) / baseline_ms * 100.0
+    gate_ok = overhead_pct < GATE_PCT
+    out = {
+        "benchmark": "fault_layer",
+        "config": {"mode": "kvpr", "batch": batch, "prompt": prompt,
+                   "gen": gen, "repeats": repeats,
+                   "num_layers": cfg.num_layers, "d_model": cfg.d_model},
+        "baseline": {"step_ms": baseline_ms,
+                     "source": "BENCH_step_breakdown.json kvpr/jnp"},
+        "off": {"step_ms": round(off_ms, 3),
+                "floor_step_ms": round(floor_ms, 3),
+                "overhead_vs_baseline_pct": round(overhead_pct, 2)},
+        "idle": {"step_ms": round(idle_ms, 3),
+                 "overhead_vs_off_pct":
+                     round((idle_ms - off_ms) / off_ms * 100.0, 2),
+                 "tokens_identical":
+                     bool(np.array_equal(idle_tokens, ref_tokens))},
+        "recovery": {
+            "injected_faults": n_faults,
+            "retries": int(retries),
+            "backoff_s": backoff_s,
+            "step_ms": round(rec_ms, 3),
+            "recovery_latency_ms": round(t_rec * 1e3 - off_ms * gen, 3),
+            "per_fault_ms": round((t_rec - t_off) / n_faults * 1e3, 3),
+            "tokens_identical":
+                bool(np.array_equal(np.asarray(rec_tokens), ref_tokens)),
+        },
+        "gate": {"limit_pct": GATE_PCT, "ok": bool(gate_ok)},
+    }
+    out["smoke_ok"] = bool(gate_ok
+                           and out["idle"]["tokens_identical"]
+                           and out["recovery"]["tokens_identical"]
+                           and retries == n_faults)
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--prompt", type=int, default=48)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--json", default=None,
+                    help="also write the JSON to this path")
+    ap.add_argument("--smoke", action="store_true",
+                    help="exit 1 on a failed overhead gate or any "
+                         "token divergence under recovery")
+    args = ap.parse_args(argv)
+
+    res = run(batch=args.batch, prompt=args.prompt, gen=args.gen,
+              repeats=args.repeats)
+    text = json.dumps(res, indent=2)
+    print(text)
+    if args.json:
+        with open(args.json, "w") as f:
+            f.write(text + "\n")
+    if args.smoke and not res["smoke_ok"]:
+        print(f"SMOKE FAIL: fault-layer gate "
+              f"(off overhead {res['off']['overhead_vs_baseline_pct']}% "
+              f">= {GATE_PCT}% of baseline "
+              f"{res['baseline']['step_ms']}ms, or recovery diverged: "
+              f"idle_identical={res['idle']['tokens_identical']} "
+              f"rec_identical={res['recovery']['tokens_identical']} "
+              f"retries={res['recovery']['retries']})",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

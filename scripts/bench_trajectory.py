@@ -3,7 +3,8 @@
 
 The repo commits machine-readable benchmark snapshots at the root
 (BENCH_step_breakdown.json, BENCH_prefix.json,
-BENCH_chunked_prefill.json) so perf-relevant PRs carry their measured
+BENCH_chunked_prefill.json, BENCH_faults.json) so perf-relevant PRs
+carry their measured
 effect.  This script renders them side by side — run it after
 regenerating any snapshot to eyeball the trajectory:
 
@@ -21,7 +22,7 @@ import pathlib
 import sys
 
 FILES = ["BENCH_step_breakdown.json", "BENCH_prefix.json",
-         "BENCH_chunked_prefill.json"]
+         "BENCH_chunked_prefill.json", "BENCH_faults.json"]
 
 
 def _load(root: pathlib.Path):
@@ -109,6 +110,26 @@ def main(argv=None) -> int:
             failed.append("chunked_prefill identity=false")
         if d.get("smoke_ok") is False:
             failed.append("chunked_prefill smoke_ok=false")
+
+    if "BENCH_faults.json" in data:
+        d = data["BENCH_faults.json"]
+        off, idle, rec = d["off"], d["idle"], d["recovery"]
+        print("== fault layer ==")
+        print(f"  off {off['step_ms']:.2f} ms/step "
+              f"(floor {off['floor_step_ms']:.2f}, "
+              f"{off['overhead_vs_baseline_pct']:+.2f}% vs "
+              f"{d['baseline']['step_ms']:.2f} baseline)  "
+              f"idle {idle['step_ms']:.2f}")
+        print(f"  recovery {rec['per_fault_ms']:.2f} ms/fault "
+              f"({rec['injected_faults']} injected, "
+              f"{rec['retries']} retries)")
+        if not d.get("gate", {}).get("ok", True):
+            failed.append("faults gate ok=false")
+        if not idle.get("tokens_identical", True) \
+                or not rec.get("tokens_identical", True):
+            failed.append("faults tokens_identical=false")
+        if d.get("smoke_ok") is False:
+            failed.append("faults smoke_ok=false")
 
     missing = [f for f in FILES if f not in data]
     if missing:

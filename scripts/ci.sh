@@ -26,7 +26,10 @@ for arg in "$@"; do
 done
 
 if [[ "$INSTALL" == "1" ]]; then
-    python -m pip install --quiet "jax[cpu]" pytest hypothesis
+    # pytest-timeout enforces the per-test deadline in pyproject.toml;
+    # without it tests/conftest.py falls back to a SIGALRM shim.
+    python -m pip install --quiet "jax[cpu]" pytest pytest-timeout \
+        hypothesis
 fi
 
 # 1. Collection must be clean: a bad import in any test file (e.g. an
@@ -83,5 +86,12 @@ timeout "${PREFIX_TIMEOUT:-300}" python benchmarks/bench_prefix.py --smoke
 #    tokens (see docs/performance.md).
 timeout "${CHUNKED_TIMEOUT:-300}" \
     python benchmarks/bench_chunked_prefill.py --smoke
+
+# 8. Fault-layer smoke: the fault-injection/recovery layer must be
+#    free when disabled (step-time gate vs the committed baseline) and
+#    token-exact under injected transient faults (see
+#    docs/robustness.md).
+timeout "${FAULTS_TIMEOUT:-600}" \
+    python benchmarks/bench_faults.py --smoke
 
 echo "ci.sh: all checks passed"

@@ -1,0 +1,230 @@
+"""Fault model for the offload pipeline: the typed error taxonomy and
+the deterministic fault-injection policy.
+
+KVPR's premise is a GPU kept busy while KV streams over an unreliable,
+contended PCIe link — so the runtime has to assume transfers CAN stall,
+fail transiently, or die outright, and every failure mode has to be
+reproducible in a test.  This module supplies both halves:
+
+  - the **error taxonomy** the fence/transfer machinery raises
+    (``TransferError`` and its subclasses) — callers recover by TYPE:
+    transient errors are retried, stalls abort the step within the
+    configured deadline, write-back errors poison the step (the host
+    copy is incomplete, no fallback can reconstruct it), and
+    per-request faults are contained to their owning request;
+  - the **``FaultPolicy``** injection hook threaded through
+    ``TransferEngine`` / ``HostKVStore`` / the serving engine: seeded,
+    thread-safe, and able to express injected delays, slow-link
+    throttling, transient and persistent I/O failures, hard
+    per-request failures, kernel-launch failures, and a
+    dead-store-thread mode (an op that hangs until released).
+
+The recovery semantics that consume these types live in
+``core/runtime.py`` (retries, fence timeouts, degradation ladder) and
+``serving/api.py`` (per-request isolation); docs/robustness.md is the
+narrative reference.
+"""
+from __future__ import annotations
+
+import dataclasses
+import random
+import threading
+import time
+from typing import Dict, FrozenSet, Optional
+
+__all__ = [
+    "FaultPolicy", "KernelLaunchError", "RequestFaultError",
+    "TransferError", "TransferStallError", "TransientTransferError",
+    "WriteBackError",
+]
+
+
+class TransferError(RuntimeError):
+    """Base of every typed offload-pipeline failure."""
+
+
+class TransientTransferError(TransferError):
+    """A retryable I/O failure (contended link, spurious copy error).
+    The transfer engine retries these with exponential backoff; one
+    that survives every retry escalates to its caller."""
+
+
+class TransferStallError(TransferError):
+    """A fence or fetch exceeded its deadline (``fence_timeout_s``):
+    the store/copy pipeline is stalled or dead.  Raised by the fence
+    watchdog instead of hanging; never retried and never degraded —
+    the step aborts and the error reaches the caller."""
+
+
+class WriteBackError(TransferError):
+    """A host write-back failed after retries: the host copy of the KV
+    cache / activations is now incomplete, so NO fallback (recompute
+    included) can reconstruct the lost state.  Fence waits wrap
+    store-side errors in this type so the runtime knows degradation is
+    unsound and aborts instead."""
+
+
+class RequestFaultError(TransferError):
+    """A hard failure attributable to ONE request (its admission
+    write-back, restore, or tagged transfer).  The serving engine
+    contains it: that request finishes with ``finish_reason="error"``
+    and the rest of the batch continues token-identically."""
+
+    def __init__(self, uid: int, op: str = "io"):
+        super().__init__(f"injected hard fault for request uid={uid} "
+                         f"({op})")
+        self.uid = uid
+        self.op = op
+
+
+class KernelLaunchError(RuntimeError):
+    """A Pallas kernel failed to trace/compile/launch.  The runtime
+    degrades the step to the jnp oracle path (logged once,
+    ``StepStats.kernel_path`` reflects it); tokens are identical either
+    way."""
+
+
+@dataclasses.dataclass
+class FaultPolicy:
+    """Deterministic, seeded fault injection for the offload pipeline.
+
+    Threaded into ``TransferEngine`` (every fetch/store/restore op
+    calls ``on_op``), ``OffloadDecodeRuntime`` (``on_kernel_launch``
+    before each Pallas step) and the serving engine (``on_admit`` per
+    admitted request).  All decisions derive from ``random.Random(
+    seed)`` plus per-kind op counters, so a given policy replays the
+    same fault sequence every run.  Fields are mutable on purpose:
+    tests flip rates mid-scenario (e.g. poison write-backs, then heal
+    the link and assert the engine recovered).
+
+    Op kinds: ``"fetch"`` (per-layer KV/activation fetch), ``"store"``
+    (decode write-back, chunk write-back, slot fills), ``"restore"``
+    (prefix-cache restore).
+
+    dead_store_after: the (n+1)-th store op HANGS (holding the store
+    pool's worker) until ``release()`` — the fence watchdog must
+    convert that into a ``TransferStallError`` within the configured
+    timeout.  ``TransferEngine.close()`` releases the hang so shutdown
+    never deadlocks.
+    """
+
+    seed: int = 0
+    # -- injected latency -------------------------------------------------
+    fetch_delay_s: float = 0.0       # added to every fetch op
+    store_delay_s: float = 0.0       # added to every store op
+    link_bytes_per_s: Optional[float] = None   # slow-link throttle:
+    #                                  sleep nbytes/rate per transfer
+    # -- transient failures (seeded probability per op) -------------------
+    fetch_fail_rate: float = 0.0
+    store_fail_rate: float = 0.0
+    restore_fail_rate: float = 0.0
+    # -- deterministic transient failures: fail the FIRST n ops per kind
+    fail_first: Dict[str, int] = dataclasses.field(default_factory=dict)
+    # -- hard per-request failures ----------------------------------------
+    hard_fail_uids: FrozenSet[int] = frozenset()        # at admission
+    hard_fail_store_uids: FrozenSet[int] = frozenset()  # at tagged I/O
+    # -- dead store thread: store op #(n+1) hangs until release() ---------
+    dead_store_after: Optional[int] = None
+    # -- kernel launches: fail the first n launches -----------------------
+    kernel_fail_launches: int = 0
+
+    def __post_init__(self) -> None:
+        self._lock = threading.Lock()
+        self._rng = random.Random(self.seed)
+        self.ops: Dict[str, int] = {}          # ops seen per kind
+        self.injected: Dict[str, int] = {}     # faults raised per kind
+        self._fail_first_left = dict(self.fail_first)
+        self._released = threading.Event()
+
+    # ------------------------------------------------------------- hooks
+
+    def _rate_for(self, kind: str) -> float:
+        return {"fetch": self.fetch_fail_rate,
+                "store": self.store_fail_rate,
+                "restore": self.restore_fail_rate}.get(kind, 0.0)
+
+    def _delay_for(self, kind: str) -> float:
+        return (self.store_delay_s if kind == "store"
+                else self.fetch_delay_s)
+
+    def _record(self, kind: str) -> None:
+        self.injected[kind] = self.injected.get(kind, 0) + 1
+
+    def on_op(self, kind: str, uid: Optional[int] = None) -> None:
+        """Called at the start of every injectable transfer op.  May
+        sleep (injected delay), raise ``RequestFaultError`` (hard
+        per-request), raise ``TransientTransferError`` (transient), or
+        hang until ``release()`` (dead-store mode)."""
+        with self._lock:
+            n = self.ops.get(kind, 0)
+            self.ops[kind] = n + 1
+            if uid is not None and uid in self.hard_fail_store_uids:
+                self._record(kind)
+                raise RequestFaultError(uid, kind)
+            hang = (kind == "store"
+                    and self.dead_store_after is not None
+                    and n >= self.dead_store_after)
+            transient = False
+            if not hang:
+                left = self._fail_first_left.get(kind, 0)
+                if left > 0:
+                    self._fail_first_left[kind] = left - 1
+                    transient = True
+                elif (self._rate_for(kind) > 0.0
+                      and self._rng.random() < self._rate_for(kind)):
+                    transient = True
+            if transient or hang:
+                self._record(kind)
+        if hang:
+            # dead store thread: hold this pool worker until the
+            # engine is closed (release()).  The fence watchdog turns
+            # the resulting stall into TransferStallError.
+            self._released.wait()
+            return
+        if transient:
+            raise TransientTransferError(
+                f"injected transient {kind} failure")
+        d = self._delay_for(kind)
+        if d > 0.0:
+            time.sleep(d)
+
+    def throttle(self, nbytes: int) -> None:
+        """Slow-link emulation: charge ``nbytes`` against the injected
+        link bandwidth (called by the transfer engine after a copy)."""
+        if self.link_bytes_per_s:
+            time.sleep(nbytes / float(self.link_bytes_per_s))
+
+    def on_admit(self, uid: int) -> None:
+        """Per-request admission hook (every backend, including
+        resident ones with no transfer ops): a uid in
+        ``hard_fail_uids`` fails hard, containable to that request."""
+        if uid in self.hard_fail_uids:
+            with self._lock:
+                self._record("admit")
+            raise RequestFaultError(uid, "admit")
+
+    def on_kernel_launch(self) -> None:
+        """Called before each Pallas-path layer step; fails the first
+        ``kernel_fail_launches`` launches."""
+        with self._lock:
+            if self.kernel_fail_launches > 0:
+                self.kernel_fail_launches -= 1
+                self._record("kernel")
+                raise KernelLaunchError("injected kernel launch failure")
+
+    # ----------------------------------------------------------- control
+
+    def release(self) -> None:
+        """Un-hang any dead-store threads (idempotent; called by
+        ``TransferEngine.close()`` so shutdown never deadlocks)."""
+        self._released.set()
+
+    def reset(self) -> None:
+        """Restart the deterministic schedule (counters, RNG,
+        fail-first budgets, the dead-store release latch)."""
+        with self._lock:
+            self._rng = random.Random(self.seed)
+            self.ops = {}
+            self.injected = {}
+            self._fail_first_left = dict(self.fail_first)
+            self._released = threading.Event()

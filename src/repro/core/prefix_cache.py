@@ -244,6 +244,8 @@ class PrefixCacheStats:
     tokens_stored: int = 0
     bytes_stored: int = 0
     evictions: int = 0
+    invalidations: int = 0       # poisoned entries evicted after a
+                                 # failed restore (degradation ladder)
 
     @property
     def hit_rate(self) -> float:
@@ -315,6 +317,22 @@ class PrefixCache:
             self._tokens_stored += len(toks)
             self._stats.tokens_inserted += len(toks)
             self._evict_locked()
+            return True
+
+    def invalidate(self, tokens) -> bool:
+        """Evict the entry ending exactly at ``tokens`` — the poisoned-
+        node path of the degradation ladder: when restoring an entry's
+        blocks fails, the serving engine falls back to cold prefill and
+        invalidates the entry so later lookups don't keep rediscovering
+        a bad block.  Returns whether an entry was removed."""
+        toks = tuple(int(t) for t in tokens)
+        with self._lock:
+            entry = self._entries.pop(toks, None)
+            if entry is None:
+                return False
+            self.index.remove(toks)
+            self._tokens_stored -= len(toks)
+            self._stats.invalidations += 1
             return True
 
     def _evict_locked(self) -> None:

@@ -60,9 +60,12 @@ carry any finite garbage without changing a single token.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import threading
 import time
+import warnings
 from concurrent.futures import ThreadPoolExecutor
+from concurrent.futures import TimeoutError as FuturesTimeout
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -71,6 +74,8 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.cost_model import HardwareProfile
+from repro.core.faults import (FaultPolicy, TransferStallError,
+                               TransientTransferError, WriteBackError)
 from repro.core.scheduler import ExecutionPlan, Scheduler
 from repro.core import kvquant as KQ
 from repro.core import recompute as RC
@@ -105,7 +110,8 @@ class HostKVStore:
 
     def __init__(self, cfg: ModelConfig, batch: int, max_len: int,
                  dtype=np.float32, compress: Optional[str] = None,
-                 group: int = 32):
+                 group: int = 32,
+                 fence_timeout_s: Optional[float] = None):
         Lh, KV, dh, h = (cfg.num_layers, cfg.num_kv_heads, cfg.dh,
                          cfg.d_model)
         self.compress = compress
@@ -129,6 +135,7 @@ class HostKVStore:
         self.seq_lens = np.zeros((batch,), np.int64)
         self.lock = threading.Lock()
         self.num_layers = Lh
+        self.fence_timeout_s = fence_timeout_s
         self._fences: List[Optional[object]] = [None] * Lh
         # chunk fences bucketed per slot (None = whole-batch fills), so
         # one slot's admission never waits another's in-flight chunks
@@ -150,13 +157,43 @@ class HostKVStore:
         """Record layer li's in-flight write-back (a Future)."""
         self._fences[layer] = fut
 
+    @staticmethod
+    def _fence_result(fut, timeout: Optional[float], what: str):
+        """Resolve one write-back future with bounded patience and a
+        typed verdict: a deadline miss becomes ``TransferStallError``
+        (the watchdog — the pipeline is stalled/dead, never hang); an
+        error raised inside the store task becomes ``WriteBackError``
+        (the host copy is now incomplete — recompute fallbacks are
+        unsound, callers must abort/contain instead).  Already-typed
+        errors (a stall seen through a second fence, a per-request
+        fault on a tagged store) pass through unwrapped so callers can
+        still dispatch on type."""
+        try:
+            return fut.result(timeout)
+        except FuturesTimeout:
+            raise TransferStallError(
+                f"{what} write-back exceeded fence timeout "
+                f"({timeout:.3g}s): store pipeline stalled") from None
+        except (TransferStallError, WriteBackError):
+            raise
+        except Exception as e:
+            from repro.core.faults import RequestFaultError
+            if isinstance(e, RequestFaultError):
+                raise
+            raise WriteBackError(
+                f"{what} write-back failed: {type(e).__name__}: {e}"
+            ) from e
+
     def wait_fence(self, layer: int) -> None:
         """Block until layer li's last write-back has landed (no-op when
         none is in flight).  Fetches call this so a step never reads a
-        layer the previous step is still storing."""
+        layer the previous step is still storing.  Bounded by
+        ``fence_timeout_s`` (None = wait forever): a stalled store pool
+        raises ``TransferStallError`` instead of deadlocking decode."""
         f = self._fences[layer]
         if f is not None:
-            f.result()
+            self._fence_result(f, self.fence_timeout_s,
+                               f"layer {layer}")
 
     _ALL_SLOTS = object()        # wait_chunks sentinel: every bucket
 
@@ -179,7 +216,13 @@ class HostKVStore:
         was submitted, so the only un-overlapped write-back is the
         final chunk's (exactly the pipeline-drain term the chunk_split
         cost model charges) and a concurrent admission's in-flight
-        chunks are never waited on."""
+        chunks are never waited on.
+
+        The WHOLE bucket is drained even when a chunk errored (so no
+        orphaned future survives to poison a later tenant of the slot);
+        the first error is re-raised after the drain, typed by
+        ``_fence_result``."""
+        first_err: Optional[BaseException] = None
         while True:
             with self._chunk_lock:
                 if slot is self._ALL_SLOTS:
@@ -188,16 +231,42 @@ class HostKVStore:
                 else:
                     bucket = self._chunk_fences.get(slot)
                 if not bucket:
-                    return
+                    break
                 fut = bucket.pop()
-            fut.result()
+            try:
+                self._fence_result(fut, self.fence_timeout_s, "chunk")
+            except Exception as e:
+                if first_err is None:
+                    first_err = e
+        if first_err is not None:
+            raise first_err
 
-    def sync(self) -> None:
-        """Drain every in-flight write-back (bulk writes + end of decode
-        call this; the steady-state decode loop never does)."""
+    def sync(self, strict: bool = True) -> List[BaseException]:
+        """Drain EVERY in-flight write-back (bulk writes + end of decode
+        call this; the steady-state decode loop never does).
+
+        All fences and chunk buckets are drained even when some
+        errored, and drained fence slots are cleared — after ``sync``
+        the store carries no poisoned future that could resurface at an
+        unrelated caller's next fence wait.  ``strict=True`` (default)
+        re-raises the first error; ``strict=False`` is the
+        exception-path/cleanup form — it swallows and returns the
+        collected errors so a failing caller can still leave the engine
+        reusable."""
+        errs: List[BaseException] = []
         for li in range(len(self._fences)):
-            self.wait_fence(li)
-        self.wait_chunks()
+            try:
+                self.wait_fence(li)
+            except Exception as e:
+                errs.append(e)
+            self._fences[li] = None
+        try:
+            self.wait_chunks()
+        except Exception as e:
+            errs.append(e)
+        if strict and errs:
+            raise errs[0]
+        return errs
 
     # ------------------------------------------------------------- writes
 
@@ -358,15 +427,24 @@ class TransferEngine:
     _KV_KEYS = ("wk", "wv")
 
     def __init__(self, n_copy_threads: int = 2, host_layers=None,
-                 fine_grained: bool = True):
+                 fine_grained: bool = True, *,
+                 faults: Optional[FaultPolicy] = None,
+                 retries: int = 2, backoff_s: float = 0.01):
         self.pool = ThreadPoolExecutor(max_workers=n_copy_threads)
         self.store_pool = ThreadPoolExecutor(max_workers=1)
         self._host_layers = host_layers
         self.fine_grained = fine_grained
+        self.faults = faults
+        self.retries = max(0, int(retries))
+        self.backoff_s = float(backoff_s)
         self._staging: Dict[tuple, np.ndarray] = {}
         self.staging_allocs = 0
         self._t_fence = 0.0
         self._t_fence_lock = threading.Lock()
+        self._retry_count = 0
+        self._retry_lock = threading.Lock()
+        self._closed = False
+        self._close_lock = threading.Lock()
 
     def submit(self, fn, *args):
         return self.pool.submit(fn, *args)
@@ -374,10 +452,64 @@ class TransferEngine:
     def submit_store(self, fn, *args):
         return self.store_pool.submit(fn, *args)
 
+    # ------------------------------------------------------- faulty I/O
+    # Every injectable transfer op goes through run_io: the FaultPolicy
+    # hook fires first (so injected faults hit before any bytes move),
+    # then transient failures — injected OR real (OSError from a copy)
+    # — retry with exponential backoff up to `retries` times.  Stalls,
+    # write-back poisons, and per-request hard faults are NOT retryable
+    # and escalate immediately.
+
+    def run_io(self, kind: str, fn, *args, uid: Optional[int] = None,
+               **kwargs):
+        """Run one transfer op synchronously with fault injection and
+        bounded transient-failure retries (``kind`` is the fault-policy
+        op kind: "fetch" | "store" | "restore")."""
+        attempt = 0
+        while True:
+            try:
+                if self.faults is not None:
+                    self.faults.on_op(kind, uid=uid)
+                return fn(*args, **kwargs)
+            except (TransientTransferError, OSError):
+                attempt += 1
+                if attempt > self.retries:
+                    raise
+                with self._retry_lock:
+                    self._retry_count += 1
+                time.sleep(self.backoff_s * (2 ** (attempt - 1)))
+
+    def submit_io(self, kind: str, fn, *args, uid: Optional[int] = None,
+                  **kwargs):
+        """`submit`, through the fault/retry layer."""
+        return self.pool.submit(functools.partial(
+            self.run_io, kind, fn, *args, uid=uid, **kwargs))
+
+    def submit_store_io(self, kind: str, fn, *args,
+                        uid: Optional[int] = None, **kwargs):
+        """`submit_store`, through the fault/retry layer."""
+        return self.store_pool.submit(functools.partial(
+            self.run_io, kind, fn, *args, uid=uid, **kwargs))
+
+    def drain_retries(self) -> int:
+        """Transient-failure retries performed since the last drain
+        (feeds ``StepStats.retries``)."""
+        with self._retry_lock:
+            n, self._retry_count = self._retry_count, 0
+        return n
+
     def close(self) -> None:
         """Shut down the copy and store pools (joins the worker
-        threads; queued work finishes first).  Idempotent — safe to
-        call from both an owning runtime and a context manager."""
+        threads; queued work finishes first).  Idempotent and safe
+        under concurrency (flag + lock), and releases any fault-injected
+        dead-store hang first so shutdown never deadlocks on a worker
+        the policy itself parked."""
+        with self._close_lock:
+            if self._closed:
+                return
+            self._closed = True
+        if self.faults is not None:
+            self.faults.release()
         self.pool.shutdown(wait=True)
         self.store_pool.shutdown(wait=True)
 
@@ -410,7 +542,7 @@ class TransferEngine:
 
     def fetch_layer(self, store: HostKVStore, layer: int,
                     ls: np.ndarray, s_strs: np.ndarray,
-                    l_pad: int, s_pad: int):
+                    l_pad: int, s_pad: int, stage_ns: str = ""):
         """Copy host slices to device (the 'PCIe' transfer).
 
         ls / s_strs are per-slot recompute lengths and streamed lengths;
@@ -431,6 +563,11 @@ class TransferEngine:
         i.e. after its (aliased) inputs were fully read, which makes
         the overwrite safe.  When device_put copies instead (other
         backends), the extra wait is a cheap no-op.
+
+        stage_ns namespaces the staging buffers: a degradation-ladder
+        fallback fetch passes its own namespace so it can never share
+        staging memory with a timed-out primary fetch that may still be
+        writing the default-namespace buffers from a pool thread.
         """
         t0 = time.perf_counter()
         store.wait_fence(layer)
@@ -448,7 +585,7 @@ class TransferEngine:
         b = store.batch
         # activations: every slot's window starts at 0, so uniform and
         # ragged share one whole-batch copy of the padded prefix
-        h_np = self._stage("h", parity,
+        h_np = self._stage(stage_ns + "h", parity,
                            (b, max(l_pad, 1)) + store.act.shape[3:],
                            store.act.dtype)
         h_np[:] = store.act[layer, :, :max(l_pad, 1)]
@@ -456,10 +593,10 @@ class TransferEngine:
         uniform = bool((ls == ls[0]).all())
         if uniform:
             k_np, v_np = self._slice_uniform(store, layer, int(ls[0]),
-                                             s_pad, parity)
+                                             s_pad, parity, stage_ns)
         else:
             k_np, v_np = self._gather_ragged(store, layer, ls, s_pad,
-                                             parity)
+                                             parity, stage_ns)
         h_res = jax.device_put(h_np)
         if store.compress == "int4":
             k_str = tuple(jax.device_put(a) for a in k_np)
@@ -470,6 +607,8 @@ class TransferEngine:
             v_str = jax.device_put(v_np)
             kv_bytes = k_str.nbytes + v_str.nbytes
         nbytes = (h_res.nbytes if l_pad else 0) + (kv_bytes if s_pad else 0)
+        if self.faults is not None:
+            self.faults.throttle(nbytes)
         return h_res, k_str, v_str, nbytes
 
     def _kv_bufs(self, store: HostKVStore):
@@ -478,7 +617,8 @@ class TransferEngine:
                     ("vp", "vs", "vz"), tuple(store.vq))
         return (("k",), (store.k,), ("v",), (store.v,))
 
-    def _slice_uniform(self, store, layer, l, s_pad, parity):
+    def _slice_uniform(self, store, layer, l, s_pad, parity,
+                       stage_ns=""):
         """Whole-batch window [l, l + s_pad) copied into staging."""
         sl = slice(l, l + s_pad) if s_pad else slice(0, 1)
         k_names, k_srcs, v_names, v_srcs = self._kv_bufs(store)
@@ -487,7 +627,8 @@ class TransferEngine:
             outs = []
             for name, src in zip(names, srcs):
                 win = src[layer, :, sl]
-                out = self._stage(name, parity, win.shape, src.dtype)
+                out = self._stage(stage_ns + name, parity, win.shape,
+                                  src.dtype)
                 out[:] = win
                 outs.append(out)
             return outs
@@ -498,7 +639,8 @@ class TransferEngine:
             return tuple(k_np), tuple(v_np)
         return k_np[0], v_np[0]
 
-    def _gather_ragged(self, store, layer, ls, s_pad, parity):
+    def _gather_ragged(self, store, layer, ls, s_pad, parity,
+                       stage_ns=""):
         """Vectorized ragged gather: one batched strided take per buffer
         (no per-slot Python loop, no allocation).  Slot i's window is
         [l_i, l_i + s_pad), clamped to the preallocated max_len; rows
@@ -515,7 +657,8 @@ class TransferEngine:
             outs = []
             for name, src in zip(names, srcs):
                 tail = src.shape[3:]
-                out = self._stage(name, parity, (b, w) + tail, src.dtype)
+                out = self._stage(stage_ns + name, parity, (b, w) + tail,
+                                  src.dtype)
                 if s_pad:
                     flat_src = src[layer].reshape(b * max_len, -1)
                     np.take(flat_src, flat_idx, axis=0,
@@ -712,6 +855,12 @@ class StepStats:
     s_pad: int = 0
     kernel_path: bool = False   # attention ran the Pallas suite (vs
                                 # the jnp oracle path)
+    retries: int = 0            # transient transfer/store retries the
+                                # fault layer performed in this step's
+                                # window
+    fetch_fallbacks: int = 0    # layers that degraded to the full-
+                                # recompute (l = p) fetch path after a
+                                # failed/stalled KV fetch
 
 
 class OffloadDecodeRuntime:
@@ -737,7 +886,10 @@ class OffloadDecodeRuntime:
                  align: int = 1, n_copy_threads: int = 2,
                  compress: Optional[str] = None, group: int = 32,
                  offload_weights: bool = False,
-                 fine_grained: bool = True, kernels="auto"):
+                 fine_grained: bool = True, kernels="auto",
+                 faults: Optional[FaultPolicy] = None,
+                 io_retries: int = 2, io_backoff_s: float = 0.01,
+                 fence_timeout_s: Optional[float] = None):
         self.cfg = cfg
         self.params = params
         self.scheduler = scheduler or Scheduler(hw)
@@ -747,6 +899,8 @@ class OffloadDecodeRuntime:
         self.compress = compress
         self.group = group
         self.offload_weights = offload_weights
+        self.faults = faults
+        self.fence_timeout_s = fence_timeout_s
         host_layers = None
         if offload_weights:
             n_layers = jax.tree.leaves(params["layers"])[0].shape[0]
@@ -755,11 +909,20 @@ class OffloadDecodeRuntime:
                              params["layers"])
                 for i in range(n_layers)]
         self.xfer = TransferEngine(n_copy_threads, host_layers,
-                                   fine_grained)
+                                   fine_grained, faults=faults,
+                                   retries=io_retries,
+                                   backoff_s=io_backoff_s)
         self.compute = ComputeStep(cfg, compress=compress, group=group,
                                    kernels=kernels)
         self._t_store = 0.0
         self._t_store_lock = threading.Lock()
+        # degradation-ladder state: sticky jnp-oracle fallback after a
+        # kernel launch failure, and one-shot warnings per rung
+        self._oracle_step: Optional[ComputeStep] = None
+        self._kernel_fallback = False
+        self._warned_kernel = False
+        self._warned_fetch_fb = False
+        self._fetch_fallbacks = 0
 
     # ---------------------------------------------------------- lifecycle
 
@@ -784,6 +947,15 @@ class OffloadDecodeRuntime:
             group=self.group)
 
     # ----------------------------------------------------------- plumbing
+
+    def _oracle(self) -> ComputeStep:
+        """The jnp-oracle ComputeStep the kernel path degrades to
+        (lazily built: the fault-free engine never pays for it)."""
+        if self._oracle_step is None:
+            self._oracle_step = ComputeStep(
+                self.cfg, compress=self.compress, group=self.group,
+                kernels="off")
+        return self._oracle_step
 
     def _store_layer(self, store: HostKVStore, li: int, k_new, v_new,
                      h_new, pos) -> None:
@@ -845,14 +1017,18 @@ class OffloadDecodeRuntime:
         else:
             store_pos = np.where(active, seq_lens, -1)
 
+        comp = self._oracle() if self._kernel_fallback else self.compute
+        fb = None             # lazy fallback geometry (built on first
+        #                       failed fetch of the step, reused after)
+        fb_count0 = self._fetch_fallbacks
         t_wait = 0.0
         nbytes_total = 0
         # prefetch layer 0 (weights first when offloaded — they gate
         # recomputation; then the KV/activation stream)
         w_fut = (self.xfer.submit_weights(0) if self.offload_weights
                  else None)
-        fut = self.xfer.submit(self.xfer.fetch_layer, store, 0, ls,
-                               s_strs, l_pad, s_pad)
+        fut = self.xfer.submit_io("fetch", self.xfer.fetch_layer, store,
+                                  0, ls, s_strs, l_pad, s_pad)
         for li in range(cfg.num_layers):
             tw0 = time.perf_counter()
             if self.offload_weights:
@@ -860,24 +1036,81 @@ class OffloadDecodeRuntime:
                 nbytes_total += nb_w
             else:
                 lp = jax.tree.map(lambda a: a[li], params["layers"])
-            h_res, k_str, v_str, nb = fut.result()
+            cur_lp, cur_sp = l_pad, s_pad
+            cur_lv, cur_sv = l_valid, s_valid
+            try:
+                h_res, k_str, v_str, nb = fut.result(
+                    self.fence_timeout_s)
+            except (TransferStallError, WriteBackError):
+                # the store pipeline is stalled or the host copy is
+                # already incomplete — no recompute can fix that; abort
+                # the step and let the serving layer contain/escalate
+                raise
+            except (FuturesTimeout, TransientTransferError,
+                    OSError) as e:
+                # degradation ladder: the streamed-KV fetch is gone
+                # (retries exhausted or deadline missed) — recompute
+                # the WHOLE prefix from activations instead (the
+                # paper's split at the l = p endpoint), fetched
+                # synchronously in a private staging namespace so the
+                # abandoned fetch can't scribble on our buffers
+                if fb is None:
+                    g = plan.fallback_geometry(seq_lens,
+                                               max_len=store.max_len)
+                    fb = (g, jnp.asarray(g.ls, jnp.int32),
+                          jnp.asarray(g.s_strs, jnp.int32))
+                if not self._warned_fetch_fb:
+                    self._warned_fetch_fb = True
+                    warnings.warn(
+                        f"KV fetch failed ({type(e).__name__}); "
+                        "degrading to full recomputation from "
+                        "activations (split l = p)")
+                g, fb_lv, fb_sv = fb
+                h_res, k_str, v_str, nb = self.xfer.fetch_layer(
+                    store, li, g.ls, g.s_strs, g.l_pad, g.s_pad,
+                    stage_ns="fb:")
+                cur_lp, cur_sp = g.l_pad, g.s_pad
+                cur_lv, cur_sv = fb_lv, fb_sv
+                self._fetch_fallbacks += 1
             t_wait += time.perf_counter() - tw0
             nbytes_total += nb
             if li + 1 < cfg.num_layers:
                 if self.offload_weights:
                     w_fut = self.xfer.submit_weights(li + 1)
-                fut = self.xfer.submit(self.xfer.fetch_layer, store,
-                                       li + 1, ls, s_strs, l_pad, s_pad)
-            x, k_new, v_new, h_new = self.compute.layer(
-                x, lp, h_res, k_str, v_str, positions, l_valid, s_valid,
-                l_pad=l_pad, s_pad=s_pad)
+                fut = self.xfer.submit_io(
+                    "fetch", self.xfer.fetch_layer, store, li + 1, ls,
+                    s_strs, l_pad, s_pad)
+            try:
+                if comp.kernel_path and self.faults is not None:
+                    self.faults.on_kernel_launch()
+                x, k_new, v_new, h_new = comp.layer(
+                    x, lp, h_res, k_str, v_str, positions, cur_lv,
+                    cur_sv, l_pad=cur_lp, s_pad=cur_sp)
+            except Exception as e:
+                if not comp.kernel_path:
+                    raise
+                # degradation ladder: kernel launch failed — fall back
+                # to the jnp oracle path, sticky for the runtime's
+                # lifetime (relaunching a failed kernel every step
+                # would re-pay tracing just to fail again)
+                if not self._warned_kernel:
+                    self._warned_kernel = True
+                    warnings.warn(
+                        f"Pallas kernel launch failed "
+                        f"({type(e).__name__}: {e}); falling back to "
+                        "the jnp oracle path")
+                self._kernel_fallback = True
+                comp = self._oracle()
+                x, k_new, v_new, h_new = comp.layer(
+                    x, lp, h_res, k_str, v_str, positions, cur_lv,
+                    cur_sv, l_pad=cur_lp, s_pad=cur_sp)
             # paper Alg. 1 store_cache/store_activation, fence-grained:
             # submit the write-back NOW; only the NEXT step's fetch of
             # this layer waits on it, so stores overlap the tail of this
             # step and the head of the next
-            store.set_fence(li, self.xfer.submit_store(
-                self._store_layer, store, li, k_new, v_new, h_new,
-                store_pos))
+            store.set_fence(li, self.xfer.submit_store_io(
+                "store", self._store_layer, store, li, k_new, v_new,
+                h_new, store_pos))
 
         logits = self.compute.finalize(params, x)
         store.seq_lens[active] += 1
@@ -891,7 +1124,9 @@ class OffloadDecodeRuntime:
             t_fence=self.xfer.drain_t_fence(),
             retraces=max(0, traces1 - traces0) if traces0 >= 0 else 0,
             l_pad=l_pad, s_pad=s_pad,
-            kernel_path=self.compute.kernel_path)
+            kernel_path=comp.kernel_path,
+            retries=self.xfer.drain_retries(),
+            fetch_fallbacks=self._fetch_fallbacks - fb_count0)
         return logits, stats
 
     # -------------------------------------------------------------- decode
@@ -1089,8 +1324,10 @@ class ChunkedPrefill:
     def __init__(self, model, params, tokens, chunk: int, *,
                  prompt_lens=None, store: Optional[HostKVStore] = None,
                  xfer: Optional[TransferEngine] = None,
-                 slot: Optional[int] = None, q_block: int = 512):
+                 slot: Optional[int] = None, q_block: int = 512,
+                 uid: Optional[int] = None):
         self.model, self.params = model, params
+        self.uid = uid
         self.tokens = jnp.asarray(tokens)
         self.b, self.n = self.tokens.shape
         self.chunk = max(1, int(chunk))
@@ -1141,9 +1378,14 @@ class ChunkedPrefill:
         self.v_pre = (vs if self.v_pre is None
                       else jnp.concatenate([self.v_pre, vs], axis=2))
         if self.store is not None:
+            # uid-tagged, through the fault/retry layer: a hard fault
+            # on THIS request's chunk write-back surfaces (typed, with
+            # the owning uid) at this slot's wait_chunks, never at
+            # another request's fence
             self.store.push_chunk_fence(
-                self.xfer.submit_store(self._store_chunk, ks, vs, hs,
-                                       self.pos), slot=self.slot)
+                self.xfer.submit_store_io(
+                    "store", self._store_chunk, ks, vs, hs, self.pos,
+                    uid=self.uid), slot=self.slot)
         self.pos += w
         self.chunks_run += 1
         return w
@@ -1202,7 +1444,8 @@ _recompute_prefix_kv = jax.jit(_recompute_prefix_kv,
 
 def restore_prefix_kv(cfg: ModelConfig, params, entry_ks, entry_vs,
                       entry_hs, p: int, split_l: int,
-                      xfer: TransferEngine
+                      xfer: TransferEngine,
+                      uid: Optional[int] = None
                       ) -> Tuple[Array, Array, RestoreStats]:
     """Materialize device KV for the first ``p`` tokens of a cached
     prefix entry, split at ``split_l`` (the scheduler's restore-split
@@ -1223,9 +1466,10 @@ def restore_prefix_kv(cfg: ModelConfig, params, entry_ks, entry_vs,
         k_tail = np.ascontiguousarray(entry_ks[:, :, l:p])
         v_tail = np.ascontiguousarray(entry_vs[:, :, l:p])
         nbytes += k_tail.nbytes + v_tail.nbytes
-        fut = xfer.submit(
+        fut = xfer.submit_io(
+            "restore",
             lambda a, b: (jax.device_put(a), jax.device_put(b)),
-            k_tail, v_tail)
+            k_tail, v_tail, uid=uid)
     parts_k, parts_v = [], []
     if l > 0:
         hs_dev = jax.device_put(np.ascontiguousarray(entry_hs[:, :, :l]))

@@ -187,6 +187,25 @@ class ExecutionPlan:
         return StepGeometry(ls=ls, s_strs=s_strs, l_pad=l_pad,
                             s_pad=s_pad, uniform=uniform)
 
+    def fallback_geometry(self, seq_lens: Sequence[int],
+                          max_len: Optional[int] = None) -> StepGeometry:
+        """Degradation-ladder geometry: the split at the l = p endpoint
+        — every slot's FULL prefix is recomputed from activations and
+        nothing streams over the link (``s_pad = 0``).  The runtime
+        uses this when a streamed-KV fetch has stalled or failed: the
+        link is taken out of the step's critical path entirely, at the
+        recompute cost the solver's endpoint already prices.  Pad
+        bucketing matches ``step_geometry`` so the fallback draws from
+        the same O(#buckets) trace budget."""
+        seq = np.asarray(seq_lens, np.int64)
+        ls = seq.copy()
+        l_pad = self._pad_up(int(seq.max()))
+        if max_len is not None:
+            l_pad = min(l_pad, int(max_len))
+        return StepGeometry(ls=ls, s_strs=np.zeros_like(seq),
+                            l_pad=l_pad, s_pad=0,
+                            uniform=bool((seq == seq[0]).all()))
+
 
 class Scheduler:
     """Plan cache keyed by ``PlanKey``; the scheduler half of the

@@ -27,6 +27,7 @@ from typing import List, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.faults import KernelLaunchError
 from repro.kernels import decode_attention as DA
 from repro.kernels import kv_dequant_attention as DQA
 from repro.kernels import kv_recompute as KR
@@ -117,37 +118,51 @@ def segmented_decode_attention(q: Array, segments: List[tuple], *,
     parts = []
     for seg in segments:
         tag = seg[0]
-        if tag == "fp":
-            _, k, v, valid = seg
-            S = k.shape[1]
-            kk = jnp.moveaxis(k, 2, 1)             # (b, KV, S, dh)
-            vv = jnp.moveaxis(v, 2, 1)
-            vl = jnp.asarray(S if valid is None else valid, jnp.int32)
-            fn = (DA.flash_decode_segment_db
-                  if S >= DB_MIN_CHUNKS * chunk
-                  else DA.flash_decode_segment)
-            parts.append(fn(qg, kk, vv, vl, interpret=interpret,
-                            chunk=chunk))
-        elif tag == "int4":
-            _, kq3, vq3, valid = seg[:4]
-            group = seg[4] if len(seg) > 4 else 32
-            S = kq3[0].shape[1]
-            kq3 = tuple(jnp.moveaxis(a, 2, 1) for a in kq3)
-            vq3 = tuple(jnp.moveaxis(a, 2, 1) for a in vq3)
-            vl = jnp.asarray(S if valid is None else valid, jnp.int32)
-            parts.append(DQA.flash_decode_segment_int4(
-                qg, *kq3, *vq3, vl, group=group, interpret=interpret,
-                chunk=chunk))
-        elif tag == "recompute":
-            _, x, wk, wv, valid, pos_offset, theta, rope = seg
-            Lp = x.shape[1]
-            vl = jnp.asarray(Lp if valid is None else valid, jnp.int32)
-            parts.append(KR.recompute_attend_segment(
-                qg, x, wk, wv, vl, pos_offset, theta=float(theta),
-                rope=bool(rope), interpret=interpret,
-                chunk=min(chunk, 128)))
-        else:
-            raise ValueError(f"unknown segment tag {tag!r}")
+        try:
+            if tag == "fp":
+                _, k, v, valid = seg
+                S = k.shape[1]
+                kk = jnp.moveaxis(k, 2, 1)         # (b, KV, S, dh)
+                vv = jnp.moveaxis(v, 2, 1)
+                vl = jnp.asarray(S if valid is None else valid,
+                                 jnp.int32)
+                fn = (DA.flash_decode_segment_db
+                      if S >= DB_MIN_CHUNKS * chunk
+                      else DA.flash_decode_segment)
+                parts.append(fn(qg, kk, vv, vl, interpret=interpret,
+                                chunk=chunk))
+            elif tag == "int4":
+                _, kq3, vq3, valid = seg[:4]
+                group = seg[4] if len(seg) > 4 else 32
+                S = kq3[0].shape[1]
+                kq3 = tuple(jnp.moveaxis(a, 2, 1) for a in kq3)
+                vq3 = tuple(jnp.moveaxis(a, 2, 1) for a in vq3)
+                vl = jnp.asarray(S if valid is None else valid,
+                                 jnp.int32)
+                parts.append(DQA.flash_decode_segment_int4(
+                    qg, *kq3, *vq3, vl, group=group,
+                    interpret=interpret, chunk=chunk))
+            elif tag == "recompute":
+                _, x, wk, wv, valid, pos_offset, theta, rope = seg
+                Lp = x.shape[1]
+                vl = jnp.asarray(Lp if valid is None else valid,
+                                 jnp.int32)
+                parts.append(KR.recompute_attend_segment(
+                    qg, x, wk, wv, vl, pos_offset, theta=float(theta),
+                    rope=bool(rope), interpret=interpret,
+                    chunk=min(chunk, 128)))
+            else:
+                raise ValueError(f"unknown segment tag {tag!r}")
+        except (ValueError, TypeError):
+            raise          # dispatch-contract bugs, not launch failures
+        except Exception as e:
+            # a Pallas trace/compile/launch failure surfaces here (the
+            # dispatch runs at jit-trace time) — re-raise typed so the
+            # runtime's degradation ladder can drop this step to the
+            # jnp oracle path instead of killing the batch
+            raise KernelLaunchError(
+                f"{tag} segment kernel failed: "
+                f"{type(e).__name__}: {e}") from e
     out = DA.combine_segments(parts)
     return out.reshape(b, 1, H, dh)
 

@@ -1,7 +1,16 @@
 """Request-level serving API (see docs/api.md).
 
     from repro.serving import EngineConfig, LLMEngine, SamplingParams
+
+Fault model (see docs/robustness.md): ``FaultPolicy`` plugs into
+``EngineConfig.faults``; the typed errors are what ``generate`` /
+``generate_stream`` raise when a failure cannot be contained to one
+request.
 """
+from repro.core.faults import (FaultPolicy, KernelLaunchError,
+                               RequestFaultError, TransferError,
+                               TransferStallError, TransientTransferError,
+                               WriteBackError)
 from repro.core.prefix_cache import PrefixCacheConfig, PrefixCacheStats
 from repro.serving.api import (EngineConfig, LLMEngine, Request,
                                RequestOutput, SamplingParams,
@@ -10,8 +19,10 @@ from repro.serving.continuous import ContinuousBatchingEngine
 from repro.serving.engine import Generation, ServingEngine
 
 __all__ = [
-    "ContinuousBatchingEngine", "EngineConfig", "Generation",
-    "LLMEngine", "PrefixCacheConfig", "PrefixCacheStats", "Request",
-    "RequestOutput", "SamplingParams", "ServingEngine", "TokenEvent",
+    "ContinuousBatchingEngine", "EngineConfig", "FaultPolicy",
+    "Generation", "KernelLaunchError", "LLMEngine", "PrefixCacheConfig",
+    "PrefixCacheStats", "Request", "RequestFaultError", "RequestOutput",
+    "SamplingParams", "ServingEngine", "TokenEvent", "TransferError",
+    "TransferStallError", "TransientTransferError", "WriteBackError",
     "pad_batch",
 ]

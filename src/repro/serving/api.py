@@ -45,6 +45,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from collections import deque
 from typing import (Deque, Dict, Iterable, Iterator, List, Optional,
                     Sequence, Tuple, Union)
@@ -54,6 +55,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.cost_model import HardwareProfile, TPU_V5E
+from repro.core.faults import (FaultPolicy, RequestFaultError,
+                               TransferStallError)
 from repro.core.prefix_cache import (PrefixCache, PrefixCacheConfig,
                                      PrefixCacheStats)
 from repro.core.runtime import (ChunkedPrefill, HostKVStore,
@@ -161,6 +164,19 @@ class EngineConfig:
     # what tests and CI parity lanes use); False forces the jnp path.
     # Tokens are identical either way; see kernels.ops.kernel_mode.
     kernels: Union[bool, str] = "auto"
+    # ---- fault isolation (docs/robustness.md) -----------------------
+    # fault injection hook threaded through the transfer engine, the
+    # store fences and admission (None = no injection; the check is a
+    # single None test on the hot path)
+    faults: Optional[FaultPolicy] = None
+    # fence-watchdog deadline: a write-back fence or KV fetch that
+    # exceeds it raises TransferStallError instead of hanging decode
+    # forever.  None = wait forever (the pre-fault-layer behavior).
+    fence_timeout_s: Optional[float] = 60.0
+    # transient transfer/write-back failures retry with exponential
+    # backoff: io_backoff_s * 2**attempt, up to io_retries times
+    io_retries: int = 2
+    io_backoff_s: float = 0.01
 
     def validate(self) -> "EngineConfig":
         if self.backend not in ("resident", "offload"):
@@ -207,6 +223,15 @@ class EngineConfig:
                 raise ValueError(
                     "max_step_tokens requires prefill_chunk (an inline "
                     "prefill cannot be split across steps)")
+        if self.fence_timeout_s is not None and self.fence_timeout_s <= 0:
+            raise ValueError(f"fence_timeout_s must be positive or "
+                             f"None, got {self.fence_timeout_s}")
+        if self.io_retries < 0:
+            raise ValueError(f"io_retries must be >= 0, got "
+                             f"{self.io_retries}")
+        if self.io_backoff_s < 0:
+            raise ValueError(f"io_backoff_s must be >= 0, got "
+                             f"{self.io_backoff_s}")
         return self
 
     @property
@@ -243,15 +268,23 @@ class Request:
 @dataclasses.dataclass
 class RequestOutput:
     """One finished request.  Also serves as the legacy ``Generation``
-    (same leading fields, positionally compatible)."""
+    (same leading fields, positionally compatible).
+
+    ``finish_reason="error"`` means THIS request failed (hard fault on
+    its admission, write-back or restore) and was contained: ``error``
+    carries the reason, ``tokens`` holds whatever was generated before
+    the fault, and the rest of the batch is unaffected (see
+    docs/robustness.md)."""
     uid: int
     tokens: np.ndarray
     prefill_time: float = 0.0
     decode_time: float = 0.0
-    finish_reason: str = "length"        # "length" | "stop"
+    finish_reason: str = "length"        # "length" | "stop" | "error"
     cached_prefix: int = 0               # prompt tokens restored from
                                          # the shared-prefix cache
     restore: Optional[RestoreStats] = None   # how they were restored
+    error: Optional[str] = None          # "ExcType: message" when
+                                         # finish_reason == "error"
 
     @property
     def decode_tps(self) -> float:
@@ -263,7 +296,12 @@ class TokenEvent:
     """One streamed token: request uid, the token, its index within the
     request, the engine step that produced it, the finish reason when
     this is the request's last token, and the producing step's
-    ``StepStats`` on offload backends."""
+    ``StepStats`` on offload backends.
+
+    A contained per-request failure is streamed as a sentinel event
+    with ``finish_reason="error"`` and ``token == -1`` / ``index ==
+    -1`` (no token was produced) — consumers should treat it as the
+    request's terminal event."""
     uid: int
     token: int
     index: int
@@ -424,6 +462,8 @@ class LLMEngine:
         # (drivers keep chunk widths fixed, so traces stay O(n / chunk))
         self._prefill_chunk = jax.jit(model.prefill_chunk,
                                       static_argnames=("p0",))
+        self.faults = self.config.faults
+        self._closed = False
         self.runtime: Optional[OffloadDecodeRuntime] = None
         if self.config.backend == "offload":
             self.runtime = OffloadDecodeRuntime(
@@ -431,7 +471,10 @@ class LLMEngine:
                 mode="kvpr" if self.config.kvpr else "flexgen",
                 schedule=self.config.schedule, align=self.config.align,
                 compress=self.config.compress,
-                kernels=self.config.kernels)
+                kernels=self.config.kernels, faults=self.faults,
+                io_retries=self.config.io_retries,
+                io_backoff_s=self.config.io_backoff_s,
+                fence_timeout_s=self.config.fence_timeout_s)
         elif self.config.batching == "continuous":
             # vmap over the slot axis: params broadcast, cache + token
             # mapped
@@ -458,7 +501,10 @@ class LLMEngine:
             if self.runtime is not None:
                 self._restore_xfer = self.runtime.xfer
             else:
-                self._restore_xfer = TransferEngine(n_copy_threads=1)
+                self._restore_xfer = TransferEngine(
+                    n_copy_threads=1, faults=self.faults,
+                    retries=self.config.io_retries,
+                    backoff_s=self.config.io_backoff_s)
                 self._owns_restore_xfer = True
 
     @classmethod
@@ -471,7 +517,14 @@ class LLMEngine:
     def close(self) -> None:
         """Release the engine's thread pools (the offload runtime's
         transfer engine and/or the resident prefix-restore pool).
-        Idempotent; the engine must not be used afterwards."""
+        Idempotent and safe while a stream is in flight: a second close
+        returns immediately (flag-guarded, and the pool shutdowns
+        themselves are lock-guarded in TransferEngine), and any fault-
+        injected dead-store hang is released before joining workers.
+        The engine must not be used afterwards."""
+        if self._closed:
+            return
+        self._closed = True
         if self.runtime is not None:
             self.runtime.close()
         if self._owns_restore_xfer and self._restore_xfer is not None:
@@ -547,8 +600,22 @@ class LLMEngine:
                 raise ValueError(
                     "extra (VLM patches) is only supported on the "
                     "resident backend")
-            return self._stream_static_offload(pairs, done)
-        return self._stream_static_resident(pairs, done, extra)
+            return self._stream_static(pairs, done, extra, offload=True)
+        return self._stream_static(pairs, done, extra, offload=False)
+
+    def _stream_static(self, pairs, done, extra, offload: bool
+                       ) -> Iterator[TokenEvent]:
+        """Static dispatch behind the admission fault gate: hard-failed
+        requests yield their sentinel error events up front, the
+        survivors run as the (smaller) static batch."""
+        pairs, err_evs = self._admit_filter(pairs, done)
+        yield from err_evs
+        if not pairs:
+            return
+        if offload:
+            yield from self._stream_static_offload(pairs, done)
+        else:
+            yield from self._stream_static_resident(pairs, done, extra)
 
     # ----------------------------------------------- shared lifecycle
 
@@ -595,6 +662,42 @@ class LLMEngine:
                 self._finish(lv, fin, now, done)
         return events
 
+    # ---------------------------------------------- fault containment
+
+    def _fail_request(self, r: Request, exc: BaseException, done,
+                      step: int = 0, t_start: float = 0.0
+                      ) -> TokenEvent:
+        """Contain a per-request failure: record an error output for
+        THIS request (``finish_reason="error"``, ``error`` carries the
+        cause) and return the sentinel error event (token -1, index
+        -1).  The rest of the batch is untouched."""
+        now = time.perf_counter()
+        done[r.uid] = RequestOutput(
+            r.uid, np.zeros((0,), np.int32), 0.0,
+            (now - t_start) if t_start else 0.0, "error",
+            error=f"{type(exc).__name__}: {exc}")
+        return TokenEvent(r.uid, -1, -1, step, "error", None)
+
+    def _admit_filter(self, pairs, done
+                      ) -> Tuple[list, List[TokenEvent]]:
+        """Static-batching admission gate: apply the fault policy's
+        per-request admission hook BEFORE the batch is assembled, so a
+        hard-failed request is excluded (error output + sentinel event)
+        and the survivors run as a smaller batch.  The sampling-stream
+        invariant (token t of uid is fold_in(request_key, t)) makes the
+        survivors token-identical to the full-batch run."""
+        if self.faults is None:
+            return list(pairs), []
+        ok, evs = [], []
+        for r, sp in pairs:
+            try:
+                self.faults.on_admit(r.uid)
+            except RequestFaultError as e:
+                evs.append(self._fail_request(r, e, done))
+            else:
+                ok.append((r, sp))
+        return ok, evs
+
     # ----------------------------------------------- chunked prefill
 
     @property
@@ -634,7 +737,8 @@ class LLMEngine:
 
     # --------------------------------------- prefix-cache admission
 
-    def _prefill_request(self, prompt: np.ndarray):
+    def _prefill_request(self, prompt: np.ndarray,
+                         uid: Optional[int] = None):
         """Per-request prefill with shared-prefix restore.
 
         Looks up the longest cached prefix of ``prompt``; on a hit the
@@ -644,6 +748,14 @@ class LLMEngine:
         the suffix goes through prefill — attending over
         [restored prefix | causal suffix] from position p.
 
+        Degradation ladder: a FAILED restore (after the transfer
+        layer's retries) falls back to cold prefill of the whole
+        prompt, with the poisoned trie entry evicted so later lookups
+        stop rediscovering the bad blocks — the request survives,
+        token-identical to a cache-cold run.  Only a
+        ``TransferStallError`` escalates (the pipeline is stalled;
+        prefilling through it would hang too).
+
         Returns (last_logits (1,1,V), ks, vs, hs host blocks covering
         the WHOLE prompt, RestoreStats or None).
         """
@@ -652,27 +764,42 @@ class LLMEngine:
         p, entry = (self.prefix_cache.lookup(prompt)
                     if self.prefix_cache is not None else (0, None))
         if entry is not None and p > 0:
-            split = self.scheduler.restore_split(
-                self.cfg, p,
-                mode="kvpr" if self.config.kvpr else "flexgen",
-                align=self.config.align)
-            k_pre, v_pre, restore = restore_prefix_kv(
-                self.cfg, self.params, entry.ks, entry.vs, entry.hs,
-                p, split.l, self._restore_xfer)
-            logits, ks_s, vs_s, hs_s = prefill_with_activations(
-                self.model, self.params, jnp.asarray(prompt[p:])[None],
-                prefix=(k_pre, v_pre, p))
-            ks = np.concatenate([entry.ks[:, :, :p],
-                                 np.asarray(ks_s)], axis=2)
-            vs = np.concatenate([entry.vs[:, :, :p],
-                                 np.asarray(vs_s)], axis=2)
-            hs = np.concatenate([entry.hs[:, :, :p],
-                                 np.asarray(hs_s)], axis=2)
-        else:
-            logits, ks, vs, hs = prefill_with_activations(
-                self.model, self.params, jnp.asarray(prompt)[None])
-            ks, vs, hs = (np.asarray(ks), np.asarray(vs),
-                          np.asarray(hs))
+            try:
+                if self.faults is not None:
+                    # engine-level injection point: fires regardless of
+                    # the restore split (a pure-recompute restore has
+                    # no link op for the transfer-layer hook to see)
+                    self.faults.on_op("restore", uid=uid)
+                split = self.scheduler.restore_split(
+                    self.cfg, p,
+                    mode="kvpr" if self.config.kvpr else "flexgen",
+                    align=self.config.align)
+                k_pre, v_pre, restore = restore_prefix_kv(
+                    self.cfg, self.params, entry.ks, entry.vs,
+                    entry.hs, p, split.l, self._restore_xfer, uid=uid)
+                logits, ks_s, vs_s, hs_s = prefill_with_activations(
+                    self.model, self.params,
+                    jnp.asarray(prompt[p:])[None],
+                    prefix=(k_pre, v_pre, p))
+                ks = np.concatenate([entry.ks[:, :, :p],
+                                     np.asarray(ks_s)], axis=2)
+                vs = np.concatenate([entry.vs[:, :, :p],
+                                     np.asarray(vs_s)], axis=2)
+                hs = np.concatenate([entry.hs[:, :, :p],
+                                     np.asarray(hs_s)], axis=2)
+                return logits, ks, vs, hs, restore
+            except TransferStallError:
+                raise
+            except Exception as e:
+                warnings.warn(
+                    f"prefix restore failed ({type(e).__name__}: {e}); "
+                    "evicting the cached entry and falling back to "
+                    "cold prefill")
+                self.prefix_cache.invalidate(entry.tokens)
+                restore = None
+        logits, ks, vs, hs = prefill_with_activations(
+            self.model, self.params, jnp.asarray(prompt)[None])
+        ks, vs, hs = (np.asarray(ks), np.asarray(vs), np.asarray(hs))
         return logits, ks, vs, hs, restore
 
     # ------------------------------------------------ static resident
@@ -747,7 +874,8 @@ class LLMEngine:
         v_all = np.zeros_like(k_all)
         rows, blocks, restores = [], [], []
         for i, r in enumerate(reqs):
-            lg, ks, vs, hs, restore = self._prefill_request(r.prompt)
+            lg, ks, vs, hs, restore = self._prefill_request(r.prompt,
+                                                            uid=r.uid)
             pad = s - len(r.prompt)
             k_all[:, i, pad:s] = ks[:, 0]
             v_all[:, i, pad:s] = vs[:, 0]
@@ -788,51 +916,55 @@ class LLMEngine:
         ragged = bool((lens != s).any())
         gen_len = max(sp.max_tokens for _, sp in pairs)
         store = HostKVStore(self.cfg, b, s + gen_len + 1,
-                            compress=self.config.compress)
-        t0 = time.perf_counter()
-        blocks = restores = None
-        if self.prefix_cache is not None:
-            rows, blocks, restores = [], [], []
-            for i, r in enumerate(reqs):
-                lg, ks, vs, hs, restore = self._prefill_request(r.prompt)
-                store.fill_slot(i, ks, vs, hs, len(r.prompt))
-                rows.append(lg)
-                blocks.append((ks, vs, hs) if self._keep_blocks
-                              else None)
-                restores.append(restore)
-            logits = jnp.concatenate(rows, axis=0)
-        elif self._chunked:
-            # streamed prefill: each finished chunk's KV/activation
-            # write-back overlaps the next chunk's compute (the
-            # TransferEngine store pool + HostKVStore chunk fences)
-            cp = ChunkedPrefill(self.model, self.params,
-                                jnp.asarray(prompts),
-                                self._chunk_for(s, batch=b),
-                                prompt_lens=lens,
-                                store=store, xfer=self.runtime.xfer)
-            logits = cp.finish()
-            store.seq_lens[:] = lens
-        else:
-            pl = jnp.asarray(lens, jnp.int32) if ragged else None
-            logits, ks, vs, hs = prefill_with_activations(
-                self.model, self.params, jnp.asarray(prompts),
-                prompt_lens=pl)
-            store.bulk_fill(np.asarray(ks), np.asarray(vs),
-                            np.asarray(hs), s,
-                            seq_lens=lens if ragged else None)
-        t1 = time.perf_counter()
-
-        lives = self._lives(pairs, t1 - t0, t1)
-        if blocks is not None:
-            for lv, bl, rs in zip(lives, blocks, restores):
-                lv.blocks, lv.restore = bl, rs
-        ss = self._static_sampling(pairs)
+                            compress=self.config.compress,
+                            fence_timeout_s=self.config.fence_timeout_s)
         rt = self.runtime
-        plan = rt.plan_for(b)
-        tok = ss.sample(logits[:, -1], 0)[:, None]
-        t = 0
-        stats: Optional[StepStats] = None
         try:
+            t0 = time.perf_counter()
+            blocks = restores = None
+            if self.prefix_cache is not None:
+                rows, blocks, restores = [], [], []
+                for i, r in enumerate(reqs):
+                    lg, ks, vs, hs, restore = self._prefill_request(
+                        r.prompt, uid=r.uid)
+                    rt.xfer.run_io("store", store.fill_slot, i, ks, vs,
+                                   hs, len(r.prompt), uid=r.uid)
+                    rows.append(lg)
+                    blocks.append((ks, vs, hs) if self._keep_blocks
+                                  else None)
+                    restores.append(restore)
+                logits = jnp.concatenate(rows, axis=0)
+            elif self._chunked:
+                # streamed prefill: each finished chunk's KV/activation
+                # write-back overlaps the next chunk's compute (the
+                # TransferEngine store pool + HostKVStore chunk fences)
+                cp = ChunkedPrefill(self.model, self.params,
+                                    jnp.asarray(prompts),
+                                    self._chunk_for(s, batch=b),
+                                    prompt_lens=lens,
+                                    store=store, xfer=rt.xfer)
+                logits = cp.finish()
+                store.seq_lens[:] = lens
+            else:
+                pl = jnp.asarray(lens, jnp.int32) if ragged else None
+                logits, ks, vs, hs = prefill_with_activations(
+                    self.model, self.params, jnp.asarray(prompts),
+                    prompt_lens=pl)
+                rt.xfer.run_io(
+                    "store", store.bulk_fill, np.asarray(ks),
+                    np.asarray(vs), np.asarray(hs), s,
+                    seq_lens=lens if ragged else None)
+            t1 = time.perf_counter()
+
+            lives = self._lives(pairs, t1 - t0, t1)
+            if blocks is not None:
+                for lv, bl, rs in zip(lives, blocks, restores):
+                    lv.blocks, lv.restore = bl, rs
+            ss = self._static_sampling(pairs)
+            plan = rt.plan_for(b)
+            tok = ss.sample(logits[:, -1], 0)[:, None]
+            t = 0
+            stats: Optional[StepStats] = None
             while True:
                 yield from self._advance(lives, np.asarray(tok)[:, 0],
                                          t, stats, done)
@@ -843,10 +975,17 @@ class LLMEngine:
                 logits, stats = rt.step(store, tok, plan, active=active)
                 t += 1
                 tok = ss.sample(logits[:, -1], t)[:, None]
-        finally:
+        except BaseException:
+            # the exception path (an engine-level fault, or the
+            # consumer abandoning the stream mid-iteration): drain
+            # EVERY fence without letting a second failure mask the
+            # first, so no in-flight future survives to wedge the
+            # engine's next call
+            store.sync(strict=False)
+            raise
+        else:
             # drain the write-back fences before dropping the store
-            # (surfaces any store error, leaves the pool idle) — also
-            # when the consumer abandons the stream mid-iteration
+            # (surfaces any store error, leaves the pool idle)
             store.sync()
 
     # ----------------------------------------------------- continuous
@@ -874,8 +1013,9 @@ class LLMEngine:
         chunked = self._chunked
         budget_cap = self.config.max_step_tokens
         if offload:
-            store = HostKVStore(self.cfg, B, max_len,
-                                compress=self.config.compress)
+            store = HostKVStore(
+                self.cfg, B, max_len, compress=self.config.compress,
+                fence_timeout_s=self.config.fence_timeout_s)
             plan = self.runtime.plan_for(B)
             active = np.zeros(B, bool)
         else:
@@ -915,48 +1055,91 @@ class LLMEngine:
                 finish(i, lv, fin, t1)
             return TokenEvent(r.uid, first, 0, t, fin, None)
 
+        def fail_slot(i: int, r: Request, exc: BaseException,
+                      t0: float) -> TokenEvent:
+            """Contain a per-request admission/prefill fault: reclaim
+            slot i (quiet-draining ITS chunk fences so no failed future
+            survives to poison the next tenant), record the error
+            output, and return the sentinel error event.  Every other
+            slot keeps decoding untouched."""
+            pending.pop(i, None)
+            if offload:
+                try:
+                    store.wait_chunks(i)
+                except Exception:
+                    pass             # the slot is being discarded
+                store.clear_slot(i)
+                active[i] = False
+            slots[i] = None
+            return self._fail_request(r, exc, done, step=t, t_start=t0)
+
         def admit(i: int) -> TokenEvent:
-            """Inline (whole-prompt) admission into slot i."""
+            """Inline (whole-prompt) admission into slot i.  A
+            per-request fault here is contained to this request
+            (``fail_slot``); only a stalled store pipeline escalates —
+            nothing else could admit through it either."""
             r, sp = queue.popleft()
             t0 = time.perf_counter()
             blocks = restore = cache = None
-            if self.prefix_cache is not None:
-                logits, ks, vs, hs, restore = \
-                    self._prefill_request(r.prompt)
-                blocks = (ks, vs, hs) if self._keep_blocks else None
-                if offload:
-                    store.fill_slot(i, ks, vs, hs, len(r.prompt))
+            try:
+                if self.faults is not None:
+                    self.faults.on_admit(r.uid)
+                if self.prefix_cache is not None:
+                    logits, ks, vs, hs, restore = \
+                        self._prefill_request(r.prompt, uid=r.uid)
+                    blocks = (ks, vs, hs) if self._keep_blocks else None
+                    if offload:
+                        self.runtime.xfer.run_io(
+                            "store", store.fill_slot, i, ks, vs, hs,
+                            len(r.prompt), uid=r.uid)
+                    else:
+                        cache = self._resident_cache_from_blocks(
+                            ks, vs, len(r.prompt), max_len)
+                elif offload:
+                    logits, ks, vs, hs = prefill_with_activations(
+                        self.model, self.params,
+                        jnp.asarray(r.prompt)[None])
+                    self.runtime.xfer.run_io(
+                        "store", store.fill_slot, i, np.asarray(ks),
+                        np.asarray(vs), np.asarray(hs), len(r.prompt),
+                        uid=r.uid)
                 else:
-                    cache = self._resident_cache_from_blocks(
-                        ks, vs, len(r.prompt), max_len)
-            elif offload:
-                logits, ks, vs, hs = prefill_with_activations(
-                    self.model, self.params, jnp.asarray(r.prompt)[None])
-                store.fill_slot(i, np.asarray(ks), np.asarray(vs),
-                                np.asarray(hs), len(r.prompt))
-            else:
-                logits, cache = self._prefill(
-                    self.params, jnp.asarray(r.prompt)[None],
-                    max_len=max_len)
+                    logits, cache = self._prefill(
+                        self.params, jnp.asarray(r.prompt)[None],
+                        max_len=max_len)
+            except TransferStallError:
+                raise
+            except Exception as e:
+                return fail_slot(i, r, e, t0)
             return activate(i, r, sp, logits, t0, cache=cache,
                             restore=restore, blocks=blocks)
 
-        def start_pending(i: int) -> None:
+        def start_pending(i: int) -> Optional[TokenEvent]:
             """Chunked admission: claim slot i for a pending prefill
-            that advances under the per-step token budget."""
+            that advances under the per-step token budget.  Returns an
+            error event when the request hard-fails at admission."""
             r, sp = queue.popleft()
             t0 = time.perf_counter()
-            chunk = self._chunk_for(len(r.prompt))
+            try:
+                if self.faults is not None:
+                    self.faults.on_admit(r.uid)
+                chunk = self._chunk_for(len(r.prompt))
+            except TransferStallError:
+                raise
+            except Exception as e:
+                return fail_slot(i, r, e, t0)
             if offload:
                 state = ChunkedPrefill(
                     self.model, self.params, np.asarray(r.prompt)[None],
-                    chunk, store=store, xfer=self.runtime.xfer, slot=i)
+                    chunk, store=store, xfer=self.runtime.xfer, slot=i,
+                    uid=r.uid)
             else:
                 cache = self.model.init_cache(1, max_len, jnp.float32)
                 state = _ResidentChunk(cache, np.asarray(r.prompt),
                                        chunk,
                                        q_block=self.model.q_block)
             pending[i] = _Pending(r, sp, state, t0)
+            return None
 
         def pending_step(pd: _Pending) -> int:
             """Run the pending prefill's next FULL chunk (grid width:
@@ -1015,7 +1198,9 @@ class LLMEngine:
                 for i in range(B):
                     if slots[i] is None and i not in pending and queue:
                         if chunked:
-                            start_pending(i)
+                            ev = start_pending(i)
+                            if ev is not None:
+                                yield ev
                         else:
                             yield admit(i)
                 if pending:
@@ -1033,7 +1218,18 @@ class LLMEngine:
                         budget = max(budget_cap - n_active,
                                      1 if n_active == 0 else 0)
                     for i in list(pending):
-                        used, ev = advance_pending(i, budget)
+                        # a fault in THIS slot's chunk pipeline (the
+                        # uid-tagged write-backs surface at its
+                        # wait_chunks) is contained to this request;
+                        # only a stalled store pipeline escalates
+                        pd = pending[i]
+                        try:
+                            used, ev = advance_pending(i, budget)
+                        except TransferStallError:
+                            raise
+                        except Exception as e:
+                            ev = fail_slot(i, pd.req, e, pd.t_start)
+                            used = 0
                         if budget is not None:
                             budget = 0
                         if ev is not None:
@@ -1071,8 +1267,15 @@ class LLMEngine:
                                      t, fin, st)
                     if fin is not None:
                         finish(i, lv, fin, now)
-        finally:
-            # drain write-back fences even when the consumer abandons
-            # the stream mid-iteration
+        except BaseException:
+            # engine-level fault, or the consumer abandoning the stream
+            # mid-iteration: drain every fence without a second failure
+            # masking the first, so the engine stays reusable
+            if offload:
+                store.sync(strict=False)
+            raise
+        else:
+            # drain write-back fences before dropping the store
+            # (surfaces any store error, leaves the pool idle)
             if offload:
                 store.sync()

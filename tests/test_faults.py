@@ -1,0 +1,348 @@
+"""Fault-injection matrix over the serving engine.
+
+The robustness contract, exercised end to end against the same golden
+per-request reference test_identity_matrix.py uses (a batch-1
+resident/static run with the same engine seed and uid — the
+sampling-stream invariant makes it ground truth):
+
+  matrix      every backend x batching combo x {transient fetch
+              failure, transient write-back failure, slow link, one
+              hard per-request failure}: transient faults recover via
+              bounded retry with ZERO token divergence; the hard fault
+              errors exactly its own request while the survivors stay
+              token-identical.
+  stall       a dead store thread surfaces as TransferStallError
+              within ``fence_timeout_s`` instead of hanging; releasing
+              the hang heals the engine in place.
+  poisoned    a write-back failure mid-``generate_stream`` propagates
+              but does NOT wedge the engine — the next ``generate()``
+              on the same engine is token-identical.
+  ladder      kernel-launch failure degrades to the jnp oracle; a
+              dead link degrades fetches to full recomputation from
+              activations (the paper's l=p endpoint); a failed
+              prefix-cache restore falls back to cold prefill and
+              evicts the poisoned entry.  All three are token-exact.
+  lifecycle   double close, close mid-stream, and the error-path
+              fence drain leave no hung worker behind.
+"""
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.cost_model import A100_PCIE4
+from repro.core.scheduler import Scheduler
+from repro.models.transformer import Model
+from repro.serving import (EngineConfig, FaultPolicy, LLMEngine,
+                           PrefixCacheConfig, Request, SamplingParams,
+                           TransferError, TransferStallError)
+
+COMBOS = [("resident", "static"), ("offload", "static"),
+          ("resident", "continuous"), ("offload", "continuous")]
+FAULTS = ["transient_fetch", "transient_store", "slow_link",
+          "hard_request"]
+
+LENS = [8, 11, 14]
+GENS = (5, 4, 6)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_smoke_config("tinyllama-1.1b")
+    model = Model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+@pytest.fixture(scope="module")
+def sched():
+    return Scheduler(A100_PCIE4)
+
+
+def _reqs(cfg, seed=0):
+    rng = np.random.default_rng(seed)
+    return [Request(uid=i, prompt=rng.integers(
+        1, cfg.vocab_size, n).astype(np.int32)) for i, n in
+        enumerate(LENS)]
+
+
+def _sps():
+    return [SamplingParams(max_tokens=g) for g in GENS]
+
+
+_REFS = {}
+
+
+def _reference(setup, sched, reqs, sps):
+    """Per-request ground truth: batch-1 resident/static runs (same
+    engine seed, same uid => same sampling stream), memoized."""
+    cfg, model, params = setup
+    outs = []
+    for r, sp in zip(reqs, sps):
+        key = (r.uid, r.prompt.tobytes(), sp)
+        if key not in _REFS:
+            with LLMEngine.from_config(model, params, EngineConfig(),
+                                       scheduler=sched) as eng:
+                o = eng.generate([r], sp)[0]
+            _REFS[key] = (list(o.tokens), o.finish_reason)
+        outs.append(_REFS[key])
+    return outs
+
+
+def _policy(fault: str) -> FaultPolicy:
+    """Fresh (stateful!) policy per test."""
+    if fault == "transient_fetch":
+        return FaultPolicy(fail_first={"fetch": 1})
+    if fault == "transient_store":
+        return FaultPolicy(fail_first={"store": 1})
+    if fault == "slow_link":
+        return FaultPolicy(link_bytes_per_s=50e6)
+    if fault == "hard_request":
+        return FaultPolicy(hard_fail_uids=frozenset({1}))
+    raise AssertionError(fault)
+
+
+def _engine(setup, sched, backend, batching, policy, **kw):
+    cfg, model, params = setup
+    return LLMEngine.from_config(
+        model, params,
+        EngineConfig(backend=backend, batching=batching, slots=2,
+                     max_len=64, faults=policy, io_backoff_s=1e-3,
+                     **kw),
+        scheduler=sched)
+
+
+# ------------------------------------------------------------- matrix
+
+
+@pytest.mark.parametrize("backend,batching", COMBOS)
+@pytest.mark.parametrize("fault", FAULTS)
+def test_fault_matrix(setup, sched, backend, batching, fault):
+    cfg, _, _ = setup
+    reqs, sps = _reqs(cfg), _sps()
+    refs = _reference(setup, sched, reqs, sps)
+    policy = _policy(fault)
+    with _engine(setup, sched, backend, batching, policy) as eng:
+        outs = eng.generate(reqs, sps)
+    for r, o, (ref_toks, ref_fin) in zip(reqs, outs, refs):
+        if fault == "hard_request" and r.uid == 1:
+            assert o.finish_reason == "error"
+            assert o.error and "uid=1" in o.error
+            assert len(o.tokens) == 0
+        else:
+            # survivors (and every request under recoverable faults)
+            # are token-identical to the golden run
+            assert list(o.tokens) == ref_toks, (fault, backend,
+                                                batching, r.uid)
+            assert o.finish_reason == ref_fin
+    if fault == "hard_request":
+        assert policy.injected.get("admit", 0) == 1
+    elif backend == "offload" and fault != "slow_link":
+        # the transient fault actually fired on the transfer path
+        kind = "fetch" if fault == "transient_fetch" else "store"
+        assert policy.injected.get(kind, 0) >= 1
+
+
+@pytest.mark.parametrize("backend,batching", COMBOS)
+def test_hard_fault_stream_sentinel(setup, sched, backend, batching):
+    """The stream yields exactly one sentinel error event for the
+    failed request and full token streams for the survivors."""
+    cfg, _, _ = setup
+    reqs, sps = _reqs(cfg), _sps()
+    refs = _reference(setup, sched, reqs, sps)
+    policy = _policy("hard_request")
+    with _engine(setup, sched, backend, batching, policy) as eng:
+        events = list(eng.generate_stream(reqs, sps))
+    errs = [e for e in events if e.uid == 1]
+    assert len(errs) == 1
+    assert (errs[0].token, errs[0].index, errs[0].finish_reason) == \
+        (-1, -1, "error")
+    for r, (ref_toks, _) in zip(reqs, refs):
+        if r.uid == 1:
+            continue
+        toks = [e.token for e in events if e.uid == r.uid]
+        assert toks == ref_toks, (backend, batching, r.uid)
+
+
+def test_retry_counter_surfaces_in_stats(setup, sched):
+    """Retried transients show up in StepStats.retries."""
+    cfg, _, _ = setup
+    reqs, sps = _reqs(cfg), _sps()
+    refs = _reference(setup, sched, reqs, sps)
+    policy = FaultPolicy(fail_first={"fetch": 2})
+    with _engine(setup, sched, "offload", "static", policy) as eng:
+        events = list(eng.generate_stream(reqs, sps))
+        retries = sum(e.stats.retries for e in events
+                      if e.stats is not None)
+    assert policy.injected.get("fetch", 0) == 2
+    assert retries >= 2
+    for r, (ref_toks, _) in zip(reqs, refs):
+        assert [e.token for e in events if e.uid == r.uid] == ref_toks
+
+
+# -------------------------------------------------------------- stall
+
+
+@pytest.mark.parametrize("batching,dead_after", [
+    ("static", 1),       # op 0 is the admission bulk_fill
+    ("continuous", 2),   # ops 0-1 are the two slot fills
+])
+def test_dead_store_thread_raises_stall(setup, sched, batching,
+                                        dead_after):
+    """A store worker that never returns surfaces as
+    TransferStallError within ~fence_timeout_s (never a hang); after
+    release() the same engine serves token-identically."""
+    cfg, _, _ = setup
+    reqs, sps = _reqs(cfg), _sps()
+    refs = _reference(setup, sched, reqs, sps)
+    policy = FaultPolicy(dead_store_after=dead_after)
+    with _engine(setup, sched, "offload", batching, policy,
+                 fence_timeout_s=1.5) as eng:
+        t0 = time.perf_counter()
+        with pytest.raises(TransferStallError):
+            eng.generate(reqs, sps)
+        # bounded: the watchdog fired (drain pays <= timeout per
+        # fence, nowhere near a real hang)
+        assert time.perf_counter() - t0 < 60.0
+        policy.release()             # heal: hung worker resumes
+        outs = eng.generate(reqs, sps)
+        for o, (ref_toks, ref_fin) in zip(outs, refs):
+            assert list(o.tokens) == ref_toks
+            assert o.finish_reason == ref_fin
+
+
+# ----------------------------------------------------------- poisoned
+
+
+def test_poisoned_writeback_does_not_wedge_engine(setup, sched):
+    """Satellite (a): a write-back failure mid-generate_stream
+    propagates as a typed TransferError, the abandoned stream drains
+    its fences, and the SAME engine then serves a clean
+    token-identical generate()."""
+    cfg, _, _ = setup
+    reqs, sps = _reqs(cfg), _sps()
+    refs = _reference(setup, sched, reqs, sps)
+    policy = FaultPolicy()
+    with _engine(setup, sched, "offload", "static", policy,
+                 io_retries=0) as eng:
+        events = eng.generate_stream(reqs, sps)
+        next(events)
+        next(events)                 # decode is live, fills done
+        policy.store_fail_rate = 1.0  # poison every write-back
+        with pytest.raises(TransferError):
+            list(events)
+        policy.store_fail_rate = 0.0  # heal the link
+        outs = eng.generate(reqs, sps)
+    for o, (ref_toks, ref_fin) in zip(outs, refs):
+        assert list(o.tokens) == ref_toks
+        assert o.finish_reason == ref_fin
+
+
+# ------------------------------------------------------------- ladder
+
+
+def test_kernel_failure_degrades_to_oracle(setup, sched):
+    """Rung 1: a failed Pallas launch drops the runtime to the jnp
+    oracle (warned once), token-identically."""
+    cfg, _, _ = setup
+    reqs, sps = _reqs(cfg), _sps()
+    refs = _reference(setup, sched, reqs, sps)
+    policy = FaultPolicy(kernel_fail_launches=1)
+    with _engine(setup, sched, "offload", "static", policy,
+                 kernels=True) as eng:
+        with pytest.warns(UserWarning, match="kernel"):
+            outs = eng.generate(reqs, sps)
+        assert eng.runtime._kernel_fallback
+    assert policy.injected.get("kernel", 0) == 1
+    for o, (ref_toks, ref_fin) in zip(outs, refs):
+        assert list(o.tokens) == ref_toks
+        assert o.finish_reason == ref_fin
+
+
+def test_dead_link_degrades_to_full_recompute(setup, sched):
+    """Rung 2: when every KV fetch fails, the step recomputes the
+    whole prefix from activations (the paper's l=p endpoint) —
+    token-identical, with the fallback counted in StepStats."""
+    cfg, _, _ = setup
+    reqs, sps = _reqs(cfg), _sps()
+    refs = _reference(setup, sched, reqs, sps)
+    policy = FaultPolicy(fetch_fail_rate=1.0)
+    with _engine(setup, sched, "offload", "static", policy,
+                 io_retries=0) as eng:
+        with pytest.warns(UserWarning, match="recomput"):
+            events = list(eng.generate_stream(reqs, sps))
+        fallbacks = sum(e.stats.fetch_fallbacks for e in events
+                        if e.stats is not None)
+    assert fallbacks >= 1
+    assert policy.injected.get("fetch", 0) >= 1
+    for r, (ref_toks, _) in zip(reqs, refs):
+        assert [e.token for e in events if e.uid == r.uid] == ref_toks
+
+
+@pytest.mark.parametrize("backend,batching", [("offload", "static"),
+                                              ("resident", "continuous")])
+def test_restore_failure_falls_back_cold_and_invalidates(
+        setup, sched, backend, batching):
+    """Rung 3: a failed prefix-cache restore falls back to cold
+    prefill and evicts the poisoned entry (lookups stop rediscovering
+    it) — tokens identical to the never-cached run."""
+    cfg, _, _ = setup
+    reqs, sps = _reqs(cfg), _sps()
+    refs = _reference(setup, sched, reqs, sps)
+    policy = FaultPolicy(restore_fail_rate=1.0)
+    with _engine(setup, sched, backend, batching, policy,
+                 prefix_cache=PrefixCacheConfig()) as eng:
+        for rnd in range(2):         # round 2 hits what round 1 stored
+            if rnd == 0:             # cold round: nothing to restore
+                outs = eng.generate(reqs, sps)
+            else:
+                with pytest.warns(UserWarning, match="restore"):
+                    outs = eng.generate(reqs, sps)
+            for o, (ref_toks, ref_fin) in zip(outs, refs):
+                assert list(o.tokens) == ref_toks, (backend, batching,
+                                                    rnd, o.uid)
+                assert o.finish_reason == ref_fin
+        st = eng.prefix_stats
+        assert st.hits >= 1
+        assert st.invalidations >= 1
+
+
+# ---------------------------------------------------------- lifecycle
+
+
+def test_config_validation():
+    with pytest.raises(ValueError):
+        EngineConfig(fence_timeout_s=0.0).validate()
+    with pytest.raises(ValueError):
+        EngineConfig(io_retries=-1).validate()
+    with pytest.raises(ValueError):
+        EngineConfig(io_backoff_s=-0.1).validate()
+    EngineConfig(fence_timeout_s=None).validate()   # wait-forever: ok
+
+
+def test_double_close_and_close_during_stream(setup, sched):
+    """Satellite (b): close() is idempotent at every layer, including
+    with a stream abandoned mid-decode (its fences drain; no worker
+    is left hung)."""
+    cfg, _, _ = setup
+    reqs, sps = _reqs(cfg), _sps()
+    eng = _engine(setup, sched, "offload", "continuous", None)
+    events = eng.generate_stream(reqs, sps)
+    next(events)
+    next(events)
+    events.close()                   # abandon mid-decode: fences drain
+    eng.close()
+    eng.close()                      # idempotent
+    eng.runtime.close()              # lower layers too
+    eng.runtime.xfer.close()
+
+    # resident engines own a restore pool instead of a runtime
+    cfg2, model, params = setup
+    eng2 = LLMEngine.from_config(
+        model, params,
+        EngineConfig(prefix_cache=PrefixCacheConfig()), scheduler=sched)
+    eng2.generate(reqs[:1], sps[:1])
+    eng2.close()
+    eng2.close()
