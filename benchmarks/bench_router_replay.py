@@ -1,0 +1,282 @@
+"""Trace-replay benchmark for the multi-replica router tier.
+
+Replays ONE synthetic request trace — Poisson or bursty arrivals,
+shared-prefix request families (the RAG / system-prompt workload),
+mixed SLO classes with mixed priorities — against a RouterEngine under
+each placement policy (prefix-aware vs round_robin vs least_loaded,
+same replicas, same per-replica prefix caches), and emits a
+machine-readable comparison: per-class SLO attainment, p50/p99 TTFT
+and queue wait, warm-prefix hit rates, preemption counts.
+
+    PYTHONPATH=src python benchmarks/bench_router_replay.py [--smoke]
+        [--json out.json] [--requests 36] [--replicas 2]
+        [--families 4] [--shared 48] [--suffix 4] [--gen 6]
+        [--arrival bursty|poisson] [--rate 8.0] [--burst 6]
+
+Gates (recorded in the JSON):
+
+  - tokens_identical: every policy's outputs are token-identical per
+    uid (placement is an execution decision, never a semantics
+    decision);
+  - warm_hit / p99_ttft: prefix-aware placement beats round_robin on
+    warm-prefix hit rate AND on p99 TTFT — keeping a family on its
+    warm replica turns that family's prefills into KVPR-split
+    restores, and under load the saved prefill work is exactly what
+    shortens the queue tail.  The per-replica caches are sized to one
+    replica's SHARE of the family working set (see run()): placement
+    decides warmth only when no single replica can hold everything.
+
+--smoke exits non-zero when tokens_identical or warm_hit fails; the
+p99 tail of a 20-request CPU-container trace is dominated by host
+scheduler noise and stray XLA compilation, so the tail comparison is
+enforced on the committed full-size run (BENCH_router_replay.json,
+checked by scripts/bench_trajectory.py) rather than per-CI-run.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+import threading
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core.cost_model import A100_PCIE4
+from repro.core.scheduler import Scheduler
+from repro.models.transformer import Model
+from repro.serving import (EngineConfig, PrefixCacheConfig, Request,
+                           SamplingParams)
+from repro.serving.router import RouterConfig, RouterEngine
+
+SLO_CYCLE = ("interactive", "standard", "batch")
+
+
+@dataclasses.dataclass
+class TraceItem:
+    at_s: float                  # arrival offset from replay start
+    req: Request
+    sp: SamplingParams
+
+
+def build_trace(cfg, rng, n: int, families: int, shared: int,
+                suffix: int, gen: int, arrival: str, rate: float,
+                burst: int):
+    """The replayed workload: ``n`` requests over ``families``
+    shared-prefix families, SLO class (and its default priority)
+    cycling per request, arrivals either Poisson (exponential
+    inter-arrival at ``rate`` req/s) or bursty (bursts of ``burst``
+    back-to-back arrivals, exponential gaps between bursts)."""
+    bases = [rng.integers(1, cfg.vocab_size, shared).astype(np.int32)
+             for _ in range(families)]
+    items, t = [], 0.0
+    for i in range(n):
+        if arrival == "poisson":
+            t += rng.exponential(1.0 / rate)
+        elif arrival == "bursty":
+            if i % burst == 0 and i > 0:
+                t += rng.exponential(burst / rate)
+        else:
+            raise ValueError(f"unknown arrival process {arrival!r}")
+        base = bases[i % families]
+        prompt = np.concatenate([
+            base, rng.integers(1, cfg.vocab_size,
+                               suffix).astype(np.int32)])
+        slo = SLO_CYCLE[i % len(SLO_CYCLE)]
+        # seeded temperature on a third of the trace: identity across
+        # policies must hold for stochastic requests too (the
+        # sampling-stream invariant, one level up)
+        sp = (SamplingParams(max_tokens=gen, temperature=0.7, seed=i)
+              if i % 3 == 2 else SamplingParams(max_tokens=gen))
+        items.append(TraceItem(t, Request(uid=i, prompt=prompt,
+                                          slo=slo), sp))
+    return items
+
+
+def replay(model, params, trace, policy: str, replicas: int,
+           scheduler, cache_tokens: int = 65536, speed: float = 1.0):
+    """Replay the trace against a fresh router (fresh replica engines,
+    COLD prefix caches) under ``policy``; returns (outputs by uid,
+    router stats, per-class summary, wall seconds)."""
+    ec = EngineConfig(prefix_cache=PrefixCacheConfig(
+        min_prefix=8, capacity_tokens=cache_tokens))
+    rc = RouterConfig(replicas=replicas, policy=policy)
+    outs = {}
+    with RouterEngine(model, params, ec, rc,
+                      scheduler=scheduler) as router:
+        t0 = time.perf_counter()
+        uids = []
+        for item in trace:
+            delay = item.at_s / speed - (time.perf_counter() - t0)
+            if delay > 0:
+                time.sleep(delay)
+            uids.append(router.submit(item.req, item.sp))
+        for uid in uids:
+            outs[uid] = router.wait(uid)
+        wall = time.perf_counter() - t0
+        stats = router.stats()
+        classes = router.per_class(outs.values())
+    return outs, stats, classes, wall
+
+
+def _pct(xs, q):
+    return float(np.percentile(np.asarray(xs, np.float64), q))
+
+
+def summarize(outs, stats, classes, wall: float):
+    served = [o for o in outs.values() if len(o.tokens)]
+    ttfts = [o.ttft for o in served]
+    waits = [o.queue_wait for o in served]
+    tpots = [o.tpot for o in served if o.tpot > 0]
+    n_tok = sum(len(o.tokens) for o in served)
+    return {
+        "requests": len(outs),
+        "served": len(served),
+        "tokens": int(n_tok),
+        "wall_s": wall,
+        "tok_s": n_tok / wall,
+        "warm_hit_rate": stats.warm_hit_rate,
+        "warm_tokens": int(stats.warm_tokens),
+        "preemptions": stats.preemptions,
+        "deadline_drops": stats.deadline_drops,
+        "ttft_p50_s": _pct(ttfts, 50),
+        "ttft_p99_s": _pct(ttfts, 99),
+        "queue_wait_p50_s": _pct(waits, 50),
+        "queue_wait_p99_s": _pct(waits, 99),
+        "tpot_mean_s": float(np.mean(tpots)) if tpots else 0.0,
+        "per_class": classes,
+        "per_replica_dispatched": [r.dispatched for r in
+                                   stats.replicas],
+    }
+
+
+def run(requests: int = 36, replicas: int = 2, families: int = 5,
+        shared: int = 48, suffix: int = 4, gen: int = 6,
+        arrival: str = "bursty", rate: float = 2.0, burst: int = 4,
+        arch: str = "tinyllama-1.1b", seed: int = 0,
+        cache_tokens: int = 0,
+        policies=("prefix", "round_robin", "least_loaded")) -> dict:
+    cfg = get_smoke_config(arch)
+    model = Model(cfg)
+    params = model.init_params(jax.random.PRNGKey(seed))
+    rng = np.random.default_rng(seed)
+    sched = Scheduler(A100_PCIE4)
+    trace = build_trace(cfg, rng, requests, families, shared, suffix,
+                        gen, arrival, rate, burst)
+
+    # Per-replica caches sized to hold one replica's SHARE of the
+    # family working set (plus one slot of headroom), not all of it.
+    # This is the regime where placement decides warmth: under prefix
+    # placement each replica keeps its owned families resident, while
+    # scatter placement cycles every family through every replica and
+    # the LRU thrashes.  With the 64k default every replica holds
+    # everything and the policies converge on warmth.
+    if cache_tokens <= 0:
+        entry = shared + suffix + gen
+        cache_tokens = (-(-families // replicas) + 1) * entry
+
+    # one throwaway request compiles the prefill/decode traces so the
+    # first measured policy doesn't pay XLA compilation in its TTFTs
+    warmup = [TraceItem(0.0, Request(uid=10_000, prompt=trace[0]
+                                     .req.prompt.copy()),
+                        SamplingParams(max_tokens=2))]
+    replay(model, params, warmup, "round_robin", replicas, sched,
+           cache_tokens)
+
+    results, tokens_by_uid = {}, {}
+    for policy in policies:
+        outs, stats, classes, wall = replay(model, params, trace,
+                                            policy, replicas, sched,
+                                            cache_tokens)
+        results[policy] = summarize(outs, stats, classes, wall)
+        tokens_by_uid[policy] = {uid: list(map(int, o.tokens))
+                                 for uid, o in outs.items()}
+
+    base = tokens_by_uid[policies[0]]
+    identical = all(tokens_by_uid[p] == base for p in policies[1:])
+    pre, rr = results.get("prefix"), results.get("round_robin")
+    gates = {"tokens_identical": bool(identical)}
+    if pre and rr:
+        gates["warm_hit"] = bool(
+            pre["warm_hit_rate"] > rr["warm_hit_rate"])
+        gates["p99_ttft"] = bool(
+            pre["ttft_p99_s"] < rr["ttft_p99_s"])
+    # the deterministic gates CI enforces per run; p99_ttft is judged
+    # on the committed full-size JSON (see module docstring)
+    smoke_gates = [k for k in ("tokens_identical", "warm_hit")
+                   if k in gates]
+    return {
+        "bench": "router_replay",
+        "config": {
+            "arch": arch, "requests": requests, "replicas": replicas,
+            "families": families, "shared": shared, "suffix": suffix,
+            "gen": gen, "arrival": arrival, "rate": rate,
+            "burst": burst, "seed": seed,
+            "cache_tokens": cache_tokens,
+        },
+        "policies": results,
+        "gates": gates,
+        "smoke_gates": smoke_gates,
+        "smoke_ok": bool(all(gates[k] for k in smoke_gates)),
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=36)
+    ap.add_argument("--replicas", type=int, default=2)
+    # keep families coprime-ish with replicas: when families is a
+    # multiple of the replica count, round_robin's rotation pins each
+    # family to one replica BY ACCIDENT and the baseline stops being a
+    # scatter baseline
+    ap.add_argument("--families", type=int, default=5)
+    ap.add_argument("--shared", type=int, default=48)
+    ap.add_argument("--suffix", type=int, default=4)
+    ap.add_argument("--gen", type=int, default=6)
+    ap.add_argument("--arrival", default="bursty",
+                    choices=["bursty", "poisson"])
+    ap.add_argument("--rate", type=float, default=2.0,
+                    help="mean arrival rate, requests/s")
+    ap.add_argument("--burst", type=int, default=4,
+                    help="bursty: arrivals per burst")
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--cache-tokens", type=int, default=0,
+                    help="per-replica prefix-cache capacity; 0 sizes "
+                         "it to one replica's share of the families "
+                         "plus one slot of headroom")
+    ap.add_argument("--json", default=None,
+                    help="also write the JSON here")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small trace; exit non-zero unless every gate "
+                         "passes (wired into scripts/ci.sh)")
+    args = ap.parse_args(argv)
+
+    kw = dict(requests=args.requests, replicas=args.replicas,
+              families=args.families, shared=args.shared,
+              suffix=args.suffix, gen=args.gen, arrival=args.arrival,
+              rate=args.rate, burst=args.burst, arch=args.arch,
+              seed=args.seed, cache_tokens=args.cache_tokens)
+    if args.smoke:
+        kw.update(requests=20, families=5, shared=32, gen=4,
+                  burst=4, rate=2.0,
+                  policies=("prefix", "round_robin"))
+    res = run(**kw)
+
+    text = json.dumps(res, indent=2)
+    print(text)
+    if args.json:
+        with open(args.json, "w") as f:
+            f.write(text + "\n")
+    if args.smoke and not res["smoke_ok"]:
+        print("bench_router_replay --smoke FAILED gates: "
+              f"{res['gates']}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -3,8 +3,8 @@
 
 The repo commits machine-readable benchmark snapshots at the root
 (BENCH_step_breakdown.json, BENCH_prefix.json,
-BENCH_chunked_prefill.json, BENCH_faults.json) so perf-relevant PRs
-carry their measured
+BENCH_chunked_prefill.json, BENCH_faults.json,
+BENCH_router_replay.json) so perf-relevant PRs carry their measured
 effect.  This script renders them side by side — run it after
 regenerating any snapshot to eyeball the trajectory:
 
@@ -22,7 +22,8 @@ import pathlib
 import sys
 
 FILES = ["BENCH_step_breakdown.json", "BENCH_prefix.json",
-         "BENCH_chunked_prefill.json", "BENCH_faults.json"]
+         "BENCH_chunked_prefill.json", "BENCH_faults.json",
+         "BENCH_router_replay.json"]
 
 
 def _load(root: pathlib.Path):
@@ -130,6 +131,27 @@ def main(argv=None) -> int:
             failed.append("faults tokens_identical=false")
         if d.get("smoke_ok") is False:
             failed.append("faults smoke_ok=false")
+
+    if "BENCH_router_replay.json" in data:
+        d = data["BENCH_router_replay.json"]
+        print("== router trace replay "
+              f"({json.dumps(d.get('config'))}) ==")
+        for name, r in d.get("policies", {}).items():
+            cls = "  ".join(
+                f"{k}={v['attained']:.2f}"
+                for k, v in sorted(r.get("per_class", {}).items()))
+            print(f"  {name:<13s} warm {r['warm_hit_rate']:.2f}  "
+                  f"ttft p50 {r['ttft_p50_s']:.2f}s "
+                  f"p99 {r['ttft_p99_s']:.2f}s  "
+                  f"preempt {r['preemptions']}  slo[{cls}]")
+        # the committed snapshot must carry the full victory: identity,
+        # warm-hit AND the p99 tail (the per-run smoke only enforces
+        # the deterministic subset — see benchmarks/bench_router_replay)
+        for gate, ok in d.get("gates", {}).items():
+            if not ok:
+                failed.append(f"router_replay {gate}=false")
+        if "p99_ttft" not in d.get("gates", {}):
+            failed.append("router_replay p99_ttft gate missing")
 
     missing = [f for f in FILES if f not in data]
     if missing:

@@ -94,4 +94,18 @@ timeout "${CHUNKED_TIMEOUT:-300}" \
 timeout "${FAULTS_TIMEOUT:-600}" \
     python benchmarks/bench_faults.py --smoke
 
+# 9. Router-tier smoke: 2 replicas over a mixed-priority shared-prefix
+#    batch — routed outputs token-identical to the single-engine
+#    reference, warm-prefix hits > 0 under prefix placement, and a
+#    preempted decode resumes token-exact (see docs/serving.md).
+timeout "${ROUTER_TIMEOUT:-600}" python -m repro.launch.router --smoke
+
+# 9b. Trace-replay smoke: replays one bursty shared-prefix trace under
+#     prefix vs round_robin placement; gates cross-policy token
+#     identity and the warm-hit advantage (the p99 tail comparison is
+#     judged on the committed BENCH_router_replay.json in step 4c —
+#     a 20-request CPU tail is too noisy to gate per run).
+timeout "${ROUTER_REPLAY_TIMEOUT:-600}" \
+    python benchmarks/bench_router_replay.py --smoke
+
 echo "ci.sh: all checks passed"

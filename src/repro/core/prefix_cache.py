@@ -238,6 +238,8 @@ class PrefixCacheStats:
     lookups: int = 0
     hits: int = 0
     misses: int = 0
+    peeks: int = 0               # non-mutating warmth probes (router
+                                 # placement; never touch LRU recency)
     tokens_matched: int = 0      # prefill tokens skipped via restore
     tokens_inserted: int = 0
     entries: int = 0
@@ -288,6 +290,28 @@ class PrefixCache:
             entry.hits += 1
             self._stats.hits += 1
             self._stats.tokens_matched += p
+            return p, entry
+
+    # -------------------------------------------------------------- peek
+
+    def peek(self, prompt) -> Tuple[int, Optional[PrefixEntry]]:
+        """Non-mutating warmth probe: what ``lookup(prompt)`` WOULD
+        return, without touching LRU recency, hit counters, or the
+        entry's own stats.
+
+        This is the router's placement probe: scoring every replica's
+        cache for warm-prefix overlap must not count as use, or load
+        probing itself would distort eviction order (an entry probed by
+        every placement decision would look permanently hot).  Applies
+        the same ``min_prefix`` / ``len - 1`` caps as ``lookup`` so the
+        probe exactly predicts the admission-time match."""
+        toks = [int(t) for t in prompt]
+        with self._lock:
+            self._stats.peeks += 1
+            p, entry = self.index.match(toks)
+            p = min(p, len(toks) - 1)
+            if entry is None or p < self.config.min_prefix:
+                return 0, None
             return p, entry
 
     # ------------------------------------------------------------ insert

@@ -1,0 +1,228 @@
+"""Router launcher: the multi-replica serving tier over N in-process
+``LLMEngine`` replicas (serving.router — see docs/serving.md).
+
+    PYTHONPATH=src python -m repro.launch.router --arch tinyllama-1.1b \
+        --replicas 2 --policy prefix --requests 12 --shared-prefix 12
+    PYTHONPATH=src python -m repro.launch.router --arch tinyllama-1.1b \
+        --policy round_robin --backend offload
+    PYTHONPATH=src python -m repro.launch.router --smoke
+        # CI round-trip: 2 replicas, mixed-priority shared-prefix
+        # batch; asserts token identity vs the single-engine
+        # reference, warm hits > 0, and preempt-resume identity
+
+Always uses the reduced (smoke) config on this CPU container, like
+``repro.launch.serve``.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_smoke_config
+from repro.core.cost_model import TPU_V5E
+from repro.core.scheduler import Scheduler
+from repro.models.transformer import Model
+from repro.serving import (EngineConfig, LLMEngine, PrefixCacheConfig,
+                           Request, SamplingParams)
+from repro.serving.router import RouterConfig, RouterEngine
+
+
+def _shared_prefix_requests(cfg, rng, n: int, shared: int, tail: int,
+                            families: int = 2):
+    """n requests over ``families`` shared-prefix families: family f's
+    requests all start with the same ``shared``-token prefix and differ
+    in a ``tail``-token suffix — the RAG/system-prompt workload prefix
+    placement exists for."""
+    bases = [rng.integers(1, cfg.vocab_size, shared).astype(np.int32)
+             for _ in range(families)]
+    reqs = []
+    for i in range(n):
+        base = bases[i % families]
+        suffix = rng.integers(1, cfg.vocab_size, tail).astype(np.int32)
+        reqs.append(Request(uid=i,
+                            prompt=np.concatenate([base, suffix]),
+                            priority=i % 3,
+                            slo=("interactive", "standard",
+                                 "batch")[i % 3]))
+    return reqs
+
+
+def run_smoke() -> None:
+    """CI round-trip for the router tier: 2 replicas over a
+    mixed-priority shared-prefix batch.  Asserts
+
+      - routed outputs token-identical to the single-engine reference
+        (any placement, any batch composition — the sampling-stream
+        invariant one level up);
+      - warm-prefix hits > 0 (placement kept at least one family on a
+        warm replica);
+      - preempt-resume identity: a preempted + resumed request emits
+        exactly the tokens of its uninterrupted reference run;
+      - per-request timing populated (queue_wait / ttft / tpot).
+    """
+    cfg = get_smoke_config("tinyllama-1.1b")
+    model = Model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    sched = Scheduler(TPU_V5E)
+    reqs = _shared_prefix_requests(cfg, rng, n=8, shared=12, tail=3)
+    sps = [SamplingParams(max_tokens=4) if i % 2 == 0 else
+           SamplingParams(max_tokens=4, temperature=0.8, seed=i)
+           for i in range(len(reqs))]
+
+    with LLMEngine.from_config(model, params, EngineConfig(),
+                               scheduler=sched) as eng:
+        refs = [eng.generate([r], [sp])[0]
+                for r, sp in zip(reqs, sps)]
+
+    ec = EngineConfig(prefix_cache=PrefixCacheConfig(min_prefix=4))
+    with RouterEngine(model, params, ec,
+                      RouterConfig(replicas=2, policy="prefix"),
+                      scheduler=sched) as router:
+        t0 = time.perf_counter()
+        # two waves: the first request of each family lands cold and
+        # warms its replica's prefix cache; the second wave's placement
+        # must then route each family to its warm replica (warm hits)
+        outs = router.generate(reqs[:2], sps[:2])
+        outs += router.generate(reqs[2:], sps[2:])
+        dt = time.perf_counter() - t0
+        st = router.stats()
+    for r, o, ref in zip(reqs, outs, refs):
+        assert list(o.tokens) == list(ref.tokens), \
+            (r.uid, list(o.tokens), list(ref.tokens))
+        assert o.finish_reason == ref.finish_reason
+        assert o.t_enqueue > 0 and o.t_finish >= o.t_first_token > 0
+        assert o.queue_wait >= 0 and o.ttft > 0
+    assert st.warm_hit_rate > 0, "no warm-prefix hits under placement"
+    n_tok = sum(len(o.tokens) for o in outs)
+    print(f"  routed {len(reqs)} requests / {n_tok} tokens in {dt:.2f}s "
+          f"across 2 replicas: token-identical to single-engine "
+          f"reference ok")
+    print(f"  warm-prefix: hit_rate={st.warm_hit_rate:.2f} "
+          f"warm_tokens={st.warm_tokens} "
+          f"placement={[r.dispatched for r in st.replicas]}")
+
+    # preempt-resume identity: run a long low-priority decode on a
+    # 1-replica router, then submit a high-priority request that
+    # preempts it; the stitched output must equal the uninterrupted
+    # reference
+    long_req = Request(uid=100, prompt=rng.integers(
+        1, cfg.vocab_size, 10).astype(np.int32), priority=0)
+    hi_req = Request(uid=101, prompt=rng.integers(
+        1, cfg.vocab_size, 8).astype(np.int32), priority=5)
+    long_sp = SamplingParams(max_tokens=24, temperature=0.6, seed=9)
+    hi_sp = SamplingParams(max_tokens=4)
+    with LLMEngine.from_config(model, params, EngineConfig(),
+                               scheduler=sched) as eng:
+        ref_long = eng.generate([long_req], [long_sp])[0]
+    with RouterEngine(model, params, ec,
+                      RouterConfig(replicas=1, policy="least_loaded",
+                                   max_batch=1),
+                      scheduler=sched) as router:
+        u0 = router.submit(long_req, long_sp)
+        while router.stats().replicas[0].running == 0:
+            time.sleep(0.005)       # let the decode start
+        u1 = router.submit(hi_req, hi_sp)
+        out_long = router.wait(u0)
+        router.wait(u1)
+    assert list(out_long.tokens) == list(ref_long.tokens), \
+        (out_long.preemptions, list(out_long.tokens),
+         list(ref_long.tokens))
+    assert out_long.preemptions >= 1, \
+        "high-priority arrival failed to preempt the running decode"
+    print(f"  preemption: resumed after {out_long.preemptions} "
+          f"preempt(s), stitched tokens identical to uninterrupted "
+          f"reference ok")
+    print("router --smoke: all checks passed")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=list(ARCH_IDS))
+    ap.add_argument("--replicas", type=int, default=2)
+    ap.add_argument("--policy", default="prefix",
+                    choices=["prefix", "round_robin", "least_loaded"])
+    ap.add_argument("--backend", default="resident",
+                    choices=["resident", "offload"])
+    ap.add_argument("--batching", default="static",
+                    choices=["static", "continuous"])
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--prompt", type=int, default=24,
+                    help="total prompt length per request")
+    ap.add_argument("--shared-prefix", type=int, default=16,
+                    help="tokens of each request's prompt shared with "
+                         "its family")
+    ap.add_argument("--families", type=int, default=2,
+                    help="number of shared-prefix families")
+    ap.add_argument("--gen", type=int, default=8)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--no-preemption", action="store_true")
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="disable the per-replica shared-prefix cache "
+                         "(prefix placement degrades to least-loaded)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI round-trip (identity + warm hits + "
+                         "preemption)")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        run_smoke()
+        return
+    if args.arch is None:
+        ap.error("--arch is required (unless --smoke)")
+
+    cfg = get_smoke_config(args.arch)
+    model = Model(cfg)
+    params = model.init_params(jax.random.PRNGKey(args.seed))
+    rng = np.random.default_rng(args.seed)
+    tail = max(args.prompt - args.shared_prefix, 1)
+    reqs = _shared_prefix_requests(cfg, rng, args.requests,
+                                   args.shared_prefix, tail,
+                                   families=args.families)
+    ec = EngineConfig(
+        backend=args.backend, batching=args.batching,
+        max_len=args.prompt + args.gen + 8, seed=args.seed,
+        prefix_cache=(None if args.no_prefix_cache
+                      else PrefixCacheConfig(min_prefix=4)))
+    rc = RouterConfig(replicas=args.replicas, policy=args.policy,
+                      max_batch=args.max_batch,
+                      preemption=not args.no_preemption)
+    sched = Scheduler(TPU_V5E)
+    with RouterEngine(model, params, ec, rc,
+                      scheduler=sched) as router:
+        t0 = time.perf_counter()
+        outs = router.generate(reqs,
+                               SamplingParams(max_tokens=args.gen))
+        dt = time.perf_counter() - t0
+        st = router.stats()
+        classes = router.per_class(outs)
+
+    total = sum(len(o.tokens) for o in outs)
+    print(f"{args.arch} router[{args.policy} x{args.replicas}] "
+          f"[{args.backend}/{args.batching}]: {len(reqs)} requests, "
+          f"{total} tokens in {dt:.2f}s ({total / dt:.1f} tok/s)")
+    print(f"  warm-prefix: hit_rate={st.warm_hit_rate:.2f} "
+          f"warm_tokens={st.warm_tokens}  preemptions="
+          f"{st.preemptions}  deadline_drops={st.deadline_drops}")
+    for rs in st.replicas:
+        print(f"  replica {rs.index}: dispatched={rs.dispatched} "
+              f"batches={rs.batches} preempted={rs.preemptions}")
+    waits = sorted(o.queue_wait for o in outs)
+    ttfts = sorted(o.ttft for o in outs)
+    print(f"  queue_wait p50={waits[len(waits) // 2] * 1e3:.1f}ms "
+          f"max={waits[-1] * 1e3:.1f}ms   "
+          f"ttft p50={ttfts[len(ttfts) // 2] * 1e3:.1f}ms "
+          f"max={ttfts[-1] * 1e3:.1f}ms")
+    for name, row in classes.items():
+        print(f"  slo[{name}]: n={row['n']} "
+              f"attained={row['attained']:.2f} "
+              f"mean_ttft={row['mean_ttft_s'] * 1e3:.1f}ms "
+              f"mean_tpot={row['mean_tpot_s'] * 1e3:.1f}ms")
+
+
+if __name__ == "__main__":
+    main()

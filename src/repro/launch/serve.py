@@ -65,6 +65,16 @@ def run_smoke() -> None:
                        for o in outs[(backend, batching)])
             print(f"  {backend:8s} x {batching:10s}: {n} tokens "
                   f"in {dt:.2f}s ok")
+    # per-request timing must be populated on every combo — SLO
+    # attainment is computed from these fields (docs/serving.md)
+    for combo, got in outs.items():
+        for o in got:
+            assert o.t_enqueue > 0 and o.t_finish >= o.t_first_token \
+                > o.t_enqueue, (combo, o.uid)
+            assert o.queue_wait >= 0 and o.ttft > 0 and o.tpot > 0, \
+                (combo, o.uid)
+    print("  per-request timing (t_enqueue/t_first_token/t_finish) "
+          "populated on all 4 combos ok")
     # greedy decode is path-independent: the RAGGED static batch (8/10/
     # 12-token prompts) must agree with the per-request continuous runs
     # across every backend x batching combination
@@ -259,6 +269,15 @@ def main(argv=None):
                   f"saved_tokens={ps.tokens_matched} "
                   f"entries={ps.entries} evictions={ps.evictions}")
         if not args.stream:
+            waits = sorted(o.queue_wait for o in outs)
+            ttfts = sorted(o.ttft for o in outs)
+            tpots = [o.tpot for o in outs if o.tpot > 0]
+            print(f"  latency: queue_wait p50="
+                  f"{waits[len(waits) // 2] * 1e3:.1f}ms "
+                  f"ttft p50={ttfts[len(ttfts) // 2] * 1e3:.1f}ms "
+                  f"max={ttfts[-1] * 1e3:.1f}ms "
+                  f"tpot mean="
+                  f"{np.mean(tpots) * 1e3 if tpots else 0.0:.1f}ms")
             for o in outs[:4]:
                 print(f"  uid={o.uid} [{o.finish_reason}]: "
                       f"{np.asarray(o.tokens)[:8]}...")

@@ -17,12 +17,16 @@ from repro.serving.api import (EngineConfig, LLMEngine, Request,
                                TokenEvent, pad_batch)
 from repro.serving.continuous import ContinuousBatchingEngine
 from repro.serving.engine import Generation, ServingEngine
+from repro.serving.router import (RouterConfig, RouterEngine,
+                                  RouterQueueFull, RouterStats,
+                                  SLOClass, slo_attained)
 
 __all__ = [
     "ContinuousBatchingEngine", "EngineConfig", "FaultPolicy",
     "Generation", "KernelLaunchError", "LLMEngine", "PrefixCacheConfig",
     "PrefixCacheStats", "Request", "RequestFaultError", "RequestOutput",
-    "SamplingParams", "ServingEngine", "TokenEvent", "TransferError",
-    "TransferStallError", "TransientTransferError", "WriteBackError",
-    "pad_batch",
+    "RouterConfig", "RouterEngine", "RouterQueueFull", "RouterStats",
+    "SLOClass", "SamplingParams", "ServingEngine", "TokenEvent",
+    "TransferError", "TransferStallError", "TransientTransferError",
+    "WriteBackError", "pad_batch", "slo_attained",
 ]

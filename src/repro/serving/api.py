@@ -44,6 +44,7 @@ thin shims over this module; new code should use::
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 import warnings
 from collections import deque
@@ -263,6 +264,25 @@ class Request:
     prompt: np.ndarray                   # (s,) int32
     max_new_tokens: int = 32             # legacy budget (no params)
     params: Optional[SamplingParams] = None
+    # ---- scheduling metadata (serving/router; see docs/serving.md) --
+    # larger priority = more urgent; ties broken by arrival order
+    priority: int = 0
+    # admission deadline: a request still QUEUED this long after
+    # t_enqueue is dropped (finish_reason="deadline") instead of served
+    deadline_s: Optional[float] = None
+    # SLO class name (RouterConfig.slo_classes key); attainment is
+    # judged against that class's TTFT/TPOT targets
+    slo: Optional[str] = None
+    # when the request entered the SYSTEM (router admission queue) —
+    # stamped by the engine at generate() when absent, so queue_wait /
+    # ttft measure end-to-end latency, not engine-internal latency
+    t_enqueue: Optional[float] = None
+    # sampling-stream offset for preemption resume: token t of this
+    # request draws with fold_in(request_key, token_offset + t), so a
+    # continuation request (prompt extended by the tokens generated
+    # before preemption) continues the SAME stream the uninterrupted
+    # run would have used
+    token_offset: int = 0
 
 
 @dataclasses.dataclass
@@ -280,15 +300,41 @@ class RequestOutput:
     prefill_time: float = 0.0
     decode_time: float = 0.0
     finish_reason: str = "length"        # "length" | "stop" | "error"
+                                         # | "preempted" | "deadline"
     cached_prefix: int = 0               # prompt tokens restored from
                                          # the shared-prefix cache
     restore: Optional[RestoreStats] = None   # how they were restored
     error: Optional[str] = None          # "ExcType: message" when
                                          # finish_reason == "error"
+    # ---- per-request timing (perf_counter timestamps; SLO accounting,
+    # see docs/serving.md).  t_enqueue is when the request entered the
+    # system (router queue or generate() call), so queue_wait / ttft
+    # include scheduling delay, not just engine time.
+    t_enqueue: float = 0.0
+    t_first_token: float = 0.0
+    t_finish: float = 0.0
+    queue_wait: float = 0.0              # t_enqueue -> prefill start
+    # ---- router metadata (left at defaults by a bare LLMEngine) -----
+    slo: Optional[str] = None            # SLO class the request declared
+    replica: Optional[int] = None        # replica that finished it
+    preemptions: int = 0                 # times preempted + resumed
 
     @property
     def decode_tps(self) -> float:
         return len(self.tokens) / max(self.decode_time, 1e-9)
+
+    @property
+    def ttft(self) -> float:
+        """Time to first token, measured from t_enqueue."""
+        return max(self.t_first_token - self.t_enqueue, 0.0)
+
+    @property
+    def tpot(self) -> float:
+        """Mean per-output-token latency after the first token."""
+        n = len(self.tokens)
+        if n <= 1 or self.t_first_token <= 0:
+            return 0.0
+        return (self.t_finish - self.t_first_token) / (n - 1)
 
 
 @dataclasses.dataclass
@@ -330,6 +376,9 @@ class _Live:
     tokens: List[int]
     t_prefill: float = 0.0
     t_start: float = 0.0
+    t_enqueue: float = 0.0               # system arrival (Request stamp)
+    t_admit: float = 0.0                 # prefill start (queue_wait end)
+    t_first: float = 0.0                 # first token sampled
     finish_reason: Optional[str] = None
     restore: Optional[RestoreStats] = None   # prefix-cache restore info
     blocks: Optional[tuple] = None       # (ks, vs, hs) prompt blocks,
@@ -464,6 +513,10 @@ class LLMEngine:
                                       static_argnames=("p0",))
         self.faults = self.config.faults
         self._closed = False
+        # cooperative preemption flags (router load shedding): uids to
+        # finish with "preempted" at the next step boundary
+        self._preempt: set = set()
+        self._preempt_lock = threading.Lock()
         self.runtime: Optional[OffloadDecodeRuntime] = None
         if self.config.backend == "offload":
             self.runtime = OffloadDecodeRuntime(
@@ -575,10 +628,13 @@ class LLMEngine:
             raise ValueError(
                 f"per-request sampling list has {len(sampling)} "
                 f"entries for {len(requests)} requests")
+        now = time.perf_counter()
         pairs = []
         for i, r in enumerate(requests):
             if not isinstance(r, Request):
                 r = Request(uid=i, prompt=np.asarray(r, np.int32))
+            if r.t_enqueue is None:
+                r.t_enqueue = now
             sp = sampling[i] if sampling_seq else sampling
             if sp is None:
                 sp = r.params or SamplingParams(
@@ -621,18 +677,29 @@ class LLMEngine:
 
     def _lives(self, pairs, t_prefill: float, t_start: float
                ) -> List[_Live]:
-        return [_Live(r, sp, sp.stop_set, [], t_prefill, t_start)
+        t_admit = t_start - t_prefill
+        return [_Live(r, sp, sp.stop_set, [], t_prefill, t_start,
+                      t_enqueue=r.t_enqueue or t_admit, t_admit=t_admit)
                 for r, sp in pairs]
 
     def _finish(self, lv: _Live, reason: str, now: float, done) -> None:
         """Record a finished request's output; feed its prompt blocks
-        into the shared-prefix cache (insertion on finish)."""
+        into the shared-prefix cache (insertion on finish — including a
+        PREEMPTED finish, so the resume restores the prompt through the
+        transfer-vs-recompute split instead of re-prefilling it)."""
         lv.finish_reason = reason
+        with self._preempt_lock:
+            # a preempt flag that raced a natural finish must not
+            # survive to hit a later request reusing this uid
+            self._preempt.discard(lv.req.uid)
         done[lv.req.uid] = RequestOutput(
             lv.req.uid, np.asarray(lv.tokens, np.int32),
             lv.t_prefill, now - lv.t_start, reason,
             cached_prefix=lv.restore.matched if lv.restore else 0,
-            restore=lv.restore)
+            restore=lv.restore, t_enqueue=lv.t_enqueue,
+            t_first_token=lv.t_first, t_finish=now,
+            queue_wait=max(lv.t_admit - lv.t_enqueue, 0.0),
+            slo=lv.req.slo)
         if (self.prefix_cache is not None and lv.blocks is not None
                 and self.prefix_cache.config.insert_on_finish):
             self.prefix_cache.insert(lv.req.prompt, *lv.blocks)
@@ -650,6 +717,8 @@ class LLMEngine:
                 continue
             tok = int(toks[i])
             lv.tokens.append(tok)
+            if lv.t_first == 0.0:
+                lv.t_first = now
             fin = None
             if tok in lv.stop:
                 fin = "stop"
@@ -660,6 +729,48 @@ class LLMEngine:
                                      stats))
             if fin is not None:
                 self._finish(lv, fin, now, done)
+        return events
+
+    # -------------------------------------------------- preemption
+
+    def preempt(self, uid: int) -> None:
+        """Request cooperative preemption of ``uid`` (thread-safe; the
+        router's load-shedding hook).  The decode loop observes the
+        flag at its next step boundary: the request finishes with
+        ``finish_reason="preempted"`` keeping the tokens generated so
+        far, its slot is released through the existing mid-decode
+        machinery (active-mask dropout under static batching, slot
+        clear + re-admission under continuous), and — when the prefix
+        cache is on — its prompt blocks are inserted so a resume
+        restores via the transfer-vs-recompute split instead of
+        recomputing from scratch.  A uid that is not (or no longer)
+        decoding is a no-op."""
+        with self._preempt_lock:
+            self._preempt.add(uid)
+
+    def _take_preempts(self, uids) -> set:
+        """Claim pending preemption flags for ``uids`` (consume-once)."""
+        with self._preempt_lock:
+            hit = self._preempt & set(uids)
+            self._preempt -= hit
+            return hit
+
+    def _preempt_sweep(self, lives: List[_Live], step: int, done
+                       ) -> List[TokenEvent]:
+        """Static-path preemption point (between decode steps): finish
+        every flagged live request and emit its sentinel event (token
+        -1, index -1 — no token was produced by preemption)."""
+        live = {lv.req.uid for lv in lives if lv.finish_reason is None}
+        hit = self._take_preempts(live)
+        if not hit:
+            return []
+        now = time.perf_counter()
+        events = []
+        for lv in lives:
+            if lv.finish_reason is None and lv.req.uid in hit:
+                self._finish(lv, "preempted", now, done)
+                events.append(TokenEvent(lv.req.uid, -1, -1, step,
+                                         "preempted", None))
         return events
 
     # ---------------------------------------------- fault containment
@@ -675,7 +786,8 @@ class LLMEngine:
         done[r.uid] = RequestOutput(
             r.uid, np.zeros((0,), np.int32), 0.0,
             (now - t_start) if t_start else 0.0, "error",
-            error=f"{type(exc).__name__}: {exc}")
+            error=f"{type(exc).__name__}: {exc}",
+            t_enqueue=r.t_enqueue or 0.0, t_finish=now, slo=r.slo)
         return TokenEvent(r.uid, -1, -1, step, "error", None)
 
     def _admit_filter(self, pairs, done
@@ -843,16 +955,18 @@ class LLMEngine:
             for lv, bl, rs in zip(lives, blocks, restores):
                 lv.blocks, lv.restore = bl, rs
         ss = self._static_sampling(pairs)
-        tok = ss.sample(logits[:, -1], 0)[:, None]
+        offs = np.array([r.token_offset for r, _ in pairs])
+        tok = ss.sample(logits[:, -1], offs)[:, None]
         t = 0
         while True:
             yield from self._advance(lives, np.asarray(tok)[:, 0], t,
                                      None, done)
+            yield from self._preempt_sweep(lives, t, done)
             if all(lv.finish_reason for lv in lives):
                 break
             logits, cache = self._decode(self.params, cache, tok)
             t += 1
-            tok = ss.sample(logits[:, -1], t)[:, None]
+            tok = ss.sample(logits[:, -1], offs + t)[:, None]
 
     def _static_sampling(self, pairs) -> _SlotSampling:
         ss = _SlotSampling(self.key, len(pairs))
@@ -961,20 +1075,22 @@ class LLMEngine:
                 for lv, bl, rs in zip(lives, blocks, restores):
                     lv.blocks, lv.restore = bl, rs
             ss = self._static_sampling(pairs)
+            offs = np.array([r.token_offset for r, _ in pairs])
             plan = rt.plan_for(b)
-            tok = ss.sample(logits[:, -1], 0)[:, None]
+            tok = ss.sample(logits[:, -1], offs)[:, None]
             t = 0
             stats: Optional[StepStats] = None
             while True:
                 yield from self._advance(lives, np.asarray(tok)[:, 0],
                                          t, stats, done)
+                yield from self._preempt_sweep(lives, t, done)
                 if all(lv.finish_reason for lv in lives):
                     break
                 active = np.array([lv.finish_reason is None
                                    for lv in lives])
                 logits, stats = rt.step(store, tok, plan, active=active)
                 t += 1
-                tok = ss.sample(logits[:, -1], t)[:, None]
+                tok = ss.sample(logits[:, -1], offs + t)[:, None]
         except BaseException:
             # the exception path (an engine-level fault, or the
             # consumer abandoning the stream mid-iteration): drain
@@ -1038,10 +1154,11 @@ class LLMEngine:
             token and make the slot live (decode joins next step)."""
             nonlocal stacked
             ss.set_slot(i, r.uid, sp)
-            first = ss.sample_one(logits[:, -1], i, 0)
+            first = ss.sample_one(logits[:, -1], i, r.token_offset)
             t1 = time.perf_counter()
             lv = _Live(r, sp, sp.stop_set, [first], t1 - t0, t1,
-                       restore=restore, blocks=blocks)
+                       t_enqueue=r.t_enqueue or t0, t_admit=t0,
+                       t_first=t1, restore=restore, blocks=blocks)
             slots[i] = lv
             tokens[i, 0] = first
             if offload:
@@ -1234,9 +1351,24 @@ class LLMEngine:
                             budget = 0
                         if ev is not None:
                             yield ev
+                live_uids = {s.req.uid: i for i, s in enumerate(slots)
+                             if s is not None}
+                hit = self._take_preempts(live_uids)
+                if hit:
+                    # cooperative preemption: finish the flagged
+                    # requests NOW (keeping their tokens), release
+                    # their slots — the next loop iteration admits
+                    # queued work into the freed capacity
+                    now = time.perf_counter()
+                    for uid in sorted(hit):
+                        i = live_uids[uid]
+                        finish(i, slots[i], "preempted", now)
+                        yield TokenEvent(uid, -1, -1, t, "preempted",
+                                         None)
                 if not any(s is not None for s in slots):
                     continue
-                steps = np.array([len(s.tokens) if s is not None else 0
+                steps = np.array([len(s.tokens) + s.req.token_offset
+                                  if s is not None else 0
                                   for s in slots])
                 if offload:
                     logits, st = self.runtime.step(

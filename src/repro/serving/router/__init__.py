@@ -1,0 +1,26 @@
+"""Multi-replica serving tier (see docs/serving.md).
+
+    from repro.serving.router import RouterConfig, RouterEngine
+
+A ``RouterEngine`` fronts N in-process ``LLMEngine`` replicas with an
+admission-control queue (priority / deadline / SLO classes),
+prefix-aware placement (warm-prefix overlap via the non-mutating
+``PrefixCache.peek`` probe, with round_robin / least_loaded baselines)
+and preemption of low-priority decodes that resume through the prefix
+cache's transfer-vs-recompute restore.
+"""
+from repro.serving.router.admission import (AdmissionQueue,
+                                            DEFAULT_SLO_CLASSES,
+                                            RouterQueueFull, SLOClass,
+                                            slo_attained)
+from repro.serving.router.engine import (ReplicaStats, RouterConfig,
+                                         RouterEngine, RouterStats)
+from repro.serving.router.placement import (POLICIES, PlacementView,
+                                            make_policy)
+
+__all__ = [
+    "AdmissionQueue", "DEFAULT_SLO_CLASSES", "POLICIES",
+    "PlacementView", "ReplicaStats", "RouterConfig", "RouterEngine",
+    "RouterQueueFull", "RouterStats", "SLOClass", "make_policy",
+    "slo_attained",
+]

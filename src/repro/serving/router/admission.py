@@ -1,0 +1,121 @@
+"""Admission control for the multi-replica router: SLO classes and the
+priority admission queue.
+
+The router (``serving.router.engine``) fronts N ``LLMEngine`` replicas;
+every request passes through an ``AdmissionQueue`` before it reaches an
+engine.  The queue gives the serving tier three properties the engines
+themselves don't have:
+
+  - **priority ordering** — a higher-``priority`` request never waits
+    behind a lower-priority one in the same queue (ties break FIFO by
+    arrival sequence), the invariant the scheduling property tests pin;
+  - **bounded depth** — ``max_queue`` rejects work at the door
+    (``RouterQueueFull``) instead of building unbounded backlog;
+  - **deadline drops** — a request still queued past its
+    ``deadline_s`` is dropped at pop time (``finish_reason=
+    "deadline"``) rather than served uselessly late.
+
+``SLOClass`` names a TTFT/TPOT target pair; per-class attainment is
+computed from the ``RequestOutput`` timing fields by the trace-replay
+benchmark (``benchmarks/bench_router_replay.py``) and the router's own
+``per_class`` summary.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["AdmissionQueue", "DEFAULT_SLO_CLASSES", "RouterQueueFull",
+           "SLOClass", "slo_attained"]
+
+
+class RouterQueueFull(RuntimeError):
+    """Admission control rejected the request: the router queue is at
+    ``RouterConfig.max_queue``.  Callers should shed or retry later —
+    the router never buffers beyond the configured bound."""
+
+
+@dataclasses.dataclass(frozen=True)
+class SLOClass:
+    """A named latency target pair.
+
+    ttft_s: time-to-first-token target (includes queue wait).
+    tpot_s: mean per-output-token target after the first token.
+    priority: default ``Request.priority`` for requests that declare
+        this class without an explicit priority.
+    """
+    name: str
+    ttft_s: float
+    tpot_s: float
+    priority: int = 0
+
+    def validate(self) -> "SLOClass":
+        if self.ttft_s <= 0 or self.tpot_s <= 0:
+            raise ValueError(f"SLO targets must be positive, got "
+                             f"{self}")
+        return self
+
+
+# the three-tier default ladder: interactive chat, standard API calls,
+# throughput batch jobs.  Targets are generous on purpose — they are
+# defaults for a CPU smoke container; real deployments pass their own.
+DEFAULT_SLO_CLASSES: Dict[str, SLOClass] = {
+    "interactive": SLOClass("interactive", ttft_s=2.0, tpot_s=0.25,
+                            priority=2),
+    "standard": SLOClass("standard", ttft_s=10.0, tpot_s=1.0,
+                         priority=1),
+    "batch": SLOClass("batch", ttft_s=120.0, tpot_s=10.0, priority=0),
+}
+
+
+def slo_attained(out, slo: SLOClass) -> bool:
+    """Did a finished ``RequestOutput`` meet its class targets?  Only
+    requests that actually produced tokens are judged (errors /
+    deadline drops count as missed by the caller)."""
+    if len(out.tokens) == 0:
+        return False
+    if out.ttft > slo.ttft_s:
+        return False
+    return len(out.tokens) <= 1 or out.tpot <= slo.tpot_s
+
+
+class AdmissionQueue:
+    """Priority queue over tracked requests: pop order is
+    (-priority, arrival seq) — strictly higher priority first, FIFO
+    within a priority.  NOT thread-safe: the router serializes access
+    under its own lock.
+
+    Entries must expose ``priority``, ``seq``, ``t_enqueue`` and
+    ``deadline_s`` attributes (the router's ``_Tracked`` records do).
+    """
+
+    def __init__(self, max_queue: int = 0):
+        self.max_queue = max_queue
+        self._heap: List[Tuple[int, int, object]] = []
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def push(self, entry) -> None:
+        if self.max_queue and len(self._heap) >= self.max_queue:
+            raise RouterQueueFull(
+                f"admission queue at max_queue={self.max_queue}")
+        heapq.heappush(self._heap, (-entry.priority, entry.seq, entry))
+
+    def pop_ready(self, now: float, limit: Optional[int] = None
+                  ) -> Tuple[List[object], List[object]]:
+        """Pop up to ``limit`` entries in priority order; entries whose
+        queue deadline has already passed are returned separately as
+        ``expired`` (they don't consume the limit — a dead request must
+        never block a live one behind it)."""
+        ready: List[object] = []
+        expired: List[object] = []
+        while self._heap and (limit is None or len(ready) < limit):
+            _, _, entry = heapq.heappop(self._heap)
+            dl = entry.deadline_s
+            if dl is not None and now - entry.t_enqueue > dl:
+                expired.append(entry)
+            else:
+                ready.append(entry)
+        return ready, expired

@@ -1,0 +1,675 @@
+"""RouterEngine: a multi-replica serving tier over N ``LLMEngine``
+replicas with prefix-aware placement, SLO scheduling and preemption.
+
+This is the ROADMAP's tier ABOVE the single engine (item 1, modeled on
+the vLLM production-stack deployment shape): one router process fronts
+N in-process replicas, each on its own worker thread with its own
+engine (own KV store, own prefix cache, optionally its own
+``EngineConfig``).  The pieces:
+
+  admission    every ``submit()`` passes an ``AdmissionQueue`` —
+               priority ordering, bounded depth (``RouterQueueFull``),
+               deadline drops (``finish_reason="deadline"``).
+  placement    ``RouterConfig.policy`` picks the replica: prefix-aware
+               (warm-prefix overlap via the non-mutating
+               ``PrefixCache.peek`` probe, balanced against load),
+               with round_robin / least_loaded baselines for the
+               trace-replay comparison.
+  preemption   a high-priority arrival may preempt the lowest-priority
+               running decode on its chosen replica
+               (``LLMEngine.preempt`` — the existing mid-decode
+               slot-release machinery).  The preempted request
+               requeues as a CONTINUATION: prompt extended by the
+               tokens generated so far, ``token_offset`` advanced so
+               its sampling stream resumes where it stopped, and —
+               with the prefix cache on — the resume restores the
+               prompt through the paper's transfer-vs-recompute split
+               instead of recomputing from scratch.
+               ``max_preemptions`` bounds how often one request can be
+               bounced (the no-starvation guarantee).
+  isolation    a ``RequestFaultError`` contained by a replica finishes
+               ONLY that request (``finish_reason="error"``); an
+               escalated engine error fails the in-flight batch but
+               the worker survives and the queue keeps draining.
+
+Cross-replica identity: every replica derives the same sampling stream
+for a uid (``fold_in(engine_key, uid)`` with a shared engine seed), so
+routed outputs are token-identical to a single-engine reference no
+matter which replica serves them — the property
+``tests/test_identity_matrix.py`` pins.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import (Callable, Dict, Iterable, List, Mapping, Optional,
+                    Sequence, Tuple, Union)
+
+import numpy as np
+
+from repro.core.prefix_cache import (PrefixCacheStats,
+                                     RadixPrefixIndex)
+from repro.core.scheduler import Scheduler
+from repro.serving.api import (EngineConfig, LLMEngine, Request,
+                               RequestOutput, SamplingParams)
+from repro.serving.router.admission import (AdmissionQueue,
+                                            DEFAULT_SLO_CLASSES,
+                                            RouterQueueFull, SLOClass,
+                                            slo_attained)
+from repro.serving.router.placement import (POLICIES, PlacementView,
+                                            make_policy)
+
+__all__ = ["ReplicaStats", "RouterConfig", "RouterEngine",
+           "RouterStats"]
+
+
+# ------------------------------------------------------------- configs
+
+@dataclasses.dataclass(frozen=True)
+class RouterConfig:
+    """Knobs of the serving tier (see docs/serving.md).
+
+    replicas: number of in-process ``LLMEngine`` replicas (threads).
+    policy: placement policy — "prefix" | "round_robin" |
+        "least_loaded".
+    max_batch: most requests one replica serves per engine batch; the
+        rest wait in its queue (smaller = lower TTFT under load,
+        larger = more batching throughput).
+    max_queue: admission bound across ALL queued requests; 0 means
+        unbounded.  ``submit`` raises ``RouterQueueFull`` beyond it.
+    warmth_weight / load_weight: the prefix policy's score weights.
+    preemption: allow a strictly-higher-priority arrival to preempt
+        the lowest-priority running decode on its chosen replica.
+    max_preemptions: per-request bound on preempt-resume cycles —
+        after this many, the request runs to completion no matter what
+        arrives (the no-starvation guarantee).
+    slo_classes: named TTFT/TPOT targets; ``Request.slo`` picks one
+        and inherits its default priority when the request leaves
+        priority at 0.
+    """
+    replicas: int = 2
+    policy: str = "prefix"
+    max_batch: int = 4
+    max_queue: int = 0
+    warmth_weight: float = 1.0
+    load_weight: float = 0.5
+    preemption: bool = True
+    max_preemptions: int = 1
+    # prefix policy: shortest prompt-prefix overlap worth treating as a
+    # family affinity.  The router remembers WHERE it routed each new
+    # prefix family; later members of the family see that replica as
+    # speculatively warm even while its cache insert is still in
+    # flight — without this, an arrival burst lands entirely on cold
+    # caches and placement degenerates to load balancing.
+    affinity_min: int = 8
+    slo_classes: Mapping[str, SLOClass] = dataclasses.field(
+        default_factory=lambda: dict(DEFAULT_SLO_CLASSES))
+
+    def validate(self) -> "RouterConfig":
+        if self.replicas < 1:
+            raise ValueError(f"replicas must be >= 1, got "
+                             f"{self.replicas}")
+        if self.policy not in POLICIES:
+            raise ValueError(f"policy must be one of {POLICIES}, got "
+                             f"{self.policy!r}")
+        if self.max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got "
+                             f"{self.max_batch}")
+        if self.max_queue < 0:
+            raise ValueError(f"max_queue must be >= 0, got "
+                             f"{self.max_queue}")
+        if self.max_preemptions < 0:
+            raise ValueError(f"max_preemptions must be >= 0, got "
+                             f"{self.max_preemptions}")
+        if self.affinity_min < 1:
+            raise ValueError(f"affinity_min must be >= 1, got "
+                             f"{self.affinity_min}")
+        for slo in self.slo_classes.values():
+            slo.validate()
+        return self
+
+
+@dataclasses.dataclass
+class ReplicaStats:
+    """Per-replica counters (a snapshot; see ``RouterEngine.stats``)."""
+    index: int
+    queued: int = 0
+    running: int = 0
+    dispatched: int = 0
+    batches: int = 0
+    preemptions: int = 0         # victims preempted ON this replica
+    deadline_drops: int = 0
+    deferrals: int = 0           # cold family-duplicates held one batch
+    errors: int = 0
+    prefix: Optional[PrefixCacheStats] = None
+
+
+@dataclasses.dataclass
+class RouterStats:
+    """Router-level snapshot: per-replica counters plus the aggregate
+    warm-prefix picture placement is optimizing."""
+    replicas: List[ReplicaStats]
+    submitted: int = 0
+    finished: int = 0
+    preemptions: int = 0
+    deadline_drops: int = 0
+    rejected: int = 0
+
+    @property
+    def warm_hit_rate(self) -> float:
+        hits = lookups = 0
+        for r in self.replicas:
+            if r.prefix is not None:
+                hits += r.prefix.hits
+                lookups += r.prefix.lookups
+        return hits / max(lookups, 1)
+
+    @property
+    def warm_tokens(self) -> int:
+        return sum(r.prefix.tokens_matched for r in self.replicas
+                   if r.prefix is not None)
+
+
+# ----------------------------------------------------------- internals
+
+@dataclasses.dataclass
+class _Tracked:
+    """One request's router-side lifecycle record, living from submit
+    to finalize across any number of preempt-resume segments."""
+    req: Request                     # the ORIGINAL request
+    sp: SamplingParams
+    seq: int                         # arrival order (priority tiebreak)
+    t_enqueue: float
+    prompt: np.ndarray               # current (possibly extended)
+    token_offset: int = 0
+    segments: List[np.ndarray] = dataclasses.field(default_factory=list)
+    first: Optional[RequestOutput] = None    # first segment (ttft)
+    preemptions: int = 0
+    preempt_pending: bool = False    # flagged, not yet observed
+    replica: Optional[int] = None
+    out: Optional[RequestOutput] = None
+    done: threading.Event = dataclasses.field(
+        default_factory=threading.Event)
+
+    @property
+    def priority(self) -> int:
+        return self.req.priority
+
+    @property
+    def deadline_s(self) -> Optional[float]:
+        return self.req.deadline_s
+
+    @property
+    def budget_left(self) -> int:
+        return self.sp.max_tokens - sum(len(s) for s in self.segments)
+
+
+@dataclasses.dataclass
+class _Affinity:
+    """Router-side placement record: the replica a prefix family was
+    routed to (indexed by the family head's prompt tokens in a
+    ``RadixPrefixIndex``)."""
+    replica: int
+
+
+def _common_prefix(a: np.ndarray, b: np.ndarray) -> int:
+    n = min(len(a), len(b))
+    if n == 0:
+        return 0
+    neq = a[:n] != b[:n]
+    return int(np.argmax(neq)) if neq.any() else n
+
+
+class _Replica:
+    """One serving replica: its engine, its queue, its worker thread."""
+
+    def __init__(self, index: int, engine: LLMEngine,
+                 cond: threading.Condition):
+        self.index = index
+        self.engine = engine
+        self.queue = AdmissionQueue()
+        self.running: Dict[int, _Tracked] = {}
+        self.cond = cond             # shares the router lock
+        self.stats = ReplicaStats(index)
+        self.thread: Optional[threading.Thread] = None
+
+    def view(self, pending: int = 0) -> PlacementView:
+        pc = self.engine.prefix_cache
+        return PlacementView(self.index, len(self.queue),
+                             len(self.running),
+                             peek=pc.peek if pc is not None else None,
+                             pending=pending)
+
+
+# -------------------------------------------------------------- router
+
+class RouterEngine:
+    """The multi-replica serving front door.
+
+    Construction mirrors ``LLMEngine.from_config`` one level up::
+
+        router = RouterEngine(model, params,
+                              EngineConfig(prefix_cache=...),
+                              RouterConfig(replicas=2, policy="prefix"))
+        outs = router.generate(requests, SamplingParams(max_tokens=16))
+
+    ``engine_config`` may be a single config (replicated — replicas
+    then share the engine seed, which is what makes routed outputs
+    token-identical to a single-engine reference) or one config per
+    replica.  ``generate`` is the batch convenience; ``submit`` /
+    ``wait`` is the online interface the benchmark drives.
+    """
+
+    def __init__(self, model, params,
+                 engine_config: Union[EngineConfig,
+                                      Sequence[EngineConfig], None]
+                 = None,
+                 config: Optional[RouterConfig] = None,
+                 scheduler: Optional[Scheduler] = None):
+        self.config = (config or RouterConfig()).validate()
+        n = self.config.replicas
+        if engine_config is None:
+            engine_config = EngineConfig()
+        if isinstance(engine_config, EngineConfig):
+            engine_configs = [engine_config] * n
+        else:
+            engine_configs = list(engine_config)
+            if len(engine_configs) != n:
+                raise ValueError(
+                    f"got {len(engine_configs)} engine configs for "
+                    f"{n} replicas")
+        self._lock = threading.Lock()
+        self._policy = make_policy(self.config.policy,
+                                   self.config.warmth_weight,
+                                   self.config.load_weight)
+        self.replicas: List[_Replica] = []
+        for i, ec in enumerate(engine_configs):
+            eng = LLMEngine.from_config(model, params, ec,
+                                        scheduler=scheduler)
+            self.replicas.append(
+                _Replica(i, eng, threading.Condition(self._lock)))
+        self._track: Dict[int, _Tracked] = {}
+        self._affinity = RadixPrefixIndex()
+        self._seq = 0
+        self._auto_uid = 0
+        self._submitted = 0
+        self._finished = 0
+        self._preemptions = 0
+        self._deadline_drops = 0
+        self._rejected = 0
+        self._closed = False
+        for rep in self.replicas:
+            rep.thread = threading.Thread(
+                target=self._worker, args=(rep,),
+                name=f"router-replica-{rep.index}", daemon=True)
+            rep.thread.start()
+
+    # ------------------------------------------------------- lifecycle
+
+    def close(self) -> None:
+        """Drain nothing — stop the workers after their current batch,
+        fail still-queued requests, close every replica engine.
+        Idempotent."""
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+            for rep in self.replicas:
+                rep.cond.notify_all()
+        for rep in self.replicas:
+            if rep.thread is not None:
+                rep.thread.join(timeout=60.0)
+        now = time.perf_counter()
+        with self._lock:
+            for tr in self._track.values():
+                if not tr.done.is_set():
+                    self._finalize_locked(tr, RequestOutput(
+                        tr.req.uid, np.zeros((0,), np.int32),
+                        finish_reason="error",
+                        error="RouterClosed: router closed before the "
+                              "request was served",
+                        t_enqueue=tr.t_enqueue, t_finish=now,
+                        slo=tr.req.slo))
+        for rep in self.replicas:
+            rep.engine.close()
+
+    def __enter__(self) -> "RouterEngine":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.close()
+        return False
+
+    # ------------------------------------------------------ submission
+
+    def submit(self, request: Union[Request, np.ndarray, Sequence[int]],
+               sampling: Optional[SamplingParams] = None) -> int:
+        """Admit one request; returns its uid.  Raises
+        ``RouterQueueFull`` when admission control rejects it (the
+        bounded queue is at capacity)."""
+        if not isinstance(request, Request):
+            request = Request(uid=self._next_uid(),
+                              prompt=np.asarray(request, np.int32))
+        sp = sampling or request.params or SamplingParams(
+            max_tokens=request.max_new_tokens)
+        sp = sp.validate()
+        req = request
+        if req.slo is not None and req.slo not in self.config.slo_classes:
+            raise ValueError(
+                f"unknown SLO class {req.slo!r}; configured: "
+                f"{sorted(self.config.slo_classes)}")
+        if req.slo is not None and req.priority == 0:
+            req = dataclasses.replace(
+                req, priority=self.config.slo_classes[req.slo].priority)
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("router is closed")
+            if req.uid in self._track:
+                raise ValueError(f"uid {req.uid} is already in flight")
+            if self.config.max_queue:
+                depth = sum(len(r.queue) for r in self.replicas)
+                if depth >= self.config.max_queue:
+                    self._rejected += 1
+                    raise RouterQueueFull(
+                        f"router queue at max_queue="
+                        f"{self.config.max_queue}")
+            now = time.perf_counter()
+            if req.t_enqueue is None:
+                req = dataclasses.replace(req, t_enqueue=now)
+            tr = _Tracked(req, sp, self._seq, req.t_enqueue,
+                          np.asarray(req.prompt, np.int32))
+            self._seq += 1
+            self._submitted += 1
+            self._track[req.uid] = tr
+            self._assign_locked(tr)
+        return req.uid
+
+    def _next_uid(self) -> int:
+        with self._lock:
+            self._auto_uid += 1
+            return 1_000_000 + self._auto_uid
+
+    def _assign_locked(self, tr: _Tracked) -> None:
+        """Place ``tr`` on a replica queue (policy decision) and, under
+        load, preempt a strictly-lower-priority running decode there.
+
+        For the prefix policy, the router's affinity index supplies
+        SPECULATIVE warmth: a family member routed earlier but not yet
+        finished hasn't inserted into its replica's cache, so the
+        cache probe alone would scatter a whole arrival burst across
+        cold replicas — the affinity record keeps the family together
+        until the real warmth takes over."""
+        m, aff = 0, None
+        if self.config.policy == "prefix":
+            toks = [int(t) for t in tr.prompt]
+            m, aff = self._affinity.match(toks)
+            if m < self.config.affinity_min:
+                m, aff = 0, None
+        views = [rep.view(pending=(m if aff is not None
+                                   and aff.replica == rep.index
+                                   else 0))
+                 for rep in self.replicas]
+        idx = self._policy(views, tr.prompt)
+        if self.config.policy == "prefix" and aff is None:
+            # a new prefix family: remember where it went
+            self._affinity.insert(tuple(int(t) for t in tr.prompt),
+                                  _Affinity(idx))
+        rep = self.replicas[idx]
+        tr.replica = idx
+        rep.queue.push(tr)
+        rep.cond.notify_all()
+        if self.config.preemption and rep.running:
+            self._maybe_preempt_locked(rep, tr)
+
+    def _maybe_preempt_locked(self, rep: _Replica,
+                              tr: _Tracked) -> None:
+        """Preempt the lowest-priority running request on ``rep`` when
+        the arrival strictly outranks it — "long low-priority decodes
+        yield to interactive traffic".  Victims are preempted at most
+        ``max_preemptions`` times (starvation bound) and at most once
+        per flight (``preempt_pending``)."""
+        victims = [v for v in rep.running.values()
+                   if not v.preempt_pending
+                   and v.priority < tr.priority
+                   and v.preemptions < self.config.max_preemptions]
+        if not victims:
+            return
+        # lowest priority first; among equals, the longest remaining
+        # decode (most budget left) frees its slot for the longest
+        victim = min(victims,
+                     key=lambda v: (v.priority, -v.budget_left, v.seq))
+        victim.preempt_pending = True
+        rep.stats.preemptions += 1
+        self._preemptions += 1
+        rep.engine.preempt(victim.req.uid)
+
+    # ---------------------------------------------------------- worker
+
+    def _worker(self, rep: _Replica) -> None:
+        while True:
+            with self._lock:
+                while not self._closed and len(rep.queue) == 0:
+                    rep.cond.wait(timeout=0.1)
+                if self._closed:
+                    return
+                ready, expired = rep.queue.pop_ready(
+                    time.perf_counter(), limit=self.config.max_batch)
+                now = time.perf_counter()
+                for tr in expired:
+                    rep.stats.deadline_drops += 1
+                    self._deadline_drops += 1
+                    self._finalize_locked(tr, RequestOutput(
+                        tr.req.uid, np.zeros((0,), np.int32),
+                        finish_reason="deadline",
+                        error=f"deadline_s={tr.req.deadline_s} "
+                              f"exceeded in queue",
+                        t_enqueue=tr.t_enqueue, t_finish=now,
+                        queue_wait=now - tr.t_enqueue,
+                        slo=tr.req.slo, replica=rep.index))
+                if not ready:
+                    continue
+                ready, deferred = self._compose_batch(rep, ready)
+                for tr in deferred:
+                    rep.stats.deferrals += 1
+                    rep.queue.push(tr)
+                for tr in ready:
+                    rep.running[tr.req.uid] = tr
+                rep.stats.dispatched += len(ready)
+                rep.stats.batches += 1
+            self._serve_batch(rep, ready)
+
+    def _compose_batch(self, rep: _Replica, ready: List[_Tracked]
+                       ) -> Tuple[List[_Tracked], List[_Tracked]]:
+        """Cache-aware batch composition: admit at most ONE cold member
+        of each prefix family per batch; defer the rest one batch.
+
+        Inserts happen at finish, so two cold members of the same
+        family in one batch BOTH prefill from scratch — the second
+        gains nothing from the first.  Held back one batch, the second
+        finds the family head's KV in the cache and restores it via
+        the transfer-vs-recompute split instead.  ``pop_ready``
+        returns in priority order, so the admitted head is the
+        highest-priority member of its family; deferral never lets a
+        lower-priority family member jump an admitted higher one.
+        Inert for single-request batches and cache-less replicas."""
+        pc = rep.engine.prefix_cache
+        if pc is None or len(ready) <= 1:
+            return ready, []
+        amin = self.config.affinity_min
+        take, defer, cold_heads = [], [], []
+        for tr in ready:
+            matched, _ = pc.peek(tr.prompt)
+            if matched >= amin:
+                take.append(tr)
+                continue
+            if any(_common_prefix(tr.prompt, h) >= amin
+                   for h in cold_heads):
+                defer.append(tr)
+            else:
+                cold_heads.append(tr.prompt)
+                take.append(tr)
+        return take, defer
+
+    def _serve_batch(self, rep: _Replica,
+                     batch: List[_Tracked]) -> None:
+        """Run one engine batch outside the router lock; reconcile the
+        outcome (finish / resume-after-preemption / contained error)
+        back under it."""
+        reqs, sps = [], []
+        for tr in batch:
+            reqs.append(dataclasses.replace(
+                tr.req, prompt=tr.prompt, t_enqueue=tr.t_enqueue,
+                token_offset=tr.token_offset))
+            sps.append(dataclasses.replace(
+                tr.sp, max_tokens=max(tr.budget_left, 1)))
+        outs: Optional[List[RequestOutput]] = None
+        err: Optional[BaseException] = None
+        try:
+            outs = rep.engine.generate(reqs, sps)
+        except Exception as e:            # noqa: BLE001 — isolation:
+            # an ESCALATED engine error (beyond per-request
+            # containment) fails this batch but must not kill the
+            # worker or stall the queue behind it
+            err = e
+        now = time.perf_counter()
+        with self._lock:
+            for tr in batch:
+                rep.running.pop(tr.req.uid, None)
+            if err is not None:
+                rep.stats.errors += len(batch)
+                for tr in batch:
+                    self._finalize_locked(tr, RequestOutput(
+                        tr.req.uid, np.zeros((0,), np.int32),
+                        finish_reason="error",
+                        error=f"{type(err).__name__}: {err}",
+                        t_enqueue=tr.t_enqueue, t_finish=now,
+                        slo=tr.req.slo, replica=rep.index))
+                return
+            for tr, out in zip(batch, outs):
+                if out.finish_reason == "preempted":
+                    self._resume_locked(tr, out)
+                else:
+                    if out.finish_reason == "error":
+                        rep.stats.errors += 1
+                    self._finalize_locked(tr, out, replica=rep.index)
+
+    def _resume_locked(self, tr: _Tracked, out: RequestOutput) -> None:
+        """Requeue a preempted request as a continuation: prompt grown
+        by the segment's tokens, sampling stream offset past them —
+        the resume's admission then restores the (now cached) prompt
+        via the scheduler's transfer-vs-recompute split instead of
+        recomputing it from scratch."""
+        seg = np.asarray(out.tokens, np.int32)
+        tr.segments.append(seg)
+        tr.token_offset += len(seg)
+        tr.prompt = np.concatenate([tr.prompt, seg])
+        tr.preemptions += 1
+        tr.preempt_pending = False
+        if tr.first is None:
+            tr.first = out
+        if tr.budget_left <= 0:
+            # preempted exactly at budget: nothing left to generate
+            self._finalize_locked(tr, dataclasses.replace(
+                out, tokens=np.zeros((0,), np.int32),
+                finish_reason="length"))
+            return
+        if self._closed:
+            return            # close() will fail it
+        self._assign_locked(tr)
+
+    def _finalize_locked(self, tr: _Tracked, out: RequestOutput,
+                         replica: Optional[int] = None) -> None:
+        """Stitch the final segment onto any preempted prefix segments
+        and publish the request's single RequestOutput."""
+        if tr.done.is_set():
+            return
+        tokens = (np.concatenate(tr.segments + [np.asarray(
+            out.tokens, np.int32)]) if tr.segments
+            else np.asarray(out.tokens, np.int32))
+        first = tr.first or out
+        tr.out = dataclasses.replace(
+            out, tokens=tokens,
+            prefill_time=first.prefill_time,
+            t_enqueue=tr.t_enqueue,
+            t_first_token=first.t_first_token,
+            queue_wait=first.queue_wait,
+            preemptions=tr.preemptions,
+            replica=replica if replica is not None else out.replica,
+            slo=tr.req.slo)
+        self._finished += 1
+        tr.done.set()
+
+    # --------------------------------------------------------- results
+
+    def wait(self, uid: int, timeout: Optional[float] = None
+             ) -> RequestOutput:
+        with self._lock:
+            tr = self._track.get(uid)
+        if tr is None:
+            raise KeyError(f"unknown uid {uid}")
+        if not tr.done.wait(timeout):
+            raise TimeoutError(f"request {uid} not finished within "
+                               f"{timeout}s")
+        with self._lock:
+            self._track.pop(uid, None)
+        return tr.out
+
+    def generate(self, requests: Iterable, sampling=None
+                 ) -> List[RequestOutput]:
+        """Batch convenience: submit everything, wait for everything;
+        outputs in request order.  ``sampling`` follows the
+        ``LLMEngine.generate`` convention (one shared SamplingParams, a
+        per-request list, or None for each request's own params)."""
+        requests = list(requests)
+        sampling_seq = isinstance(sampling, (list, tuple))
+        if sampling_seq and len(sampling) != len(requests):
+            raise ValueError(
+                f"per-request sampling list has {len(sampling)} "
+                f"entries for {len(requests)} requests")
+        uids = []
+        for i, r in enumerate(requests):
+            sp = sampling[i] if sampling_seq else sampling
+            uids.append(self.submit(r, sp))
+        return [self.wait(uid) for uid in uids]
+
+    # ----------------------------------------------------------- stats
+
+    def stats(self) -> RouterStats:
+        with self._lock:
+            reps = []
+            for rep in self.replicas:
+                s = dataclasses.replace(rep.stats)
+                s.queued = len(rep.queue)
+                s.running = len(rep.running)
+                s.prefix = rep.engine.prefix_stats
+                reps.append(s)
+            return RouterStats(reps, self._submitted, self._finished,
+                               self._preemptions, self._deadline_drops,
+                               self._rejected)
+
+    def per_class(self, outs: Iterable[RequestOutput]
+                  ) -> Dict[str, Dict[str, float]]:
+        """Per-SLO-class attainment summary over finished outputs:
+        share of requests that met their class's TTFT and TPOT targets
+        (errors and deadline drops count as missed)."""
+        by: Dict[str, List[RequestOutput]] = {}
+        for o in outs:
+            if o.slo is not None:
+                by.setdefault(o.slo, []).append(o)
+        summary = {}
+        for name, group in sorted(by.items()):
+            slo = self.config.slo_classes[name]
+            ok = sum(slo_attained(o, slo) for o in group)
+            served = [o for o in group if len(o.tokens)]
+            summary[name] = {
+                "n": len(group),
+                "attained": ok / len(group),
+                "ttft_target_s": slo.ttft_s,
+                "tpot_target_s": slo.tpot_s,
+                "mean_ttft_s": (float(np.mean([o.ttft for o in served]))
+                                if served else float("nan")),
+                "mean_tpot_s": (float(np.mean([o.tpot for o in served]))
+                                if served else float("nan")),
+            }
+        return summary

@@ -1,0 +1,127 @@
+"""Replica placement policies for the router.
+
+Placement answers one question per request: WHICH replica's queue does
+it join?  Three policies are selectable via ``RouterConfig.policy`` so
+the trace-replay benchmark can compare them on the same trace:
+
+  round_robin   rotate over replicas regardless of state — the
+                classic stateless baseline.
+  least_loaded  pick the replica with the fewest queued + running
+                requests — balances depth, blind to cache state.
+  prefix        score each replica by warm-prefix overlap (via the
+                non-mutating ``PrefixCache.peek`` probe — probing must
+                not touch LRU recency or placement itself would
+                distort eviction) balanced against its load:
+
+                    score = warmth_weight * matched/len(prompt)
+                          - load_weight   * load
+
+                The load term is the ABSOLUTE queue depth, not a
+                normalized share: a full warm hit saves about one
+                prompt's prefill while every queued request ahead
+                costs about one batch, so affinity should hold only
+                up to a bounded load gap (~warmth_weight/load_weight
+                requests) and then divert — otherwise a backlogged
+                replica keeps attracting its families no matter how
+                long its queue grows.
+
+                A replica whose prefix cache already holds the
+                request's system prompt / RAG prefix restores it
+                through the KVPR transfer-vs-recompute split instead
+                of prefilling it, so keeping a family of prompts on
+                the replica that is warm for them directly reduces the
+                bytes every split must move ("Understanding
+                Bottlenecks…", PAPERS.md).
+
+All policies break ties toward the lower replica index, which makes
+placement deterministic for the tests.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional, Sequence
+
+__all__ = ["POLICIES", "PlacementView", "make_policy"]
+
+
+class PlacementView:
+    """The slice of replica state a policy may read: queue depth,
+    in-flight count, and the warmth probe.  ``warmth(prompt)`` returns
+    the matched-prefix length WITHOUT touching the cache's LRU state
+    (``PrefixCache.peek``); replicas without a prefix cache are always
+    cold."""
+
+    def __init__(self, index: int, queued: int, running: int,
+                 peek: Optional[Callable] = None, pending: int = 0):
+        self.index = index
+        self.queued = queued
+        self.running = running
+        self._peek = peek
+        # speculative warmth: tokens of this prompt already ROUTED to
+        # this replica but not yet inserted into its cache (the
+        # router's affinity index) — during an arrival burst the cache
+        # is still cold when placement runs, so the in-flight family
+        # member, not the cache, is the signal that keeps a family
+        # together
+        self.pending = pending
+
+    @property
+    def load(self) -> int:
+        return self.queued + self.running
+
+    def warmth(self, prompt) -> int:
+        matched = 0
+        if self._peek is not None:
+            matched, _ = self._peek(prompt)
+        return max(matched, self.pending)
+
+
+def _round_robin() -> Callable:
+    state = {"next": 0}
+
+    def choose(views: Sequence[PlacementView], prompt) -> int:
+        i = state["next"] % len(views)
+        state["next"] += 1
+        return views[i].index
+
+    return choose
+
+
+def _least_loaded() -> Callable:
+    def choose(views: Sequence[PlacementView], prompt) -> int:
+        return min(views, key=lambda v: (v.load, v.index)).index
+
+    return choose
+
+
+def _prefix(warmth_weight: float, load_weight: float) -> Callable:
+    def choose(views: Sequence[PlacementView], prompt) -> int:
+        n = max(len(prompt), 1)
+        best, best_key = views[0].index, None
+        for v in views:
+            score = (warmth_weight * v.warmth(prompt) / n
+                     - load_weight * v.load)
+            # deterministic: higher score wins, then lower load, then
+            # lower index
+            key = (-score, v.load, v.index)
+            if best_key is None or key < best_key:
+                best, best_key = v.index, key
+        return best
+
+    return choose
+
+
+POLICIES = ("prefix", "round_robin", "least_loaded")
+
+
+def make_policy(name: str, warmth_weight: float = 1.0,
+                load_weight: float = 0.5) -> Callable:
+    """Build a fresh policy closure (round-robin keeps its own rotation
+    state, so each router instance needs its own)."""
+    if name == "round_robin":
+        return _round_robin()
+    if name == "least_loaded":
+        return _least_loaded()
+    if name == "prefix":
+        return _prefix(warmth_weight, load_weight)
+    raise ValueError(f"unknown placement policy {name!r}; expected one "
+                     f"of {POLICIES}")

@@ -160,6 +160,40 @@ def test_identity_matrix(setup, sched, backend, batching, scenario):
             assert eng.prefix_stats.hits > 0
 
 
+# router tier: resident/static in the fast lane, the rest ride the
+# slow one (each case builds two replica engines)
+ROUTER_COMBOS = [COMBOS[0]] + [pytest.param(*c, marks=pytest.mark.slow)
+                               for c in COMBOS[1:]]
+
+
+@pytest.mark.parametrize("backend,batching", ROUTER_COMBOS)
+def test_router_identity_matrix(setup, sched, backend, batching):
+    """Routed outputs are token-identical to the per-request single-
+    engine reference on every backend x batching combo — placement is
+    an execution decision, never a semantics decision.  Replicas share
+    the engine seed, so uid alone pins each request's sampling stream
+    no matter which replica serves it (mixed greedy + seeded
+    temperature, same params as the `mixed` scenario)."""
+    from repro.serving.router import RouterConfig, RouterEngine
+    cfg, model, params = setup
+    reqs = _reqs(cfg)
+    sps = [SamplingParams(max_tokens=5, temperature=0.8, seed=11),
+           SamplingParams(max_tokens=5),
+           SamplingParams(max_tokens=4, temperature=0.6, seed=3)]
+    refs = _reference(setup, sched, reqs, sps)
+    ec = EngineConfig(backend=backend, batching=batching, slots=2,
+                      max_len=64,
+                      prefix_cache=PrefixCacheConfig(min_prefix=4))
+    with RouterEngine(model, params, ec,
+                      RouterConfig(replicas=2, policy="prefix"),
+                      scheduler=sched) as router:
+        outs = router.generate(reqs, sps)
+    for r, o, (ref_toks, ref_fin) in zip(reqs, outs, refs):
+        assert list(o.tokens) == ref_toks, (backend, batching, r.uid)
+        assert o.finish_reason == ref_fin, (backend, batching, r.uid)
+        assert o.replica in (0, 1)
+
+
 @pytest.mark.parametrize("backend,batching", COMBOS)
 def test_stream_matches_generate_chunked(setup, sched, backend,
                                          batching):

@@ -106,6 +106,49 @@ def test_prefix_cache_lru_eviction():
     assert pc.lookup(np.concatenate([a, [99]]))[1] is not None
 
 
+def test_prefix_cache_peek_does_not_touch_lru():
+    """peek() predicts lookup()'s match exactly but never counts as
+    use: after peeking the LRU entry it is STILL the eviction victim,
+    while a real lookup saves it (the router placement probe must not
+    distort eviction order)."""
+    z8 = np.zeros((2, 1, 8, 2, 4), np.float32)
+    h8 = np.zeros((2, 1, 8, 8), np.float32)
+    a = np.arange(1, 9, dtype=np.int32)
+    b = np.arange(11, 19, dtype=np.int32)
+    c = np.arange(21, 29, dtype=np.int32)
+    qa = np.concatenate([a, [99]]).astype(np.int32)
+    qb = np.concatenate([b, [99]]).astype(np.int32)
+
+    def fresh():
+        pc = PrefixCache(PrefixCacheConfig(capacity_tokens=16,
+                                           min_prefix=4))
+        pc.insert(a, z8, z8, h8)             # a is the LRU entry
+        pc.insert(b, z8, z8, h8)
+        return pc
+
+    # peek agrees with lookup's prediction but mutates nothing
+    pc = fresh()
+    p, e = pc.peek(qa)
+    assert p == 8 and e is not None and e.hits == 0
+    st = pc.stats
+    assert st.peeks == 1 and st.lookups == 0 and st.hits == 0
+
+    # peeking `a` five more times does NOT refresh it: inserting c
+    # still evicts a
+    for _ in range(5):
+        pc.peek(qa)
+    pc.insert(c, z8, z8, h8)
+    assert pc.peek(qa) == (0, None)                  # a evicted
+    assert pc.peek(qb)[1] is not None                # b survived
+
+    # ...while ONE real lookup refreshes a: the same insert evicts b
+    pc = fresh()
+    assert pc.lookup(qa)[0] == 8
+    pc.insert(c, z8, z8, h8)
+    assert pc.peek(qb) == (0, None)                  # b evicted
+    assert pc.peek(qa)[1] is not None                # a survived
+
+
 # --------------------------------------------------- the restore split
 
 def test_restore_split_modes():

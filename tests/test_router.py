@@ -1,0 +1,444 @@
+"""Multi-replica router tier: admission control, placement policies,
+preemption bounds, fault isolation, and the scheduling invariants.
+
+The cheap layers (AdmissionQueue, placement scoring, the preemption
+victim rule) are tested model-free; the end-to-end properties (fault
+isolation, deadline drops, bounded preempt-resume under sustained
+high-priority load) run real replicas over the smoke model.  Token
+identity of routed outputs lives in test_identity_matrix.py
+(test_router_identity_matrix).
+"""
+import threading
+import time
+import types
+
+import numpy as np
+import pytest
+
+from repro.core.faults import FaultPolicy
+from repro.serving import (EngineConfig, PrefixCacheConfig, Request,
+                           SamplingParams)
+from repro.serving.router import (RouterConfig, RouterEngine,
+                                  RouterQueueFull, SLOClass)
+from repro.serving.router.admission import (AdmissionQueue,
+                                            DEFAULT_SLO_CLASSES,
+                                            slo_attained)
+from repro.serving.router.engine import (_Replica, _Tracked,
+                                         _common_prefix)
+from repro.serving.router.placement import PlacementView, make_policy
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+    HAVE_HYPOTHESIS = True
+except ImportError:                      # optional dep (docs/automation.md)
+    HAVE_HYPOTHESIS = False
+
+
+def _entry(priority=0, seq=0, t_enqueue=0.0, deadline_s=None):
+    return types.SimpleNamespace(priority=priority, seq=seq,
+                                 t_enqueue=t_enqueue,
+                                 deadline_s=deadline_s)
+
+
+# -------------------------------------------------------- admission queue
+
+def test_admission_pop_priority_then_fifo():
+    q = AdmissionQueue()
+    for seq, pri in enumerate([0, 2, 1, 2, 0]):
+        q.push(_entry(priority=pri, seq=seq))
+    ready, expired = q.pop_ready(now=0.0)
+    assert not expired
+    assert [(e.priority, e.seq) for e in ready] == \
+        [(2, 1), (2, 3), (1, 2), (0, 0), (0, 4)]
+
+
+def test_admission_queue_bounded():
+    q = AdmissionQueue(max_queue=2)
+    q.push(_entry(seq=0))
+    q.push(_entry(seq=1))
+    with pytest.raises(RouterQueueFull):
+        q.push(_entry(seq=2))
+
+
+def test_admission_deadline_expired_do_not_consume_limit():
+    """Dead requests must never block live ones behind them: expired
+    entries come back separately and don't count against the batch."""
+    q = AdmissionQueue()
+    q.push(_entry(priority=9, seq=0, t_enqueue=0.0, deadline_s=0.5))
+    for seq in range(1, 4):
+        q.push(_entry(seq=seq, t_enqueue=1.0))
+    ready, expired = q.pop_ready(now=2.0, limit=3)
+    assert [e.seq for e in expired] == [0]
+    assert [e.seq for e in ready] == [1, 2, 3]
+
+
+# ------------------------------------------------------------- placement
+
+def _view(index, queued=0, running=0, matched=0, pending=0):
+    return PlacementView(index, queued, running,
+                         peek=lambda p: (matched, None), pending=pending)
+
+
+def test_prefix_policy_prefers_warm_replica():
+    choose = make_policy("prefix")
+    prompt = np.arange(16)
+    views = [_view(0, queued=1), _view(1, queued=1, matched=12)]
+    assert choose(views, prompt) == 1
+
+
+def test_prefix_policy_diverts_past_load_gap():
+    """Affinity holds only up to ~warmth_weight/load_weight queued
+    requests; past that, the warm replica is a worse place to wait."""
+    choose = make_policy("prefix", warmth_weight=1.0, load_weight=0.5)
+    prompt = np.arange(16)
+    warm_ok = [_view(0, queued=1, matched=15), _view(1, queued=0)]
+    assert choose(warm_ok, prompt) == 0          # gap 1 < 0.94/0.5
+    warm_backlogged = [_view(0, queued=3, matched=15), _view(1)]
+    assert choose(warm_backlogged, prompt) == 1  # gap 3 > 0.94/0.5
+
+
+def test_prefix_policy_pending_counts_as_warmth():
+    """Speculative warmth (the router's affinity index) substitutes for
+    the still-cold cache during an arrival burst."""
+    choose = make_policy("prefix")
+    prompt = np.arange(16)
+    views = [_view(0, queued=1), _view(1, queued=1, pending=12)]
+    assert choose(views, prompt) == 1
+
+
+def test_prefix_policy_cold_tie_breaks_toward_low_load():
+    choose = make_policy("prefix")
+    prompt = np.arange(8)
+    views = [_view(0, queued=2), _view(1, queued=1)]
+    assert choose(views, prompt) == 1
+    views = [_view(0, queued=1), _view(1, queued=1)]
+    assert choose(views, prompt) == 0            # full tie -> low index
+
+
+def test_round_robin_rotates_per_instance():
+    choose = make_policy("round_robin")
+    views = [_view(0), _view(1)]
+    assert [choose(views, None) for _ in range(4)] == [0, 1, 0, 1]
+    # a fresh policy has its own rotation state
+    assert make_policy("round_robin")(views, None) == 0
+
+
+def test_least_loaded_picks_min_load():
+    choose = make_policy("least_loaded")
+    views = [_view(0, queued=2), _view(1, queued=1, running=2),
+             _view(2, running=1)]
+    assert choose(views, None) == 2
+
+
+def test_make_policy_rejects_unknown():
+    with pytest.raises(ValueError, match="unknown placement policy"):
+        make_policy("sticky")
+
+
+def test_common_prefix():
+    a = np.array([1, 2, 3, 4], np.int32)
+    assert _common_prefix(a, np.array([1, 2, 3, 4], np.int32)) == 4
+    assert _common_prefix(a, np.array([1, 2, 9], np.int32)) == 2
+    assert _common_prefix(a, np.array([9], np.int32)) == 0
+    assert _common_prefix(a, np.zeros((0,), np.int32)) == 0
+
+
+# ----------------------------------------------------- config / SLO units
+
+def test_router_config_validation():
+    with pytest.raises(ValueError, match="replicas"):
+        RouterConfig(replicas=0).validate()
+    with pytest.raises(ValueError, match="policy"):
+        RouterConfig(policy="sticky").validate()
+    with pytest.raises(ValueError, match="max_batch"):
+        RouterConfig(max_batch=0).validate()
+    with pytest.raises(ValueError, match="affinity_min"):
+        RouterConfig(affinity_min=0).validate()
+    with pytest.raises(ValueError, match="positive"):
+        RouterConfig(slo_classes={
+            "bad": SLOClass("bad", ttft_s=0.0, tpot_s=1.0)}).validate()
+
+
+def test_slo_attained_judges_ttft_and_tpot():
+    from repro.serving import RequestOutput
+    slo = DEFAULT_SLO_CLASSES["interactive"]
+    ok = RequestOutput(0, np.arange(3, dtype=np.int32),
+                       t_enqueue=10.0, t_first_token=11.0,
+                       t_finish=11.2)
+    assert slo_attained(ok, slo)
+    late = RequestOutput(0, np.arange(3, dtype=np.int32),
+                         t_enqueue=10.0, t_first_token=13.0,
+                         t_finish=13.2)
+    assert not slo_attained(late, slo)
+    slow_decode = RequestOutput(0, np.arange(3, dtype=np.int32),
+                                t_enqueue=10.0, t_first_token=11.0,
+                                t_finish=12.0)   # tpot 0.5 > 0.25
+    assert not slo_attained(slow_decode, slo)
+    empty = RequestOutput(0, np.zeros((0,), np.int32))
+    assert not slo_attained(empty, slo)
+
+
+# ------------------------------------------- preemption victim rule (pure)
+
+def _tracked(uid, priority, seq, max_tokens=8, preemptions=0,
+             pending=False):
+    tr = _Tracked(Request(uid=uid, prompt=np.arange(4, dtype=np.int32),
+                          priority=priority),
+                  SamplingParams(max_tokens=max_tokens), seq, 0.0,
+                  np.arange(4, dtype=np.int32))
+    tr.preemptions = preemptions
+    tr.preempt_pending = pending
+    return tr
+
+
+def _preempt_harness(max_preemptions=1):
+    """Drive the REAL RouterEngine._maybe_preempt_locked victim rule
+    against a stub replica (fake engine records preempt calls)."""
+    preempted = []
+    fake_engine = types.SimpleNamespace(
+        preempt=preempted.append, prefix_cache=None)
+    rep = _Replica(0, fake_engine, threading.Condition())
+    self_stub = types.SimpleNamespace(
+        config=RouterConfig(max_preemptions=max_preemptions).validate(),
+        _preemptions=0)
+    return rep, self_stub, preempted
+
+
+def test_victim_rule_picks_lowest_priority_longest_remaining():
+    rep, stub, preempted = _preempt_harness()
+    rep.running = {1: _tracked(1, priority=1, seq=0, max_tokens=4),
+                   2: _tracked(2, priority=0, seq=1, max_tokens=4),
+                   3: _tracked(3, priority=0, seq=2, max_tokens=32)}
+    RouterEngine._maybe_preempt_locked(stub, rep,
+                                       _tracked(9, priority=2, seq=9))
+    assert preempted == [3]          # lowest priority, most budget left
+
+
+def test_victim_rule_requires_strictly_higher_priority():
+    rep, stub, preempted = _preempt_harness()
+    rep.running = {1: _tracked(1, priority=1, seq=0)}
+    RouterEngine._maybe_preempt_locked(stub, rep,
+                                       _tracked(9, priority=1, seq=9))
+    assert preempted == []
+
+
+def test_victim_rule_honors_max_preemptions():
+    """The no-starvation bound: a request already bounced
+    max_preemptions times runs to completion no matter what arrives."""
+    rep, stub, preempted = _preempt_harness(max_preemptions=1)
+    rep.running = {1: _tracked(1, priority=0, seq=0, preemptions=1)}
+    RouterEngine._maybe_preempt_locked(stub, rep,
+                                       _tracked(9, priority=5, seq=9))
+    assert preempted == []
+
+
+def test_victim_rule_skips_inflight_preempts():
+    rep, stub, preempted = _preempt_harness()
+    rep.running = {1: _tracked(1, priority=0, seq=0, pending=True)}
+    RouterEngine._maybe_preempt_locked(stub, rep,
+                                       _tracked(9, priority=5, seq=9))
+    assert preempted == []
+
+
+# ---------------------------------------------------- hypothesis properties
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=200, deadline=None)
+    @given(st.lists(st.integers(0, 3), min_size=1, max_size=40),
+           st.integers(1, 4))
+    def test_pop_never_serves_lower_priority_first(prios, limit):
+        """Scheduling invariant: at equal arrival, a higher-priority
+        request never waits behind a lower one — every pop_ready batch
+        is a priority-sorted prefix of what is queued."""
+        q = AdmissionQueue()
+        entries = [_entry(priority=p, seq=i)
+                   for i, p in enumerate(prios)]
+        for e in entries:
+            q.push(e)
+        popped = []
+        while len(q):
+            ready, _ = q.pop_ready(now=0.0, limit=limit)
+            popped.extend(ready)
+        assert len(popped) == len(entries)
+        for a, b in zip(popped, popped[1:]):
+            assert (a.priority, -a.seq) >= (b.priority, -b.seq), \
+                (a.priority, a.seq, b.priority, b.seq)
+
+    @settings(max_examples=200, deadline=None)
+    @given(st.lists(st.integers(0, 5), min_size=1, max_size=30),
+           st.integers(0, 3))
+    def test_victim_rule_never_exceeds_preemption_bound(arrivals,
+                                                        max_p):
+        """No starvation under sustained load: drive the real victim
+        rule with an arbitrary stream of arrivals against one running
+        low-priority request; it is never preempted more than
+        max_preemptions times, and only by strictly higher priority."""
+        rep, stub, preempted = _preempt_harness(max_preemptions=max_p)
+        victim = _tracked(1, priority=1, seq=0, max_tokens=64)
+        rep.running = {1: victim}
+        for i, pri in enumerate(arrivals):
+            RouterEngine._maybe_preempt_locked(
+                stub, rep, _tracked(100 + i, priority=pri, seq=1 + i))
+            if preempted and preempted[-1] == 1:
+                # the engine would bounce it; model the resume
+                assert pri > victim.priority
+                victim.preemptions += 1
+                victim.preempt_pending = False
+                preempted.clear()
+        assert victim.preemptions <= max_p
+        assert stub._preemptions == victim.preemptions
+
+
+# ------------------------------------------------------------- end to end
+
+@pytest.fixture(scope="module")
+def setup():
+    import jax
+    from repro.configs import get_smoke_config
+    from repro.models.transformer import Model
+    cfg = get_smoke_config("tinyllama-1.1b")
+    model = Model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+@pytest.fixture(scope="module")
+def sched():
+    from repro.core.cost_model import A100_PCIE4
+    from repro.core.scheduler import Scheduler
+    return Scheduler(A100_PCIE4)
+
+
+def _prompts(cfg, n, length=10, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(1, cfg.vocab_size, length).astype(np.int32)
+            for _ in range(n)]
+
+
+def _wait_running(router, rep_index=0, timeout=30.0):
+    t0 = time.perf_counter()
+    while router.stats().replicas[rep_index].running == 0:
+        if time.perf_counter() - t0 > timeout:
+            raise TimeoutError("replica never started serving")
+        time.sleep(0.005)
+
+
+def test_router_fault_isolation(setup, sched):
+    """A RequestFaultError contained by one replica finishes ONLY that
+    request (finish_reason='error'); everything else on the router —
+    including later submissions — keeps serving (PR 7 fault-matrix
+    regression, one level up)."""
+    cfg, model, params = setup
+    ec = EngineConfig(
+        faults=FaultPolicy(hard_fail_uids=frozenset({1})))
+    prompts = _prompts(cfg, 5)
+    with RouterEngine(model, params, ec,
+                      RouterConfig(replicas=2, policy="round_robin"),
+                      scheduler=sched) as router:
+        outs = router.generate(
+            [Request(uid=i, prompt=p) for i, p in
+             enumerate(prompts[:4])],
+            SamplingParams(max_tokens=3))
+        # the queue did not stall: a later submission still serves
+        late = router.generate([Request(uid=9, prompt=prompts[4])],
+                               SamplingParams(max_tokens=3))[0]
+        st = router.stats()
+    assert outs[1].finish_reason == "error"
+    assert "RequestFault" in outs[1].error
+    assert len(outs[1].tokens) == 0
+    for o in (outs[0], outs[2], outs[3], late):
+        assert o.finish_reason == "length" and len(o.tokens) == 3
+    assert sum(r.errors for r in st.replicas) == 1
+    assert st.finished == 5
+
+
+def test_router_timing_fields_populated(setup, sched):
+    cfg, model, params = setup
+    with RouterEngine(model, params, EngineConfig(),
+                      RouterConfig(replicas=1, policy="least_loaded"),
+                      scheduler=sched) as router:
+        outs = router.generate(
+            [Request(uid=i, prompt=p, slo="standard")
+             for i, p in enumerate(_prompts(cfg, 2))],
+            SamplingParams(max_tokens=3))
+        classes = router.per_class(outs)
+    for o in outs:
+        assert o.t_enqueue > 0
+        assert o.t_first_token > o.t_enqueue
+        assert o.t_finish >= o.t_first_token
+        assert o.queue_wait >= 0 and o.ttft > 0 and o.tpot > 0
+        assert o.slo == "standard" and o.replica == 0
+    assert classes["standard"]["n"] == 2
+
+
+def test_router_queue_full_and_deadline_drop(setup, sched):
+    """With the single worker busy on a long decode: a bounded queue
+    rejects at the door (RouterQueueFull), and a queued request whose
+    deadline lapses is dropped at pop time without stalling the queue
+    behind it."""
+    cfg, model, params = setup
+    prompts = _prompts(cfg, 4, seed=3)
+    with RouterEngine(model, params, EngineConfig(),
+                      RouterConfig(replicas=1, policy="least_loaded",
+                                   max_batch=1, max_queue=2,
+                                   preemption=False),
+                      scheduler=sched) as router:
+        u_long = router.submit(Request(uid=0, prompt=prompts[0]),
+                               SamplingParams(max_tokens=16))
+        _wait_running(router)
+        u_dead = router.submit(
+            Request(uid=1, prompt=prompts[1], deadline_s=0.01),
+            SamplingParams(max_tokens=3))
+        u_live = router.submit(Request(uid=2, prompt=prompts[2]),
+                               SamplingParams(max_tokens=3))
+        with pytest.raises(RouterQueueFull):
+            router.submit(Request(uid=3, prompt=prompts[3]),
+                          SamplingParams(max_tokens=3))
+        dead = router.wait(u_dead)
+        live = router.wait(u_live)
+        router.wait(u_long)
+        st = router.stats()
+    assert dead.finish_reason == "deadline"
+    assert len(dead.tokens) == 0 and dead.queue_wait > 0
+    assert live.finish_reason == "length" and len(live.tokens) == 3
+    assert st.deadline_drops == 1 and st.rejected == 1
+
+
+@pytest.mark.slow
+def test_router_preemption_bound_under_sustained_load(setup, sched):
+    """End-to-end no-starvation: a low-priority decode facing a stream
+    of high-priority arrivals is preempted at most max_preemptions
+    times, still finishes, and its stitched tokens are identical to an
+    uninterrupted run."""
+    from repro.serving import LLMEngine
+    cfg, model, params = setup
+    rng = np.random.default_rng(7)
+    low_req = Request(uid=50, prompt=rng.integers(
+        1, cfg.vocab_size, 10).astype(np.int32), priority=0)
+    low_sp = SamplingParams(max_tokens=20, temperature=0.6, seed=5)
+    hi_prompts = _prompts(cfg, 3, length=8, seed=8)
+    with LLMEngine.from_config(model, params, EngineConfig(),
+                               scheduler=sched) as eng:
+        ref = eng.generate([low_req], [low_sp])[0]
+    ec = EngineConfig(prefix_cache=PrefixCacheConfig(min_prefix=4))
+    with RouterEngine(model, params, ec,
+                      RouterConfig(replicas=1, policy="least_loaded",
+                                   max_batch=1, max_preemptions=1),
+                      scheduler=sched) as router:
+        u_low = router.submit(low_req, low_sp)
+        his = []
+        for i, p in enumerate(hi_prompts):
+            _wait_running(router)
+            his.append(router.submit(
+                Request(uid=60 + i, prompt=p, priority=5),
+                SamplingParams(max_tokens=2)))
+            time.sleep(0.05)
+        out_low = router.wait(u_low)
+        hi_outs = [router.wait(u) for u in his]
+    assert out_low.preemptions <= 1
+    assert out_low.finish_reason == ref.finish_reason
+    assert list(out_low.tokens) == list(ref.tokens)
+    for o in hi_outs:
+        assert o.finish_reason == "length" and len(o.tokens) == 2
