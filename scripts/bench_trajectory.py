@@ -23,7 +23,7 @@ import sys
 
 FILES = ["BENCH_step_breakdown.json", "BENCH_prefix.json",
          "BENCH_chunked_prefill.json", "BENCH_faults.json",
-         "BENCH_router_replay.json"]
+         "BENCH_router_replay.json", "BENCH_tiered.json"]
 
 
 def _load(root: pathlib.Path):
@@ -152,6 +152,26 @@ def main(argv=None) -> int:
                 failed.append(f"router_replay {gate}=false")
         if "p99_ttft" not in d.get("gates", {}):
             failed.append("router_replay p99_ttft gate missing")
+
+    if "BENCH_tiered.json" in data:
+        d = data["BENCH_tiered.json"]
+        cap = d["capacity"]
+        print("== tiered KV store "
+              f"({json.dumps(d.get('config'))}) ==")
+        print(f"  working set {cap['working_set_tokens']} tok "
+              f"({cap['beyond_dram_tokens']} beyond DRAM, "
+              f"{cap['sessions_beyond_dram']} sessions)")
+        for name in ("dram", "tier_split", "demand"):
+            c = d["cells"][name]
+            disk = (f"  disk_read {c['disk_bytes_read'] / 1e6:.2f} MB  "
+                    f"promotions {c['promotions']}"
+                    if "disk_bytes_read" in c else "")
+            print(f"  {name:<11s} {c['step_ms']:8.2f} ms/step{disk}")
+        for gate, ok in d.get("gates", {}).items():
+            if not ok:
+                failed.append(f"tiered {gate}=false")
+        if d.get("smoke_ok") is False:
+            failed.append("tiered smoke_ok=false")
 
     missing = [f for f in FILES if f not in data]
     if missing:

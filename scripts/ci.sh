@@ -108,4 +108,11 @@ timeout "${ROUTER_TIMEOUT:-600}" python -m repro.launch.router --smoke
 timeout "${ROUTER_REPLAY_TIMEOUT:-600}" \
     python benchmarks/bench_router_replay.py --smoke
 
+# 10. Tiered KV store smoke: sessions whose working set exceeds the
+#     DRAM budget must decode token-identically to the all-DRAM run,
+#     and the tier_split plan must beat naive demand paging on both
+#     wall clock and disk bytes read (see docs/storage.md).
+timeout "${TIERED_TIMEOUT:-300}" \
+    python benchmarks/bench_tiered.py --smoke
+
 echo "ci.sh: all checks passed"

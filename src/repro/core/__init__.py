@@ -1,9 +1,12 @@
 """KVPR core: the paper's contribution (profiler, scheduler, runtime)."""
 from repro.core.cost_model import (
     A100_PCIE4, PROFILES, RTX5000_PCIE4X8, TPU_V5E,
-    HardwareProfile, Workload, layer_times,
+    HardwareProfile, TierLink, Workload, layer_times, tier_layer_times,
 )
-from repro.core.solver import SplitDecision, brute_force_split, optimal_split
+from repro.core.solver import (
+    SplitDecision, TierSplitDecision, brute_force_split,
+    brute_force_tier_split, optimal_split, optimal_tier_split,
+)
 from repro.core.scheduler import ExecutionPlan, PlanKey, Scheduler
 from repro.core.prefix_cache import (
     PrefixCache, PrefixCacheConfig, PrefixCacheStats, PrefixEntry,
@@ -15,8 +18,10 @@ from repro.core.pipeline import (
 
 __all__ = [
     "A100_PCIE4", "PROFILES", "RTX5000_PCIE4X8", "TPU_V5E",
-    "HardwareProfile", "Workload", "layer_times",
-    "SplitDecision", "brute_force_split", "optimal_split",
+    "HardwareProfile", "TierLink", "Workload", "layer_times",
+    "tier_layer_times",
+    "SplitDecision", "TierSplitDecision", "brute_force_split",
+    "brute_force_tier_split", "optimal_split", "optimal_tier_split",
     "ExecutionPlan", "PlanKey", "Scheduler",
     "PrefixCache", "PrefixCacheConfig", "PrefixCacheStats",
     "PrefixEntry", "RadixPrefixIndex",

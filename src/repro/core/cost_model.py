@@ -7,7 +7,22 @@ paper's systems and our TPU target.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class TierLink:
+    """One rung of the storage-bandwidth ladder below the host tier.
+
+    The base ``HardwareProfile`` prices a single host→device link
+    (``link_bandwidth``); a tiered store adds rungs BEHIND it — e.g. an
+    NVMe mmap tier whose blocks must first cross disk→host and then
+    host→device.  Frozen (and nested in the frozen profile) so the
+    whole ladder stays hashable and ``PlanKey`` memoization keeps
+    working unchanged."""
+    name: str
+    read_bandwidth: float        # tier -> host bytes/s (page-in)
+    write_bandwidth: float       # host -> tier bytes/s (demotion)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -23,6 +38,11 @@ class HardwareProfile:
     # chunk — it is what makes very small chunks lose (measured by
     # core/profiler.measure_dispatch_overhead on live systems).
     dispatch_overhead: float = 5e-4
+    # bandwidth ladder below host DRAM, fastest first.  Empty = the
+    # classic single-link profile; a tiered KV store installs its disk
+    # rung here (with_tiers) so tier_split plans can price a fetch that
+    # crosses disk->host AND host->device.
+    tiers: Tuple[TierLink, ...] = ()
 
     @property
     def v_com(self) -> float:
@@ -31,6 +51,18 @@ class HardwareProfile:
     @property
     def v_gpu(self) -> float:
         return self.gpu_flops * self.gemm_efficiency
+
+    def tier(self, name: str) -> Optional[TierLink]:
+        for t in self.tiers:
+            if t.name == name:
+                return t
+        return None
+
+    def with_tiers(self, *tiers: TierLink) -> "HardwareProfile":
+        """A copy of this profile with the given ladder installed (a
+        NEW frozen value: plans keyed on the old profile are untouched,
+        plans for the tiered store key on this one)."""
+        return dataclasses.replace(self, tiers=tuple(tiers))
 
 
 # The paper's primary system: A100-40GB + PCIe 4.0 x16.
@@ -156,3 +188,34 @@ def layer_times(wl: Workload, hw: HardwareProfile, l: int,
     total = t_act + max(t_recomp, t_kv)
     return {"t_act": t_act, "t_recomp": t_recomp, "t_kv": t_kv,
             "total": total}
+
+
+def tier_layer_times(wl: Workload, hw: HardwareProfile, l: int,
+                     disk_tokens: int, disk_read_bandwidth: float,
+                     disk_bytes_per_el: Optional[float] = None,
+                     include_act_transfer: bool = False) -> dict:
+    """Eq. 9-10 generalized to a two-rung ladder: the leading
+    ``disk_tokens`` of the prefix are resident on a slow tier (the
+    tiered store keeps disk residency a PREFIX of each slot), the rest
+    in host DRAM.  Recomputing ``[0, l)`` skips the disk read for every
+    demoted token below l; a demoted token ABOVE l must cross
+    disk→host (at ``disk_read_bandwidth``, possibly at a compressed
+    ``disk_bytes_per_el`` width) before it can cross host→device.  The
+    page-in overlaps the previous layer's compute exactly like the
+    PCIe stream does, so the streamed arm is the SUM of the two link
+    crossings for the disk share plus the host crossing for the warm
+    share — and the whole expression degenerates to ``layer_times``
+    at ``disk_tokens = 0``."""
+    d = max(0, min(int(disk_tokens), wl.seq_len))
+    t_act = wl.act_bytes(l) / hw.v_com if include_act_transfer else 0.0
+    t_recomp = wl.recompute_flops(l) / hw.v_gpu
+    cold = max(0, d - l)                   # demoted tokens still streamed
+    warm = (wl.seq_len - l) - cold
+    p_disk = (wl.kv_el_bytes if disk_bytes_per_el is None
+              else disk_bytes_per_el)
+    disk_bytes = 2 * wl.batch * cold * wl.kv_dim * p_disk
+    t_disk = disk_bytes / float(disk_read_bandwidth)
+    t_kv = (wl.kv_bytes(wl.seq_len - l) / hw.v_com) + t_disk
+    total = t_act + max(t_recomp, t_kv)
+    return {"t_act": t_act, "t_recomp": t_recomp, "t_kv": t_kv,
+            "t_disk": t_disk, "total": total}

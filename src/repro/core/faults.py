@@ -33,9 +33,9 @@ import time
 from typing import Dict, FrozenSet, Optional
 
 __all__ = [
-    "FaultPolicy", "KernelLaunchError", "RequestFaultError",
-    "TransferError", "TransferStallError", "TransientTransferError",
-    "WriteBackError",
+    "DiskFullError", "DiskReadError", "FaultPolicy",
+    "KernelLaunchError", "RequestFaultError", "TransferError",
+    "TransferStallError", "TransientTransferError", "WriteBackError",
 ]
 
 
@@ -62,6 +62,26 @@ class WriteBackError(TransferError):
     included) can reconstruct the lost state.  Fence waits wrap
     store-side errors in this type so the runtime knows degradation is
     unsound and aborts instead."""
+
+
+class DiskReadError(TransientTransferError):
+    """A disk-tier block read failed (bad sector, torn mmap page,
+    injected ``disk_read_fail_rate``).  Subclasses
+    ``TransientTransferError`` on purpose: the transfer engine retries
+    it with the same backoff as any transient link failure, and one
+    that survives every retry escalates through the SAME degradation
+    ladder — the step falls back to the l = p full-recompute endpoint
+    (activations are pinned in the host tier, so no disk read is on
+    the fallback path) instead of hanging or aborting."""
+
+
+class DiskFullError(TransferError):
+    """The disk tier ran out of configured capacity during a demotion.
+    Benign by construction: the block simply STAYS in host DRAM (the
+    demotion is skipped and counted in ``TieredStoreStats.
+    demote_failures``) — correctness never depends on a demotion
+    happening, so this error never aborts a step.  Raised to callers
+    only by explicit disk-tier writes, never from the decode path."""
 
 
 class RequestFaultError(TransferError):
@@ -99,7 +119,10 @@ class FaultPolicy:
 
     Op kinds: ``"fetch"`` (per-layer KV/activation fetch), ``"store"``
     (decode write-back, chunk write-back, slot fills), ``"restore"``
-    (prefix-cache restore).
+    (prefix-cache restore), ``"disk_read"`` (tiered-store block
+    page-in; injected failures surface as ``DiskReadError``) and
+    ``"disk_write"`` (tiered-store demotion; failures skip the
+    demotion, the block stays in DRAM).
 
     dead_store_after: the (n+1)-th store op HANGS (holding the store
     pool's worker) until ``release()`` — the fence watchdog must
@@ -118,6 +141,8 @@ class FaultPolicy:
     fetch_fail_rate: float = 0.0
     store_fail_rate: float = 0.0
     restore_fail_rate: float = 0.0
+    disk_read_fail_rate: float = 0.0   # tiered store: mmap block reads
+    disk_write_fail_rate: float = 0.0  # tiered store: demotion writes
     # -- deterministic transient failures: fail the FIRST n ops per kind
     fail_first: Dict[str, int] = dataclasses.field(default_factory=dict)
     # -- hard per-request failures ----------------------------------------
@@ -141,7 +166,9 @@ class FaultPolicy:
     def _rate_for(self, kind: str) -> float:
         return {"fetch": self.fetch_fail_rate,
                 "store": self.store_fail_rate,
-                "restore": self.restore_fail_rate}.get(kind, 0.0)
+                "restore": self.restore_fail_rate,
+                "disk_read": self.disk_read_fail_rate,
+                "disk_write": self.disk_write_fail_rate}.get(kind, 0.0)
 
     def _delay_for(self, kind: str) -> float:
         return (self.store_delay_s if kind == "store"
@@ -182,6 +209,8 @@ class FaultPolicy:
             self._released.wait()
             return
         if transient:
+            if kind == "disk_read":
+                raise DiskReadError("injected disk block read failure")
             raise TransientTransferError(
                 f"injected transient {kind} failure")
         d = self._delay_for(kind)

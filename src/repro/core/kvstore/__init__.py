@@ -1,0 +1,22 @@
+"""Tiered KV storage hierarchy: pinned host DRAM (top rung, the
+historical ``HostKVStore``) over a memory-mapped disk tier, with
+block-granular demotion/promotion and typed capacity errors.
+
+``core/runtime.py`` re-exports ``HostKVStore`` so existing imports
+keep working; new code should import from here.
+"""
+from repro.core.kvstore.base import KVBlockTier, StoreCapacityError
+from repro.core.kvstore.disk import MmapDiskTier
+from repro.core.kvstore.host import HostKVStore
+from repro.core.kvstore.tiered import (KVTiersConfig, TieredKVStore,
+                                       TieredStoreStats)
+
+__all__ = [
+    "HostKVStore",
+    "KVBlockTier",
+    "KVTiersConfig",
+    "MmapDiskTier",
+    "StoreCapacityError",
+    "TieredKVStore",
+    "TieredStoreStats",
+]

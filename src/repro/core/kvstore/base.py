@@ -1,0 +1,77 @@
+"""Block-granular tier interface for the tiered KV store.
+
+A *tier* stores fixed-width token blocks of per-layer K/V data for
+(slot, block) coordinates.  The host DRAM tier (``host.HostKVStore``)
+is the always-present top rung and keeps its historical slice-write
+API; lower rungs (``disk.MmapDiskTier``) implement this narrower
+block interface, which is all demotion/promotion needs:
+
+  - demotion writes ONE block across every layer at once (the store
+    pool already runs it off the hot path),
+  - promotion (page-in) reads one layer's span of blocks at a time,
+    inside the per-layer fetch task, so disk reads overlap the
+    previous layer's compute exactly like the PCIe stream does.
+
+Capacity is explicit at every rung: a tier that cannot take a block
+raises a typed error (``StoreCapacityError`` for host-tier fills,
+``DiskFullError`` for demotions) instead of silently growing.
+"""
+from __future__ import annotations
+
+import abc
+from typing import Optional
+
+import numpy as np
+
+from repro.core.faults import TransferError
+
+__all__ = ["KVBlockTier", "StoreCapacityError"]
+
+
+class StoreCapacityError(TransferError):
+    """A fill would exceed the store tier's configured token capacity.
+    Raised by ``bulk_fill`` / ``fill_slot`` (and block writes) instead
+    of silently writing past the accounted budget: the caller — the
+    admission path — must shrink, shed, or demote before retrying."""
+
+
+class KVBlockTier(abc.ABC):
+    """One rung below host DRAM in the KV storage ladder."""
+
+    #: tokens per block (set by implementations)
+    block_tokens: int
+
+    @abc.abstractmethod
+    def write_block(self, slot: int, block: int, k: np.ndarray,
+                    v: np.ndarray) -> None:
+        """Store one (slot, block): ``k``/``v`` are
+        (num_layers, block_tokens, KV, dh) float arrays.  Raises
+        ``DiskFullError`` when the tier is at capacity."""
+
+    @abc.abstractmethod
+    def read_block_layer(self, layer: int, slot: int, block: int,
+                         out_k: np.ndarray, out_v: np.ndarray) -> None:
+        """Read one layer of one block into ``out_k``/``out_v``
+        ((block_tokens, KV, dh) views of the host arrays).  Raises
+        ``DiskReadError`` on a failed read."""
+
+    @abc.abstractmethod
+    def free_block(self, slot: int, block: int) -> None:
+        """Release one block's capacity (no-op when absent)."""
+
+    @abc.abstractmethod
+    def free_slot(self, slot: int) -> None:
+        """Release every block of a slot."""
+
+    @property
+    @abc.abstractmethod
+    def bytes_used(self) -> int:
+        """Bytes currently accounted to resident blocks."""
+
+    @property
+    @abc.abstractmethod
+    def capacity_bytes(self) -> Optional[int]:
+        """Configured byte capacity (None = unbounded)."""
+
+    def close(self) -> None:      # pragma: no cover - trivial default
+        """Release backing resources (files, maps).  Idempotent."""

@@ -1,0 +1,276 @@
+"""The mmap disk tier: block-granular K/V storage in memory-mapped
+files (``np.memmap`` — no new dependencies), with optional int4
+compress-on-demote, explicit capacity, emulated bandwidth, and fault
+hooks.
+
+Layout: one backing file per array, shaped exactly like the host
+arrays ((L, batch, max_len, ...)) so a block's bytes live at their
+natural offset — no allocation map, and the files are sparse until
+blocks are actually demoted.  Three layouts:
+
+  - ``layout="raw"``      float32 K/V, mirrors an uncompressed host
+                          store bit-exactly (the LOSSLESS default — the
+                          identity matrix runs over this);
+  - ``layout="pack"``     group-wise int4 on demotion (compress_on_
+                          demote): quantize on write, dequantize on
+                          page-in.  Lossy by design, like KVComp's
+                          cold-block compression;
+  - ``layout="mirror4"``  the host store is ALREADY int4: the demoted
+                          triple (packed/scale/zero) is mirrored
+                          verbatim — no second lossy step.
+
+Fault surface: every block read passes ``FaultPolicy.on_op(
+"disk_read")`` (injected failures raise ``DiskReadError``, a
+``TransientTransferError`` — the transfer engine's retry/degradation
+ladder handles it); every block write passes ``on_op("disk_write")``
+and checks capacity (``DiskFullError`` — the caller keeps the block in
+DRAM).  ``read_bytes_per_s`` / ``write_bytes_per_s`` emulate a slow
+rung by sleeping per transfer, the same convention the TransferEngine
+uses for the PCIe link.
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+import threading
+import time
+from typing import Dict, Optional, Set, Tuple
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import kvquant as KQ
+from repro.core.faults import (DiskFullError, DiskReadError,
+                               FaultPolicy)
+from repro.core.kvstore.base import KVBlockTier
+
+__all__ = ["MmapDiskTier"]
+
+
+class MmapDiskTier(KVBlockTier):
+    """Memory-mapped block storage for demoted KV prefixes."""
+
+    def __init__(self, cfg: ModelConfig, batch: int, max_len: int,
+                 block_tokens: int, layout: str = "raw",
+                 group: int = 32,
+                 capacity_tokens: Optional[int] = None,
+                 directory: Optional[str] = None,
+                 read_bytes_per_s: Optional[float] = None,
+                 write_bytes_per_s: Optional[float] = None,
+                 faults: Optional[FaultPolicy] = None):
+        if layout not in ("raw", "pack", "mirror4"):
+            raise ValueError(f"unknown disk layout {layout!r}")
+        Lh, KV, dh = cfg.num_layers, cfg.num_kv_heads, cfg.dh
+        self.block_tokens = int(block_tokens)
+        self.layout = layout
+        self.group = group
+        self.capacity_tokens = (None if capacity_tokens is None
+                                else int(capacity_tokens))
+        self.read_bytes_per_s = read_bytes_per_s
+        self.write_bytes_per_s = write_bytes_per_s
+        self.faults = faults
+        self._owns_dir = directory is None
+        self.dir = (tempfile.mkdtemp(prefix="kvtier-")
+                    if directory is None else str(directory))
+        os.makedirs(self.dir, exist_ok=True)
+        self._lock = threading.Lock()
+        self._resident: Set[Tuple[int, int]] = set()   # (slot, block)
+        self._closed = False
+        self.reads = 0
+        self.writes = 0
+        self.bytes_read = 0
+        self.bytes_written = 0
+
+        bt = self.block_tokens
+        if layout == "raw":
+            self._k = self._map("k", (Lh, batch, max_len, KV, dh),
+                                np.float32)
+            self._v = self._map("v", (Lh, batch, max_len, KV, dh),
+                                np.float32)
+            self._block_bytes = 2 * Lh * bt * KV * dh * 4
+        else:
+            ng = dh // group
+            self._maps: Dict[str, np.memmap] = {}
+            for name in ("kp", "vp"):
+                self._maps[name] = self._map(
+                    name, (Lh, batch, max_len, KV, dh // 2), np.uint8)
+            for name in ("ks", "kz", "vs", "vz"):
+                self._maps[name] = self._map(
+                    name, (Lh, batch, max_len, KV, ng), np.float32)
+            self._block_bytes = 2 * Lh * bt * KV * (dh // 2 + 2 * 4 * ng)
+        self._layer_block_bytes = self._block_bytes // Lh
+
+    def _map(self, name: str, shape, dtype) -> np.memmap:
+        return np.memmap(os.path.join(self.dir, f"{name}.bin"),
+                         dtype=dtype, mode="w+", shape=shape)
+
+    # --------------------------------------------------------- accounting
+
+    @property
+    def bytes_used(self) -> int:
+        with self._lock:
+            return len(self._resident) * self._block_bytes
+
+    @property
+    def capacity_bytes(self) -> Optional[int]:
+        if self.capacity_tokens is None:
+            return None
+        return ((self.capacity_tokens // self.block_tokens)
+                * self._block_bytes)
+
+    @property
+    def resident_blocks(self) -> int:
+        with self._lock:
+            return len(self._resident)
+
+    def _throttle(self, nbytes: int, rate: Optional[float]) -> None:
+        if rate:
+            time.sleep(nbytes / float(rate))
+
+    def _span(self, block: int) -> slice:
+        lo = block * self.block_tokens
+        return slice(lo, lo + self.block_tokens)
+
+    # -------------------------------------------------------------- write
+
+    def write_block(self, slot: int, block: int, k: np.ndarray,
+                    v: np.ndarray) -> None:
+        """Demote one (slot, block): ``k``/``v`` are (L, bt, KV, dh)
+        float arrays (``layout="mirror4"`` uses ``write_block_q``)."""
+        self._reserve(slot, block)
+        if self.faults is not None:
+            self.faults.on_op("disk_write")
+        sl = self._span(block)
+        if self.layout == "raw":
+            self._k[:, slot, sl] = k
+            self._v[:, slot, sl] = v
+        else:                                  # pack: int4 on demote
+            m = self._maps
+            for pre, x in (("k", k), ("v", v)):
+                q = KQ.quantize_np(x, self.group)
+                m[pre + "p"][:, slot, sl] = q.packed
+                m[pre + "s"][:, slot, sl] = q.scale
+                m[pre + "z"][:, slot, sl] = q.zero
+        self._commit_write()
+
+    def write_block_q(self, slot: int, block: int, kq: KQ.QuantizedKV,
+                      vq: KQ.QuantizedKV) -> None:
+        """Demote one already-quantized block ((L, bt, ...) triples from
+        an int4 host store) verbatim — no recompression."""
+        self._reserve(slot, block)
+        if self.faults is not None:
+            self.faults.on_op("disk_write")
+        sl = self._span(block)
+        m = self._maps
+        for pre, q in (("k", kq), ("v", vq)):
+            m[pre + "p"][:, slot, sl] = q.packed
+            m[pre + "s"][:, slot, sl] = q.scale
+            m[pre + "z"][:, slot, sl] = q.zero
+        self._commit_write()
+
+    def _reserve(self, slot: int, block: int) -> None:
+        with self._lock:
+            if self._closed:
+                raise DiskFullError("disk tier is closed")
+            if (slot, block) in self._resident:
+                return
+            if (self.capacity_tokens is not None
+                    and (len(self._resident) + 1) * self.block_tokens
+                    > self.capacity_tokens):
+                raise DiskFullError(
+                    f"disk tier at capacity "
+                    f"({self.capacity_tokens} tokens): cannot demote "
+                    f"block (slot={slot}, block={block})")
+            self._resident.add((slot, block))
+
+    def _commit_write(self) -> None:
+        with self._lock:
+            self.writes += 1
+            self.bytes_written += self._block_bytes
+        self._throttle(self._block_bytes, self.write_bytes_per_s)
+
+    # --------------------------------------------------------------- read
+
+    def read_block_layer(self, layer: int, slot: int, block: int,
+                         out_k: np.ndarray, out_v: np.ndarray) -> None:
+        """Page one layer of one block into the host views
+        ``out_k``/``out_v`` ((bt, KV, dh) float32)."""
+        with self._lock:
+            if (slot, block) not in self._resident:
+                raise DiskReadError(
+                    f"block (slot={slot}, block={block}) not resident "
+                    f"on the disk tier")
+        if self.faults is not None:
+            self.faults.on_op("disk_read")
+        sl = self._span(block)
+        if self.layout == "raw":
+            out_k[...] = self._k[layer, slot, sl]
+            out_v[...] = self._v[layer, slot, sl]
+        else:
+            m = self._maps
+            out_k[...] = KQ.dequantize_np(KQ.QuantizedKV(
+                np.asarray(m["kp"][layer, slot, sl]),
+                np.asarray(m["ks"][layer, slot, sl]),
+                np.asarray(m["kz"][layer, slot, sl])), self.group)
+            out_v[...] = KQ.dequantize_np(KQ.QuantizedKV(
+                np.asarray(m["vp"][layer, slot, sl]),
+                np.asarray(m["vs"][layer, slot, sl]),
+                np.asarray(m["vz"][layer, slot, sl])), self.group)
+        nbytes = self._layer_block_bytes
+        with self._lock:
+            self.reads += 1
+            self.bytes_read += nbytes
+        self._throttle(nbytes, self.read_bytes_per_s)
+
+    def read_block_layer_q(self, layer: int, slot: int, block: int
+                           ) -> Tuple[KQ.QuantizedKV, KQ.QuantizedKV]:
+        """Page one layer of one mirrored int4 block back as the raw
+        triple (for promotion into an int4 host store)."""
+        with self._lock:
+            if (slot, block) not in self._resident:
+                raise DiskReadError(
+                    f"block (slot={slot}, block={block}) not resident "
+                    f"on the disk tier")
+        if self.faults is not None:
+            self.faults.on_op("disk_read")
+        sl = self._span(block)
+        m = self._maps
+        kq = KQ.QuantizedKV(np.array(m["kp"][layer, slot, sl]),
+                            np.array(m["ks"][layer, slot, sl]),
+                            np.array(m["kz"][layer, slot, sl]))
+        vq = KQ.QuantizedKV(np.array(m["vp"][layer, slot, sl]),
+                            np.array(m["vs"][layer, slot, sl]),
+                            np.array(m["vz"][layer, slot, sl]))
+        nbytes = self._layer_block_bytes
+        with self._lock:
+            self.reads += 1
+            self.bytes_read += nbytes
+        self._throttle(nbytes, self.read_bytes_per_s)
+        return kq, vq
+
+    # --------------------------------------------------------------- free
+
+    def free_block(self, slot: int, block: int) -> None:
+        with self._lock:
+            self._resident.discard((slot, block))
+
+    def free_slot(self, slot: int) -> None:
+        with self._lock:
+            self._resident = {(s, b) for (s, b) in self._resident
+                              if s != slot}
+
+    def close(self) -> None:
+        """Drop the maps and (when this tier created its tempdir)
+        remove the backing files.  Idempotent."""
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+            self._resident.clear()
+        if self.layout == "raw":
+            self._k, self._v = None, None
+        else:
+            self._maps = {}
+        if self._owns_dir:
+            shutil.rmtree(self.dir, ignore_errors=True)

@@ -1,0 +1,419 @@
+"""The pinned-host DRAM tier: ``HostKVStore``, moved verbatim from
+``core/runtime.py`` (which re-exports it for compatibility) and
+extended with explicit capacity accounting.
+
+Semantics are unchanged from the monolithic store: preallocated numpy
+("pinned") K/V + activation arrays, per-slot sequence lengths, the
+per-layer write-back fence ring and per-slot chunk-fence buckets.  New
+here:
+
+  - ``capacity_tokens``: an optional accounted token budget below the
+    physical ``max_len`` allocation.  ``bulk_fill`` / ``fill_slot``
+    REJECT an over-capacity fill with a typed ``StoreCapacityError``
+    instead of an opaque numpy broadcast error (or, worse, silently
+    landing in a bigger-than-budgeted allocation);
+  - ``tier_bytes()``: per-tier byte/token accounting, extended by the
+    tiered subclass with its disk rung.
+"""
+from __future__ import annotations
+
+import threading
+from concurrent.futures import TimeoutError as FuturesTimeout
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import kvquant as KQ
+from repro.core.faults import TransferStallError, WriteBackError
+from repro.core.kvstore.base import StoreCapacityError
+
+__all__ = ["HostKVStore"]
+
+
+class HostKVStore:
+    """Host-memory (numpy) per-layer KV + activation storage, preallocated
+    ("pinned") to max_len so stores are slice writes, not reallocations.
+
+    Slot-aware: ``seq_lens[i]`` is slot i's own cached length, so slots
+    can hold sequences at different decode positions (continuous
+    batching).  ``fill_slot`` spills a b=1 prefill into one slot;
+    ``clear_slot`` frees it for the next admission.  The legacy ``len``
+    property views the store as a uniform batch (max length; assigning
+    sets every slot) for the static-batching path.
+
+    Write-back fences: ``set_fence(li, fut)`` records the in-flight host
+    store of layer li's new token; ``wait_fence(li)`` (called by the
+    transfer engine before reading layer li) and ``sync()`` (called
+    before bulk writes) are the only synchronization points — there is
+    no global end-of-step barrier.
+
+    compress="int4" keeps the KV cache group-wise 4-bit quantized in host
+    memory (paper §4.4 / beyond-paper executable path): appends quantize
+    once, fetches stream packed codes + scales (≈⅛ of the f32 bytes);
+    activations stay exact — the KVPR-recomputed prefix loses nothing.
+
+    ``capacity_tokens`` (optional) is the accounted DRAM token budget:
+    a ``bulk_fill`` / ``fill_slot`` that would push the summed per-slot
+    lengths past it raises ``StoreCapacityError`` — typed, so admission
+    can shed or (in the tiered subclass) demote instead of guessing at
+    a numpy broadcast error.
+    """
+
+    def __init__(self, cfg: ModelConfig, batch: int, max_len: int,
+                 dtype=np.float32, compress: Optional[str] = None,
+                 group: int = 32,
+                 fence_timeout_s: Optional[float] = None,
+                 capacity_tokens: Optional[int] = None):
+        Lh, KV, dh, h = (cfg.num_layers, cfg.num_kv_heads, cfg.dh,
+                         cfg.d_model)
+        self.compress = compress
+        self.group = group
+        self.batch = batch
+        self.max_len = max_len
+        self.capacity_tokens = (None if capacity_tokens is None
+                                else int(capacity_tokens))
+        if compress == "int4":
+            ng = dh // group
+            self.kq = KQ.QuantizedKV(
+                np.zeros((Lh, batch, max_len, KV, dh // 2), np.uint8),
+                np.zeros((Lh, batch, max_len, KV, ng), np.float32),
+                np.zeros((Lh, batch, max_len, KV, ng), np.float32))
+            self.vq = KQ.QuantizedKV(
+                np.zeros((Lh, batch, max_len, KV, dh // 2), np.uint8),
+                np.zeros((Lh, batch, max_len, KV, ng), np.float32),
+                np.zeros((Lh, batch, max_len, KV, ng), np.float32))
+        else:
+            self.k = np.zeros((Lh, batch, max_len, KV, dh), dtype)
+            self.v = np.zeros((Lh, batch, max_len, KV, dh), dtype)
+        self.act = np.zeros((Lh, batch, max_len, h), dtype)
+        self.seq_lens = np.zeros((batch,), np.int64)
+        self.lock = threading.Lock()
+        self.num_layers = Lh
+        self.fence_timeout_s = fence_timeout_s
+        self._fences: List[Optional[object]] = [None] * Lh
+        # chunk fences bucketed per slot (None = whole-batch fills), so
+        # one slot's admission never waits another's in-flight chunks
+        self._chunk_fences: Dict[Optional[int], List[object]] = {}
+        self._chunk_lock = threading.Lock()
+
+    # `len` views the store as a uniform batch (static-batching path).
+    @property
+    def len(self) -> int:
+        return int(self.seq_lens.max())
+
+    @len.setter
+    def len(self, value: int) -> None:
+        self.seq_lens[:] = value
+
+    # ---------------------------------------------------------- capacity
+
+    @property
+    def kv_token_bytes(self) -> int:
+        """Host bytes one cached token occupies (K + V at the stored
+        width, plus the attention-input activation row)."""
+        if self.compress == "int4":
+            KV = self.kq.packed.shape[3]
+            dh2, ng = self.kq.packed.shape[4], self.kq.scale.shape[4]
+            kv_b = 2 * KV * (dh2 + 2 * 4 * ng)
+        else:
+            KV, dh = self.k.shape[3], self.k.shape[4]
+            kv_b = 2 * KV * dh * self.k.itemsize
+        return int(kv_b + self.act.shape[3] * self.act.itemsize)
+
+    def tier_bytes(self) -> Dict[str, Dict[str, int]]:
+        """Per-tier byte/token accounting.  The base store reports its
+        single DRAM rung; ``TieredKVStore`` extends the dict with the
+        disk rung."""
+        if self.compress == "int4":
+            alloc = sum(b.nbytes for b in self.kq) \
+                + sum(b.nbytes for b in self.vq) + self.act.nbytes
+        else:
+            alloc = self.k.nbytes + self.v.nbytes + self.act.nbytes
+        used_tokens = int(self.seq_lens.sum())
+        return {"host": {
+            "allocated_bytes": int(alloc),
+            "used_tokens": used_tokens,
+            "used_bytes": used_tokens * self.kv_token_bytes,
+            "capacity_tokens": (-1 if self.capacity_tokens is None
+                                else self.capacity_tokens),
+        }}
+
+    def _check_capacity(self, new_lens: np.ndarray, what: str) -> None:
+        """Typed rejection of an over-capacity fill: per-slot length
+        past the physical allocation, or summed tokens past the
+        accounted ``capacity_tokens`` budget."""
+        if int(new_lens.max(initial=0)) > self.max_len:
+            raise StoreCapacityError(
+                f"{what}: slot length {int(new_lens.max())} exceeds "
+                f"store max_len {self.max_len}")
+        if self.capacity_tokens is not None:
+            total = int(new_lens.sum())
+            if total > self.capacity_tokens:
+                raise StoreCapacityError(
+                    f"{what}: {total} tokens exceed the host tier's "
+                    f"capacity_tokens budget {self.capacity_tokens}")
+
+    # ------------------------------------------------------------- fences
+
+    def set_fence(self, layer: int, fut) -> None:
+        """Record layer li's in-flight write-back (a Future)."""
+        self._fences[layer] = fut
+
+    @staticmethod
+    def _fence_result(fut, timeout: Optional[float], what: str):
+        """Resolve one write-back future with bounded patience and a
+        typed verdict: a deadline miss becomes ``TransferStallError``
+        (the watchdog — the pipeline is stalled/dead, never hang); an
+        error raised inside the store task becomes ``WriteBackError``
+        (the host copy is now incomplete — recompute fallbacks are
+        unsound, callers must abort/contain instead).  Already-typed
+        errors (a stall seen through a second fence, a per-request
+        fault on a tagged store) pass through unwrapped so callers can
+        still dispatch on type."""
+        try:
+            return fut.result(timeout)
+        except FuturesTimeout:
+            raise TransferStallError(
+                f"{what} write-back exceeded fence timeout "
+                f"({timeout:.3g}s): store pipeline stalled") from None
+        except (TransferStallError, WriteBackError):
+            raise
+        except Exception as e:
+            from repro.core.faults import RequestFaultError
+            if isinstance(e, (RequestFaultError, StoreCapacityError)):
+                raise
+            raise WriteBackError(
+                f"{what} write-back failed: {type(e).__name__}: {e}"
+            ) from e
+
+    def wait_fence(self, layer: int) -> None:
+        """Block until layer li's last write-back has landed (no-op when
+        none is in flight).  Fetches call this so a step never reads a
+        layer the previous step is still storing.  Bounded by
+        ``fence_timeout_s`` (None = wait forever): a stalled store pool
+        raises ``TransferStallError`` instead of deadlocking decode."""
+        f = self._fences[layer]
+        if f is not None:
+            self._fence_result(f, self.fence_timeout_s,
+                               f"layer {layer}")
+
+    _ALL_SLOTS = object()        # wait_chunks sentinel: every bucket
+
+    def push_chunk_fence(self, fut, slot: Optional[int] = None) -> None:
+        """Record an in-flight prefill-chunk write-back (a Future),
+        bucketed by the slot it targets (None = a whole-batch fill).
+        Chunk fences are coarser than the per-layer decode fences: one
+        covers a whole chunk's K/V/activations across every layer.  A
+        slot being chunk-filled is never decoded (its ``seq_lens`` entry
+        stays at its pre-admission value until the prompt completes), so
+        only ``wait_chunks``/``sync`` — not the per-layer fetch path —
+        synchronize on them."""
+        with self._chunk_lock:
+            self._chunk_fences.setdefault(slot, []).append(fut)
+
+    def wait_chunks(self, slot=_ALL_SLOTS) -> None:
+        """Drain in-flight chunk write-backs (surfacing any store
+        error) — one slot's bucket, or every bucket by default.
+        Admission calls this once for ITS slot, after the LAST chunk
+        was submitted, so the only un-overlapped write-back is the
+        final chunk's (exactly the pipeline-drain term the chunk_split
+        cost model charges) and a concurrent admission's in-flight
+        chunks are never waited on.
+
+        The WHOLE bucket is drained even when a chunk errored (so no
+        orphaned future survives to poison a later tenant of the slot);
+        the first error is re-raised after the drain, typed by
+        ``_fence_result``."""
+        first_err: Optional[BaseException] = None
+        while True:
+            with self._chunk_lock:
+                if slot is self._ALL_SLOTS:
+                    bucket = next((b for b in self._chunk_fences.values()
+                                   if b), None)
+                else:
+                    bucket = self._chunk_fences.get(slot)
+                if not bucket:
+                    break
+                fut = bucket.pop()
+            try:
+                self._fence_result(fut, self.fence_timeout_s, "chunk")
+            except Exception as e:
+                if first_err is None:
+                    first_err = e
+        if first_err is not None:
+            raise first_err
+
+    def sync(self, strict: bool = True) -> List[BaseException]:
+        """Drain EVERY in-flight write-back (bulk writes + end of decode
+        call this; the steady-state decode loop never does).
+
+        All fences and chunk buckets are drained even when some
+        errored, and drained fence slots are cleared — after ``sync``
+        the store carries no poisoned future that could resurface at an
+        unrelated caller's next fence wait.  ``strict=True`` (default)
+        re-raises the first error; ``strict=False`` is the
+        exception-path/cleanup form — it swallows and returns the
+        collected errors so a failing caller can still leave the engine
+        reusable."""
+        errs: List[BaseException] = []
+        for li in range(len(self._fences)):
+            try:
+                self.wait_fence(li)
+            except Exception as e:
+                errs.append(e)
+            self._fences[li] = None
+        try:
+            self.wait_chunks()
+        except Exception as e:
+            errs.append(e)
+        if strict and errs:
+            raise errs[0]
+        return errs
+
+    # ------------------------------------------------------------- writes
+
+    def _put_kv(self, layer, sl, k: np.ndarray, v: np.ndarray):
+        if self.compress == "int4":
+            for buf, x in ((self.kq, k), (self.vq, v)):
+                q = KQ.quantize_np(x, self.group)
+                buf.packed[layer, :, sl] = q.packed
+                buf.scale[layer, :, sl] = q.scale
+                buf.zero[layer, :, sl] = q.zero
+        else:
+            self.k[layer, :, sl] = k
+            self.v[layer, :, sl] = v
+
+    def _put_kv_slot(self, layer, slot, sl, k: np.ndarray, v: np.ndarray):
+        if self.compress == "int4":
+            for buf, x in ((self.kq, k), (self.vq, v)):
+                q = KQ.quantize_np(x, self.group)
+                buf.packed[layer, slot, sl] = q.packed
+                buf.scale[layer, slot, sl] = q.scale
+                buf.zero[layer, slot, sl] = q.zero
+        else:
+            self.k[layer, slot, sl] = k
+            self.v[layer, slot, sl] = v
+
+    def append(self, layer: int, k: np.ndarray, v: np.ndarray,
+               act: np.ndarray, pos) -> None:
+        """Store one new token per slot.  ``pos`` is an int (uniform
+        batch: every slot writes the same position) or a (b,) vector of
+        per-slot positions; a negative entry skips that slot."""
+        if np.ndim(pos) == 0:
+            self._put_kv(layer, slice(pos, pos + k.shape[1]), k, v)
+            self.act[layer, :, pos:pos + act.shape[1]] = act
+            return
+        for i, p in enumerate(np.asarray(pos)):
+            if p < 0:
+                continue
+            self._put_kv_slot(layer, i, slice(p, p + k.shape[1]),
+                              k[i], v[i])
+            self.act[layer, i, p:p + act.shape[1]] = act[i]
+
+    def bulk_fill(self, ks, vs, acts, s: int, seq_lens=None) -> None:
+        """Fill from prefill outputs: (L, b, s, KV, dh) / (L, b, s, h).
+
+        ``seq_lens`` (optional, (b,)) are the TRUE per-slot prompt
+        lengths of a LEFT-padded ragged prefill: slot i's real tokens
+        occupy columns [s - len_i, s) of ks/vs/acts and are shifted to
+        host positions [0, len_i), so every slot's cached prefix is
+        position-native (host index == RoPE position, matching the
+        per-slot ragged decode convention) and ``self.seq_lens`` records
+        true lengths instead of the padded batch length."""
+        self.sync()
+        if seq_lens is not None:
+            lens = np.asarray(seq_lens, np.int64)
+            if lens.shape != (self.batch,):
+                raise ValueError(f"seq_lens shape {lens.shape} != "
+                                 f"({self.batch},)")
+            self._check_capacity(lens, "bulk_fill")
+            if not (lens == s).all():
+                for i, n in enumerate(lens):
+                    n = int(n)
+                    pad = s - n
+                    for li in range(ks.shape[0]):
+                        self._put_kv_slot(li, i, slice(0, n),
+                                          ks[li, i, pad:s],
+                                          vs[li, i, pad:s])
+                    self.act[:, i, :n] = acts[:, i, pad:s]
+                self.seq_lens[:] = lens
+                return
+        else:
+            self._check_capacity(
+                np.full((self.batch,), s, np.int64), "bulk_fill")
+        if self.compress == "int4":
+            for li in range(ks.shape[0]):
+                self._put_kv(li, slice(0, s), ks[li], vs[li])
+        else:
+            self.k[:, :, :s] = ks
+            self.v[:, :, :s] = vs
+        self.act[:, :, :s] = acts
+        self.seq_lens[:] = s
+
+    def fill_slot(self, slot: int, ks, vs, acts, s: int) -> None:
+        """Spill a b=1 prefill — (L, 1, s, KV, dh) / (L, 1, s, h) — into
+        one slot (iteration-level admission).  Drains in-flight
+        write-backs first: a pending append from the slot's previous
+        tenant must not land on top of the new request's prefill."""
+        self.sync()
+        new_lens = self.seq_lens.copy()
+        new_lens[slot] = s
+        self._check_capacity(new_lens, f"fill_slot({slot})")
+        for li in range(ks.shape[0]):
+            self._put_kv_slot(li, slot, slice(0, s), ks[li, 0], vs[li, 0])
+        self.act[:, slot, :s] = acts[:, 0]
+        self.seq_lens[slot] = s
+
+    def fill_chunk(self, ks, vs, acts, start: int, pads=None) -> None:
+        """Write one prefill chunk — (L, b, c, KV, dh) / (L, b, c, h)
+        covering global prompt columns [start, start + c) — into host
+        memory.  ``pads`` (optional, (b,)) are the per-slot left-pad
+        widths of a ragged batch: slot i's real columns
+        [max(start, pad_i), start + c) land at position-native host
+        indices [col - pad_i, ...); rows entirely inside a slot's pad
+        are skipped.  Does NOT touch ``seq_lens`` — the prefill driver
+        marks the slot length once the whole prompt has landed, so a
+        partially-filled slot is never decoded."""
+        c = ks.shape[2]
+        if pads is None:
+            if self.compress == "int4":
+                for li in range(ks.shape[0]):
+                    self._put_kv(li, slice(start, start + c),
+                                 ks[li], vs[li])
+            else:
+                self.k[:, :, start:start + c] = ks
+                self.v[:, :, start:start + c] = vs
+            self.act[:, :, start:start + c] = acts
+            return
+        for i, pad in enumerate(np.asarray(pads)):
+            lo = max(start, int(pad))          # first real global column
+            if lo >= start + c:
+                continue
+            off = lo - start
+            dst = slice(lo - int(pad), start + c - int(pad))
+            for li in range(ks.shape[0]):
+                self._put_kv_slot(li, i, dst, ks[li, i, off:],
+                                  vs[li, i, off:])
+            self.act[:, i, dst] = acts[:, i, off:]
+
+    def fill_chunk_slot(self, slot: int, ks, vs, acts, start: int
+                        ) -> None:
+        """Write a b=1 prefill chunk — (L, 1, c, ...) at positions
+        [start, start + c) — into one slot (iteration-level chunked
+        admission).  Like ``fill_chunk``, never touches ``seq_lens``."""
+        c = ks.shape[2]
+        sl = slice(start, start + c)
+        for li in range(ks.shape[0]):
+            self._put_kv_slot(li, slot, sl, ks[li, 0], vs[li, 0])
+        self.act[:, slot, sl] = acts[:, 0]
+
+    def clear_slot(self, slot: int) -> None:
+        """Free a slot for the next admission (data may stay stale: every
+        fetch copies/masks only the valid prefix)."""
+        self.seq_lens[slot] = 0
+
+    def close(self) -> None:
+        """Release backing resources.  The DRAM tier has none (numpy
+        arrays free with the object); the tiered subclass closes its
+        disk rung here.  Idempotent."""

@@ -1,0 +1,425 @@
+"""``TieredKVStore``: the pinned-host DRAM tier backed by an mmap disk
+rung, with hierarchy-aware residency the scheduler can plan against.
+
+Residency invariant — **the demoted region of every slot is a PREFIX**
+``[0, disk_end_i)`` of its cached tokens, in whole ``block_tokens``
+blocks.  Demotion pushes the prefix boundary up (coldest tokens first:
+the front of the sequence is exactly what the transfer-vs-recompute
+split prefers to recompute anyway); a fetch window ``[l, s)`` pages in
+the suffix of that prefix and shrinks it back to ``floor_block(l)`` —
+still a prefix.  ``disk_tokens()`` therefore compresses the whole
+residency map into one integer per slot, which is what the fourth plan
+kind (``ExecutionPlan.tier_split_for``) consumes.
+
+Why torn reads are impossible by construction: the tier machinery
+NEVER invalidates host bytes.  Demotion copies a block to disk and
+moves the accounting boundary; page-in copies the block back over the
+same host bytes (bit-identical under the lossless ``raw`` layout).
+Decode always reads valid values no matter how the boundary races with
+a concurrent fetch — the mmap read + bandwidth throttle model the
+COST of the page-in, the correctness never depends on its timing.
+Activations are deliberately never demoted: the l = p full-recompute
+fallback (the PR 7 degradation ladder) reads only activations, so a
+failing disk never blocks the escape hatch.
+
+Eviction is dual LRU + TTL: capacity pressure demotes the least-
+recently-touched slot's next front block (``host_capacity_tokens`` is
+the accounted DRAM budget); ``sweep()`` — called once per decode step
+by the runtime — additionally demotes every full block of slots idle
+longer than ``ttl_s``.  A demotion that fails (``DiskFullError``,
+injected ``disk_write`` faults) is benign: the block stays in DRAM and
+``demote_failures`` counts it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import kvquant as KQ
+from repro.core.cost_model import HardwareProfile, TierLink
+from repro.core.faults import FaultPolicy, TransferError
+from repro.core.kvstore.disk import MmapDiskTier
+from repro.core.kvstore.host import HostKVStore
+
+__all__ = ["KVTiersConfig", "TieredKVStore", "TieredStoreStats"]
+
+
+@dataclasses.dataclass(frozen=True)
+class KVTiersConfig:
+    """Knobs for the tiered KV store (``EngineConfig(kv_tiers=...)``).
+
+    ``host_capacity_tokens`` is the accounted DRAM budget: tokens past
+    it are demoted (coldest slot first) to the disk rung — unlike the
+    bare ``HostKVStore``'s ``capacity_tokens``, which REJECTS.  The
+    ``policy`` picks the scheduler integration: ``"tier_split"`` (the
+    fourth plan kind — splits are solved over both links) or
+    ``"demand"`` (the naive demand-paging baseline: plans stay
+    disk-blind and every demoted token is paged in on use; this is the
+    baseline ``bench_tiered.py`` beats)."""
+    host_capacity_tokens: Optional[int] = None
+    block_tokens: int = 32
+    ttl_s: Optional[float] = None
+    compress_on_demote: bool = False
+    disk_capacity_tokens: Optional[int] = None
+    disk_dir: Optional[str] = None
+    disk_read_bytes_per_s: Optional[float] = None
+    disk_write_bytes_per_s: Optional[float] = None
+    policy: str = "tier_split"
+
+    def validate(self) -> None:
+        if self.block_tokens <= 0:
+            raise ValueError("kv_tiers.block_tokens must be positive")
+        if self.policy not in ("tier_split", "demand"):
+            raise ValueError(
+                f"kv_tiers.policy must be 'tier_split' or 'demand', "
+                f"got {self.policy!r}")
+        if (self.host_capacity_tokens is not None
+                and self.host_capacity_tokens < self.block_tokens):
+            raise ValueError(
+                "kv_tiers.host_capacity_tokens must cover at least one "
+                "block")
+        if self.ttl_s is not None and self.ttl_s <= 0:
+            raise ValueError("kv_tiers.ttl_s must be positive")
+
+
+@dataclasses.dataclass
+class TieredStoreStats:
+    """Counters the tiered store accumulates (snapshot via ``stats``)."""
+    demotions: int = 0           # blocks pushed to disk (capacity)
+    ttl_demotions: int = 0       # blocks pushed to disk (TTL sweep)
+    demote_failures: int = 0     # demotions skipped (disk full/fault)
+    promotions: int = 0          # layer-blocks paged back in
+    disk_bytes_read: int = 0
+    disk_bytes_written: int = 0
+    demoted_tokens: int = 0      # current sum of disk prefixes
+    host_tokens: int = 0         # current DRAM-resident tokens
+
+
+class TieredKVStore(HostKVStore):
+    """Host DRAM + mmap disk, presenting the exact ``HostKVStore``
+    surface (same arrays, fences, fills) plus the tier machinery the
+    runtime and scheduler hook into: ``disk_tokens()`` for the
+    tier_split geometry, ``page_in()`` invoked inside each per-layer
+    fetch task, ``sweep()`` once per decode step."""
+
+    def __init__(self, cfg: ModelConfig, batch: int, max_len: int,
+                 tiers: Optional[KVTiersConfig] = None,
+                 dtype=np.float32, compress: Optional[str] = None,
+                 group: int = 32,
+                 fence_timeout_s: Optional[float] = None,
+                 faults: Optional[FaultPolicy] = None):
+        tiers = tiers or KVTiersConfig()
+        tiers.validate()
+        super().__init__(cfg, batch, max_len, dtype=dtype,
+                         compress=compress, group=group,
+                         fence_timeout_s=fence_timeout_s)
+        self.tiers = tiers
+        self.tier_policy = tiers.policy
+        bt = int(tiers.block_tokens)
+        self.block_tokens = bt
+        self.host_capacity_tokens = tiers.host_capacity_tokens
+        # disk layout: lossless raw mirror by default; int4 pack when
+        # compress-on-demote is asked for on an uncompressed host; a
+        # verbatim triple mirror when the host is ALREADY int4 (no
+        # second lossy step)
+        if compress == "int4":
+            layout = "mirror4"
+        elif tiers.compress_on_demote:
+            layout = "pack"
+        else:
+            layout = "raw"
+        self.tier = MmapDiskTier(
+            cfg, batch, max_len, bt, layout=layout, group=group,
+            capacity_tokens=tiers.disk_capacity_tokens,
+            directory=tiers.disk_dir,
+            read_bytes_per_s=tiers.disk_read_bytes_per_s,
+            write_bytes_per_s=tiers.disk_write_bytes_per_s,
+            faults=faults)
+        # tokens [0, _disk_end[i]) of slot i are accounted to disk
+        # (block multiples; host bytes stay valid — see module doc)
+        self._disk_end = np.zeros((batch,), np.int64)
+        self._last_touch = np.zeros((batch,), np.float64)
+        self._demote_lock = threading.Lock()
+        self._tstats = TieredStoreStats()
+        self._closed = False
+
+    # --------------------------------------------------------- accounting
+
+    def disk_tokens(self) -> np.ndarray:
+        """Per-slot demoted-prefix lengths (the ``d`` the fourth plan
+        kind consumes).  Snapshot copy — safe to hand to the planner
+        while demotion runs on the store pool."""
+        with self.lock:
+            return self._disk_end.copy()
+
+    @property
+    def host_tokens(self) -> int:
+        """Tokens currently accounted to DRAM."""
+        with self.lock:
+            return int(self.seq_lens.sum() - self._disk_end.sum())
+
+    # ------------------------------------------------------ planner hooks
+
+    @property
+    def disk_bytes_per_el(self) -> float:
+        """Disk bytes per stored KV element — what the tier_split cost
+        model charges the disk crossing: 4.0 (f32) for the lossless raw
+        layout; the int4 packed width (half a byte plus scale/zero
+        amortized over the quantization group) for pack/mirror4."""
+        if self.tier.layout == "raw":
+            return 4.0
+        return 0.5 + 8.0 / float(self.group)
+
+    def hw_ladder(self, hw: HardwareProfile) -> HardwareProfile:
+        """``hw`` extended with this store's disk rung, for plan keying.
+        When the rung is unthrottled (no emulated bandwidth) it is
+        priced at the host link's speed — the split then degenerates
+        toward the single-link optimum, which is exactly right when the
+        disk crossing is effectively free."""
+        read_bw = self.tiers.disk_read_bytes_per_s or hw.v_com
+        write_bw = self.tiers.disk_write_bytes_per_s or hw.v_com
+        return hw.with_tiers(TierLink("disk", float(read_bw),
+                                      float(write_bw)))
+
+    def stats(self) -> TieredStoreStats:
+        with self.lock:
+            out = dataclasses.replace(self._tstats)
+            out.demoted_tokens = int(self._disk_end.sum())
+            out.host_tokens = int(self.seq_lens.sum()
+                                  - self._disk_end.sum())
+        out.disk_bytes_read = self.tier.bytes_read
+        out.disk_bytes_written = self.tier.bytes_written
+        return out
+
+    def tier_bytes(self) -> Dict[str, Dict[str, int]]:
+        out = super().tier_bytes()
+        with self.lock:
+            demoted = int(self._disk_end.sum())
+            used = int(self.seq_lens.sum()) - demoted
+        out["host"]["used_tokens"] = used
+        out["host"]["used_bytes"] = used * self.kv_token_bytes
+        out["host"]["capacity_tokens"] = (
+            -1 if self.host_capacity_tokens is None
+            else self.host_capacity_tokens)
+        cap = self.tier.capacity_tokens
+        out["disk"] = {
+            "allocated_bytes": self.tier.bytes_used,
+            "used_tokens": demoted,
+            "used_bytes": self.tier.bytes_used,
+            "capacity_tokens": -1 if cap is None else cap,
+        }
+        return out
+
+    def _touch(self, slot: int) -> None:
+        self._last_touch[slot] = time.monotonic()
+
+    # ----------------------------------------------------------- demotion
+
+    def _demotable(self, i: int) -> bool:
+        """Slot i has a full block of real tokens past its disk prefix.
+
+        The ``- 1`` is a one-token safety margin: all of a decode step's
+        per-layer appends write the SAME position (``seq_lens[i] - 1``
+        once the main thread has advanced), so at any instant the only
+        host bytes that may still be mid-write belong to that newest
+        token.  Never demoting a block that contains it means demotion
+        only ever copies fully-landed bytes to disk."""
+        return (self._disk_end[i] + self.block_tokens
+                <= self.seq_lens[i] - 1)
+
+    def _demote_front_block(self, i: int) -> bool:
+        """Push slot i's front non-demoted block to disk.  Returns
+        False (and counts ``demote_failures``) when the disk rung
+        refuses — the block simply stays in DRAM.  Serialized under
+        ``_demote_lock``; the boundary is re-checked before it is
+        advanced so a concurrent page-in shrink is never overwritten."""
+        bt = self.block_tokens
+        with self._demote_lock:
+            with self.lock:
+                d = int(self._disk_end[i])
+            jb = d // bt
+            sl = slice(d, d + bt)
+            try:
+                if self.compress == "int4":
+                    self.tier.write_block_q(
+                        i, jb,
+                        KQ.QuantizedKV(self.kq.packed[:, i, sl],
+                                       self.kq.scale[:, i, sl],
+                                       self.kq.zero[:, i, sl]),
+                        KQ.QuantizedKV(self.vq.packed[:, i, sl],
+                                       self.vq.scale[:, i, sl],
+                                       self.vq.zero[:, i, sl]))
+                else:
+                    self.tier.write_block(i, jb, self.k[:, i, sl],
+                                          self.v[:, i, sl])
+            except (TransferError, OSError):
+                with self.lock:
+                    self._tstats.demote_failures += 1
+                return False
+            with self.lock:
+                if int(self._disk_end[i]) != d:
+                    # a page-in shrank the prefix while we wrote: the
+                    # block's host bytes are authoritative again
+                    self.tier.free_block(i, jb)
+                    return False
+                self._disk_end[i] = d + bt
+                self._tstats.demotions += 1
+        return True
+
+    def enforce_capacity(self) -> int:
+        """Demote least-recently-touched slots' front blocks until the
+        DRAM-resident token count fits ``host_capacity_tokens``.
+        Called after fills and from ``sweep()`` — always off the decode
+        hot path (fills run on the store pool; sweep runs between
+        steps).  Returns the number of blocks demoted."""
+        cap = self.host_capacity_tokens
+        if cap is None:
+            return 0
+        n = 0
+        blocked = set()
+        while True:
+            with self.lock:
+                resident = int(self.seq_lens.sum()
+                               - self._disk_end.sum())
+                if resident <= cap:
+                    break
+                order = np.argsort(self._last_touch, kind="stable")
+                victim = next((int(i) for i in order
+                               if i not in blocked
+                               and self._demotable(int(i))), None)
+            if victim is None:
+                break
+            if self._demote_front_block(victim):
+                n += 1
+            else:
+                blocked.add(victim)    # disk refused: don't spin on it
+        return n
+
+    def sweep(self) -> int:
+        """Dual-eviction sweep, called once per decode step by the
+        runtime: demote every full block of slots idle past ``ttl_s``,
+        then re-enforce the capacity budget.  Cheap when nothing is
+        over budget or idle."""
+        demoted = 0
+        ttl = self.tiers.ttl_s
+        if ttl is not None:
+            now = time.monotonic()
+            with self.lock:
+                idle = [i for i in range(self.batch)
+                        if self.seq_lens[i] > 0
+                        and now - self._last_touch[i] > ttl
+                        and self._demotable(i)]
+            for i in idle:
+                while True:
+                    with self.lock:
+                        more = self._demotable(i)
+                    if not more or not self._demote_front_block(i):
+                        break
+                    demoted += 1
+                    with self.lock:
+                        self._tstats.ttl_demotions += 1
+        return demoted + self.enforce_capacity()
+
+    # ------------------------------------------------------------ page-in
+
+    def page_in(self, layer: int, ls, s_strs) -> None:
+        """Promote the demoted share of this layer's fetch windows back
+        into the host arrays.  Runs INSIDE the per-layer fetch task on
+        the copy pool, so the disk read overlaps the previous layer's
+        compute exactly like the PCIe stream does; a failed block read
+        raises ``DiskReadError`` (a ``TransientTransferError``), which
+        rides the fetch path's existing retry → degradation ladder.
+
+        Window: slot i's fetch streams host positions
+        ``[ls[i], ls[i] + s_strs[i])``; the part below ``disk_end_i``
+        must cross disk→host first.  Whole blocks are read (the block
+        containing ``ls[i]`` included).  When the LAST layer's windows
+        land, the slot's disk prefix shrinks to ``floor_block(ls[i])``
+        and the freed blocks release their disk capacity."""
+        bt = self.block_tokens
+        ls = np.asarray(ls)
+        s_strs = np.asarray(s_strs)
+        final = layer == self.num_layers - 1
+        for i in range(min(len(ls), self.batch)):
+            n_str = int(s_strs[i])
+            if n_str <= 0:
+                continue
+            with self.lock:
+                d = int(self._disk_end[i])
+            lo_tok = int(ls[i])
+            hi_tok = min(lo_tok + n_str, d)
+            if hi_tok <= lo_tok:
+                continue
+            lo_b, hi_b = lo_tok // bt, -(-hi_tok // bt)
+            for jb in range(lo_b, hi_b):
+                sl = slice(jb * bt, (jb + 1) * bt)
+                if self.compress == "int4":
+                    kq, vq = self.tier.read_block_layer_q(layer, i, jb)
+                    for buf, q in ((self.kq, kq), (self.vq, vq)):
+                        buf.packed[layer, i, sl] = q.packed
+                        buf.scale[layer, i, sl] = q.scale
+                        buf.zero[layer, i, sl] = q.zero
+                else:
+                    self.tier.read_block_layer(
+                        layer, i, jb, self.k[layer, i, sl],
+                        self.v[layer, i, sl])
+                with self.lock:
+                    self._tstats.promotions += 1
+            if final:
+                new_end = (lo_tok // bt) * bt
+                with self.lock:
+                    old_end = int(self._disk_end[i])
+                    if new_end < old_end:
+                        self._disk_end[i] = new_end
+                        for jb in range(new_end // bt, old_end // bt):
+                            self.tier.free_block(i, jb)
+
+    # ----------------------------------------------- HostKVStore overrides
+
+    def bulk_fill(self, ks, vs, acts, s, seq_lens=None) -> None:
+        super().bulk_fill(ks, vs, acts, s, seq_lens=seq_lens)
+        for i in range(self.batch):
+            self._touch(i)
+        with self.lock:
+            self._disk_end[:] = 0
+        for i in range(self.batch):
+            self.tier.free_slot(i)
+        self.enforce_capacity()
+
+    def fill_slot(self, slot: int, ks, vs, acts, s: int) -> None:
+        super().fill_slot(slot, ks, vs, acts, s)
+        self._touch(slot)
+        with self.lock:
+            self._disk_end[slot] = 0
+        self.tier.free_slot(slot)
+        self.enforce_capacity()
+
+    def append(self, layer, k, v, act, pos) -> None:
+        super().append(layer, k, v, act, pos)
+        if layer == self.num_layers - 1:
+            if np.ndim(pos) == 0:
+                for i in range(self.batch):
+                    self._touch(i)
+            else:
+                for i, p in enumerate(np.asarray(pos)):
+                    if p >= 0:
+                        self._touch(i)
+            self.enforce_capacity()
+
+    def clear_slot(self, slot: int) -> None:
+        super().clear_slot(slot)
+        with self.lock:
+            self._disk_end[slot] = 0
+        self.tier.free_slot(slot)
+
+    def close(self) -> None:
+        """Release the disk rung's backing files.  Idempotent."""
+        if self._closed:
+            return
+        self._closed = True
+        self.tier.close()

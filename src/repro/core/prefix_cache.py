@@ -28,6 +28,7 @@ from __future__ import annotations
 
 import dataclasses
 import threading
+import time
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
@@ -43,10 +44,16 @@ class PrefixCacheConfig:
         matches cost more restore bookkeeping than they save.
     insert_on_finish: record each finished request's prompt blocks
         (the serving engine captures them at admission).
+    ttl_s: idle time-to-live in seconds — an entry unused for this
+        long is evicted regardless of capacity pressure (dual LRU+TTL,
+        matching the tiered KV store's eviction).  Expired entries are
+        swept on every insert and lookup; a hit refreshes the entry's
+        deadline.  None disables.
     """
     capacity_tokens: int = 65536
     min_prefix: int = 4
     insert_on_finish: bool = True
+    ttl_s: Optional[float] = None
 
     def validate(self) -> "PrefixCacheConfig":
         if self.capacity_tokens < 1:
@@ -55,6 +62,9 @@ class PrefixCacheConfig:
         if self.min_prefix < 1:
             raise ValueError(f"min_prefix must be >= 1, got "
                              f"{self.min_prefix}")
+        if self.ttl_s is not None and self.ttl_s <= 0:
+            raise ValueError(f"ttl_s must be positive or None, got "
+                             f"{self.ttl_s}")
         return self
 
 
@@ -72,6 +82,8 @@ class PrefixEntry:
     hs: np.ndarray
     last_used: int = 0
     hits: int = 0
+    # absolute monotonic TTL deadline (None = no TTL); refreshed on hit
+    deadline: Optional[float] = None
 
     def __len__(self) -> int:
         return len(self.tokens)
@@ -246,6 +258,8 @@ class PrefixCacheStats:
     tokens_stored: int = 0
     bytes_stored: int = 0
     evictions: int = 0
+    ttl_evictions: int = 0       # entries expired past ttl_s (swept on
+                                 # insert/lookup)
     invalidations: int = 0       # poisoned entries evicted after a
                                  # failed restore (degradation ladder)
 
@@ -279,6 +293,7 @@ class PrefixCache:
         Bumps the entry's LRU clock and the hit counters."""
         toks = [int(t) for t in prompt]
         with self._lock:
+            self._sweep_ttl_locked()
             self._stats.lookups += 1
             p, entry = self.index.match(toks)
             p = min(p, len(toks) - 1)
@@ -288,6 +303,8 @@ class PrefixCache:
             self._clock += 1
             entry.last_used = self._clock
             entry.hits += 1
+            if self.config.ttl_s is not None:
+                entry.deadline = time.monotonic() + self.config.ttl_s
             self._stats.hits += 1
             self._stats.tokens_matched += p
             return p, entry
@@ -312,6 +329,11 @@ class PrefixCache:
             p = min(p, len(toks) - 1)
             if entry is None or p < self.config.min_prefix:
                 return 0, None
+            if (entry.deadline is not None
+                    and entry.deadline < time.monotonic()):
+                # expired but not yet swept (peek never mutates): report
+                # the miss the next lookup would see
+                return 0, None
             return p, entry
 
     # ------------------------------------------------------------ insert
@@ -328,6 +350,7 @@ class PrefixCache:
         if len(toks) > self.config.capacity_tokens:
             return False
         with self._lock:
+            self._sweep_ttl_locked()
             covered, _ = self.index.match(list(toks))
             if covered == len(toks):
                 return False
@@ -336,6 +359,8 @@ class PrefixCache:
                                 np.array(hs, np.float32, copy=True))
             self._clock += 1
             entry.last_used = self._clock
+            if self.config.ttl_s is not None:
+                entry.deadline = time.monotonic() + self.config.ttl_s
             self.index.insert(toks, entry)
             self._entries[toks] = entry
             self._tokens_stored += len(toks)
@@ -358,6 +383,21 @@ class PrefixCache:
             self._tokens_stored -= len(toks)
             self._stats.invalidations += 1
             return True
+
+    def _sweep_ttl_locked(self) -> None:
+        """Drop every entry idle past ``ttl_s`` (no-op without a TTL).
+        Runs under the lock at each insert/lookup — the sweep is O(n)
+        in entries but entries are few and the blocks dominate cost."""
+        if self.config.ttl_s is None:
+            return
+        now = time.monotonic()
+        dead = [e for e in self._entries.values()
+                if e.deadline is not None and e.deadline < now]
+        for e in dead:
+            self.index.remove(e.tokens)
+            del self._entries[e.tokens]
+            self._tokens_stored -= len(e.tokens)
+            self._stats.ttl_evictions += 1
 
     def _evict_locked(self) -> None:
         while (self._tokens_stored > self.config.capacity_tokens

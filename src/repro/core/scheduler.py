@@ -48,7 +48,8 @@ import numpy as np
 from repro.core.cost_model import (HardwareProfile, Workload,
                                    int4_kv_bytes_per_el)
 from repro.core.solver import (ChunkDecision, SplitDecision,
-                               optimal_chunk, optimal_split)
+                               TierSplitDecision, optimal_chunk,
+                               optimal_split, optimal_tier_split)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -70,6 +71,12 @@ class PlanKey:
     # the Scheduler from `compress` so the solver prices the compressed
     # stream correctly instead of ~8x over for int4
     kv_bytes_per_el: Optional[float] = None
+    # effective DISK bytes per KV element for tier_split plans (None ->
+    # the host stream width): a tiered store with compress-on-demote
+    # moves int4-packed bytes across the disk rung while the host rung
+    # still streams full-width, and the solver must price each rung at
+    # its own width
+    disk_bytes_per_el: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -107,6 +114,8 @@ class ExecutionPlan:
         self.pad_every = max(1, int(pad_every if pad_every is not None
                                     else self.resolve_every))
         self._splits: Dict[Tuple[int, int], SplitDecision] = {}
+        self._tier_splits: Dict[Tuple[int, int, int],
+                                TierSplitDecision] = {}
         self._lock = threading.Lock()
         self.solves = 0
         self.lookups = 0
@@ -151,6 +160,49 @@ class ExecutionPlan:
             hit, l_pad=self._pad_up(hit.l),
             s_pad=self._pad_up(seq_len - hit.l))
 
+    def tier_split_for(self, seq_len: int, disk_tokens: int,
+                       batch: Optional[int] = None) -> TierSplitDecision:
+        """The fourth plan kind: the transfer-vs-recompute split for a
+        fetch whose leading ``disk_tokens`` are resident on the
+        profile's disk rung (``hw.tiers``).  Bucketed and memoized per
+        (seq bucket, disk bucket, batch) exactly like ``split_for`` —
+        the disk bucket rounds DOWN too, so a chosen ``l`` never
+        exceeds the actually-available prefix.  With no ladder on the
+        profile (or nothing demoted) this degenerates to the plain
+        decode split re-expressed as a ``TierSplitDecision``."""
+        self.lookups += 1
+        batch = self.key.batch if batch is None else batch
+        d = max(0, min(int(disk_tokens), int(seq_len)))
+        k = self.key
+        rung = k.hw.tier("disk") or (k.hw.tiers[0] if k.hw.tiers
+                                     else None)
+        if seq_len <= 0 or rung is None or d == 0 or k.mode == "flexgen":
+            dec = self.split_for(seq_len, batch=batch)
+            return TierSplitDecision(
+                l=dec.l, disk_tokens=d, paged_tokens=max(0, d - dec.l),
+                t_total=dec.t_total, t_recomp=dec.t_recomp,
+                t_kv=dec.t_kv, t_disk=0.0, bound=dec.bound)
+        s = self._bucket(seq_len)
+        db = min((d // self.resolve_every) * self.resolve_every, s)
+        ck = (s, db, batch)
+        with self._lock:
+            hit = self._tier_splits.get(ck)
+        if hit is None:
+            wl = Workload(batch=batch, seq_len=s, d_model=k.d_model,
+                          kv_dim=k.kv_dim, dtype_bytes=k.dtype_bytes,
+                          kv_bytes_per_el=k.kv_bytes_per_el)
+            hit = optimal_tier_split(
+                wl, k.hw, disk_tokens=db,
+                disk_read_bandwidth=rung.read_bandwidth,
+                disk_bytes_per_el=k.disk_bytes_per_el, align=k.align)
+            with self._lock:
+                self._tier_splits[ck] = hit
+                self.solves += 1
+        # the memo hit is for the bucketed d; report paging vs the REAL
+        # residency so the runtime's accounting matches what it fetches
+        return dataclasses.replace(hit, disk_tokens=d,
+                                   paged_tokens=max(0, d - hit.l))
+
     def splits_for_slots(self, seq_lens: Sequence[int]
                          ) -> List[SplitDecision]:
         """Per-slot decisions for ragged lengths (iteration-level
@@ -159,7 +211,9 @@ class ExecutionPlan:
         return [self.split_for(int(s), batch=1) for s in seq_lens]
 
     def step_geometry(self, seq_lens: Sequence[int],
-                      max_len: Optional[int] = None) -> StepGeometry:
+                      max_len: Optional[int] = None,
+                      disk_tokens: Optional[Sequence[int]] = None
+                      ) -> StepGeometry:
         """Geometry for one decode step over every slot.
 
         Aggregates the per-slot decisions into the step's static shapes:
@@ -167,20 +221,45 @@ class ExecutionPlan:
         (the max of bucket multiples is a bucket multiple, so the trace
         count stays O(#buckets)), clamped to the store capacity
         ``max_len`` so padded fetch windows never run past the
-        preallocated host buffers."""
+        preallocated host buffers.
+
+        With ``disk_tokens`` (per-slot counts of leading demoted
+        tokens, from ``TieredKVStore.disk_tokens``) the per-slot
+        decision is the fourth plan kind (``tier_split_for``): same
+        geometry contract, but ``l`` also weighs the disk rung's
+        page-in cost — a mostly-demoted slot leans harder on
+        recompute.  The pad buckets are shared with the plain path, so
+        the tiered store draws from the SAME O(#buckets) trace budget
+        and a warm engine toggling tiers recompiles nothing."""
         seq = np.asarray(seq_lens, np.int64)
-        uniform = bool((seq == seq[0]).all())
-        if uniform:
-            decs = [self.split_for(int(seq[0]))]
-            ls = np.full(seq.shape[0], decs[0].l, np.int64)
+        if disk_tokens is None:
+            uniform = bool((seq == seq[0]).all())
+            if uniform:
+                decs = [self.split_for(int(seq[0]))]
+                ls = np.full(seq.shape[0], decs[0].l, np.int64)
+            else:
+                decs = self.splits_for_slots(seq)
+                ls = np.array([d.l for d in decs], np.int64)
+            l_pads = [d.l_pad for d in decs]
+            s_pads = [d.s_pad for d in decs]
         else:
-            decs = self.splits_for_slots(seq)
-            ls = np.array([d.l for d in decs], np.int64)
+            dk = np.asarray(disk_tokens, np.int64)
+            uniform = bool((seq == seq[0]).all() and (dk == dk[0]).all())
+            if uniform:
+                decs = [self.tier_split_for(int(seq[0]), int(dk[0]))]
+                ls = np.full(seq.shape[0], decs[0].l, np.int64)
+            else:
+                decs = [self.tier_split_for(int(s), int(di), batch=1)
+                        for s, di in zip(seq, dk)]
+                ls = np.array([d.l for d in decs], np.int64)
+            l_pads = [self._pad_up(d.l) for d in decs]
+            s_pads = [self._pad_up(int(s) - d.l)
+                      for s, d in zip(seq, decs)]
         s_strs = seq - ls
         # max over bucket multiples is a bucket multiple: the step's
         # static shapes aggregate the decisions' own pad geometry
-        l_pad = max(d.l_pad for d in decs)
-        s_pad = max(d.s_pad for d in decs)
+        l_pad = max(l_pads)
+        s_pad = max(s_pads)
         if max_len is not None:
             l_pad = min(l_pad, int(max_len))
             s_pad = min(s_pad, int(max_len) - int(ls.min()))
@@ -255,14 +334,22 @@ class Scheduler:
     def plan_for(self, cfg, batch: int, mode: str = "kvpr",
                  schedule: str = "row", align: int = 1,
                  compress: Optional[str] = None,
-                 dtype_bytes: int = 4, group: int = 32) -> ExecutionPlan:
-        """Plan for a model config (engines' entry point)."""
-        key = PlanKey(hw=self.hw, mode=mode, schedule=schedule, align=align,
-                      batch=batch, d_model=cfg.d_model,
+                 dtype_bytes: int = 4, group: int = 32,
+                 hw: Optional[HardwareProfile] = None,
+                 disk_bytes_per_el: Optional[float] = None
+                 ) -> ExecutionPlan:
+        """Plan for a model config (engines' entry point).  ``hw``
+        overrides the scheduler's profile for this plan only — the
+        tiered runtime passes its ladder-extended profile here, so
+        tier_split plans key on (and price) the ladder while every
+        other plan keeps the base profile's cache entries."""
+        key = PlanKey(hw=hw or self.hw, mode=mode, schedule=schedule,
+                      align=align, batch=batch, d_model=cfg.d_model,
                       kv_dim=cfg.num_kv_heads * cfg.dh,
                       dtype_bytes=dtype_bytes, compress=compress,
                       kv_bytes_per_el=self._kv_el_bytes(
-                          compress, dtype_bytes, group))
+                          compress, dtype_bytes, group),
+                      disk_bytes_per_el=disk_bytes_per_el)
         return self._get(key)
 
     def restore_split(self, cfg, p: int, mode: str = "kvpr",

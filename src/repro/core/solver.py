@@ -21,7 +21,8 @@ from typing import Optional
 
 from repro.core.cost_model import (HardwareProfile, Workload,
                                    chunk_compute_flops,
-                                   chunk_writeback_bytes, layer_times)
+                                   chunk_writeback_bytes, layer_times,
+                                   tier_layer_times)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -198,6 +199,105 @@ def optimal_chunk(n: int, wl: Workload, hw: HardwareProfile,
                          t_total=t["total"], t_monolithic=mono["total"],
                          t_compute=t["t_compute"],
                          t_writeback=t["t_writeback"], bound=n)
+
+
+# ---------------------------------------------------------- tiered split
+# The fourth plan kind: the same transfer-vs-recompute LP solved over a
+# bandwidth HIERARCHY instead of one link.  With the leading
+# ``disk_tokens`` of the prefix demoted to a slow tier, the streamed arm
+# gains a second (steeper) segment below l = d — every recomputed token
+# under d saves BOTH link crossings — so t(l) is still piecewise-linear
+# convex, now with (at most) two crossings to check: one per regime,
+# split at the l = d breakpoint.
+
+
+@dataclasses.dataclass(frozen=True)
+class TierSplitDecision:
+    """Split for a fetch whose prefix partially lives on a slow tier."""
+    l: int                      # tokens recomputed on the accelerator
+    disk_tokens: int            # leading demoted tokens (the d input)
+    paged_tokens: int           # demoted tokens the fetch must page in
+    t_total: float              # predicted per-layer time (s)
+    t_recomp: float
+    t_kv: float                 # full streamed arm (host + disk shares)
+    t_disk: float               # the disk->host share of t_kv
+    bound: int
+
+
+def optimal_tier_split(wl: Workload, hw: HardwareProfile,
+                       disk_tokens: int,
+                       disk_read_bandwidth: float,
+                       disk_bytes_per_el: Optional[float] = None,
+                       bound: Optional[int] = None,
+                       align: int = 1) -> TierSplitDecision:
+    """Closed-form-per-regime + integer refinement over the two-rung
+    ladder.  Degenerates exactly to ``optimal_split`` (row schedule)
+    at ``disk_tokens = 0``."""
+    s = wl.seq_len
+    bound = min(bound if bound is not None else s, s)
+    d = max(0, min(int(disk_tokens), bound))
+
+    B = wl.batch
+    p_kv = wl.kv_el_bytes
+    p_d = p_kv if disk_bytes_per_el is None else disk_bytes_per_el
+    a = 4 * B * wl.d_model * wl.kv_dim / hw.v_gpu    # recompute slope
+    c = 2 * B * wl.kv_dim * p_kv / hw.v_com          # host-link slope
+    c_d = 2 * B * wl.kv_dim * p_d / float(disk_read_bandwidth)
+
+    cand = {0.0, float(d), float(bound)}
+    # regime l <= d: a*l = c*(s-l) + c_d*(d-l)
+    if a + c + c_d > 0:
+        cand.add(_clamp((c * s + c_d * d) / (a + c + c_d), 0, d))
+    # regime l >= d: a*l = c*(s-l)
+    if a + c > 0:
+        cand.add(_clamp(c * s / (a + c), d, bound))
+
+    best = None
+    seen = set()
+    for lc in cand:
+        base = int(lc)
+        for li in {base, max(base - 1, 0), min(base + 1, bound),
+                   (base // align) * align,
+                   min(((base // align) + 1) * align, bound)}:
+            li = max(0, min(li, bound))
+            if align > 1:
+                li = (li // align) * align
+            if li in seen:
+                continue
+            seen.add(li)
+            t = tier_layer_times(wl, hw, li, d, disk_read_bandwidth,
+                                 disk_bytes_per_el)
+            if best is None or t["total"] < best[1]["total"]:
+                best = (li, t)
+
+    li, t = best
+    return TierSplitDecision(
+        l=li, disk_tokens=d, paged_tokens=max(0, d - li),
+        t_total=t["total"], t_recomp=t["t_recomp"], t_kv=t["t_kv"],
+        t_disk=t["t_disk"], bound=bound)
+
+
+def brute_force_tier_split(wl: Workload, hw: HardwareProfile,
+                           disk_tokens: int,
+                           disk_read_bandwidth: float,
+                           disk_bytes_per_el: Optional[float] = None,
+                           bound: Optional[int] = None,
+                           align: int = 1) -> TierSplitDecision:
+    """O(s) exhaustive reference used by property tests."""
+    s = wl.seq_len
+    bound = min(bound if bound is not None else s, s)
+    d = max(0, min(int(disk_tokens), bound))
+    best = None
+    for li in range(0, bound + 1, align):
+        t = tier_layer_times(wl, hw, li, d, disk_read_bandwidth,
+                             disk_bytes_per_el)
+        if best is None or t["total"] < best[1]["total"]:
+            best = (li, t)
+    li, t = best
+    return TierSplitDecision(
+        l=li, disk_tokens=d, paged_tokens=max(0, d - li),
+        t_total=t["total"], t_recomp=t["t_recomp"], t_kv=t["t_kv"],
+        t_disk=t["t_disk"], bound=bound)
 
 
 def brute_force_split(wl: Workload, hw: HardwareProfile,

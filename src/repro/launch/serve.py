@@ -32,8 +32,8 @@ from repro.core.cost_model import TPU_V5E
 from repro.core.profiler import profile_system
 from repro.core.scheduler import Scheduler
 from repro.models.transformer import Model
-from repro.serving import (EngineConfig, LLMEngine, PrefixCacheConfig,
-                           Request, SamplingParams)
+from repro.serving import (EngineConfig, KVTiersConfig, LLMEngine,
+                           PrefixCacheConfig, Request, SamplingParams)
 
 
 def run_smoke() -> None:
@@ -194,6 +194,29 @@ def main(argv=None):
                          "request prompt reuse with KVPR-split restore)")
     ap.add_argument("--prefix-capacity", type=int, default=65536,
                     help="prefix cache capacity in tokens (LRU beyond)")
+    ap.add_argument("--kv-host-capacity", type=int, default=None,
+                    help="tiered KV store: accounted host DRAM budget "
+                         "in tokens — tokens past it demote to the "
+                         "mmap disk tier (enables tiering; offload "
+                         "backend only)")
+    ap.add_argument("--kv-tier-block", type=int, default=32,
+                    help="tiered KV store: demotion block width in "
+                         "tokens")
+    ap.add_argument("--kv-tier-ttl", type=float, default=None,
+                    help="tiered KV store: idle slots demote after "
+                         "this many seconds (dual LRU+TTL eviction)")
+    ap.add_argument("--kv-compress-on-demote", action="store_true",
+                    help="tiered KV store: int4-quantize cold blocks "
+                         "on demotion to disk (lossy, like the host "
+                         "int4 path)")
+    ap.add_argument("--kv-disk-read-bw", type=float, default=None,
+                    help="tiered KV store: emulated disk read "
+                         "bandwidth in bytes/s (also prices the "
+                         "tier_split plan's disk crossing)")
+    ap.add_argument("--kv-tier-policy", default="tier_split",
+                    choices=["tier_split", "demand"],
+                    help="tiered KV store: hierarchy-aware split "
+                         "(tier_split) vs naive demand paging")
     ap.add_argument("--profile", action="store_true",
                     help="measure the link/GEMM profile instead of preset")
     ap.add_argument("--seed", type=int, default=0)
@@ -224,11 +247,21 @@ def main(argv=None):
     chunk = args.prefill_chunk
     if chunk is not None and chunk != "auto":
         chunk = int(chunk)
+    kv_tiers = None
+    if args.kv_host_capacity is not None:
+        kv_tiers = KVTiersConfig(
+            host_capacity_tokens=args.kv_host_capacity,
+            block_tokens=args.kv_tier_block,
+            ttl_s=args.kv_tier_ttl,
+            compress_on_demote=args.kv_compress_on_demote,
+            disk_read_bytes_per_s=args.kv_disk_read_bw,
+            policy=args.kv_tier_policy)
     base = dict(slots=args.slots, max_len=args.prompt + args.gen + 8,
                 kvpr=not args.no_kvpr, compress=args.compress,
                 kernels=args.kernels,
                 seed=args.seed, prefill_chunk=chunk,
                 max_step_tokens=args.max_step_tokens,
+                kv_tiers=kv_tiers,
                 prefix_cache=(PrefixCacheConfig(
                     capacity_tokens=args.prefix_capacity)
                     if args.prefix_cache else None))

@@ -7,10 +7,12 @@ Fault model (see docs/robustness.md): ``FaultPolicy`` plugs into
 ``generate_stream`` raise when a failure cannot be contained to one
 request.
 """
-from repro.core.faults import (FaultPolicy, KernelLaunchError,
-                               RequestFaultError, TransferError,
-                               TransferStallError, TransientTransferError,
-                               WriteBackError)
+from repro.core.faults import (DiskFullError, DiskReadError, FaultPolicy,
+                               KernelLaunchError, RequestFaultError,
+                               TransferError, TransferStallError,
+                               TransientTransferError, WriteBackError)
+from repro.core.kvstore import (KVTiersConfig, StoreCapacityError,
+                                TieredStoreStats)
 from repro.core.prefix_cache import PrefixCacheConfig, PrefixCacheStats
 from repro.serving.api import (EngineConfig, LLMEngine, Request,
                                RequestOutput, SamplingParams,
@@ -22,11 +24,13 @@ from repro.serving.router import (RouterConfig, RouterEngine,
                                   SLOClass, slo_attained)
 
 __all__ = [
-    "ContinuousBatchingEngine", "EngineConfig", "FaultPolicy",
-    "Generation", "KernelLaunchError", "LLMEngine", "PrefixCacheConfig",
+    "ContinuousBatchingEngine", "DiskFullError", "DiskReadError",
+    "EngineConfig", "FaultPolicy", "Generation", "KVTiersConfig",
+    "KernelLaunchError", "LLMEngine", "PrefixCacheConfig",
     "PrefixCacheStats", "Request", "RequestFaultError", "RequestOutput",
     "RouterConfig", "RouterEngine", "RouterQueueFull", "RouterStats",
-    "SLOClass", "SamplingParams", "ServingEngine", "TokenEvent",
-    "TransferError", "TransferStallError", "TransientTransferError",
-    "WriteBackError", "pad_batch", "slo_attained",
+    "SLOClass", "SamplingParams", "ServingEngine", "StoreCapacityError",
+    "TieredStoreStats", "TokenEvent", "TransferError",
+    "TransferStallError", "TransientTransferError", "WriteBackError",
+    "pad_batch", "slo_attained",
 ]

@@ -60,6 +60,7 @@ from repro.core.faults import (FaultPolicy, RequestFaultError,
                                TransferStallError)
 from repro.core.prefix_cache import (PrefixCache, PrefixCacheConfig,
                                      PrefixCacheStats)
+from repro.core.kvstore import KVTiersConfig, TieredKVStore
 from repro.core.runtime import (ChunkedPrefill, HostKVStore,
                                 OffloadDecodeRuntime, RestoreStats,
                                 StepStats, TransferEngine, chunk_width,
@@ -178,6 +179,16 @@ class EngineConfig:
     # backoff: io_backoff_s * 2**attempt, up to io_retries times
     io_retries: int = 2
     io_backoff_s: float = 0.01
+    # ---- tiered KV storage (docs/storage.md) ------------------------
+    # pinned host DRAM over an mmap disk rung: KVTiersConfig sets the
+    # accounted host capacity (tokens past it demote, coldest first),
+    # dual LRU+TTL eviction, compress-on-demote, emulated disk
+    # bandwidth, and the scheduling policy ("tier_split" plans the
+    # transfer-vs-recompute split over both links; "demand" is the
+    # naive demand-paging baseline).  None keeps the single-tier store.
+    # Offload backend only — a no-op on the resident backend (like
+    # `kernels`), which is what pins the identity-matrix reference.
+    kv_tiers: Optional[KVTiersConfig] = None
 
     def validate(self) -> "EngineConfig":
         if self.backend not in ("resident", "offload"):
@@ -233,6 +244,8 @@ class EngineConfig:
         if self.io_backoff_s < 0:
             raise ValueError(f"io_backoff_s must be >= 0, got "
                              f"{self.io_backoff_s}")
+        if self.kv_tiers is not None:
+            self.kv_tiers.validate()
         return self
 
     @property
@@ -1017,6 +1030,22 @@ class LLMEngine:
 
     # ------------------------------------------------- static offload
 
+    def _make_store(self, batch: int, max_len: int) -> HostKVStore:
+        """The offload paths' host store: single-tier by default, the
+        tiered hierarchy (host DRAM over the mmap disk rung) when
+        ``EngineConfig.kv_tiers`` is set.  The caller owns the result
+        and must ``close()`` it (a no-op on the single-tier store)."""
+        kt = self.config.kv_tiers
+        if kt is None:
+            return HostKVStore(
+                self.cfg, batch, max_len, compress=self.config.compress,
+                fence_timeout_s=self.config.fence_timeout_s)
+        return TieredKVStore(
+            self.cfg, batch, max_len, tiers=kt,
+            compress=self.config.compress,
+            fence_timeout_s=self.config.fence_timeout_s,
+            faults=self.config.faults)
+
     def _stream_static_offload(self, pairs, done
                                ) -> Iterator[TokenEvent]:
         """Prefill on-device, spill KV + activations to host, decode
@@ -1029,9 +1058,7 @@ class LLMEngine:
         lens = np.array([len(r.prompt) for r in reqs], np.int64)
         ragged = bool((lens != s).any())
         gen_len = max(sp.max_tokens for _, sp in pairs)
-        store = HostKVStore(self.cfg, b, s + gen_len + 1,
-                            compress=self.config.compress,
-                            fence_timeout_s=self.config.fence_timeout_s)
+        store = self._make_store(b, s + gen_len + 1)
         rt = self.runtime
         try:
             t0 = time.perf_counter()
@@ -1076,7 +1103,7 @@ class LLMEngine:
                     lv.blocks, lv.restore = bl, rs
             ss = self._static_sampling(pairs)
             offs = np.array([r.token_offset for r, _ in pairs])
-            plan = rt.plan_for(b)
+            plan = rt.plan_for(b, store)
             tok = ss.sample(logits[:, -1], offs)[:, None]
             t = 0
             stats: Optional[StepStats] = None
@@ -1098,11 +1125,13 @@ class LLMEngine:
             # first, so no in-flight future survives to wedge the
             # engine's next call
             store.sync(strict=False)
+            store.close()
             raise
         else:
             # drain the write-back fences before dropping the store
             # (surfaces any store error, leaves the pool idle)
             store.sync()
+            store.close()
 
     # ----------------------------------------------------- continuous
 
@@ -1129,10 +1158,8 @@ class LLMEngine:
         chunked = self._chunked
         budget_cap = self.config.max_step_tokens
         if offload:
-            store = HostKVStore(
-                self.cfg, B, max_len, compress=self.config.compress,
-                fence_timeout_s=self.config.fence_timeout_s)
-            plan = self.runtime.plan_for(B)
+            store = self._make_store(B, max_len)
+            plan = self.runtime.plan_for(B, store)
             active = np.zeros(B, bool)
         else:
             stacked = None
@@ -1405,9 +1432,11 @@ class LLMEngine:
             # masking the first, so the engine stays reusable
             if offload:
                 store.sync(strict=False)
+                store.close()
             raise
         else:
             # drain write-back fences before dropping the store
             # (surfaces any store error, leaves the pool idle)
             if offload:
                 store.sync()
+                store.close()

@@ -15,6 +15,10 @@ reference across all 4 backend x batching combos x scenario:
               this CPU container, native on TPU) vs the jnp-oracle
               reference on all four combos (the knob is a no-op on the
               resident backend, which pins the reference)
+  tiered      tiered KV store with host capacity below the working set
+              (cold blocks demoted to the mmap disk tier, decoded via
+              the tier_split plan) vs the all-DRAM reference; like
+              kernels, kv_tiers is a no-op on the resident backend
 
 The per-request reference for EVERY scenario is a fresh batch-1
 resident/static engine run with the same engine seed and request uid —
@@ -34,8 +38,8 @@ from repro.configs import get_smoke_config
 from repro.core.cost_model import A100_PCIE4
 from repro.core.scheduler import Scheduler
 from repro.models.transformer import Model
-from repro.serving import (EngineConfig, LLMEngine, PrefixCacheConfig,
-                           Request, SamplingParams)
+from repro.serving import (EngineConfig, KVTiersConfig, LLMEngine,
+                           PrefixCacheConfig, Request, SamplingParams)
 
 COMBOS = [("resident", "static"), ("offload", "static"),
           ("resident", "continuous"), ("offload", "continuous")]
@@ -44,7 +48,7 @@ SCENARIOS = ["ragged", "chunked",
              pytest.param("early_eos", marks=pytest.mark.slow),
              pytest.param("mixed", marks=pytest.mark.slow),
              pytest.param("prefix", marks=pytest.mark.slow),
-             "kernels"]
+             "kernels", "tiered"]
 
 LENS = [8, 11, 14]
 
@@ -131,6 +135,16 @@ def _scenario(name, setup, sched):
         sps = [SamplingParams(max_tokens=g) for g in (5, 4, 6)]
         kw = {"static": dict(kernels=True),
               "continuous": dict(kernels=True)}
+    elif name == "tiered":
+        # host capacity well below the working set, so disk-resident
+        # sessions decode through the tier_split plan (lossless raw
+        # layout); a no-op on the resident backend, which pins the
+        # reference
+        sps = [SamplingParams(max_tokens=g) for g in (5, 4, 6)]
+        kt = dict(kv_tiers=KVTiersConfig(host_capacity_tokens=24,
+                                         block_tokens=8))
+        kw = {"static": kt, "continuous": dict(kt)}
+        rounds = 2        # round 2 re-fills slots the disk tier served
     else:
         raise AssertionError(name)
     return reqs, sps, kw, rounds

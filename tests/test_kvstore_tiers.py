@@ -1,0 +1,323 @@
+"""Unit tests for the tiered KV storage hierarchy (docs/storage.md):
+the tier_split plan kind, the mmap disk tier's three layouts, typed
+capacity errors, dual LRU+TTL eviction, and the disk-fault ladder.
+"""
+import time
+
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import (A100_PCIE4, PrefixCache, PrefixCacheConfig,
+                        Scheduler, TierLink, Workload,
+                        brute_force_tier_split, layer_times,
+                        optimal_split, optimal_tier_split,
+                        tier_layer_times)
+from repro.core.faults import (DiskFullError, DiskReadError, FaultPolicy,
+                               TransientTransferError)
+from repro.core.kvstore import (HostKVStore, KVTiersConfig, MmapDiskTier,
+                                StoreCapacityError, TieredKVStore)
+
+CFG = get_smoke_config("tinyllama-1.1b")
+DISK_BW = 1e9
+
+
+def _wl(batch=4, s=1024):
+    return Workload(batch=batch, seq_len=s, d_model=CFG.d_model,
+                    kv_dim=CFG.num_kv_heads * CFG.dh, dtype_bytes=4)
+
+
+def _fill_arrays(b, s, seed=0):
+    rng = np.random.default_rng(seed)
+    Lh, KV, dh, h = (CFG.num_layers, CFG.num_kv_heads, CFG.dh,
+                     CFG.d_model)
+    return (rng.standard_normal((Lh, b, s, KV, dh), dtype=np.float32),
+            rng.standard_normal((Lh, b, s, KV, dh), dtype=np.float32),
+            rng.standard_normal((Lh, b, s, h), dtype=np.float32))
+
+
+# ---------------------------------------------------------------- solver
+
+
+def test_tier_split_degenerates_without_disk():
+    """d=0 must reproduce the single-link optimum exactly."""
+    wl, hw = _wl(), A100_PCIE4
+    base = optimal_split(wl, hw, "row")
+    tier = optimal_tier_split(wl, hw, disk_tokens=0,
+                              disk_read_bandwidth=DISK_BW)
+    assert tier.l == base.l
+    assert tier.t_total == pytest.approx(base.t_total)
+    assert tier.t_disk == 0.0
+    assert tier.paged_tokens == 0
+
+
+@pytest.mark.parametrize("d_frac", [0.1, 0.5, 0.9, 1.0])
+@pytest.mark.parametrize("bw", [1e8, 1e9, 1e10])
+def test_tier_split_matches_brute_force(d_frac, bw):
+    wl, hw = _wl(), A100_PCIE4
+    d = int(wl.seq_len * d_frac)
+    a = optimal_tier_split(wl, hw, disk_tokens=d, disk_read_bandwidth=bw)
+    b = brute_force_tier_split(wl, hw, disk_tokens=d,
+                               disk_read_bandwidth=bw)
+    assert a.t_total <= b.t_total * (1 + 1e-9)
+    assert a.paged_tokens == max(0, d - a.l)
+
+
+def test_slower_disk_recomputes_more():
+    """A slower disk rung shifts the split toward recomputation (the
+    demoted prefix is cheaper to recompute than to page in)."""
+    wl, hw = _wl(), A100_PCIE4
+    d = wl.seq_len // 2
+    l_fast = optimal_tier_split(wl, hw, d, disk_read_bandwidth=1e11).l
+    l_slow = optimal_tier_split(wl, hw, d, disk_read_bandwidth=1e7).l
+    assert l_slow >= l_fast
+    # with a pathologically slow disk the whole demoted prefix is
+    # recomputed: nothing left to page
+    assert optimal_tier_split(wl, hw, d,
+                              disk_read_bandwidth=1e3).paged_tokens == 0
+
+
+def test_tier_layer_times_charges_both_crossings():
+    wl, hw = _wl(), A100_PCIE4
+    d = 256
+    t = tier_layer_times(wl, hw, l=0, disk_tokens=d,
+                         disk_read_bandwidth=DISK_BW)
+    base = layer_times(wl, hw, 0)
+    # cold tokens cross disk->host on top of the host->device stream
+    assert t["t_disk"] > 0
+    assert t["t_kv"] == pytest.approx(base["t_kv"] + t["t_disk"])
+    # recomputing past the demoted prefix removes the disk term
+    assert tier_layer_times(wl, hw, l=d, disk_tokens=d,
+                            disk_read_bandwidth=DISK_BW)["t_disk"] == 0
+
+
+def test_plan_tier_split_memoized():
+    sched = Scheduler(A100_PCIE4.with_tiers(
+        TierLink("disk", DISK_BW, DISK_BW)))
+    plan = sched.plan_for(CFG, batch=2, mode="kvpr")
+    a = plan.tier_split_for(512, 128)
+    b = plan.tier_split_for(512, 128)
+    assert a == b
+    assert plan.solves <= plan.lookups  # memo hit, not re-solve
+    # disk_tokens is reported against the REAL d even when bucketed
+    c = plan.tier_split_for(512, 130)
+    assert c.disk_tokens == 130
+
+
+# ------------------------------------------------------------- disk tier
+
+
+@pytest.mark.parametrize("layout", ["raw", "pack"])
+def test_disk_tier_roundtrip(tmp_path, layout):
+    b, ml, bt = 2, 64, 8
+    tier = MmapDiskTier(CFG, b, ml, bt, layout=layout,
+                        directory=str(tmp_path))
+    rng = np.random.default_rng(0)
+    Lh, KV, dh = CFG.num_layers, CFG.num_kv_heads, CFG.dh
+    k = rng.standard_normal((Lh, bt, KV, dh), dtype=np.float32)
+    v = rng.standard_normal((Lh, bt, KV, dh), dtype=np.float32)
+    tier.write_block(1, 3, k, v)
+    ok = np.zeros((bt, KV, dh), np.float32)
+    ov = np.zeros_like(ok)
+    for li in range(Lh):
+        tier.read_block_layer(li, 1, 3, ok, ov)
+        if layout == "raw":
+            np.testing.assert_array_equal(ok, k[li])
+            np.testing.assert_array_equal(ov, v[li])
+        else:                        # int4: lossy but close
+            assert np.abs(ok - k[li]).max() < 0.5
+    assert tier.reads == Lh and tier.writes == 1
+    assert tier.bytes_used > 0
+    # a non-resident block is a typed read error
+    with pytest.raises(DiskReadError):
+        tier.read_block_layer(0, 0, 0, ok, ov)
+    tier.free_block(1, 3)
+    assert tier.bytes_used == 0
+    tier.close()
+    tier.close()                     # idempotent
+
+
+def test_disk_tier_capacity_and_close(tmp_path):
+    bt = 8
+    tier = MmapDiskTier(CFG, 2, 64, bt, capacity_tokens=2 * bt,
+                        directory=str(tmp_path))
+    Lh, KV, dh = CFG.num_layers, CFG.num_kv_heads, CFG.dh
+    blk = np.zeros((Lh, bt, KV, dh), np.float32)
+    tier.write_block(0, 0, blk, blk)
+    tier.write_block(0, 1, blk, blk)
+    with pytest.raises(DiskFullError):
+        tier.write_block(0, 2, blk, blk)
+    tier.free_slot(0)
+    tier.write_block(1, 0, blk, blk)       # capacity released
+    tier.close()
+    with pytest.raises(DiskFullError):
+        tier.write_block(1, 1, blk, blk)   # closed tier refuses
+
+
+# ----------------------------------------------------- capacity satellite
+
+
+def test_host_store_rejects_over_capacity_fill():
+    b, ml, s = 2, 64, 16
+    ks, vs, hs = _fill_arrays(b, s)
+    store = HostKVStore(CFG, b, ml, capacity_tokens=24)
+    with pytest.raises(StoreCapacityError):
+        store.bulk_fill(ks, vs, hs, s)         # 32 > 24
+    assert int(store.seq_lens.sum()) == 0      # nothing landed
+    store.bulk_fill(ks[:, :, :12], vs[:, :, :12], hs[:, :, :12], 12)
+    with pytest.raises(StoreCapacityError):
+        store.fill_slot(1, ks[:, :1], vs[:, :1], hs[:, :1], s)
+    # per-slot length past the physical allocation is also typed
+    with pytest.raises(StoreCapacityError):
+        store.fill_slot(0, ks[:, :1], vs[:, :1], hs[:, :1], ml + 1)
+    tb = store.tier_bytes()
+    assert tb["host"]["used_tokens"] == 24
+    assert tb["host"]["capacity_tokens"] == 24
+    assert tb["host"]["used_bytes"] == 24 * store.kv_token_bytes
+
+
+# ----------------------------------------------------------- tiered store
+
+
+def test_tiered_store_demotes_and_pages_in():
+    b, ml, s, bt = 2, 64, 32, 8
+    ks, vs, hs = _fill_arrays(b, s)
+    st = TieredKVStore(CFG, b, ml, tiers=KVTiersConfig(
+        host_capacity_tokens=24, block_tokens=bt))
+    st.bulk_fill(ks, vs, hs, s)
+    d = st.disk_tokens()
+    assert (d > 0).any()
+    assert st.host_tokens <= 24
+    tb = st.tier_bytes()
+    assert tb["disk"]["used_tokens"] == int(d.sum())
+    assert (tb["host"]["used_tokens"] + tb["disk"]["used_tokens"]
+            == b * s)
+    # page everything back in: host bytes must be bit-identical
+    ref = HostKVStore(CFG, b, ml)
+    ref.bulk_fill(ks, vs, hs, s)
+    ls = np.zeros(b, np.int64)
+    strs = np.full(b, s, np.int64)
+    for li in range(CFG.num_layers):
+        st.page_in(li, ls, strs)
+    assert (st.disk_tokens() == 0).all()
+    np.testing.assert_array_equal(st.k[:, :, :s], ref.k[:, :, :s])
+    np.testing.assert_array_equal(st.v[:, :, :s], ref.v[:, :, :s])
+    assert st.stats().promotions > 0
+    st.close()
+
+
+def test_tiered_store_ttl_sweep():
+    b, ml, s, bt = 2, 64, 32, 8
+    ks, vs, hs = _fill_arrays(b, s)
+    st = TieredKVStore(CFG, b, ml, tiers=KVTiersConfig(
+        block_tokens=bt, ttl_s=0.05))
+    st.bulk_fill(ks, vs, hs, s)
+    assert st.sweep() == 0                     # fresh: nothing idle
+    time.sleep(0.08)
+    assert st.sweep() > 0                      # idle past TTL: demoted
+    stats = st.stats()
+    assert stats.ttl_demotions > 0
+    # full blocks demoted; the newest-token safety margin stays in DRAM
+    assert (st.disk_tokens() >= s - 2 * bt).all()
+    st.close()
+
+
+def test_tiered_store_disk_full_is_benign():
+    b, ml, s, bt = 2, 64, 32, 8
+    ks, vs, hs = _fill_arrays(b, s)
+    st = TieredKVStore(CFG, b, ml, tiers=KVTiersConfig(
+        host_capacity_tokens=bt, block_tokens=bt,
+        disk_capacity_tokens=bt))            # room for ONE block
+    st.bulk_fill(ks, vs, hs, s)              # wants to demote far more
+    stats = st.stats()
+    assert stats.demotions == 1
+    assert stats.demote_failures > 0         # DiskFullError absorbed
+    # the store still serves: every non-demoted byte is in DRAM
+    ref = HostKVStore(CFG, b, ml)
+    ref.bulk_fill(ks, vs, hs, s)
+    np.testing.assert_array_equal(st.k[:, :, bt:s], ref.k[:, :, bt:s])
+    st.close()
+
+
+def test_tiered_store_injected_disk_read_fault():
+    """An injected disk_read fault surfaces as DiskReadError — a
+    TransientTransferError the fetch ladder retries/degrades on."""
+    b, ml, s, bt = 2, 64, 32, 8
+    ks, vs, hs = _fill_arrays(b, s)
+    faults = FaultPolicy(disk_read_fail_rate=1.0, seed=1)
+    st = TieredKVStore(CFG, b, ml, tiers=KVTiersConfig(
+        host_capacity_tokens=16, block_tokens=bt), faults=faults)
+    st.bulk_fill(ks, vs, hs, s)
+    assert (st.disk_tokens() > 0).any()
+    with pytest.raises(TransientTransferError):
+        st.page_in(0, np.zeros(b, np.int64), np.full(b, s, np.int64))
+    st.close()
+
+
+def test_tiered_clear_slot_releases_disk():
+    b, ml, s, bt = 2, 64, 32, 8
+    ks, vs, hs = _fill_arrays(b, s)
+    st = TieredKVStore(CFG, b, ml, tiers=KVTiersConfig(
+        host_capacity_tokens=16, block_tokens=bt))
+    st.bulk_fill(ks, vs, hs, s)
+    assert st.tier.resident_blocks > 0
+    before = st.tier.resident_blocks
+    st.clear_slot(0)
+    assert st.disk_tokens()[0] == 0
+    assert st.tier.resident_blocks < before
+    st.close()
+
+
+# -------------------------------------------------------- prefix TTL sat.
+
+
+def test_prefix_cache_ttl_eviction():
+    pc = PrefixCache(PrefixCacheConfig(capacity_tokens=1024,
+                                       min_prefix=2, ttl_s=0.05))
+    Lh, KV, dh, h = (CFG.num_layers, CFG.num_kv_heads, CFG.dh,
+                     CFG.d_model)
+    toks = [1, 2, 3, 4]
+    p = len(toks)
+    ks = np.zeros((Lh, 1, p, KV, dh), np.float32)
+    hs = np.zeros((Lh, 1, p, h), np.float32)
+    assert pc.insert(toks, ks, ks, hs)
+    m, e = pc.lookup(toks + [5])
+    assert m == p and e is not None
+    time.sleep(0.08)
+    # peek is non-mutating but reports the expiry
+    assert pc.peek(toks + [5]) == (0, None)
+    m, e = pc.lookup(toks + [5])               # sweeps, then misses
+    assert (m, e) == (0, None)
+    assert pc.stats.ttl_evictions == 1
+    assert pc.stats.tokens_stored == 0
+    # a hit refreshes the deadline
+    assert pc.insert(toks, ks, ks, hs)
+    time.sleep(0.03)
+    assert pc.lookup(toks + [5])[0] == p       # refresh at ~0.03
+    time.sleep(0.03)
+    assert pc.lookup(toks + [5])[0] == p       # still alive at ~0.06
+    st = pc.stats
+    assert st.ttl_evictions == 1
+
+
+def test_prefix_cache_ttl_none_never_expires():
+    pc = PrefixCache(PrefixCacheConfig(min_prefix=2))
+    Lh, KV, dh, h = (CFG.num_layers, CFG.num_kv_heads, CFG.dh,
+                     CFG.d_model)
+    ks = np.zeros((Lh, 1, 3, KV, dh), np.float32)
+    hs = np.zeros((Lh, 1, 3, h), np.float32)
+    pc.insert([7, 8, 9], ks, ks, hs)
+    assert pc.lookup([7, 8, 9, 1])[0] == 3
+    assert pc.stats.ttl_evictions == 0
+
+
+def test_kv_tiers_config_validation():
+    with pytest.raises(ValueError):
+        KVTiersConfig(policy="lru").validate()
+    with pytest.raises(ValueError):
+        KVTiersConfig(block_tokens=0).validate()
+    with pytest.raises(ValueError):
+        KVTiersConfig(host_capacity_tokens=4, block_tokens=8).validate()
+    with pytest.raises(ValueError):
+        KVTiersConfig(ttl_s=0.0).validate()
+    KVTiersConfig(host_capacity_tokens=64).validate()

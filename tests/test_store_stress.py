@@ -24,6 +24,7 @@ import numpy as np
 import pytest
 
 from repro.configs import get_smoke_config
+from repro.core.kvstore import KVTiersConfig, TieredKVStore
 from repro.core.runtime import HostKVStore, TransferEngine
 
 STEPS = 24
@@ -143,4 +144,97 @@ def test_fences_survive_interleaved_fetch_store_chunk_writeback():
         np.testing.assert_array_equal(
             store.k[li, 0, :final],
             _kv_pattern(np.arange(final), KV, dh))
+    xfer.close()
+
+
+@pytest.mark.slow
+def test_tiered_store_concurrent_fetch_demote_promote():
+    """The tiered extension: the same decode-style fetch/append loop —
+    fetches now page demoted blocks back in through ``page_in`` inside
+    ``fetch_layer`` — while a background thread aggressively demotes
+    (capacity sweep) the whole time.  Every fetched value must still be
+    its position-derived pattern: a torn read through ANY
+    demote/page-in interleaving shows up as a wrong float.  The
+    promote-then-redemote ping-pong (fetch windows start at l=0, so
+    each step promotes everything the sweeper pushed out) maximizes
+    boundary churn."""
+    cfg = get_smoke_config("opt-6.7b").replace(num_layers=4)
+    Lh, KV, dh, h = (cfg.num_layers, cfg.num_kv_heads, cfg.dh,
+                     cfg.d_model)
+    s0, steps, bt = 24, 16, 8
+    max_len = s0 + steps + 4
+    store = TieredKVStore(cfg, 2, max_len, tiers=KVTiersConfig(
+        host_capacity_tokens=bt * 2, block_tokens=bt))
+    xfer = TransferEngine(n_copy_threads=2)
+
+    pos0 = np.arange(s0)
+    for li in range(Lh):
+        store.k[li, 0, :s0] = _kv_pattern(pos0, KV, dh)
+        store.v[li, 0, :s0] = _kv_pattern(pos0, KV, dh, base=1000.0)
+    store.act[:, 0, :s0] = np.arange(s0, dtype=np.float32)[:, None]
+    store.seq_lens[0] = s0
+    store.enforce_capacity()
+    assert store.disk_tokens()[0] > 0          # seeded with demotions
+
+    stop = threading.Event()
+    errors = []
+
+    def demoter():
+        try:
+            while not stop.is_set():
+                store.sweep()
+                time.sleep(0.0005)
+        except Exception as e:                 # pragma: no cover
+            errors.append(e)
+
+    t = threading.Thread(target=demoter)
+    t.start()
+    try:
+        ls = np.zeros(2, np.int64)
+        for step in range(steps):
+            seq = store.seq_lens.copy()
+            s_strs = seq - ls
+            for li in range(Lh):
+                fut = xfer.submit(xfer.fetch_layer, store, li, ls,
+                                  s_strs, 0, max_len)
+                h_res, k_str, v_str, _ = fut.result()
+                valid = int(seq[0])
+                want = np.arange(valid)
+                np.testing.assert_array_equal(
+                    np.asarray(k_str)[0, :valid],
+                    _kv_pattern(want, KV, dh),
+                    err_msg=f"torn K read step={step} layer={li}")
+                np.testing.assert_array_equal(
+                    np.asarray(v_str)[0, :valid],
+                    _kv_pattern(want, KV, dh, base=1000.0),
+                    err_msg=f"torn V read step={step} layer={li}")
+                new_pos = np.array([seq[0], -1])
+                k_new = np.stack([_kv_pattern([seq[0]], KV, dh),
+                                  np.zeros((1, KV, dh), np.float32)])
+                v_new = np.stack(
+                    [_kv_pattern([seq[0]], KV, dh, 1000.0),
+                     np.zeros((1, KV, dh), np.float32)])
+                a_new = np.full((2, 1, h), float(seq[0]), np.float32)
+                store.set_fence(li, xfer.submit_store(
+                    store.append, li, k_new, v_new, a_new, new_pos))
+            store.seq_lens[0] += 1
+        store.sync()
+    finally:
+        stop.set()
+        t.join()
+    assert not errors, errors
+    stats = store.stats()
+    assert stats.demotions > 0 and stats.promotions > 0
+    assert stats.demote_failures == 0
+    # the full trajectory is intact end to end after all the churn
+    final = int(store.seq_lens[0])
+    assert final == s0 + steps
+    for li in range(Lh):
+        np.testing.assert_array_equal(
+            store.k[li, 0, :final],
+            _kv_pattern(np.arange(final), KV, dh))
+        np.testing.assert_array_equal(
+            store.v[li, 0, :final],
+            _kv_pattern(np.arange(final), KV, dh, base=1000.0))
+    store.close()
     xfer.close()
