@@ -1,0 +1,187 @@
+"""Mesh-sharded decode benchmark: 1/2/4-way model-axis data planes.
+
+Runs the same decode trajectory through three mesh sizes and emits one
+JSON object (committed as BENCH_sharded.json):
+
+  tp1   the unsharded offload runtime — the identity reference
+  tp2   2-way model-axis mesh: per-shard plans (Workload/
+        HardwareProfile.per_shard), head-sliced kernel launches, and
+        2 concurrent per-KV-head-slice copy streams per fetch
+  tp4   4-way mesh, same machinery
+
+Sharding is data-plane only — the store keeps full arrays and each
+shard streams a disjoint head-slice of the same staging buffer — so
+every mesh size must emit byte-identical tokens; what changes is the
+plan (per-shard FLOPs shrink, the link share narrows) and the per-shard
+link traffic.  Each cell reports step time plus the per-shard
+streamed-KV byte breakdown drained from ``StepStats.shard_kv_bytes``.
+
+Gates (--smoke exits non-zero if any fails):
+
+  tokens_identical   tp1, tp2, tp4 emit the same tokens
+  shard_bytes_split  per-shard streams are even, and each shard carries
+                     ~1/k of the unsharded streamed-KV bytes (the
+                     across-mesh invariant total)
+
+    PYTHONPATH=src python benchmarks/bench_sharded.py [--smoke]
+        [--json out.json] [--batch B] [--prompt S] [--gen N]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core.profiler import profile_system
+from repro.core.runtime import (HostKVStore, OffloadDecodeRuntime,
+                                prefill_with_activations)
+from repro.core.scheduler import Scheduler
+from repro.models.transformer import Model
+
+MESHES = (1, 2, 4)
+
+
+def _spill(cfg, model, params, toks, gen):
+    """Prefill then land the KV in a fresh host store."""
+    logits, ks, vs, hs = prefill_with_activations(model, params, toks)
+    first = np.asarray(np.argmax(logits, axis=-1), np.int32)
+    b, s = toks.shape
+    store = HostKVStore(cfg, b, s + gen + 2)
+    store.bulk_fill(np.asarray(ks), np.asarray(vs), np.asarray(hs), s)
+    return store, first
+
+
+def _run_cell(cfg, model, params, sched, toks, gen, shards,
+              mode="kvpr"):
+    """(tokens, wall_s, per-shard streamed-KV byte totals) for one mesh
+    size, with a warmup decode so XLA compilation and staging/shard-pool
+    allocation are off the clock."""
+    with OffloadDecodeRuntime(cfg, params, scheduler=sched,
+                              mode=mode, shards=shards) as rt:
+        store, first = _spill(cfg, model, params, toks, gen)
+        rt.decode(store, first, gen)
+        store.close()
+
+        store, first = _spill(cfg, model, params, toks, gen)
+        t0 = time.perf_counter()
+        tokens, stats = rt.decode(store, first, gen)
+        dt = time.perf_counter() - t0
+        store.close()
+    per_shard = [0] * shards
+    for st in stats:
+        if st.shard_kv_bytes is not None:
+            for si, b in enumerate(st.shard_kv_bytes):
+                per_shard[si] += b
+    return np.asarray(tokens), dt, stats, per_shard
+
+
+def run(batch: int = 2, prompt: int = 48, gen: int = 16) -> dict:
+    cfg = get_smoke_config("opt-6.7b").replace(
+        num_layers=4, d_model=256, num_heads=4, num_kv_heads=4,
+        d_ff=512)
+    model = Model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    toks = rng.integers(1, cfg.vocab_size,
+                        (batch, prompt)).astype(np.int32)
+    sched = Scheduler(profile_system())
+
+    cells = {}
+    for k in MESHES:
+        tokens, dt, stats, per_shard = _run_cell(
+            cfg, model, params, sched, toks, gen, k)
+        cell = {
+            "shards": k,
+            "wall_s": round(dt, 4),
+            "step_ms": round(dt / gen * 1e3, 3),
+            "tokens_per_s": round(batch * gen / dt, 2),
+            "split_l_max": max(st.split_l for st in stats),
+            "bytes_transferred": sum(st.bytes_transferred
+                                     for st in stats),
+        }
+        if k > 1:
+            cell["shard_kv_bytes"] = per_shard
+            cell["kv_bytes_total"] = sum(per_shard)
+        cells[f"tp{k}"] = cell
+        cells[f"tp{k}"]["_tokens"] = tokens
+        extra = (f"  shard_kv={[round(b / 1e6, 2) for b in per_shard]}MB"
+                 if k > 1 else "")
+        print(f"  tp{k}: step={cell['step_ms']:8.2f}ms{extra}",
+              file=sys.stderr)
+
+    toks_ref = cells["tp1"].pop("_tokens")
+    identical = all(
+        np.array_equal(toks_ref, cells[f"tp{k}"].pop("_tokens"))
+        for k in MESHES if k > 1)
+
+    # Under kvpr plans the streamed-KV total is NOT mesh-invariant (the
+    # per-shard cost model shifts the split toward recompute as the
+    # link share narrows — visible above as split_l growing with k), so
+    # the 1/k byte claim is gated at FIXED geometry: flexgen streams
+    # the whole window (l = 0) at every mesh size, making the total a
+    # mesh invariant each shard must carry exactly 1/k of.  1%
+    # tolerance absorbs the per-fetch // rounding.
+    probe = {}
+    for k in (2, 4):
+        _, _, _, per_shard = _run_cell(cfg, model, params, sched, toks,
+                                       gen, k, mode="flexgen")
+        probe[k] = per_shard
+    unsharded = sum(probe[2])
+    split_ok = unsharded > 0 and \
+        abs(sum(probe[4]) - unsharded) <= unsharded * 0.01
+    for k, per in probe.items():
+        even = max(per) - min(per) <= k          # // rounding slack
+        near = all(abs(b - unsharded / k) <= unsharded / k * 0.01
+                   for b in per)
+        split_ok = split_ok and even and near
+
+    return {
+        "benchmark": "mesh_sharded_decode",
+        "config": {"batch": batch, "prompt": prompt, "gen": gen,
+                   "num_layers": cfg.num_layers, "d_model": cfg.d_model,
+                   "num_kv_heads": cfg.num_kv_heads,
+                   "meshes": list(MESHES)},
+        "cells": cells,
+        "link_probe": {"mode": "flexgen",
+                       "unsharded_kv_bytes": unsharded,
+                       "tp2_shard_kv_bytes": probe[2],
+                       "tp4_shard_kv_bytes": probe[4]},
+        "gates": {"tokens_identical": bool(identical),
+                  "shard_bytes_split": bool(split_ok)},
+        "smoke_ok": bool(identical and split_ok),
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--prompt", type=int, default=48)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--json", default=None,
+                    help="also write the JSON to this path")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small run; exit 1 unless tokens are identical "
+                         "across mesh sizes AND per-shard link bytes "
+                         "split evenly at 1/k of the unsharded stream")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        args.batch, args.prompt, args.gen = 2, 24, 8
+    res = run(batch=args.batch, prompt=args.prompt, gen=args.gen)
+    text = json.dumps(res, indent=2)
+    print(text)
+    if args.json:
+        with open(args.json, "w") as f:
+            f.write(text + "\n")
+    if args.smoke and not res["smoke_ok"]:
+        print(f"SMOKE FAIL: gates={res['gates']}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -23,7 +23,8 @@ import sys
 
 FILES = ["BENCH_step_breakdown.json", "BENCH_prefix.json",
          "BENCH_chunked_prefill.json", "BENCH_faults.json",
-         "BENCH_router_replay.json", "BENCH_tiered.json"]
+         "BENCH_router_replay.json", "BENCH_tiered.json",
+         "BENCH_sharded.json"]
 
 
 def _load(root: pathlib.Path):
@@ -172,6 +173,32 @@ def main(argv=None) -> int:
                 failed.append(f"tiered {gate}=false")
         if d.get("smoke_ok") is False:
             failed.append("tiered smoke_ok=false")
+
+    if "BENCH_sharded.json" in data:
+        d = data["BENCH_sharded.json"]
+        print("== mesh-sharded decode "
+              f"({json.dumps(d.get('config'))}) ==")
+        for name in ("tp1", "tp2", "tp4"):
+            c = d["cells"][name]
+            sb = c.get("shard_kv_bytes")
+            per = ("  shard_kv " + "/".join(f"{b / 1e6:.2f}" for b in sb)
+                   + " MB" if sb else "")
+            print(f"  {name:<5s} {c['step_ms']:8.2f} ms/step  "
+                  f"split_l {c['split_l_max']:>3d}{per}")
+        probe = d.get("link_probe", {})
+        if probe:
+            print(f"  link probe ({probe['mode']}): unsharded "
+                  f"{probe['unsharded_kv_bytes'] / 1e6:.2f} MB -> "
+                  "tp2 " + "/".join(
+                      f"{b / 1e6:.2f}"
+                      for b in probe["tp2_shard_kv_bytes"]) + "  tp4 "
+                  + "/".join(f"{b / 1e6:.2f}"
+                             for b in probe["tp4_shard_kv_bytes"]))
+        for gate, ok in d.get("gates", {}).items():
+            if not ok:
+                failed.append(f"sharded {gate}=false")
+        if d.get("smoke_ok") is False:
+            failed.append("sharded smoke_ok=false")
 
     missing = [f for f in FILES if f not in data]
     if missing:

@@ -115,4 +115,11 @@ timeout "${ROUTER_REPLAY_TIMEOUT:-600}" \
 timeout "${TIERED_TIMEOUT:-300}" \
     python benchmarks/bench_tiered.py --smoke
 
+# 11. Mesh-sharded decode smoke: 1/2/4-way model-axis meshes must emit
+#     identical tokens (sharding is data-plane only), and at fixed
+#     split geometry each shard stream must carry 1/k of the unsharded
+#     streamed-KV link bytes (see docs/scaling.md).
+timeout "${SHARDED_TIMEOUT:-300}" \
+    python benchmarks/bench_sharded.py --smoke
+
 echo "ci.sh: all checks passed"

@@ -64,6 +64,28 @@ class HardwareProfile:
         plans for the tiered store key on this one)."""
         return dataclasses.replace(self, tiers=tuple(tiers))
 
+    def per_shard(self, shards: int) -> "HardwareProfile":
+        """The link budget ONE shard of a ``shards``-way tensor-parallel
+        mesh sees: the host link (and every tier rung below it) is
+        shared by ``shards`` concurrent per-shard streams, so each
+        stream gets a 1/shards slice of the bandwidth.  Compute rates
+        are untouched — each shard runs on its own accelerator; the
+        per-shard FLOP reduction lives in ``Workload.per_shard``.
+        Returns ``self`` unchanged at shards == 1, so single-shard
+        plans are keyed and solved bit-identically to the unsharded
+        path (docs/scaling.md)."""
+        if shards <= 1:
+            return self
+        return dataclasses.replace(
+            self,
+            name=f"{self.name}/tp{shards}",
+            link_bandwidth=self.link_bandwidth / shards,
+            tiers=tuple(dataclasses.replace(
+                t,
+                read_bandwidth=t.read_bandwidth / shards,
+                write_bandwidth=t.write_bandwidth / shards)
+                for t in self.tiers))
+
 
 # The paper's primary system: A100-40GB + PCIe 4.0 x16.
 A100_PCIE4 = HardwareProfile(
@@ -145,6 +167,28 @@ class Workload:
     @property
     def total_kv_bytes(self) -> int:
         return self.kv_bytes(self.seq_len)
+
+    def per_shard(self, shards: int) -> "Workload":
+        """The slice of this workload ONE shard of a ``shards``-way
+        tensor-parallel mesh owns: KV heads partition across the model
+        axis, so the per-shard KV width (and with it both the streamed
+        KV bytes and the K/V-projection recompute FLOPs) divides by
+        ``shards``.  Activations do NOT divide — every shard needs the
+        full (b, l, h) input to recompute its head-slice, which is what
+        moves the optimal split toward more recomputation as shards
+        grow (docs/scaling.md).  Returns ``self`` unchanged at
+        shards == 1 so single-shard solves stay bit-identical to the
+        unsharded path."""
+        if shards <= 1:
+            return self
+        if self.kv_dim % shards:
+            raise ValueError(
+                f"kv_dim={self.kv_dim} does not divide across "
+                f"{shards} shards (num_kv_heads * dh must be a "
+                f"multiple of the model-axis size)")
+        return dataclasses.replace(
+            self, kv_dim=self.kv_dim // shards,
+            mha_weight_bytes=self.mha_weight_bytes // shards)
 
 
 def int4_kv_bytes_per_el(group: int = 32) -> float:

@@ -97,6 +97,45 @@ class HostKVStore:
         self._chunk_fences: Dict[Optional[int], List[object]] = {}
         self._chunk_lock = threading.Lock()
 
+    # ------------------------------------------------------ head slices
+    # Tensor-parallel (mesh) decode: each model-axis shard owns a
+    # KV-head slice of every slot.  The slices are VIEWS into the one
+    # host allocation — per-shard transfer streams read disjoint head
+    # ranges of the same bytes, so concatenating the slices is the
+    # full array by construction (no shard-local copies to keep
+    # coherent, and demotion/eviction stay token-granular and
+    # shard-agnostic in the tiered subclass).
+
+    @property
+    def num_kv_heads(self) -> int:
+        buf = self.kq.packed if self.compress == "int4" else self.k
+        return int(buf.shape[3])
+
+    def head_slice(self, shards: int, si: int) -> Dict[str, np.ndarray]:
+        """Shard ``si``'s head-slice views of the K/V planes (keys
+        match the transfer engine's staging names: "k"/"v", or the int4
+        "kp"/"ks"/"kz"/"vp"/"vs"/"vz" triple — every plane carries the
+        KV-head axis at position 3, so all slice identically).
+        Activations are replicated across shards and are NOT included.
+        """
+        kv = self.num_kv_heads
+        if shards < 1 or kv % shards:
+            raise ValueError(f"{shards} shards do not divide "
+                             f"{kv} KV heads")
+        if not 0 <= si < shards:
+            raise ValueError(f"shard index {si} out of range "
+                             f"[0, {shards})")
+        per = kv // shards
+        sl = slice(si * per, (si + 1) * per)
+        if self.compress == "int4":
+            return {"kp": self.kq.packed[:, :, :, sl],
+                    "ks": self.kq.scale[:, :, :, sl],
+                    "kz": self.kq.zero[:, :, :, sl],
+                    "vp": self.vq.packed[:, :, :, sl],
+                    "vs": self.vq.scale[:, :, :, sl],
+                    "vz": self.vq.zero[:, :, :, sl]}
+        return {"k": self.k[:, :, :, sl], "v": self.v[:, :, :, sl]}
+
     # `len` views the store as a uniform batch (static-batching path).
     @property
     def len(self) -> int:

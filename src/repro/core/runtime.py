@@ -132,6 +132,15 @@ class TransferEngine:
         self._retry_lock = threading.Lock()
         self._closed = False
         self._close_lock = threading.Lock()
+        # per-shard stream pool (mesh decode): shard slice copies run
+        # here, NOT on the main copy pool — a fetch task fanning out on
+        # its own pool could starve-deadlock against the next layer's
+        # prefetch.  Created lazily on the first sharded fetch; the
+        # unsharded path never pays for it.
+        self._shard_pool: Optional[ThreadPoolExecutor] = None
+        self._shard_pool_n = 0
+        self._shard_bytes: Optional[List[int]] = None
+        self._shard_lock = threading.Lock()
 
     def submit(self, fn, *args):
         return self.pool.submit(fn, *args)
@@ -199,6 +208,8 @@ class TransferEngine:
             self.faults.release()
         self.pool.shutdown(wait=True)
         self.store_pool.shutdown(wait=True)
+        if self._shard_pool is not None:
+            self._shard_pool.shutdown(wait=True)
 
     def drain_t_fence(self) -> float:
         """Seconds fetch workers spent blocked on write-back fences
@@ -209,6 +220,61 @@ class TransferEngine:
         with self._t_fence_lock:
             t, self._t_fence = self._t_fence, 0.0
         return t
+
+    # ------------------------------------------------------- shard streams
+    # Tensor-parallel decode (docs/scaling.md): each model-axis shard
+    # owns a KV head-slice and streams it over its own 1/shards share of
+    # the link.  Emulated here as `shards` concurrent slice copies into
+    # disjoint head-slice VIEWS of the one staging buffer — the merged
+    # buffer the device receives is byte-identical to the single-stream
+    # copy (per-KV-head slices are pure data movement), which is what
+    # keeps sharded decode token-identical by construction.
+
+    def _shard_exec(self, shards: int) -> ThreadPoolExecutor:
+        """Dedicated pool for shard slice copies, sized to the widest
+        mesh seen.  Separate from the fetch pool so a fetch task that
+        fans out can never deadlock against queued fetches."""
+        with self._shard_lock:
+            if self._shard_pool is None or self._shard_pool_n < shards:
+                old = self._shard_pool
+                self._shard_pool = ThreadPoolExecutor(max_workers=shards)
+                self._shard_pool_n = shards
+                if old is not None:
+                    old.shutdown(wait=True)
+            return self._shard_pool
+
+    def _note_shard_bytes(self, shards: int, kv_bytes: int) -> None:
+        """Accumulate the per-shard streamed-KV link bytes of one fetch
+        (each shard's slice is an even 1/shards of the window)."""
+        with self._shard_lock:
+            if self._shard_bytes is None or \
+                    len(self._shard_bytes) != shards:
+                self._shard_bytes = [0] * shards
+            per = kv_bytes // shards
+            for si in range(shards):
+                self._shard_bytes[si] += per
+
+    def drain_shard_bytes(self) -> Optional[Tuple[int, ...]]:
+        """Per-shard streamed-KV bytes since the last drain (None when
+        no sharded fetch ran) — feeds ``StepStats.shard_kv_bytes``."""
+        with self._shard_lock:
+            sb, self._shard_bytes = self._shard_bytes, None
+        return None if sb is None else tuple(sb)
+
+    @staticmethod
+    def _can_shard(shards: int, kv_heads: int) -> bool:
+        return shards > 1 and kv_heads % shards == 0
+
+    def _shard_copies(self, shards: int, kv_heads: int, copy_one):
+        """Run ``copy_one(h0, h1)`` for each shard's head range on the
+        shard pool, concurrently, and join.  ``copy_one`` must write
+        only its own head-slice view."""
+        per = kv_heads // shards
+        pool = self._shard_exec(shards)
+        futs = [pool.submit(copy_one, si * per, (si + 1) * per)
+                for si in range(shards)]
+        for f in futs:
+            f.result()
 
     # ------------------------------------------------------------ staging
 
@@ -229,7 +295,8 @@ class TransferEngine:
 
     def fetch_layer(self, store: HostKVStore, layer: int,
                     ls: np.ndarray, s_strs: np.ndarray,
-                    l_pad: int, s_pad: int, stage_ns: str = ""):
+                    l_pad: int, s_pad: int, stage_ns: str = "",
+                    shards: int = 1):
         """Copy host slices to device (the 'PCIe' transfer).
 
         ls / s_strs are per-slot recompute lengths and streamed lengths;
@@ -255,6 +322,15 @@ class TransferEngine:
         fallback fetch passes its own namespace so it can never share
         staging memory with a timed-out primary fetch that may still be
         writing the default-namespace buffers from a pool thread.
+
+        shards > 1 splits the streamed-KV copy into per-KV-head-slice
+        streams (one per model-axis shard, concurrent on the shard
+        pool) writing disjoint views of the SAME staging buffer — the
+        merged bytes are identical to the single-stream copy, so
+        sharding the transfer never changes a token.  Requires the
+        store's KV-head count to divide by ``shards`` (EngineConfig
+        validates this); per-shard streamed bytes accumulate for
+        ``StepStats.shard_kv_bytes``.
         """
         t0 = time.perf_counter()
         store.wait_fence(layer)
@@ -289,10 +365,11 @@ class TransferEngine:
         uniform = bool((ls == ls[0]).all())
         if uniform:
             k_np, v_np = self._slice_uniform(store, layer, int(ls[0]),
-                                             s_pad, parity, stage_ns)
+                                             s_pad, parity, stage_ns,
+                                             shards)
         else:
             k_np, v_np = self._gather_ragged(store, layer, ls, s_pad,
-                                             parity, stage_ns)
+                                             parity, stage_ns, shards)
         h_res = jax.device_put(h_np)
         if store.compress == "int4":
             k_str = tuple(jax.device_put(a) for a in k_np)
@@ -302,6 +379,8 @@ class TransferEngine:
             k_str = jax.device_put(k_np)
             v_str = jax.device_put(v_np)
             kv_bytes = k_str.nbytes + v_str.nbytes
+        if shards > 1 and s_pad:
+            self._note_shard_bytes(shards, kv_bytes)
         nbytes = (h_res.nbytes if l_pad else 0) + (kv_bytes if s_pad else 0)
         if self.faults is not None:
             self.faults.throttle(nbytes)
@@ -314,8 +393,11 @@ class TransferEngine:
         return (("k",), (store.k,), ("v",), (store.v,))
 
     def _slice_uniform(self, store, layer, l, s_pad, parity,
-                       stage_ns=""):
-        """Whole-batch window [l, l + s_pad) copied into staging."""
+                       stage_ns="", shards: int = 1):
+        """Whole-batch window [l, l + s_pad) copied into staging; with
+        shards > 1 each KV buffer's copy fans out into per-head-slice
+        shard streams (the int4 triple slices on the same KV-head axis,
+        so packed/scale/zero shard identically)."""
         sl = slice(l, l + s_pad) if s_pad else slice(0, 1)
         k_names, k_srcs, v_names, v_srcs = self._kv_bufs(store)
 
@@ -325,7 +407,12 @@ class TransferEngine:
                 win = src[layer, :, sl]
                 out = self._stage(stage_ns + name, parity, win.shape,
                                   src.dtype)
-                out[:] = win
+                if s_pad and self._can_shard(shards, win.shape[2]):
+                    def copy_one(h0, h1, out=out, win=win):
+                        out[:, :, h0:h1] = win[:, :, h0:h1]
+                    self._shard_copies(shards, win.shape[2], copy_one)
+                else:
+                    out[:] = win
                 outs.append(out)
             return outs
 
@@ -336,11 +423,14 @@ class TransferEngine:
         return k_np[0], v_np[0]
 
     def _gather_ragged(self, store, layer, ls, s_pad, parity,
-                       stage_ns=""):
+                       stage_ns="", shards: int = 1):
         """Vectorized ragged gather: one batched strided take per buffer
         (no per-slot Python loop, no allocation).  Slot i's window is
         [l_i, l_i + s_pad), clamped to the preallocated max_len; rows
         beyond the slot's valid streamed length are masked in attention.
+        With shards > 1 the take splits into per-shard column-group
+        takes (each KV head-slice flattens to a contiguous column range
+        of the (KV, ...) tail), concurrent on the shard pool.
         """
         b, max_len = store.batch, store.max_len
         w = max(s_pad, 1)
@@ -357,8 +447,19 @@ class TransferEngine:
                                   src.dtype)
                 if s_pad:
                     flat_src = src[layer].reshape(b * max_len, -1)
-                    np.take(flat_src, flat_idx, axis=0,
-                            out=out.reshape(b * s_pad, -1))
+                    flat_out = out.reshape(b * s_pad, -1)
+                    kv_heads = tail[0] if tail else 1
+                    if self._can_shard(shards, kv_heads):
+                        cols = flat_src.shape[1] // kv_heads
+
+                        def take_one(h0, h1, fs=flat_src, fo=flat_out,
+                                     c=cols):
+                            np.take(fs[:, h0 * c:h1 * c], flat_idx,
+                                    axis=0, out=fo[:, h0 * c:h1 * c])
+                        self._shard_copies(shards, kv_heads, take_one)
+                    else:
+                        np.take(flat_src, flat_idx, axis=0,
+                                out=flat_out)
                 outs.append(out)
             return outs
 
@@ -433,10 +534,11 @@ class ComputeStep:
     via ``combine_segments``."""
 
     def __init__(self, cfg: ModelConfig, compress: Optional[str] = None,
-                 group: int = 32, kernels="off"):
+                 group: int = 32, kernels="off", shards: int = 1):
         self.cfg = cfg
         self.compress = compress
         self.group = group
+        self.shards = int(shards)
         self.kernel_mode = kops.kernel_mode(kernels)
         self.layer = jax.jit(self._layer_step,
                              static_argnames=("l_pad", "s_pad"))
@@ -527,7 +629,8 @@ class ComputeStep:
                 segments.append(("fp", k_str, v_str, s_valid))
         segments.append(("fp", k_new, v_new, None))
         return kops.segmented_decode_attention(q, segments,
-                                               mode=self.kernel_mode)
+                                               mode=self.kernel_mode,
+                                               head_shards=self.shards)
 
 
 @dataclasses.dataclass
@@ -557,6 +660,10 @@ class StepStats:
     fetch_fallbacks: int = 0    # layers that degraded to the full-
                                 # recompute (l = p) fetch path after a
                                 # failed/stalled KV fetch
+    shards: int = 1             # model-axis mesh size the step ran with
+    shard_kv_bytes: Optional[Tuple[int, ...]] = None
+                                # per-shard streamed-KV link bytes
+                                # (None on the unsharded path)
 
 
 class OffloadDecodeRuntime:
@@ -585,7 +692,8 @@ class OffloadDecodeRuntime:
                  fine_grained: bool = True, kernels="auto",
                  faults: Optional[FaultPolicy] = None,
                  io_retries: int = 2, io_backoff_s: float = 0.01,
-                 fence_timeout_s: Optional[float] = None):
+                 fence_timeout_s: Optional[float] = None,
+                 shards: int = 1):
         self.cfg = cfg
         self.params = params
         self.scheduler = scheduler or Scheduler(hw)
@@ -594,6 +702,11 @@ class OffloadDecodeRuntime:
         self.align = align
         self.compress = compress
         self.group = group
+        self.shards = max(1, int(shards))
+        if self.shards > 1 and cfg.num_kv_heads % self.shards:
+            raise ValueError(
+                f"model-axis mesh size {self.shards} does not divide "
+                f"num_kv_heads={cfg.num_kv_heads}")
         self.offload_weights = offload_weights
         self.faults = faults
         self.fence_timeout_s = fence_timeout_s
@@ -609,7 +722,7 @@ class OffloadDecodeRuntime:
                                    retries=io_retries,
                                    backoff_s=io_backoff_s)
         self.compute = ComputeStep(cfg, compress=compress, group=group,
-                                   kernels=kernels)
+                                   kernels=kernels, shards=shards)
         self._t_store = 0.0
         self._t_store_lock = threading.Lock()
         # degradation-ladder state: sticky jnp-oracle fallback after a
@@ -653,7 +766,8 @@ class OffloadDecodeRuntime:
         return self.scheduler.plan_for(
             self.cfg, batch, mode=self.mode, schedule=self.schedule,
             align=self.align, compress=self.compress, dtype_bytes=4,
-            group=self.group, hw=hw, disk_bytes_per_el=dbe)
+            group=self.group, hw=hw, disk_bytes_per_el=dbe,
+            shards=self.shards)
 
     # ----------------------------------------------------------- plumbing
 
@@ -753,7 +867,8 @@ class OffloadDecodeRuntime:
         w_fut = (self.xfer.submit_weights(0) if self.offload_weights
                  else None)
         fut = self.xfer.submit_io("fetch", self.xfer.fetch_layer, store,
-                                  0, ls, s_strs, l_pad, s_pad)
+                                  0, ls, s_strs, l_pad, s_pad,
+                                  shards=self.shards)
         for li in range(cfg.num_layers):
             tw0 = time.perf_counter()
             if self.offload_weights:
@@ -793,7 +908,7 @@ class OffloadDecodeRuntime:
                 g, fb_lv, fb_sv = fb
                 h_res, k_str, v_str, nb = self.xfer.fetch_layer(
                     store, li, g.ls, g.s_strs, g.l_pad, g.s_pad,
-                    stage_ns="fb:")
+                    stage_ns="fb:", shards=self.shards)
                 cur_lp, cur_sp = g.l_pad, g.s_pad
                 cur_lv, cur_sv = fb_lv, fb_sv
                 self._fetch_fallbacks += 1
@@ -804,7 +919,7 @@ class OffloadDecodeRuntime:
                     w_fut = self.xfer.submit_weights(li + 1)
                 fut = self.xfer.submit_io(
                     "fetch", self.xfer.fetch_layer, store, li + 1, ls,
-                    s_strs, l_pad, s_pad)
+                    s_strs, l_pad, s_pad, shards=self.shards)
             try:
                 if comp.kernel_path and self.faults is not None:
                     self.faults.on_kernel_launch()
@@ -851,7 +966,9 @@ class OffloadDecodeRuntime:
             l_pad=l_pad, s_pad=s_pad,
             kernel_path=comp.kernel_path,
             retries=self.xfer.drain_retries(),
-            fetch_fallbacks=self._fetch_fallbacks - fb_count0)
+            fetch_fallbacks=self._fetch_fallbacks - fb_count0,
+            shards=self.shards,
+            shard_kv_bytes=self.xfer.drain_shard_bytes())
         return logits, stats
 
     # -------------------------------------------------------------- decode

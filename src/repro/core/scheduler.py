@@ -77,6 +77,13 @@ class PlanKey:
     # still streams full-width, and the solver must price each rung at
     # its own width
     disk_bytes_per_el: Optional[float] = None
+    # model-axis mesh size: every solve sees ONE shard's workload
+    # (kv_dim / shards via Workload.per_shard) over one shard's link
+    # share (bandwidths / shards via HardwareProfile.per_shard), so
+    # plans re-memoize per topology.  1 = the unsharded path, and both
+    # per_shard calls return their inputs unchanged there, so the
+    # default key solves bit-identically to a pre-mesh scheduler.
+    shards: int = 1
 
 
 @dataclasses.dataclass
@@ -151,8 +158,9 @@ class ExecutionPlan:
                 wl = Workload(batch=batch, seq_len=s, d_model=k.d_model,
                               kv_dim=k.kv_dim, dtype_bytes=k.dtype_bytes,
                               kv_bytes_per_el=k.kv_bytes_per_el)
-                hit = optimal_split(wl, k.hw, schedule=k.schedule,
-                                    align=k.align)
+                hit = optimal_split(wl.per_shard(k.shards),
+                                    k.hw.per_shard(k.shards),
+                                    schedule=k.schedule, align=k.align)
             with self._lock:
                 self._splits[ck] = hit
                 self.solves += 1
@@ -191,9 +199,11 @@ class ExecutionPlan:
             wl = Workload(batch=batch, seq_len=s, d_model=k.d_model,
                           kv_dim=k.kv_dim, dtype_bytes=k.dtype_bytes,
                           kv_bytes_per_el=k.kv_bytes_per_el)
+            hw_s = k.hw.per_shard(k.shards)
+            rung_s = hw_s.tier(rung.name) or rung
             hit = optimal_tier_split(
-                wl, k.hw, disk_tokens=db,
-                disk_read_bandwidth=rung.read_bandwidth,
+                wl.per_shard(k.shards), hw_s, disk_tokens=db,
+                disk_read_bandwidth=rung_s.read_bandwidth,
                 disk_bytes_per_el=k.disk_bytes_per_el, align=k.align)
             with self._lock:
                 self._tier_splits[ck] = hit
@@ -336,24 +346,29 @@ class Scheduler:
                  compress: Optional[str] = None,
                  dtype_bytes: int = 4, group: int = 32,
                  hw: Optional[HardwareProfile] = None,
-                 disk_bytes_per_el: Optional[float] = None
-                 ) -> ExecutionPlan:
+                 disk_bytes_per_el: Optional[float] = None,
+                 shards: int = 1) -> ExecutionPlan:
         """Plan for a model config (engines' entry point).  ``hw``
         overrides the scheduler's profile for this plan only — the
         tiered runtime passes its ladder-extended profile here, so
         tier_split plans key on (and price) the ladder while every
-        other plan keeps the base profile's cache entries."""
+        other plan keeps the base profile's cache entries.  ``shards``
+        is the model-axis mesh size: the plan prices one shard's
+        head-slice over one shard's link share and re-memoizes per
+        topology (shards is part of the PlanKey)."""
         key = PlanKey(hw=hw or self.hw, mode=mode, schedule=schedule,
                       align=align, batch=batch, d_model=cfg.d_model,
                       kv_dim=cfg.num_kv_heads * cfg.dh,
                       dtype_bytes=dtype_bytes, compress=compress,
                       kv_bytes_per_el=self._kv_el_bytes(
                           compress, dtype_bytes, group),
-                      disk_bytes_per_el=disk_bytes_per_el)
+                      disk_bytes_per_el=disk_bytes_per_el,
+                      shards=int(shards))
         return self._get(key)
 
     def restore_split(self, cfg, p: int, mode: str = "kvpr",
-                      align: int = 1, dtype_bytes: int = 4):
+                      align: int = 1, dtype_bytes: int = 4,
+                      shards: int = 1):
         """Admission-time restore split for a cached p-token prompt
         prefix (shared-prefix KV cache): how many of the matched tokens
         the device recomputes from cached activations ([0, l)) versus
@@ -369,13 +384,14 @@ class Scheduler:
         ``mode="flexgen"`` degrades to stream-everything (l = 0).
         """
         plan = self.plan_for(cfg, batch=1, mode=mode, schedule="column",
-                             align=align, dtype_bytes=dtype_bytes)
+                             align=align, dtype_bytes=dtype_bytes,
+                             shards=shards)
         return plan.split_for(int(p))
 
     def chunk_split(self, cfg, n: int, batch: int = 1, align: int = 16,
                     dtype_bytes: int = 4,
                     compress: Optional[str] = None,
-                    group: int = 32) -> ChunkDecision:
+                    group: int = 32, shards: int = 1) -> ChunkDecision:
         """The third plan kind (after ``plan_for``'s decode split and
         ``restore_split``): the prefill chunk width for an ``n``-token
         prompt whose finished chunks stream to the host while the next
@@ -385,9 +401,10 @@ class Scheduler:
         overhead, and is memoized per (dims, n, batch) so repeated
         admissions of same-length prompts share one solve."""
         mlp_mults = 3 if getattr(cfg, "gated_mlp", True) else 2
+        shards = int(shards)
         key = (self.hw, int(n), int(batch), cfg.d_model,
                cfg.num_kv_heads * cfg.dh, cfg.num_layers, cfg.d_ff,
-               align, dtype_bytes, compress, mlp_mults)
+               align, dtype_bytes, compress, mlp_mults, shards)
         with self._lock:
             hit = self._chunks.get(key)
         if hit is not None:
@@ -397,8 +414,15 @@ class Scheduler:
                       dtype_bytes=dtype_bytes,
                       kv_bytes_per_el=self._kv_el_bytes(
                           compress, dtype_bytes, group))
-        dec = optimal_chunk(int(n), wl, self.hw, cfg.num_layers,
-                            cfg.d_ff, align=align, mlp_mults=mlp_mults)
+        # per-shard chunk economics: the shard prefills its KV
+        # head-slice (wl.per_shard) and writes it back over its link
+        # share (hw.per_shard); the MLP width divides across the model
+        # axis too.  The residual-width GEMM terms stay whole — a
+        # conservative compute estimate that is exact at shards = 1.
+        dec = optimal_chunk(int(n), wl.per_shard(shards),
+                            self.hw.per_shard(shards), cfg.num_layers,
+                            max(1, cfg.d_ff // shards), align=align,
+                            mlp_mults=mlp_mults)
         with self._lock:
             self._chunks[key] = dec
             while len(self._chunks) > self._MAX_PLANS:
@@ -407,12 +431,14 @@ class Scheduler:
 
     def plan_for_workload(self, wl: Workload, mode: str = "kvpr",
                           schedule: str = "row", align: int = 1,
-                          compress: Optional[str] = None) -> ExecutionPlan:
+                          compress: Optional[str] = None,
+                          shards: int = 1) -> ExecutionPlan:
         """Plan from a raw Workload (analytic pipeline entry point)."""
         key = PlanKey(hw=self.hw, mode=mode, schedule=schedule, align=align,
                       batch=wl.batch, d_model=wl.d_model, kv_dim=wl.kv_dim,
                       dtype_bytes=wl.dtype_bytes, compress=compress,
-                      kv_bytes_per_el=wl.kv_bytes_per_el)
+                      kv_bytes_per_el=wl.kv_bytes_per_el,
+                      shards=int(shards))
         return self._get(key)
 
     def _get(self, key: PlanKey) -> ExecutionPlan:

@@ -110,6 +110,29 @@ def optimal_split(wl: Workload, hw: HardwareProfile,
                          schedule=schedule, bound=bound)
 
 
+def optimal_shard_split(wl: Workload, hw: HardwareProfile, shards: int,
+                        schedule: str = "column",
+                        bound: Optional[int] = None,
+                        align: int = 1) -> SplitDecision:
+    """Eq. 11 solved from ONE shard's point of view on a ``shards``-way
+    tensor-parallel mesh: the shard recomputes its own KV head-slice
+    (FLOPs and streamed KV bytes divide by ``shards`` via
+    ``Workload.per_shard``) but shares the host link with every other
+    shard's concurrent stream (bandwidth divides via
+    ``HardwareProfile.per_shard``) and still needs the FULL activation
+    window.  Net effect on the arms: the streamed-KV time is UNCHANGED
+    (1/shards the bytes over 1/shards the bandwidth) while the
+    recompute time divides by ``shards``, so the crossing — and with
+    it the optimal l — moves toward MORE recomputation as the mesh
+    grows; meanwhile the (replicated) activation upload crosses the
+    shard's narrowed link, which is what pushes column-schedule
+    sharded splits toward l = 0 instead.  At ``shards = 1`` both
+    ``per_shard`` calls return their inputs unchanged, so this IS
+    ``optimal_split``, bit for bit."""
+    return optimal_split(wl.per_shard(shards), hw.per_shard(shards),
+                         schedule=schedule, bound=bound, align=align)
+
+
 # -------------------------------------------------------- chunked prefill
 # The third plan kind (after the decode split and the admission-time
 # restore split): pick the prefill chunk width c so chunk i's device

@@ -85,9 +85,38 @@ def _seg_len(seg) -> int:
     return seg[1].shape[1]
 
 
+def _seg_kv_heads(seg) -> int:
+    """KV-head count of a tagged segment."""
+    tag = seg[0]
+    if tag == "int4":
+        return seg[1][0].shape[2]
+    if tag == "fp":
+        return seg[1].shape[2]
+    return seg[2].shape[1]          # recompute: wk (h, KV, dh)
+
+
+def _slice_seg_heads(seg, sl: slice):
+    """One shard's KV-head slice of a tagged segment.  Every KV-bearing
+    array carries the head axis at position 2 ((b, S, KV, ...) data) or
+    1 (recompute's (h, KV, dh) projections); activations and the valid
+    vector are head-agnostic and pass through whole."""
+    tag = seg[0]
+    if tag == "fp":
+        return ("fp", seg[1][:, :, sl], seg[2][:, :, sl], seg[3])
+    if tag == "int4":
+        return (("int4", tuple(a[:, :, sl] for a in seg[1]),
+                 tuple(a[:, :, sl] for a in seg[2]))
+                + tuple(seg[3:]))
+    if tag == "recompute":
+        return (("recompute", seg[1], seg[2][:, sl], seg[3][:, sl])
+                + tuple(seg[4:]))
+    raise ValueError(f"unknown segment tag {tag!r}")
+
+
 def segmented_decode_attention(q: Array, segments: List[tuple], *,
                                mode: str = "interpret",
-                               chunk: int = 512) -> Array:
+                               chunk: int = 512,
+                               head_shards: int = 1) -> Array:
     """KVPR merged attention over tagged segments via per-segment
     flash-decode + exact combine.
 
@@ -99,11 +128,36 @@ def segmented_decode_attention(q: Array, segments: List[tuple], *,
     where ``valid`` is None (all S rows), a scalar, or a (b,) vector.
     int4 segments take a trailing ``group`` element after ``valid``.
     Zero-length segments are dropped before launching any kernel.
+
+    ``head_shards > 1`` is the mesh decode path: KV heads partition
+    into that many contiguous slices and every segment kernel launches
+    once per slice over its q-head group (each shard's VMEM working set
+    and MXU occupancy match a 1/k-width device).  Flash decode reduces
+    strictly within a KV head — no cross-head arithmetic anywhere in
+    the per-segment kernels or the combine — so concatenating the
+    per-shard outputs on the head axis is bit-identical to the single
+    full-width launch.
     """
     if mode == "off":
         raise ValueError("segmented_decode_attention requires a kernel "
                          "mode; use core.recompute.merged_decode_"
                          "attention for the jnp path")
+    if head_shards > 1:
+        kv = max((_seg_kv_heads(s) for s in segments
+                  if _seg_len(s) > 0), default=0)
+        if kv % head_shards:
+            raise ValueError(f"{head_shards} head shards do not divide "
+                             f"{kv} KV heads")
+        per = kv // head_shards
+        gq = q.shape[2] // kv           # query heads per KV head
+        outs = [segmented_decode_attention(
+                    q[:, :, si * per * gq:(si + 1) * per * gq],
+                    [_slice_seg_heads(s, slice(si * per,
+                                               (si + 1) * per))
+                     for s in segments],
+                    mode=mode, chunk=chunk)
+                for si in range(head_shards)]
+        return jnp.concatenate(outs, axis=2)
     interpret = mode != "pallas"
     b, _, H, dh = q.shape
     segments = [s for s in segments if _seg_len(s) > 0]

@@ -1,8 +1,104 @@
 """Production meshes. A function, not a module constant, so importing
-this module never touches jax device state."""
+this module never touches jax device state.
+
+``MeshConfig`` is the serving-facing half: a frozen (data, model)
+topology declaration that ``EngineConfig(mesh=...)`` carries through
+scheduler → runtime → store (docs/scaling.md).  The *model* axis is
+what the KVPR pipeline shards over — each model-axis shard owns a KV
+head-slice and a 1/model share of the host link — while the *data*
+axis replicates whole engines (the router tier's concern).  It stays a
+pure description until ``build()`` is called, so configs can be
+constructed, validated, and hashed without touching jax device state.
+"""
 from __future__ import annotations
 
+import dataclasses
+from typing import Optional, Union
+
 import jax
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshConfig:
+    """Declarative (data, model) mesh for the serving engine.
+
+    ``model`` is the tensor-parallel degree: KV heads, per-shard
+    transfer streams, and the scheduler's per-shard split all partition
+    across it.  ``model = 1`` (the default) is the unsharded path and
+    is required to behave bit-identically to a mesh-free engine.
+    ``data`` is carried for sequence-parallel prefill and replica
+    placement; the single-process engine requires shards to fit the
+    KV-head count but does not require physical devices for the data
+    axis (the data-plane shards are streams, not devices — see
+    docs/scaling.md for what does need an emulated device mesh).
+    """
+    model: int = 1
+    data: int = 1
+
+    def validate(self) -> "MeshConfig":
+        if self.model < 1:
+            raise ValueError(f"mesh model axis must be >= 1, got "
+                             f"{self.model}")
+        if self.data < 1:
+            raise ValueError(f"mesh data axis must be >= 1, got "
+                             f"{self.data}")
+        return self
+
+    @property
+    def size(self) -> int:
+        return self.model * self.data
+
+    def build(self):
+        """Materialize a ``jax.Mesh`` with (data, model) axes.  Needs
+        ``jax.device_count() >= size`` — on CPU that means the
+        ``--xla_force_host_platform_device_count`` flag was set before
+        jax initialized (tests/conftest.py's ``xla_device_count``
+        helper composes it)."""
+        n = jax.device_count()
+        if n < self.size:
+            raise ValueError(
+                f"mesh ({self.data} data x {self.model} model) needs "
+                f"{self.size} devices, have {n}")
+        return jax.make_mesh((self.data, self.model), ("data", "model"))
+
+
+def resolve_mesh(mesh: Union[None, str, MeshConfig]) -> MeshConfig:
+    """Normalize ``EngineConfig.mesh``: None -> 1x1, "auto" -> every
+    visible device on the model axis (the decode-dominant choice per
+    ``launch/autoshard.py`` finding 2), or a MeshConfig passed through
+    validated."""
+    if mesh is None:
+        return MeshConfig()
+    if isinstance(mesh, str):
+        if mesh != "auto":
+            raise ValueError(f"mesh must be None, 'auto' or a "
+                             f"MeshConfig, got {mesh!r}")
+        return MeshConfig(model=max(1, jax.device_count()), data=1)
+    if not isinstance(mesh, MeshConfig):
+        raise ValueError(f"mesh must be None, 'auto' or a MeshConfig, "
+                         f"got {type(mesh).__name__}")
+    return mesh.validate()
+
+
+def place_tp_decode_params(cfg, params, mesh):
+    """Finding-2 decode placement (``launch/autoshard.py``): params
+    stay tensor-parallel over the "model" axis with FSDP off, so no
+    weight regather happens per token step.  ``mesh`` is a built
+    ``jax.Mesh`` (``MeshConfig.build()``); the strategy flip is scoped
+    — the process-global sharding strategy is restored on exit.
+    Returns the params tree device_put onto its TP shardings."""
+    from repro.launch import shardings as SH
+    prev = SH.get_strategy()
+    SH.set_strategy(
+        tp="model", fsdp=(),
+        dp=tuple(a for a in ("pod", "data") if a in mesh.axis_names))
+    try:
+        shapes = jax.tree_util.tree_map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params)
+        shardings = SH.param_shardings(cfg, shapes, mesh)
+        return jax.tree_util.tree_map(jax.device_put, params, shardings)
+    finally:
+        SH.set_strategy(**prev)
 
 
 def make_production_mesh(*, multi_pod: bool = False):

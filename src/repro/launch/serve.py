@@ -33,7 +33,8 @@ from repro.core.profiler import profile_system
 from repro.core.scheduler import Scheduler
 from repro.models.transformer import Model
 from repro.serving import (EngineConfig, KVTiersConfig, LLMEngine,
-                           PrefixCacheConfig, Request, SamplingParams)
+                           MeshConfig, PrefixCacheConfig, Request,
+                           SamplingParams)
 
 
 def run_smoke() -> None:
@@ -217,6 +218,14 @@ def main(argv=None):
                     choices=["tier_split", "demand"],
                     help="tiered KV store: hierarchy-aware split "
                          "(tier_split) vs naive demand paging")
+    ap.add_argument("--mesh-model", type=int, default=1,
+                    help="model-axis mesh size k: per-shard KV "
+                         "head-slices stream over 1/k of the link and "
+                         "plans solve per shard (1 = unsharded; see "
+                         "docs/scaling.md)")
+    ap.add_argument("--mesh-data", type=int, default=1,
+                    help="data-axis mesh size (replica placement / "
+                         "sequence-parallel prefill)")
     ap.add_argument("--profile", action="store_true",
                     help="measure the link/GEMM profile instead of preset")
     ap.add_argument("--seed", type=int, default=0)
@@ -256,12 +265,15 @@ def main(argv=None):
             compress_on_demote=args.kv_compress_on_demote,
             disk_read_bytes_per_s=args.kv_disk_read_bw,
             policy=args.kv_tier_policy)
+    mesh = None
+    if args.mesh_model != 1 or args.mesh_data != 1:
+        mesh = MeshConfig(model=args.mesh_model, data=args.mesh_data)
     base = dict(slots=args.slots, max_len=args.prompt + args.gen + 8,
                 kvpr=not args.no_kvpr, compress=args.compress,
                 kernels=args.kernels,
                 seed=args.seed, prefill_chunk=chunk,
                 max_step_tokens=args.max_step_tokens,
-                kv_tiers=kv_tiers,
+                kv_tiers=kv_tiers, mesh=mesh,
                 prefix_cache=(PrefixCacheConfig(
                     capacity_tokens=args.prefix_capacity)
                     if args.prefix_cache else None))

@@ -75,6 +75,114 @@ def seq_sharded_decode_attend(q: Array, k_cache: Array, v_cache: Array,
                      check_rep=False)(q, k_cache, v_cache, pos)
 
 
+def _partial_attend_chunk(qg, kc, vc, valid):
+    """qg: (b,w,KV,g,dh); kc/vc: (b,S_loc,KV,dh); valid: (w,S_loc) bool.
+    Returns partial (num (b,KV,g,w,dh), den (b,KV,g,w,1), m (...,1))."""
+    dh = qg.shape[-1]
+    scores = jnp.einsum("bwkgd,bskd->bkgws", qg.astype(jnp.float32),
+                        kc.astype(jnp.float32)) / jnp.sqrt(dh)
+    scores = jnp.where(valid[None, None, None, :, :], scores, NEG_INF)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - m)
+    den = jnp.sum(e, axis=-1, keepdims=True)
+    num = jnp.einsum("bkgws,bskd->bkgwd", e, vc.astype(jnp.float32))
+    return num, den, m
+
+
+def seq_sharded_prefill_chunk_attend(q: Array, k_cache: Array,
+                                     v_cache: Array, k_new: Array,
+                                     v_new: Array, p0: int,
+                                     axis: str = "data") -> Array:
+    """Exact chunked-prefill attention over a seq-sharded cache: the
+    (b,w) query chunk attends over cache tokens [0, p0) — each shard's
+    contiguous slice contributes a partial flash reduction — plus the
+    chunk's own causal block (replicated, folded in AFTER the psum so
+    it is counted exactly once).  Same two-psum combine as
+    ``seq_sharded_decode_attend``; ``p0`` is static (one trace per
+    (p0, w) pair, like Model.prefill_chunk).  q: (b,w,H,dh);
+    k/v_cache: (b,S,KV,dh) [S sharded]; k/v_new: (b,w,KV,dh) the
+    chunk's exact keys/values.  Returns (b,w,H,dh), replicated."""
+    mesh = get_mesh()
+    b, w, H, dh = q.shape
+    KV = k_cache.shape[2]
+    g = H // KV
+
+    def local(q, kc, vc, kn, vn):
+        idx = jax.lax.axis_index(axis)
+        S_loc = kc.shape[1]
+        slot = idx * S_loc + jnp.arange(S_loc)
+        qg = q.reshape(b, w, KV, g, dh)
+        # sharded prefix [0, p0): every chunk row sees the same keys
+        pre_valid = jnp.broadcast_to(slot[None, :] < p0, (w, S_loc))
+        num1, den1, m1 = _partial_attend_chunk(qg, kc, vc, pre_valid)
+        m_star = jax.lax.pmax(m1, axis)
+        scale = jnp.exp(m1 - m_star)
+        num1 = jax.lax.psum(num1 * scale, axis)
+        den1 = jax.lax.psum(den1 * scale, axis)
+        # the chunk's own causal block, exact (un-downcast) K/V
+        causal = (jnp.arange(w)[:, None] >= jnp.arange(w)[None, :])
+        num2, den2, m2 = _partial_attend_chunk(qg, kn, vn, causal)
+        m_all = jnp.maximum(m_star, m2)
+        s1, s2 = jnp.exp(m_star - m_all), jnp.exp(m2 - m_all)
+        out = (num1 * s1 + num2 * s2) / jnp.maximum(
+            den1 * s1 + den2 * s2, 1e-30)
+        # (b,KV,g,w,dh) -> (b,w,KV*g,dh)
+        out = jnp.moveaxis(out, 3, 1).reshape(b, w, H, dh)
+        return out.astype(q.dtype)
+
+    spec_kv = P(None, axis, None, None)
+    return shard_map(local, mesh=mesh,
+                     in_specs=(P(), spec_kv, spec_kv, P(), P()),
+                     out_specs=P(),
+                     check_rep=False)(q, k_cache, v_cache, k_new, v_new)
+
+
+def seq_sharded_update_kv_chunk(k_cache: Array, v_cache: Array,
+                                k_new: Array, v_new: Array, p0: int,
+                                axis: str = "data"
+                                ) -> Tuple[Array, Array]:
+    """Write a (b,w,KV,dh) chunk at global positions [p0, p0 + w) into
+    seq-sharded caches.  Each shard read-modify-writes one w-wide
+    window of its own slice; rows of the window whose global position
+    falls outside the chunk keep their current values, so a chunk
+    straddling a shard boundary lands exactly once with no cross-shard
+    traffic.  Requires w <= S/num_shards (the engine's chunk widths
+    are far below per-shard slices in any realistic topology)."""
+    mesh = get_mesh()
+    w = k_new.shape[1]
+
+    def local(kc, vc, kn, vn):
+        idx = jax.lax.axis_index(axis)
+        S_loc = kc.shape[1]
+        if w > S_loc:
+            raise ValueError(
+                f"chunk width {w} exceeds the {S_loc}-token per-shard "
+                f"cache slice; lower prefill_chunk or the shard count")
+        lp = jnp.clip(p0 - idx * S_loc, 0, S_loc - w)
+        gpos = idx * S_loc + lp + jnp.arange(w)   # window's global rows
+        j = gpos - p0                             # chunk row per window row
+        ok = (j >= 0) & (j < w)
+        jc = jnp.clip(j, 0, w - 1)
+        cur_k = jax.lax.dynamic_slice(
+            kc, (0, lp, 0, 0), (kc.shape[0], w) + kc.shape[2:])
+        cur_v = jax.lax.dynamic_slice(
+            vc, (0, lp, 0, 0), (vc.shape[0], w) + vc.shape[2:])
+        sel = ok[None, :, None, None]
+        kw = jnp.where(sel, jnp.take(kn, jc, axis=1).astype(kc.dtype),
+                       cur_k)
+        vw = jnp.where(sel, jnp.take(vn, jc, axis=1).astype(vc.dtype),
+                       cur_v)
+        kc = jax.lax.dynamic_update_slice(kc, kw, (0, lp, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, vw, (0, lp, 0, 0))
+        return kc, vc
+
+    spec_kv = P(None, axis, None, None)
+    return shard_map(local, mesh=mesh,
+                     in_specs=(spec_kv, spec_kv, P(), P()),
+                     out_specs=(spec_kv, spec_kv),
+                     check_rep=False)(k_cache, v_cache, k_new, v_new)
+
+
 def seq_sharded_update_kv(k_cache: Array, v_cache: Array, k_new: Array,
                           v_new: Array, pos: Array, axis: str = "data"
                           ) -> Tuple[Array, Array]:

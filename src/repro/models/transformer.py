@@ -552,7 +552,14 @@ class Model:
                 "chunked prefill is only supported for dense-family "
                 f"archs without local/global layers (arch_type={at!r})")
         b, c = tokens.shape
+        use_sm = self.seq_shard and self.seq_shard_impl == "shard_map"
         pad = cache.get("pad")
+        if use_sm and pad is not None:
+            # same envelope as decode: the shard_map attend has no
+            # kv_start masking — refuse rather than attend over pads
+            raise NotImplementedError(
+                "ragged pad is not supported with "
+                "seq_shard_impl='shard_map'")
         cols = jnp.arange(c) + p0
         if pad is not None:
             positions = jnp.maximum(cols[None, :] - pad[:, None], 0)
@@ -565,24 +572,35 @@ class Model:
             lp, kc, vc = inp
             h = L.apply_norm(x, lp["ln1"], cfg.rms_eps)
             q, k, v = L.qkv_proj(h, lp["attn"], cfg, positions)
-            # context = already-cached prefix + this chunk's own keys
-            # (exact values, not the possibly-downcast cache copies)
-            k_ctx = jnp.concatenate([kc[:, :p0].astype(k.dtype), k],
-                                    axis=1)
-            v_ctx = jnp.concatenate([vc[:, :p0].astype(v.dtype), v],
-                                    axis=1)
-            out = L.chunked_causal_attend(q, k_ctx, v_ctx,
-                                          q_block=self.q_block,
-                                          q_offset=p0,
-                                          unroll=not self.scan_layers,
-                                          kv_start=kv_start)
+            if use_sm:
+                # sequence-parallel chunked prefill: the cache prefix
+                # stays sharded — each shard reduces over its slice and
+                # the chunk's own causal block folds in after the psum
+                # (models/seq_parallel.py), so no per-chunk regather
+                from repro.models import seq_parallel as SPAR
+                out = SPAR.seq_sharded_prefill_chunk_attend(
+                    q, kc, vc, k, v, p0)
+                kc, vc = SPAR.seq_sharded_update_kv_chunk(
+                    kc, vc, k, v, p0)
+            else:
+                # context = already-cached prefix + this chunk's own
+                # keys (exact values, not possibly-downcast cache
+                # copies)
+                k_ctx = jnp.concatenate([kc[:, :p0].astype(k.dtype), k],
+                                        axis=1)
+                v_ctx = jnp.concatenate([vc[:, :p0].astype(v.dtype), v],
+                                        axis=1)
+                out = L.chunked_causal_attend(
+                    q, k_ctx, v_ctx, q_block=self.q_block, q_offset=p0,
+                    unroll=not self.scan_layers, kv_start=kv_start)
             out = out.reshape(b, c, cfg.num_heads * cfg.dh)
             x = x + jnp.einsum("bsD,Dh->bsh", out, lp["attn"]["wo"])
             x, _ = self._mlp_sublayer(x, lp)
-            kc = jax.lax.dynamic_update_slice(
-                kc, k.astype(kc.dtype), (0, p0, 0, 0))
-            vc = jax.lax.dynamic_update_slice(
-                vc, v.astype(vc.dtype), (0, p0, 0, 0))
+            if not use_sm:
+                kc = jax.lax.dynamic_update_slice(
+                    kc, k.astype(kc.dtype), (0, p0, 0, 0))
+                vc = jax.lax.dynamic_update_slice(
+                    vc, v.astype(vc.dtype), (0, p0, 0, 0))
             return x, (kc, vc)
 
         x, (kn, vn) = self._scan(

@@ -14,6 +14,7 @@ from repro.core.faults import (DiskFullError, DiskReadError, FaultPolicy,
 from repro.core.kvstore import (KVTiersConfig, StoreCapacityError,
                                 TieredStoreStats)
 from repro.core.prefix_cache import PrefixCacheConfig, PrefixCacheStats
+from repro.launch.mesh import MeshConfig
 from repro.serving.api import (EngineConfig, LLMEngine, Request,
                                RequestOutput, SamplingParams,
                                TokenEvent, pad_batch)
@@ -26,7 +27,7 @@ from repro.serving.router import (RouterConfig, RouterEngine,
 __all__ = [
     "ContinuousBatchingEngine", "DiskFullError", "DiskReadError",
     "EngineConfig", "FaultPolicy", "Generation", "KVTiersConfig",
-    "KernelLaunchError", "LLMEngine", "PrefixCacheConfig",
+    "KernelLaunchError", "LLMEngine", "MeshConfig", "PrefixCacheConfig",
     "PrefixCacheStats", "Request", "RequestFaultError", "RequestOutput",
     "RouterConfig", "RouterEngine", "RouterQueueFull", "RouterStats",
     "SLOClass", "SamplingParams", "ServingEngine", "StoreCapacityError",

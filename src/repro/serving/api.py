@@ -67,6 +67,7 @@ from repro.core.runtime import (ChunkedPrefill, HostKVStore,
                                 prefill_with_activations,
                                 restore_prefix_kv)
 from repro.core.scheduler import Scheduler
+from repro.launch.mesh import MeshConfig, resolve_mesh
 from repro.models.cache import broadcast_slots, splice_slot
 from repro.models.transformer import Model
 from repro.serving import sampler as samplers
@@ -189,6 +190,18 @@ class EngineConfig:
     # Offload backend only — a no-op on the resident backend (like
     # `kernels`), which is what pins the identity-matrix reference.
     kv_tiers: Optional[KVTiersConfig] = None
+    # ---- mesh sharding (docs/scaling.md) ----------------------------
+    # (data, model) topology.  A model-axis size k shards the offload
+    # data plane k ways: every KV fetch streams k disjoint head-slices
+    # concurrently over 1/k of the link each, and the scheduler solves
+    # all four plan kinds from ONE shard's point of view
+    # (PlanKey.shards).  Accepts a MeshConfig, "auto" (every visible
+    # device on the model axis), or None; None and a 1x1 mesh are the
+    # unsharded path and behave bit-identically to a mesh-free engine.
+    # Offload backend only — a no-op on the resident backend (like
+    # `kernels` and `kv_tiers`), which is what pins the identity-matrix
+    # reference.
+    mesh: Union[None, str, MeshConfig] = None
 
     def validate(self) -> "EngineConfig":
         if self.backend not in ("resident", "offload"):
@@ -246,7 +259,19 @@ class EngineConfig:
                              f"{self.io_backoff_s}")
         if self.kv_tiers is not None:
             self.kv_tiers.validate()
+        if self.mesh is not None:
+            resolve_mesh(self.mesh)
         return self
+
+    @property
+    def shards(self) -> int:
+        """Model-axis mesh size the offload data plane shards over.
+        Always 1 on the resident backend — it never streams KV, so
+        there is nothing to shard and the identity reference stays
+        pinned."""
+        if self.backend != "offload":
+            return 1
+        return resolve_mesh(self.mesh).model
 
     @property
     def mode(self) -> str:
@@ -540,7 +565,8 @@ class LLMEngine:
                 kernels=self.config.kernels, faults=self.faults,
                 io_retries=self.config.io_retries,
                 io_backoff_s=self.config.io_backoff_s,
-                fence_timeout_s=self.config.fence_timeout_s)
+                fence_timeout_s=self.config.fence_timeout_s,
+                shards=self.config.shards)
         elif self.config.batching == "continuous":
             # vmap over the slot axis: params broadcast, cache + token
             # mapped
@@ -838,7 +864,8 @@ class LLMEngine:
         if pc == "auto":
             return max(1, self.scheduler.chunk_split(
                 self.cfg, n, batch=batch,
-                compress=self.config.compress).chunk)
+                compress=self.config.compress,
+                shards=self.config.shards).chunk)
         return int(pc)
 
     def _chunked_resident_prefill(self, prompts: np.ndarray, lens,
@@ -898,7 +925,8 @@ class LLMEngine:
                 split = self.scheduler.restore_split(
                     self.cfg, p,
                     mode="kvpr" if self.config.kvpr else "flexgen",
-                    align=self.config.align)
+                    align=self.config.align,
+                    shards=self.config.shards)
                 k_pre, v_pre, restore = restore_prefix_kv(
                     self.cfg, self.params, entry.ks, entry.vs,
                     entry.hs, p, split.l, self._restore_xfer, uid=uid)

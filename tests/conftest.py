@@ -67,6 +67,56 @@ def pytest_runtest_call(item):
         signal.signal(signal.SIGALRM, old)
 
 
+# Executables of long-dead engines stay pinned by jax's process-global
+# jit caches, and every one holds mmap'd code/data regions: a single
+# process running the whole suite drifts toward vm.max_map_count
+# (65530 by default), after which XLA segfaults when an mmap fails
+# mid-compile.  Shed the caches whenever map pressure gets high — the
+# occasional recompile is far cheaper than a segfault at test ~320.
+_MAP_PRESSURE_LIMIT = 20_000
+
+
+def _map_count() -> int:
+    try:
+        with open("/proc/self/maps") as f:
+            return sum(1 for _ in f)
+    except OSError:                     # non-Linux: no pressure signal
+        return 0
+
+
+def pytest_runtest_teardown(item, nextitem):
+    if _map_count() > _MAP_PRESSURE_LIMIT:
+        import gc
+
+        jax.clear_caches()
+        gc.collect()
+
+
+def xla_device_count(n: int, env=None) -> dict:
+    """Subprocess environment emulating ``n`` CPU devices.
+
+    COMPOSES ``--xla_force_host_platform_device_count=n`` with whatever
+    ``XLA_FLAGS`` the caller or CI already exported instead of
+    clobbering them (a pre-existing device-count flag is replaced, all
+    other flags survive).  Also points PYTHONPATH at src so
+    ``python -c`` subprocesses import the package from the repo root.
+    The flag must be set before jax initializes — this test process is
+    pinned to 1 CPU device, which is why every multi-device test runs
+    its mesh half in a subprocess with this env.
+    """
+    out = dict(os.environ if env is None else env)
+    flags = [f for f in out.get("XLA_FLAGS", "").split()
+             if not f.startswith(
+                 "--xla_force_host_platform_device_count")]
+    flags.append(f"--xla_force_host_platform_device_count={int(n)}")
+    out["XLA_FLAGS"] = " ".join(flags)
+    out["JAX_PLATFORMS"] = "cpu"
+    pp = out.get("PYTHONPATH", "")
+    if "src" not in pp.split(os.pathsep):
+        out["PYTHONPATH"] = "src" + (os.pathsep + pp if pp else "")
+    return out
+
+
 def pytest_configure(config):
     config.addinivalue_line(
         "markers",

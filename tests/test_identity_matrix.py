@@ -19,6 +19,14 @@ reference across all 4 backend x batching combos x scenario:
               (cold blocks demoted to the mmap disk tier, decoded via
               the tier_split plan) vs the all-DRAM reference; like
               kernels, kv_tiers is a no-op on the resident backend
+  sharded     mesh-sharded decode (test_identity_matrix_sharded): 1x1
+              vs 2-way vs 4-way model-axis meshes against the
+              per-request single-device reference on all four combos,
+              plus prefix-cache-warm and tiered-store variants.  The
+              mesh knob shards the offload DATA PLANE (per-shard KV
+              head-slice streams + per-shard plan solves) and is a
+              no-op on the resident backend, which pins the reference.
+              Runs on a 4-KV-head config so every mesh divides.
 
 The per-request reference for EVERY scenario is a fresh batch-1
 resident/static engine run with the same engine seed and request uid —
@@ -30,6 +38,8 @@ test_api.py (test_generate_matches_greedy_reference) and overlapping
 end-to-end assertions in test_ragged.py; those modules keep their
 unit-level coverage.
 """
+import dataclasses
+
 import jax
 import numpy as np
 import pytest
@@ -39,7 +49,8 @@ from repro.core.cost_model import A100_PCIE4
 from repro.core.scheduler import Scheduler
 from repro.models.transformer import Model
 from repro.serving import (EngineConfig, KVTiersConfig, LLMEngine,
-                           PrefixCacheConfig, Request, SamplingParams)
+                           MeshConfig, PrefixCacheConfig, Request,
+                           SamplingParams)
 
 COMBOS = [("resident", "static"), ("offload", "static"),
           ("resident", "continuous"), ("offload", "continuous")]
@@ -172,6 +183,86 @@ def test_identity_matrix(setup, sched, backend, batching, scenario):
             # the warm round genuinely restored instead of prefilled
             assert sum(o.cached_prefix for o in outs) > 0
             assert eng.prefix_stats.hits > 0
+
+
+# ------------------------------------------------- sharded scenario
+
+# model-axis mesh sizes the sharded scenario sweeps; 1 is the explicit
+# 1x1 mesh (must degenerate bit-exactly, not just token-exactly — the
+# scheduler props suite covers the plan side of that claim)
+SHARD_MESHES = [1, 2, 4]
+SHARD_VARIANTS = ["plain",
+                  pytest.param("prefix", marks=pytest.mark.slow),
+                  pytest.param("tiered", marks=pytest.mark.slow)]
+
+
+@pytest.fixture(scope="module")
+def setup4():
+    """4-KV-head variant of the smoke config (g = 2 GQA) so the 2- and
+    4-way model axes both divide the head count."""
+    cfg = dataclasses.replace(get_smoke_config("tinyllama-1.1b"),
+                              num_kv_heads=4)
+    model = Model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+_REFS4 = {}
+
+
+def _reference4(setup4, sched, reqs, sps):
+    """Single-device per-request ground truth for the 4-KV-head model
+    (resident/static, batch 1, no mesh), memoized like _REFS."""
+    cfg, model, params = setup4
+    outs = []
+    for r, sp in zip(reqs, sps):
+        key = (r.uid, r.prompt.tobytes(), sp)
+        if key not in _REFS4:
+            with LLMEngine.from_config(model, params, EngineConfig(),
+                                       scheduler=sched) as eng:
+                o = eng.generate([r], sp)[0]
+            _REFS4[key] = (list(o.tokens), o.finish_reason)
+        outs.append(_REFS4[key])
+    return outs
+
+
+@pytest.mark.parametrize("backend,batching", COMBOS)
+@pytest.mark.parametrize("variant", SHARD_VARIANTS)
+def test_identity_matrix_sharded(setup4, sched, backend, batching,
+                                 variant):
+    """Every model-axis mesh size is token-identical to the
+    per-request single-device reference: the mesh shards only the data
+    plane (per-shard head-slice copy streams merge byte-identically
+    into the same staging buffers) and re-keys the plans, so tokens
+    cannot move.  The prefix variant's warm round restores through the
+    per-shard restore split; the tiered variant decodes disk-resident
+    sessions through the per-shard tier_split plan."""
+    cfg, model, params = setup4
+    reqs = _reqs(cfg)
+    sps = [SamplingParams(max_tokens=g) for g in (5, 4, 6)]
+    refs = _reference4(setup4, sched, reqs, sps)
+    kw, rounds = {}, 1
+    if variant == "prefix":
+        kw, rounds = dict(prefix_cache=PrefixCacheConfig()), 2
+    elif variant == "tiered":
+        kw, rounds = dict(kv_tiers=KVTiersConfig(
+            host_capacity_tokens=24, block_tokens=8)), 2
+    for k in SHARD_MESHES:
+        with LLMEngine.from_config(
+                model, params,
+                EngineConfig(backend=backend, batching=batching,
+                             slots=2, max_len=64,
+                             mesh=MeshConfig(model=k), **kw),
+                scheduler=sched) as eng:
+            for rnd in range(rounds):
+                outs = eng.generate(reqs, sps)
+                for r, o, (ref_toks, ref_fin) in zip(reqs, outs, refs):
+                    assert list(o.tokens) == ref_toks, \
+                        (variant, backend, batching, k, rnd, r.uid)
+                    assert o.finish_reason == ref_fin, \
+                        (variant, backend, batching, k, rnd, r.uid)
+            if variant == "prefix":
+                assert eng.prefix_stats.hits > 0, (backend, batching, k)
 
 
 # router tier: resident/static in the fast lane, the rest ride the

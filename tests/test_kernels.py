@@ -212,6 +212,43 @@ def test_mixed_precision_three_segment_sweep():
                                rtol=3e-4, atol=3e-4)
 
 
+def test_head_sharded_dispatch_bit_identical():
+    """Mesh decode (docs/scaling.md): ``head_shards=k`` slices the
+    KV-head axis per segment kind (recompute wk/wv, int4 triple, fp)
+    and concatenates the per-slice launches — flash decode never
+    crosses KV heads, so the result must be BIT-identical to the
+    full-width launch, over the exact three-segment KVPR mix."""
+    b, KV, g, dh, h = 2, 4, 2, 32, 64
+    H = KV * g
+    Lp, S = 16, 64
+    theta = 10000.0
+    key = jax.random.PRNGKey(23)
+    ks = jax.random.split(key, 6)
+    q = jax.random.normal(ks[0], (b, 1, H, dh))
+    x = jax.random.normal(ks[1], (b, Lp, h))
+    wk = jax.random.normal(ks[2], (h, KV, dh)) / np.sqrt(h)
+    wv = jax.random.normal(ks[3], (h, KV, dh)) / np.sqrt(h)
+    k_str = jax.random.normal(ks[4], (b, S, KV, dh))
+    v_str = jax.random.normal(ks[5], (b, S, KV, dh))
+    k_new = jax.random.normal(jax.random.fold_in(key, 1), (b, 1, KV, dh))
+    v_new = jax.random.normal(jax.random.fold_in(key, 2), (b, 1, KV, dh))
+    segs = [("recompute", x, wk, wv, jnp.asarray([10, 16], jnp.int32),
+             0, theta, True),
+            ("int4", KQ.quantize_jnp(k_str), KQ.quantize_jnp(v_str),
+             jnp.asarray([64, 40], jnp.int32), 32),
+            ("fp", k_new, v_new, None)]
+    base = ops.segmented_decode_attention(q, segs, mode="interpret",
+                                          chunk=32)
+    for hs in (2, 4):
+        out = ops.segmented_decode_attention(q, segs, mode="interpret",
+                                             chunk=32, head_shards=hs)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(base),
+                                      err_msg=f"head_shards={hs}")
+    with pytest.raises(ValueError):
+        ops.segmented_decode_attention(q, segs, mode="interpret",
+                                       head_shards=3)
+
+
 def test_zero_length_segment_dropped():
     """The l=0 pure-stream split hands the kernel dispatch an empty
     recomputed segment; it must be dropped before any launch (the jnp

@@ -11,6 +11,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from conftest import xla_device_count
+
 from repro.configs import get_smoke_config
 from repro.models import moe as MOE
 
@@ -27,8 +29,6 @@ def test_fallback_no_mesh_identical():
 
 
 _SUBPROC = r"""
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import dataclasses
 import jax, jax.numpy as jnp, numpy as np
 from repro.configs import get_smoke_config
@@ -68,9 +68,9 @@ print("SHARDED_MOE_OK")
 
 @pytest.mark.slow
 def test_sharded_matches_gspmd_on_mesh():
-    env = dict(os.environ)
-    env["PYTHONPATH"] = "src"
-    env.pop("XLA_FLAGS", None)
+    # the 8-device flag lands via the composing conftest helper — the
+    # subprocess env, not a clobbering in-script os.environ write
+    env = xla_device_count(8)
     r = subprocess.run([sys.executable, "-c", _SUBPROC], env=env,
                        capture_output=True, text=True, timeout=600,
                        cwd=os.path.dirname(os.path.dirname(

@@ -1,7 +1,9 @@
-"""Property tests for the Scheduler's three plan kinds — the decode
-split (``optimal_split``), the admission-time restore split
-(``Scheduler.restore_split``), and the chunked-prefill width
-(``Scheduler.chunk_split`` / ``optimal_chunk``):
+"""Property tests for the Scheduler's plan kinds — the decode split
+(``optimal_split``), the admission-time restore split
+(``Scheduler.restore_split``), the chunked-prefill width
+(``Scheduler.chunk_split`` / ``optimal_chunk``), and the mesh-sharded
+variants of all of them (``optimal_shard_split`` / ``shards=`` on the
+Scheduler entry points):
 
   - decisions stay in-bounds,
   - they never cost more than the pure endpoints (stream-everything /
@@ -9,7 +11,14 @@ split (``optimal_split``), the admission-time restore split
     minimum-chunk pipelines for the chunk width),
   - predicted cost is monotone in link bandwidth and compute rate
     (a strictly better machine never makes the chosen plan slower),
-  - the recompute share is monotone in compute rate.
+  - the recompute share is monotone in compute rate,
+  - per-shard splits stay in one shard's bounds, beat that shard's
+    pure endpoints, are monotone in the per-shard link share, and at
+    mesh size 1 every plan kind equals the unsharded solver's output
+    EXACTLY (same floats, not just same l — ``per_shard(1)`` must be
+    the identity; tests/test_sharded_store_stress.py carries a
+    deterministic mirror of that exactness sweep for environments
+    without hypothesis).
 """
 import dataclasses
 
@@ -19,10 +28,11 @@ pytest.importorskip("hypothesis")  # optional dep, see docs/automation.md
 import hypothesis.strategies as st
 from hypothesis import given, settings
 
-from repro.core.cost_model import HardwareProfile, Workload, layer_times
+from repro.core.cost_model import (HardwareProfile, TierLink, Workload,
+                                   layer_times)
 from repro.core.scheduler import Scheduler
 from repro.core.solver import (chunk_pipeline_time, optimal_chunk,
-                               optimal_split)
+                               optimal_shard_split, optimal_split)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -162,3 +172,75 @@ def test_chunk_pipeline_time_vs_sequential(wl, hw, n_layers, n):
     t = chunk_pipeline_time(n, max(n // 4, 1), wl, hw, n_layers, 1024)
     assert t["total"] <= t["t_compute"] + t["t_writeback"] + 1e-12
     assert t["total"] >= max(t["t_compute"], t["t_writeback"]) - 1e-12
+
+
+# ----------------------------------------------- mesh-sharded splits
+
+# every kv_dim the workloads strategy emits (64/512/4096) divides by 8,
+# so any shard count below divides the per-head slicing cleanly
+shard_counts = st.sampled_from([2, 4, 8])
+
+
+@settings(max_examples=150, deadline=None)
+@given(workloads, profiles, schedules, shard_counts)
+def test_shard_split_in_bounds_and_beats_endpoints(wl, hw, sched, k):
+    """One shard's split stays inside [0, seq_len] and never costs more
+    than that shard's pure endpoints (stream-everything over 1/k of the
+    link; recompute-everything at 1/k of the FLOPs)."""
+    d = optimal_shard_split(wl, hw, k, sched)
+    act = sched == "column"
+    assert 0 <= d.l <= wl.seq_len
+    wl_s, hw_s = wl.per_shard(k), hw.per_shard(k)
+    pure_stream = layer_times(wl_s, hw_s, 0, act)["total"]
+    pure_recomp = layer_times(wl_s, hw_s, wl.seq_len, act)["total"]
+    assert d.t_total <= pure_stream * (1 + 1e-9)
+    assert d.t_total <= pure_recomp * (1 + 1e-9)
+
+
+@settings(max_examples=100, deadline=None)
+@given(workloads, profiles, schedules, shard_counts)
+def test_shard_split_cost_monotone_in_link_share(wl, hw, sched, k):
+    """Growing the total link bandwidth grows every shard's 1/k share,
+    and the re-optimized per-shard plan never gets slower."""
+    base = optimal_shard_split(wl, hw, k, sched).t_total
+    assert optimal_shard_split(wl, _faster(hw, link=4.0), k, sched) \
+        .t_total <= base * (1 + 1e-9)
+    assert optimal_shard_split(wl, _faster(hw, flops=4.0), k, sched) \
+        .t_total <= base * (1 + 1e-9)
+
+
+@settings(max_examples=100, deadline=None)
+@given(workloads, profiles, schedules, shard_counts)
+def test_shard_split_is_unsharded_split_of_shard_workload(wl, hw, sched, k):
+    """``optimal_shard_split`` is definitionally the unsharded solve of
+    one shard's workload on one shard's link share — exactly."""
+    assert optimal_shard_split(wl, hw, k, sched) == \
+        optimal_split(wl.per_shard(k), hw.per_shard(k), sched)
+
+
+@settings(max_examples=100, deadline=None)
+@given(cfgs, profiles, st.integers(1, 4096), st.sampled_from([1, 2, 8]))
+def test_mesh1_plans_equal_unsharded_exactly(cfg, hw, n, batch):
+    """Mesh size 1 must degenerate BIT-EXACTLY, for all four plan
+    kinds, to the solver a shards-free caller gets: ``per_shard(1)``
+    returns the profile/workload unchanged, so the decisions compare
+    equal as dataclasses (same floats, not just the same split point).
+    Fresh Scheduler per side so memoization can't mask a divergence."""
+    s1, s0 = Scheduler(hw), Scheduler(hw)
+    hw_t = hw.with_tiers(TierLink("disk", hw.link_bandwidth / 4,
+                                  hw.link_bandwidth / 8))
+
+    # 1) decode split (row schedule, the decode hot path)
+    assert s1.plan_for(cfg, batch, shards=1).split_for(n) == \
+        s0.plan_for(cfg, batch).split_for(n)
+    # 2) admission-time restore split (batch-1, column schedule)
+    assert s1.restore_split(cfg, n, shards=1) == s0.restore_split(cfg, n)
+    # 3) chunked-prefill width
+    assert s1.chunk_split(cfg, n, batch=batch, shards=1) == \
+        s0.chunk_split(cfg, n, batch=batch)
+    # 4) tier split over a two-rung ladder (half the prefix on disk)
+    t1 = s1.plan_for(cfg, batch, hw=hw_t, disk_bytes_per_el=4.0,
+                     shards=1).tier_split_for(n, n // 2)
+    t0 = s0.plan_for(cfg, batch, hw=hw_t,
+                     disk_bytes_per_el=4.0).tier_split_for(n, n // 2)
+    assert t1 == t0

@@ -1,0 +1,305 @@
+"""Concurrency stress for the mesh-sharded KV data plane.
+
+A k-way model-axis mesh never splits the host store — it splits the
+COPIES: ``TransferEngine.fetch_layer(..., shards=k)`` fans each layer
+window into k per-KV-head-slice streams on a dedicated shard pool, and
+``HostKVStore.head_slice`` hands out disjoint views of the same host
+arrays.  The invariants under threaded interleave are therefore exactly
+the unsharded ones, plus two sharded obligations:
+
+  - no torn reads: k concurrent slice streams racing fenced appends,
+    prefill chunk write-backs, and (tiered) demotion/page-in churn must
+    still reproduce every position-derived value — and the merged
+    staging buffer must be byte-identical to an unsharded fetch,
+  - zero staging growth: shard streams write slices of the SAME
+    parity-keyed buffers, so ``staging_allocs`` stays flat after
+    warmup exactly as in the unsharded stress test.
+
+The file also carries the deterministic mirror of the mesh-size-1 plan
+exactness property (tests/test_scheduler_props.py needs hypothesis;
+this sweep always runs).
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.cost_model import HardwareProfile, TierLink
+from repro.core.kvstore import KVTiersConfig, TieredKVStore
+from repro.core.runtime import HostKVStore, TransferEngine
+from repro.core.scheduler import Scheduler
+
+SHARDS = 4
+STEPS = 16
+CHUNK = 6
+CHUNK_TOTAL = 24
+
+
+def _kv_pattern(pos, KV, dh, base=0.0):
+    """(len(pos), KV, dh) values derived from position: torn reads can't
+    reproduce them."""
+    p = np.asarray(pos, np.float32)[:, None, None]
+    return np.broadcast_to(base + p + 0.5, (len(pos), KV, dh)).copy()
+
+
+# ------------------------------------------------------ head_slice views
+
+def test_head_slices_are_disjoint_zero_copy_views():
+    """Shard slices must alias the host planes (zero-copy), cover every
+    KV head exactly once, and reject geometries that don't divide."""
+    cfg = get_smoke_config("opt-6.7b")
+    store = HostKVStore(cfg, 2, 16)
+    KV = cfg.num_kv_heads
+    seen = np.zeros(KV, np.int64)
+    for si in range(SHARDS):
+        sl = store.head_slice(SHARDS, si)
+        assert set(sl) == {"k", "v"}
+        for name in ("k", "v"):
+            assert sl[name].base is getattr(store, name), \
+                "head_slice must view, not copy"
+            assert sl[name].shape[3] == KV // SHARDS
+        # a write through the view lands in the store plane
+        sl["k"][0, 0, 0, 0, 0] = 7.0
+        lo = si * (KV // SHARDS)
+        assert store.k[0, 0, 0, lo, 0] == 7.0
+        seen[lo:lo + KV // SHARDS] += 1
+    assert (seen == 1).all(), "slices must partition the KV-head axis"
+    with pytest.raises(ValueError):
+        store.head_slice(3, 0)            # 3 does not divide 8 heads
+    with pytest.raises(ValueError):
+        store.head_slice(SHARDS, SHARDS)  # shard index out of range
+
+
+# -------------------------------------- sharded fetch/append interleave
+
+@pytest.mark.slow
+def test_sharded_fetch_append_chunk_interleave_untorn():
+    """The unsharded stress flow (decode fetches racing fenced appends
+    racing prefill chunk write-backs) with every fetch fanned out over
+    4 shard streams.  Asserts untorn values, byte-identity of the
+    sharded fetch against an unsharded reference fetch, per-shard link
+    byte accounting (each stream carries exactly 1/4 of the streamed KV
+    bytes), and zero staging allocations after warmup."""
+    cfg = get_smoke_config("opt-6.7b").replace(num_layers=4)
+    Lh, KV, dh, h = (cfg.num_layers, cfg.num_kv_heads, cfg.dh,
+                     cfg.d_model)
+    max_len = 8 + STEPS + CHUNK_TOTAL
+    store = HostKVStore(cfg, 2, max_len)
+    xfer = TransferEngine(n_copy_threads=2)
+    errors = []
+
+    s0 = 8
+    pos0 = np.arange(s0)
+    for li in range(Lh):
+        store.k[li, 0, :s0] = _kv_pattern(pos0, KV, dh)
+        store.v[li, 0, :s0] = _kv_pattern(pos0, KV, dh, base=1000.0)
+    store.act[:, 0, :s0] = np.arange(s0, dtype=np.float32)[:, None]
+    store.seq_lens[0] = s0
+
+    def chunk_writer():
+        try:
+            for start in range(0, CHUNK_TOTAL, CHUNK):
+                pos = np.arange(start, start + CHUNK)
+                ks = np.broadcast_to(
+                    _kv_pattern(pos, KV, dh, base=5e4)[None, None],
+                    (Lh, 1, CHUNK, KV, dh)).copy()
+                vs = np.broadcast_to(
+                    _kv_pattern(pos, KV, dh, base=6e4)[None, None],
+                    (Lh, 1, CHUNK, KV, dh)).copy()
+                acts = np.broadcast_to(
+                    pos.astype(np.float32)[None, None, :, None],
+                    (Lh, 1, CHUNK, h)).copy()
+                store.push_chunk_fence(xfer.submit_store(
+                    store.fill_chunk_slot, 1, ks, vs, acts, start))
+                time.sleep(0.001)
+        except Exception as e:           # pragma: no cover
+            errors.append(e)
+
+    writer = threading.Thread(target=chunk_writer)
+    writer.start()
+
+    ls = np.zeros(2, np.int64)
+    s_pad = max_len
+    allocs_after_warmup = None
+    xfer.drain_shard_bytes()
+    for step in range(STEPS):
+        seq = store.seq_lens.copy()
+        s_strs = seq - ls
+        for li in range(Lh):
+            fut = xfer.submit(xfer.fetch_layer, store, li, ls, s_strs,
+                              0, s_pad, "", SHARDS)
+            h_res, k_str, v_str, _ = fut.result()
+            valid = int(seq[0])
+            want_pos = np.arange(valid)
+            np.testing.assert_array_equal(
+                np.asarray(k_str)[0, :valid],
+                _kv_pattern(want_pos, KV, dh),
+                err_msg=f"torn sharded K read step={step} layer={li}")
+            np.testing.assert_array_equal(
+                np.asarray(v_str)[0, :valid],
+                _kv_pattern(want_pos, KV, dh, base=1000.0),
+                err_msg=f"torn sharded V read step={step} layer={li}")
+            new_pos = np.array([seq[0], -1])
+            k_new = np.stack([_kv_pattern([seq[0]], KV, dh),
+                              np.zeros((1, KV, dh), np.float32)])
+            v_new = np.stack([_kv_pattern([seq[0]], KV, dh, 1000.0),
+                              np.zeros((1, KV, dh), np.float32)])
+            a_new = np.full((2, 1, h), float(seq[0]), np.float32)
+            store.set_fence(li, xfer.submit_store(
+                store.append, li, k_new, v_new, a_new, new_pos))
+        store.seq_lens[0] += 1
+        if step == 0:
+            allocs_after_warmup = xfer.staging_allocs
+    grew = xfer.staging_allocs - allocs_after_warmup
+
+    writer.join()
+    store.sync()
+    assert not errors, errors
+    assert grew == 0, f"staging allocated {grew} buffers after warmup"
+
+    # each of the 4 shard streams carried exactly 1/4 of the streamed KV
+    sb = xfer.drain_shard_bytes()
+    assert sb is not None and len(sb) == SHARDS
+    assert len(set(sb)) == 1 and sb[0] > 0, sb
+
+    # merged sharded fetch == unsharded fetch, byte for byte
+    seq = store.seq_lens.copy()
+    _, k1, v1, _ = xfer.fetch_layer(store, 0, ls, seq - ls, 0, s_pad)
+    _, k4, v4, _ = xfer.fetch_layer(store, 0, ls, seq - ls, 0, s_pad,
+                                    "", SHARDS)
+    np.testing.assert_array_equal(np.asarray(k1), np.asarray(k4))
+    np.testing.assert_array_equal(np.asarray(v1), np.asarray(v4))
+
+    # full decode trajectory intact end to end
+    final = int(store.seq_lens[0])
+    assert final == s0 + STEPS
+    for li in range(Lh):
+        np.testing.assert_array_equal(
+            store.k[li, 0, :final],
+            _kv_pattern(np.arange(final), KV, dh))
+    xfer.close()
+
+
+@pytest.mark.slow
+def test_sharded_fetch_races_demoter_untorn():
+    """Tiered variant: 4-way shard streams race an aggressive demoter
+    the whole run; every fetch pages demoted blocks back in (windows
+    start at l=0), then slices per shard.  Any demote/page-in/slice
+    interleave that tears shows up as a wrong position-derived float."""
+    cfg = get_smoke_config("opt-6.7b").replace(num_layers=4)
+    Lh, KV, dh, h = (cfg.num_layers, cfg.num_kv_heads, cfg.dh,
+                     cfg.d_model)
+    s0, steps, bt = 24, 12, 8
+    max_len = s0 + steps + 4
+    store = TieredKVStore(cfg, 2, max_len, tiers=KVTiersConfig(
+        host_capacity_tokens=bt * 2, block_tokens=bt))
+    xfer = TransferEngine(n_copy_threads=2)
+
+    pos0 = np.arange(s0)
+    for li in range(Lh):
+        store.k[li, 0, :s0] = _kv_pattern(pos0, KV, dh)
+        store.v[li, 0, :s0] = _kv_pattern(pos0, KV, dh, base=1000.0)
+    store.act[:, 0, :s0] = np.arange(s0, dtype=np.float32)[:, None]
+    store.seq_lens[0] = s0
+    store.enforce_capacity()
+    assert store.disk_tokens()[0] > 0
+
+    stop = threading.Event()
+    errors = []
+
+    def demoter():
+        try:
+            while not stop.is_set():
+                store.sweep()
+                time.sleep(0.0005)
+        except Exception as e:                 # pragma: no cover
+            errors.append(e)
+
+    t = threading.Thread(target=demoter)
+    t.start()
+    try:
+        ls = np.zeros(2, np.int64)
+        for step in range(steps):
+            seq = store.seq_lens.copy()
+            s_strs = seq - ls
+            for li in range(Lh):
+                fut = xfer.submit(xfer.fetch_layer, store, li, ls,
+                                  s_strs, 0, max_len, "", SHARDS)
+                h_res, k_str, v_str, _ = fut.result()
+                valid = int(seq[0])
+                want = np.arange(valid)
+                np.testing.assert_array_equal(
+                    np.asarray(k_str)[0, :valid],
+                    _kv_pattern(want, KV, dh),
+                    err_msg=f"torn K read step={step} layer={li}")
+                np.testing.assert_array_equal(
+                    np.asarray(v_str)[0, :valid],
+                    _kv_pattern(want, KV, dh, base=1000.0),
+                    err_msg=f"torn V read step={step} layer={li}")
+                new_pos = np.array([seq[0], -1])
+                k_new = np.stack([_kv_pattern([seq[0]], KV, dh),
+                                  np.zeros((1, KV, dh), np.float32)])
+                v_new = np.stack(
+                    [_kv_pattern([seq[0]], KV, dh, 1000.0),
+                     np.zeros((1, KV, dh), np.float32)])
+                a_new = np.full((2, 1, h), float(seq[0]), np.float32)
+                store.set_fence(li, xfer.submit_store(
+                    store.append, li, k_new, v_new, a_new, new_pos))
+            store.seq_lens[0] += 1
+        store.sync()
+    finally:
+        stop.set()
+        t.join()
+    assert not errors, errors
+    stats = store.stats()
+    assert stats.demotions > 0 and stats.promotions > 0
+    assert stats.demote_failures == 0
+    final = int(store.seq_lens[0])
+    assert final == s0 + steps
+    for li in range(Lh):
+        np.testing.assert_array_equal(
+            store.k[li, 0, :final],
+            _kv_pattern(np.arange(final), KV, dh))
+    store.close()
+    xfer.close()
+
+
+# ------------------------------------------- mesh-1 plan exactness
+
+def test_mesh1_plans_equal_unsharded_exactly_sweep():
+    """Deterministic mirror of the hypothesis property in
+    tests/test_scheduler_props.py (which skips without hypothesis):
+    mesh size 1 must reproduce the unsharded solver BIT-EXACTLY for all
+    four plan kinds — ``per_shard(1)`` is the identity, so decisions
+    compare equal as dataclasses.  Fresh Scheduler per side so
+    memoization can't mask a divergence."""
+    cfgs = [get_smoke_config("opt-6.7b"),
+            get_smoke_config("tinyllama-1.1b")]
+    hws = [HardwareProfile("pcie", 32e9, 1e14, 1e12,
+                           gemm_efficiency=0.5),
+           HardwareProfile("slowlink", 4e9, 3e14, 2e12,
+                           dispatch_overhead=1e-4)]
+    for cfg in cfgs:
+        for hw in hws:
+            hw_t = hw.with_tiers(TierLink("disk", hw.link_bandwidth / 4,
+                                          hw.link_bandwidth / 8))
+            for n in (1, 33, 1024):
+                for batch in (1, 4):
+                    s1, s0 = Scheduler(hw), Scheduler(hw)
+                    assert s1.plan_for(cfg, batch, shards=1) \
+                        .split_for(n) == \
+                        s0.plan_for(cfg, batch).split_for(n)
+                    assert s1.restore_split(cfg, n, shards=1) == \
+                        s0.restore_split(cfg, n)
+                    assert s1.chunk_split(cfg, n, batch=batch,
+                                          shards=1) == \
+                        s0.chunk_split(cfg, n, batch=batch)
+                    t1 = s1.plan_for(cfg, batch, hw=hw_t,
+                                     disk_bytes_per_el=4.0, shards=1) \
+                        .tier_split_for(n, n // 2)
+                    t0 = s0.plan_for(cfg, batch, hw=hw_t,
+                                     disk_bytes_per_el=4.0) \
+                        .tier_split_for(n, n // 2)
+                    assert t1 == t0

@@ -1,0 +1,105 @@
+"""Multi-device halves of the mesh-sharded pipeline, on an emulated
+8-CPU-device mesh (docs/scaling.md): finding-2 tensor-parallel decode
+param placement (``launch.mesh.place_tp_decode_params``) and the exact
+sequence-parallel chunked-prefill combine
+(``models.seq_parallel.seq_sharded_prefill_chunk_attend`` /
+``seq_sharded_update_kv_chunk``), each checked against a dense
+single-array reference.  Like every multi-device test, the mesh half
+runs in a subprocess — this test process is pinned to 1 device
+(see tests/conftest.py::xla_device_count)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+from conftest import xla_device_count
+
+_SUBPROC = r"""
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs import get_smoke_config
+from repro.launch.mesh import MeshConfig, place_tp_decode_params
+from repro.models import seq_parallel as SPAR
+from repro.models.sharding import DEFAULT_RULES, logical_rules
+from repro.models.transformer import Model
+
+mesh = MeshConfig(model=2, data=4).build()
+assert mesh.axis_names == ("data", "model")
+try:
+    MeshConfig(model=4, data=4).build()
+    raise AssertionError("16-device mesh built on 8 devices")
+except ValueError:
+    pass
+
+# ---- seq-sharded chunked prefill vs the dense reference ------------
+b, S, KV, g, dh, w = 2, 32, 4, 2, 16, 6      # S_loc = 32/4 = 8
+H = KV * g
+ks = jax.random.split(jax.random.PRNGKey(0), 5)
+k_cache = jax.random.normal(ks[0], (b, S, KV, dh))
+v_cache = jax.random.normal(ks[1], (b, S, KV, dh))
+
+
+def ref_attend(q, kc, vc, kn, vn, p0):
+    keys = jnp.concatenate([kc[:, :p0], kn], 1).astype(jnp.float32)
+    vals = jnp.concatenate([vc[:, :p0], vn], 1).astype(jnp.float32)
+    qg = q.reshape(b, w, KV, g, dh).astype(jnp.float32)
+    scores = jnp.einsum("bwkgd,bskd->bkgws", qg, keys) / jnp.sqrt(dh)
+    pos_k = jnp.arange(p0 + w)
+    allow = (pos_k[None, :] < p0) | \
+        (pos_k[None, :] - p0 <= jnp.arange(w)[:, None])
+    scores = jnp.where(allow[None, None, None], scores, -1e30)
+    out = jnp.einsum("bkgws,bskd->bkgwd",
+                     jax.nn.softmax(scores, -1), vals)
+    return jnp.moveaxis(out, 3, 1).reshape(b, w, H, dh)
+
+
+# p0 = 5 and 13 straddle shard boundaries (the windowed RMW path)
+for p0 in (0, 5, 8, 13):
+    q = jax.random.normal(ks[2], (b, w, H, dh))
+    k_new = jax.random.normal(ks[3], (b, w, KV, dh))
+    v_new = jax.random.normal(ks[4], (b, w, KV, dh))
+    with logical_rules(dict(DEFAULT_RULES), mesh):
+        with mesh:
+            out = SPAR.seq_sharded_prefill_chunk_attend(
+                q, k_cache, v_cache, k_new, v_new, p0)
+            kc2, vc2 = SPAR.seq_sharded_update_kv_chunk(
+                k_cache, v_cache, k_new, v_new, p0)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref_attend(
+            q, k_cache, v_cache, k_new, v_new, p0)),
+        rtol=2e-5, atol=2e-5, err_msg=f"attend p0={p0}")
+    for got, cache, new in ((kc2, k_cache, k_new),
+                            (vc2, v_cache, v_new)):
+        want = np.asarray(cache).copy()
+        want[:, p0:p0 + w] = np.asarray(new)
+        np.testing.assert_array_equal(np.asarray(got), want,
+                                      err_msg=f"update p0={p0}")
+print("SEQ_CHUNK_OK")
+
+# ---- finding-2 TP decode placement ---------------------------------
+cfg = get_smoke_config("tinyllama-1.1b")
+model = Model(cfg)
+params = model.init_params(jax.random.PRNGKey(0))
+placed = place_tp_decode_params(cfg, params, mesh)
+before = jax.tree_util.tree_leaves(params)
+after = jax.tree_util.tree_leaves(placed)
+assert len(before) == len(after)
+for x, y in zip(before, after):      # placement must not change values
+    np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+specs = [str(getattr(y.sharding, "spec", "")) for y in after]
+assert any("model" in s for s in specs), specs    # TP over "model"
+assert all("data" not in s for s in specs), specs  # FSDP off: no
+                                                   # per-token regather
+print("TP_PLACE_OK")
+"""
+
+
+@pytest.mark.slow
+def test_seq_chunk_and_tp_placement_on_mesh():
+    env = xla_device_count(8)
+    r = subprocess.run([sys.executable, "-c", _SUBPROC], env=env,
+                       capture_output=True, text=True, timeout=600,
+                       cwd=os.path.dirname(os.path.dirname(
+                           os.path.abspath(__file__))))
+    assert "SEQ_CHUNK_OK" in r.stdout and "TP_PLACE_OK" in r.stdout, \
+        r.stdout + r.stderr
